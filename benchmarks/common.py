@@ -1,0 +1,61 @@
+"""Shared benchmark helpers: timing, CSV output, result directories."""
+from __future__ import annotations
+
+import csv
+import os
+import time
+from typing import Any, Callable, Dict, List, Sequence
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
+
+
+def time_call(fn: Callable, *args, reps: int = 3, warmup: int = 1,
+              **kwargs) -> float:
+    """Median wall-seconds of ``fn(*args, **kwargs)`` over ``reps`` calls."""
+    for _ in range(warmup):
+        fn(*args, **kwargs)
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn(*args, **kwargs)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def write_csv(name: str, rows: List[Dict[str, Any]]) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.csv")
+    if not rows:
+        return path
+    keys: List[str] = []
+    for r in rows:
+        for k in r:
+            if k not in keys:
+                keys.append(k)
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=keys)
+        w.writeheader()
+        w.writerows(rows)
+    return path
+
+
+def print_rows(title: str, rows: Sequence[Dict[str, Any]]) -> None:
+    print(f"\n== {title} ==")
+    if not rows:
+        print("(no rows)")
+        return
+    keys: List[str] = []
+    for r in rows:
+        for k in r:
+            if k not in keys:
+                keys.append(k)
+    print(",".join(keys))
+    for r in rows:
+        print(",".join(_fmt(r.get(k, "")) for k in keys))
+
+
+def _fmt(v: Any) -> str:
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)

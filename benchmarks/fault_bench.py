@@ -1,0 +1,135 @@
+"""Fault-tolerance and straggler benchmarks (DESIGN.md §8).
+
+Simulated (deterministic) cluster runs measuring:
+
+* makespan inflation when k of N workers die mid-run, with lineage-based
+  recomputation (the Spark-lineage design the paper points at);
+* checkpoint-barrier density vs recovery cost (lineage_depth);
+* straggler mitigation: speculative re-execution on/off when some workers
+  silently slow down 10×.
+"""
+from __future__ import annotations
+
+import random
+from typing import Dict, List
+
+from repro.core import (simulate, WorkerEvent, trace, task,
+                        checkpoint_barrier, lineage_depth,
+                        execute_sequential)
+from .scheduler_bench import layered_dag
+
+from .common import print_rows, write_csv
+
+
+def bench_worker_failures(workers: int = 16, n_seeds: int = 5) -> List[Dict]:
+    rows = []
+    for n_fail in (0, 1, 4, 8):
+        mks, recomp = [], []
+        for s in range(n_seeds):
+            g = layered_dag(300 + s, 14, 20)
+            base = simulate(g, workers)
+            # kill workers at evenly spaced times through the fault-free run
+            events = [WorkerEvent(time=base.makespan * (i + 1) / (n_fail + 1),
+                                  kind="fail", worker=i)
+                      for i in range(n_fail)]
+            r = simulate(g, workers, events=events)
+            mks.append(r.makespan / base.makespan)
+            recomp.append(r.n_recomputed)
+        rows.append({"workers": workers, "failures": n_fail,
+                     "makespan_inflation": sum(mks) / n_seeds,
+                     "recomputed_tasks": sum(recomp) / n_seeds})
+    return rows
+
+
+def bench_elastic_join(workers: int = 8, n_seeds: int = 5) -> List[Dict]:
+    """Elasticity: workers joining mid-run shorten the tail."""
+    rows = []
+    for joins in (0, 4, 8):
+        mks = []
+        for s in range(n_seeds):
+            g = layered_dag(400 + s, 14, 20)
+            base = simulate(g, workers)
+            events = [WorkerEvent(time=base.makespan * 0.25, kind="join",
+                                  worker=workers + i) for i in range(joins)]
+            r = simulate(g, workers, events=events)
+            mks.append(r.makespan / base.makespan)
+        rows.append({"workers": workers, "joins": joins,
+                     "makespan_vs_base": sum(mks) / n_seeds})
+    return rows
+
+
+def bench_stragglers(workers: int = 16, n_seeds: int = 5) -> List[Dict]:
+    rows = []
+    for speculate in (None, 1.5, 3.0):
+        mks, spec = [], []
+        for s in range(n_seeds):
+            g = layered_dag(500 + s, 14, 20)
+            base = simulate(g, workers)
+            # 2 workers silently become 10x slower halfway through
+            events = [WorkerEvent(time=base.makespan * 0.5, kind="slow",
+                                  worker=w, factor=0.1) for w in (0, 1)]
+            r = simulate(g, workers, events=events,
+                         speculate_after=speculate)
+            mks.append(r.makespan / base.makespan)
+            spec.append(r.n_speculative)
+        rows.append({"workers": workers,
+                     "speculate_after_x": speculate or 0.0,
+                     "makespan_inflation": sum(mks) / n_seeds,
+                     "speculative_launches": sum(spec) / n_seeds})
+    return rows
+
+
+def bench_barrier_density() -> List[Dict]:
+    """Checkpoint barriers cut lineage: recovery cost after a late loss
+    drops with barrier frequency (at the cost of barrier materialization)."""
+    rows = []
+    chain_len = 64
+    for every in (0, 32, 16, 8, 4):
+        @task(cost=1.0)
+        def step(x):
+            return x + 1
+
+        def driver():
+            x = step(0)
+            for i in range(1, chain_len):
+                x = step(x)
+                if every and i % every == 0:
+                    x = checkpoint_barrier(x)
+            return x
+
+        g, _ = trace(driver)
+        res = execute_sequential(g)
+        tail = g.outputs[0]
+        # worst-case single-loss recovery: lose the final value with only
+        # barrier-durable results surviving
+        from repro.core import TaskKind
+        durable = {n.tid for n in g if n.kind is TaskKind.BARRIER}
+        for b in list(durable):
+            durable.update(g.nodes[b].deps)
+        rows.append({
+            "barrier_every": every,
+            "n_barriers": sum(1 for n in g if n.kind is TaskKind.BARRIER),
+            "recovery_depth_after_tail_loss":
+                lineage_depth(g, tail, durable),
+        })
+    return rows
+
+
+def main() -> List[Dict]:
+    r1 = bench_worker_failures()
+    r2 = bench_elastic_join()
+    r3 = bench_stragglers()
+    r4 = bench_barrier_density()
+    write_csv("fault_failures", r1)
+    write_csv("fault_elastic", r2)
+    write_csv("fault_stragglers", r3)
+    write_csv("fault_barriers", r4)
+    print_rows("Worker failures (lineage recovery)", r1)
+    print_rows("Elastic joins", r2)
+    print_rows("Stragglers (speculative re-exec)", r3)
+    print_rows("Checkpoint-barrier density vs recovery depth", r4)
+    return r1 + r2 + r3 + r4
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,233 @@
+"""Perf-iteration driver (assignment §PERFORMANCE HILLCLIMBING).
+
+Tools:
+  * ``diagnose``: compile ONE cell (unrolled probe depth for speed) and
+    print the top collectives / largest HLO ops WITH their jax source
+    attribution (op_name metadata) — the "profile" of the dry-run world.
+  * ``run``: compile a cell with config/mode overrides under a --tag, so
+    results/dryrun/<cell>_<tag>.json records the variant; print the three
+    roofline terms and the delta vs the untagged baseline.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.hillclimb diagnose \\
+      --arch qwen3-14b --shape train_4k [--depth 4]
+  PYTHONPATH=src python -m benchmarks.hillclimb run \\
+      --arch qwen3-14b --shape train_4k --tag remat_none \\
+      --override remat=none
+"""
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+from typing import Dict, Optional   # noqa: E402
+
+
+def parse_override(s: str):
+    k, v = s.split("=", 1)
+    for cast in (int, float):
+        try:
+            return k, cast(v)
+        except ValueError:
+            pass
+    if v in ("True", "False"):
+        return k, v == "True"
+    return k, v
+
+
+_LINE_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_META_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def diagnose(args) -> None:
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch import dryrun, steps as steps_mod
+    from repro.configs import get_config
+
+    mesh = make_production_mesh(multi_pod=False)
+    cfg = get_config(args.arch)
+    over: Dict = dict(parse_override(o) for o in args.override or [])
+    if args.depth:
+        over.update(n_layers=args.depth, layer_plan=(), scan_layers=False)
+        if cfg.is_encoder_decoder:
+            over["n_enc_layers"] = args.depth
+    case = steps_mod.build_case(args.arch, args.shape, mesh, args.mode,
+                                overrides=over)
+    with mesh:
+        compiled = steps_mod.lower_case(case).compile()
+    hlo = compiled.as_text()
+    cost = compiled.cost_analysis()
+    print(f"depth={args.depth or 'full'} flops/dev={cost.get('flops', 0):.3e}"
+          f" bytes/dev={cost.get('bytes accessed', 0):.3e}")
+
+    rows = []
+    for line in hlo.splitlines():
+        m = _LINE_RE.search(line)
+        if not m:
+            continue
+        b = dryrun._shape_bytes(m.group(1))
+        if b == 0:
+            continue
+        meta = _META_RE.search(line)
+        groups = dryrun._parse_groups(line)
+        g = len(groups[0]) if groups else 0
+        rows.append((b, m.group(2), g,
+                     (meta.group(1) if meta else "?")[:110]))
+    rows.sort(reverse=True)
+    print(f"\ntop collectives (of {len(rows)}), result bytes per device:")
+    for b, op, g, name in rows[:args.top]:
+        print(f"  {b/1e6:10.1f} MB  {op:<19s} g={g:<4d} {name}")
+
+    # biggest non-collective ops (memory-term suspects)
+    big = []
+    for line in hlo.splitlines():
+        mm = re.search(r"=\s*(\S+)\s+(fusion|dot|convolution|custom-call|"
+                       r"gather|scatter|dynamic-update-slice|copy|transpose|"
+                       r"broadcast)\(", line)
+        if not mm:
+            continue
+        b = dryrun._shape_bytes(mm.group(1))
+        if b < 1e6:
+            continue
+        meta = _META_RE.search(line)
+        big.append((b, mm.group(2), (meta.group(1) if meta else "?")[:110]))
+    big.sort(reverse=True)
+    print(f"\nlargest op results:")
+    for b, op, name in big[:args.top]:
+        print(f"  {b/1e6:10.1f} MB  {op:<19s} {name}")
+
+
+def flashsim(args) -> None:
+    """Quantify the memory-term share of materialized S×S attention-score
+    tensors — exactly what the Pallas flash kernel keeps in VMEM on TPU.
+
+    Compiles the two unrolled probes (depths p, 2p), sums the result bytes
+    of every op whose shape carries a (S, S)-like trailing pair, and
+    extrapolates to full depth (same scheme as dryrun.probe_correction).
+    Reports the adjusted memory term.
+    """
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch import dryrun, steps as steps_mod
+    from repro.configs import get_config
+    from repro.models.config import SHAPES
+
+    mesh = make_production_mesh(multi_pod=False)
+    cfg = get_config(args.arch)
+    S = SHAPES[args.shape].seq_len
+    L1, L2 = dryrun._probe_depths(cfg)
+    # kernel-resident shapes: S×S attention scores (flash_attention.py) and,
+    # for SSD archs, the chunk×chunk intra-chunk matrices (ssm_scan.py)
+    pats = [rf",{S},{S}[,\]]"]
+    if cfg.ssm_state:
+        c = cfg.ssm_chunk
+        pats.append(rf",{c},{c},")
+    sq_re = re.compile(rf"=\s*([a-z0-9]+\[[0-9]+(?:,[0-9]+)*\])")
+    dim_res = [re.compile(p) for p in pats]
+    got = {}
+    for L in (L1, L2):
+        over = dict(parse_override(o) for o in args.override or [])
+        over.update(n_layers=L, layer_plan=(), scan_layers=False)
+        case = steps_mod.build_case(args.arch, args.shape, mesh, args.mode,
+                                    overrides=over)
+        with mesh:
+            compiled = steps_mod.lower_case(case).compile()
+        hlo = compiled.as_text()
+        sq = sum(dryrun._shape_bytes(m.group(1))
+                 for m in sq_re.finditer(hlo)
+                 if any(d.search(m.group(1)) for d in dim_res))
+        got[L] = (float(compiled.cost_analysis().get("bytes accessed", 0)),
+                  float(sq))
+        del hlo, compiled
+    L = cfg.n_layers
+    lerp = lambda a, b: a + (b - a) * (L - L1) / (L2 - L1)
+    total = lerp(got[L1][0], got[L2][0])
+    sq = lerp(got[L1][1], got[L2][1])
+    HBM = 819e9
+    print(f"{args.arch} × {args.shape} [{args.mode}]")
+    print(f"  HLO bytes/dev          {total:.4g}  (t_mem {total/HBM:.3f} s)")
+    print(f"  S×S score-op bytes/dev {sq:.4g}  ({sq/total:.1%} of total)")
+    print(f"  flash-adjusted t_mem   {(total-sq)/HBM:.3f} s "
+          f"({-sq/total*100:.1f}%)")
+
+
+def run(args) -> None:
+    from repro.launch import dryrun
+
+    over = dict(parse_override(o) for o in args.override or [])
+    rec = dryrun.run_cell(args.arch, args.shape, "single",
+                          args.out, mode=args.mode,
+                          overrides=over or None, tag=args.tag)
+    if rec["status"] != "OK":
+        print(rec.get("error", rec.get("reason")))
+        return
+    report(args.arch, args.shape, args.tag, args.out, rec)
+
+
+def _terms(rec: Dict) -> Optional[Dict]:
+    import benchmarks.roofline as R
+    return R.analyse_record(rec)
+
+
+def report(arch: str, shape: str, tag: str, out_dir: str,
+           rec: Optional[Dict] = None) -> None:
+    if rec is None:
+        with open(os.path.join(out_dir,
+                               f"{arch}__{shape}__single_{tag}.json")) as f:
+            rec = json.load(f)
+    row = _terms(rec)
+    base_path = os.path.join(out_dir, f"{arch}__{shape}__single.json")
+    base = None
+    if os.path.exists(base_path):
+        with open(base_path) as f:
+            base = _terms(json.load(f))
+    print(f"\n{arch} × {shape} [{tag or 'baseline'}]")
+    for k in ("t_compute_s", "t_memory_s", "t_collective_s", "mfu_bound",
+              "useful_flops_ratio"):
+        cur = row[k]
+        if base:
+            d = (cur - base[k]) / base[k] * 100 if base[k] else float("nan")
+            print(f"  {k:<18s} {cur:12.6g}   ({d:+7.1f}% vs baseline "
+                  f"{base[k]:.6g})")
+        else:
+            print(f"  {k:<18s} {cur:12.6g}")
+    print(f"  dominant           {row['dominant']}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    d = sub.add_parser("diagnose")
+    d.add_argument("--arch", required=True)
+    d.add_argument("--shape", required=True)
+    d.add_argument("--mode", default="fsdp_tp")
+    d.add_argument("--depth", type=int, default=4)
+    d.add_argument("--top", type=int, default=15)
+    d.add_argument("--override", action="append")
+    r = sub.add_parser("run")
+    r.add_argument("--arch", required=True)
+    r.add_argument("--shape", required=True)
+    r.add_argument("--mode", default="fsdp_tp")
+    r.add_argument("--tag", required=True)
+    r.add_argument("--out", default="results/dryrun")
+    r.add_argument("--override", action="append")
+    f = sub.add_parser("flashsim")
+    f.add_argument("--arch", required=True)
+    f.add_argument("--shape", required=True)
+    f.add_argument("--mode", default="fsdp_tp")
+    f.add_argument("--override", action="append")
+    args = ap.parse_args()
+    if args.cmd == "diagnose":
+        diagnose(args)
+    elif args.cmd == "flashsim":
+        flashsim(args)
+    else:
+        run(args)
+
+
+if __name__ == "__main__":
+    main()

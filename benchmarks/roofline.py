@@ -1,0 +1,205 @@
+"""Roofline analysis from the dry-run's compiled artifacts (assignment
+§ROOFLINE ANALYSIS).
+
+Reads every ``results/dryrun/<arch>__<shape>__<mesh>[ _tag].json`` produced
+by :mod:`repro.launch.dryrun` and derives, per cell:
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOP/s          [s]
+  memory term     = HLO_bytes_per_device / HBM_bw               [s]
+  collective term = wire_ici/ICI_bw + wire_dcn/DCN_bw           [s]
+                    (per-device wire bytes, ring-algorithm factors and
+                     replica-group sizes parsed from the partitioned HLO)
+
+plus MODEL_FLOPS = 6·N(_active)·D (train) or 2·N_active·D (inference), the
+useful-compute ratio MODEL_FLOPS/HLO_FLOPs, the dominant term, the
+roofline-implied MFU bound, and a one-line lever.
+
+v5e constants (assignment): 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link
+ICI; DCN taken at 25 GB/s per chip (cross-pod).
+"""
+from __future__ import annotations
+
+import functools
+import glob
+import json
+import math
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+DCN_BW = 25e9
+HBM_PER_CHIP = 16 * 1024 ** 3          # v5e: 16 GiB
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+@functools.lru_cache(maxsize=None)
+def _param_counts(arch: str):
+    """(total, active) parameter counts — eval_shape only, no allocation."""
+    import jax
+    from repro.configs import get_config
+    from repro.models import transformer as TF
+    from repro.models import encdec as ED
+    cfg = get_config(arch)
+    if cfg.is_encoder_decoder:
+        n = sum(math.prod(l.shape) for l in
+                jax.tree.leaves(ED.abstract_params(cfg)))
+        return n, n
+    return TF.count_params(cfg), TF.count_active_params(cfg)
+
+
+def _tokens_per_step(shape: str) -> int:
+    from repro.models.config import SHAPES
+    s = SHAPES[shape]
+    if s.kind == "train":
+        return s.seq_len * s.global_batch
+    if s.kind == "prefill":
+        return s.seq_len * s.global_batch
+    return s.global_batch              # decode: one token per sequence
+
+
+def model_flops(arch: str, shape: str) -> float:
+    from repro.models.config import SHAPES
+    total, active = _param_counts(arch)
+    D = _tokens_per_step(shape)
+    mult = 6.0 if SHAPES[shape].kind == "train" else 2.0
+    return mult * active * D
+
+
+def analyse_record(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "OK":
+        return None
+    chips = rec["chips"]
+    # prefer depth-corrected costs (unrolled probes; the scanned program's
+    # cost_analysis counts the layer loop body once) — see launch/dryrun.py
+    src = rec.get("corrected", rec)
+    flops_dev = src.get("flops_per_device", rec["flops_per_device"])
+    bytes_dev = src.get("bytes_per_device", rec["bytes_per_device"])
+    coll = src.get("collectives", rec.get("collectives", {}))
+    if rec.get("mesh") == "multi" and "corrected" not in rec:
+        coll = rec.get("collectives", {})
+    t_comp = flops_dev / PEAK_FLOPS
+    t_mem = bytes_dev / HBM_BW
+    wire_ici = coll.get("_wire_ici_bytes", 0.0)
+    wire_dcn = coll.get("_wire_dcn_bytes", 0.0)
+    t_coll = wire_ici / ICI_BW + wire_dcn / DCN_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+
+    mf = model_flops(rec["arch"], rec["shape"])
+    mf_dev = mf / chips
+    useful_ratio = mf_dev / flops_dev if flops_dev else 0.0
+    t_model = mf_dev / PEAK_FLOPS
+    mfu_bound = t_model / bound if bound > 0 else 0.0
+
+    mem_gib = (rec.get("argument_size_in_bytes", 0)
+               + rec.get("temp_size_in_bytes", 0)) / 1024 ** 3
+
+    raw = {k: v for k, v in coll.items() if not k.startswith("_")}
+    big_coll = max(raw, key=raw.get) if raw else "-"
+
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "tag": rec.get("tag", ""),
+        "chips": chips,
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "dominant": dominant,
+        "bound_s": bound,
+        "mfu_bound": mfu_bound,
+        "useful_flops_ratio": useful_ratio,
+        "mem_gib_per_dev": mem_gib,
+        "fits_hbm": mem_gib * 1024 ** 3 < HBM_PER_CHIP,
+        "top_collective": big_coll,
+        "lever": lever(dominant, rec, useful_ratio, big_coll),
+    }
+
+
+def lever(dominant: str, rec: Dict, useful_ratio: float,
+          big_coll: str) -> str:
+    kind = rec["shape"].split("_")[0]
+    if dominant == "compute":
+        if useful_ratio < 0.55 and kind == "train":
+            return ("remat recompute inflates HLO FLOPs "
+                    f"(useful={useful_ratio:.0%}); relax checkpoint policy")
+        return "compute-bound near useful FLOPs; raise arithmetic intensity per chip (larger per-chip tile)"
+    if dominant == "memory":
+        if kind in ("decode", "long"):
+            return ("decode is HBM-bound on weights+KV reads; quantize KV / "
+                    "shard cache over more axes / batch more requests")
+        return "HBM-bound: fuse elementwise chains, avoid f32 spills, check layout transposes"
+    return f"collective-bound (top: {big_coll}); reshard to cut it or overlap with compute"
+
+
+def load_cells(mesh: str = "single", tag: str = "") -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("mesh") != mesh or rec.get("tag", "") != tag:
+            continue
+        row = analyse_record(rec)
+        if row:
+            rows.append(row)
+    return rows
+
+
+def skip_cells(mesh: str = "single") -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("mesh") != mesh or rec.get("status") != "SKIP":
+            continue
+        if rec.get("tag", ""):
+            continue
+        rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                     "reason": rec["reason"][:70]})
+    return rows
+
+
+def to_markdown(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | Tcomp (ms) | Tmem (ms) | Tcoll (ms) | dominant "
+           "| MFU-bound | useful | lever |")
+    sep = "|" + "---|" * 9
+    out = [hdr, sep]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']*1e3:.2f} "
+            f"| {r['t_memory_s']*1e3:.2f} | {r['t_collective_s']*1e3:.2f} "
+            f"| **{r['dominant']}** | {r['mfu_bound']:.1%} "
+            f"| {r['useful_flops_ratio']:.0%} | {r['lever']} |")
+    return "\n".join(out)
+
+
+def main() -> List[Dict]:
+    from .common import print_rows, write_csv
+    rows = load_cells("single")
+    write_csv("roofline_single", rows)
+    slim = [{k: v for k, v in r.items()
+             if k in ("arch", "shape", "t_compute_s", "t_memory_s",
+                      "t_collective_s", "dominant", "mfu_bound",
+                      "useful_flops_ratio")} for r in rows]
+    print_rows("Roofline (single-pod 256-chip mesh)", slim)
+    skips = skip_cells("single")
+    if skips:
+        print_rows("Skipped cells", skips)
+    multi = load_cells("multi")
+    if multi:
+        write_csv("roofline_multi", multi)
+        # multi-pod is the shardability + DCN-attribution check (the scored
+        # roofline table is single-pod, with probe-corrected costs); only
+        # print the collective/DCN view — per-layer FLOPs/bytes corrections
+        # are not computed for multi cells, so MFU there would mislead
+        sl = [{k: v for k, v in r.items()
+               if k in ("arch", "shape", "t_collective_s", "dominant")}
+              for r in multi]
+        print_rows("Multi-pod 512-chip: collective/DCN view "
+                   "(shardability check; roofline scored on single-pod)", sl)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Benchmark orchestrator: one suite per paper table/figure + the roofline.
+
+``PYTHONPATH=src python -m benchmarks.run [--suite name]``
+
+Suites:
+  matmul     — paper Fig. 2: matrix-task scaling vs workers (+ baselines)
+  scheduler  — policy ablation (greedy-CP / FIFO / random; stealing; locality)
+  fault      — failures, elasticity, stragglers, checkpoint barriers
+  roofline   — per-(arch × shape) roofline terms from the dry-run artifacts
+               (requires ``python -m repro.launch.dryrun`` results on disk)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import matmul_scaling, scheduler_bench, fault_bench, roofline
+
+SUITES = {
+    "matmul": matmul_scaling.main,
+    "scheduler": scheduler_bench.main,
+    "fault": fault_bench.main,
+    "roofline": roofline.main,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--suite", default="all", choices=["all"] + list(SUITES))
+    args = ap.parse_args()
+    names = list(SUITES) if args.suite == "all" else [args.suite]
+    t0 = time.time()
+    failures = []
+    for name in names:
+        print(f"\n########## suite: {name} ##########", flush=True)
+        try:
+            SUITES[name]()
+        except Exception as e:   # keep going; report at the end
+            failures.append((name, repr(e)))
+            print(f"suite {name} FAILED: {e!r}", flush=True)
+    print(f"\nbenchmarks done in {time.time() - t0:.1f}s; "
+          f"{len(failures)} suite failure(s)")
+    for name, err in failures:
+        print(f"  FAIL {name}: {err}")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

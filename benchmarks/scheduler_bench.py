@@ -1,0 +1,134 @@
+"""Scheduler policy ablation (DESIGN.md §8).
+
+Compares, across a family of random task DAGs and the paper's matrix
+workload:
+
+* ready-set priority: critical-path (HEFT rank_u) vs FIFO vs random;
+* work stealing on/off (steal_latency=inf disables stealing usefully);
+* static list-schedule vs dynamic work-stealing runtime under
+  heterogeneous worker speeds (where static plans go stale).
+
+All numbers are deterministic discrete-event simulations.
+"""
+from __future__ import annotations
+
+import random
+from typing import Dict, List
+
+from repro.core import (TaskGraph, TaskKind, simulate, list_schedule,
+                        theoretical_speedup)
+from repro.core.tracing import RemappedRef
+
+from .common import print_rows, write_csv
+
+
+def random_dag(seed: int, n: int, p: float, *, cost_lo=0.5, cost_hi=2.0,
+               fanin: int = 3) -> TaskGraph:
+    rng = random.Random(seed)
+    g = TaskGraph()
+    for i in range(n):
+        deps = [j for j in range(i) if rng.random() < p][-fanin:]
+        g.add_node(f"t{i}", None, tuple(RemappedRef(d) for d in deps), {},
+                   TaskKind.PURE, deps=deps,
+                   cost=rng.uniform(cost_lo, cost_hi))
+    g.mark_output(n - 1)
+    return g
+
+
+def layered_dag(seed: int, layers: int, width: int) -> TaskGraph:
+    """Wide layered graph — the regime where policies differ most."""
+    rng = random.Random(seed)
+    g = TaskGraph()
+    prev: List[int] = []
+    for l in range(layers):
+        cur = []
+        for i in range(width):
+            deps = ([rng.choice(prev)] if prev else []) + \
+                ([rng.choice(prev)] if prev and rng.random() < 0.5 else [])
+            deps = sorted(set(deps))
+            cur.append(g.add_node(
+                f"l{l}_{i}", None, tuple(RemappedRef(d) for d in deps), {},
+                TaskKind.PURE, deps=deps, cost=rng.uniform(0.2, 3.0)))
+        prev = cur
+    out = g.add_node("sink", None, tuple(RemappedRef(d) for d in prev), {},
+                     TaskKind.PURE, deps=prev, cost=0.1)
+    g.mark_output(out)
+    return g
+
+
+def bench_policies(n_seeds: int = 5, workers: int = 16) -> List[Dict]:
+    rows = []
+    for kind in ("random", "layered"):
+        for policy in ("critical_path", "fifo", "random"):
+            mk_static, mk_dyn = [], []
+            for s in range(n_seeds):
+                g = (random_dag(s, 200, 0.05) if kind == "random"
+                     else layered_dag(s, 12, 24))
+                sched = list_schedule(g, workers, policy=policy)
+                sched.validate_against(g)
+                mk_static.append(sched.makespan)
+                mk_dyn.append(simulate(g, workers, policy=policy).makespan)
+            rows.append({
+                "dag": kind, "policy": policy, "workers": workers,
+                "static_makespan": sum(mk_static) / n_seeds,
+                "dynamic_makespan": sum(mk_dyn) / n_seeds,
+            })
+    return rows
+
+
+def bench_stealing(n_seeds: int = 5, workers: int = 16) -> List[Dict]:
+    """Work stealing matters under heterogeneity: without it a slow worker's
+    deque backlog stalls the tail of the run."""
+    rows = []
+    for hetero in (False, True):
+        speeds = ([1.0] * workers if not hetero
+                  else [0.25 if w % 4 == 0 else 1.0 for w in range(workers)])
+        for steal, steal_lat in ((False, 0.0), (True, 0.0), (True, 0.05)):
+            mks, steals = [], []
+            for s in range(n_seeds):
+                g = layered_dag(100 + s, 12, 24)
+                r = simulate(g, workers, worker_speed=speeds,
+                             steal_latency=steal_lat, allow_steal=steal)
+                mks.append(r.makespan)
+                steals.append(r.n_steals)
+            rows.append({
+                "hetero": hetero, "steal": steal,
+                "steal_latency": steal_lat, "workers": workers,
+                "makespan": sum(mks) / n_seeds,
+                "steals": sum(steals) / n_seeds,
+            })
+    return rows
+
+
+def bench_locality(n_seeds: int = 5, workers: int = 8) -> List[Dict]:
+    """Input-fetch cost (comm_per_byte) rewards the locality heuristic
+    (successor enqueued on the producing worker's deque)."""
+    rows = []
+    for cpb in (0.0, 1e-8, 1e-7):
+        mks = []
+        for s in range(n_seeds):
+            g = layered_dag(200 + s, 10, 16)
+            for node in g.nodes.values():
+                node.out_bytes = 4 << 20      # 4 MB intermediates
+            r = simulate(g, workers, comm_per_byte=cpb)
+            mks.append(r.makespan)
+        rows.append({"comm_per_byte": cpb, "workers": workers,
+                     "makespan": sum(mks) / n_seeds})
+    return rows
+
+
+def main() -> List[Dict]:
+    rows = bench_policies()
+    rows2 = bench_stealing()
+    rows3 = bench_locality()
+    write_csv("scheduler_policies", rows)
+    write_csv("scheduler_stealing", rows2)
+    write_csv("scheduler_locality", rows3)
+    print_rows("Scheduler policy ablation", rows)
+    print_rows("Work stealing under heterogeneity", rows2)
+    print_rows("Locality vs input-fetch cost", rows3)
+    return rows + rows2 + rows3
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Splice the generated roofline table into EXPERIMENTS.md.
+
+Replaces the region after the ``<!-- ROOFLINE_TABLE -->`` marker (up to the
+next blank-line-delimited paragraph) with the current table from
+``results/dryrun``.  Run after a dry-run sweep:
+
+  PYTHONPATH=src python -m benchmarks.update_experiments
+"""
+from __future__ import annotations
+
+import os
+import re
+
+from . import roofline
+
+MD = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
+MARK = "<!-- ROOFLINE_TABLE -->"
+
+
+def main() -> None:
+    rows = roofline.load_cells("single")
+    table = roofline.to_markdown(rows)
+    with open(MD) as f:
+        text = f.read()
+    if MARK not in text:
+        raise SystemExit(f"marker {MARK} missing from EXPERIMENTS.md")
+    head, rest = text.split(MARK, 1)
+    # drop any previously spliced table (lines starting with '|') directly
+    # after the marker
+    rest_lines = rest.lstrip("\n").split("\n")
+    i = 0
+    while i < len(rest_lines) and rest_lines[i].startswith("|"):
+        i += 1
+    rest = "\n".join(rest_lines[i:])
+    with open(MD, "w") as f:
+        f.write(head + MARK + "\n" + table + "\n" + rest)
+    print(f"spliced {len(rows)} roofline rows into EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""End-to-end driver: train a qwen2-family LM on CPU with the full stack —
+data pipeline → auto-sharded train step → async checkpointing → restart.
+
+This is the reduced-scale version of ``python -m repro.launch.train`` (the
+launcher this script calls); the full-size configs run the same code path
+on a real mesh (proven by the 512-device dry-run).
+
+Run: PYTHONPATH=src python examples/train_lm.py [--steps 200] [--d-model 256]
+
+At the default 200 steps / ~17M params this takes a few CPU-minutes and the
+loss drops well below the unigram entropy of the synthetic zipf stream —
+then the script kills itself at step ~60%, restarts from the checkpoint,
+and shows the loss curve continuing exactly (fault-tolerance demo).
+"""
+import argparse
+import os
+import shutil
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import train as train_mod   # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt", default="/tmp/repro_train_lm_ckpt")
+    args = ap.parse_args()
+
+    shutil.rmtree(args.ckpt, ignore_errors=True)
+    crash_at = max(args.steps * 6 // 10, 2)
+
+    print(f"=== phase 1: train to step {crash_at}, then 'crash' ===")
+    r1 = train_mod.main([
+        "--arch", "qwen2-7b", "--reduced",
+        "--steps", str(crash_at),
+        "--batch", str(args.batch), "--seq", str(args.seq),
+        "--ckpt-dir", args.ckpt, "--ckpt-every", "20",
+        "--log-every", "20",
+    ])
+
+    print("\n=== phase 2: restart from the checkpoint, finish the run ===")
+    r2 = train_mod.main([
+        "--arch", "qwen2-7b", "--reduced",
+        "--steps", str(args.steps),
+        "--batch", str(args.batch), "--seq", str(args.seq),
+        "--ckpt-dir", args.ckpt, "--ckpt-every", "20",
+        "--log-every", "20", "--resume",
+    ])
+
+    # the restart resumed from the last checkpoint BEFORE the crash, so the
+    # first resumed losses replay the same (step-addressed) batches
+    print("\n=== summary ===")
+    print(f"phase-1 final loss {r1['losses'][-1]:.4f} at step {crash_at - 1}")
+    print(f"phase-2 resumed at step {r2['start_step']}, "
+          f"final loss {r2['losses'][-1]:.4f}")
+    assert r2["losses"][-1] < r1["losses"][0] * 0.8, "no learning?"
+    print("loss decreased end-to-end across the restart  ✓")
+
+
+if __name__ == "__main__":
+    main()

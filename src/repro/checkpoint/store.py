@@ -1,0 +1,208 @@
+"""Checkpointing: sharded-friendly, async, restart- and reshard-safe.
+
+Layout per step::
+
+    <dir>/step_000042/
+        manifest.json      # pytree structure, shapes, dtypes, logical axes
+        arr_00000.npz ...  # leaf payloads, chunked
+
+Restore rebuilds the pytree on host, then (optionally) ``jax.device_put``'s
+each leaf to a target sharding — so a checkpoint written on one mesh shape
+restores onto another (elastic rescale): logical axes live in the manifest,
+the new mesh's rule table decides the new physical layout.
+
+:class:`AsyncCheckpointer` snapshots to host memory synchronously (cheap)
+and writes to disk on a background thread — keeping the save off the train
+step's critical path (overlap trick #3 in DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _np_dtype(name: str) -> np.dtype:
+    """np.dtype by name, including ml_dtypes extras (bfloat16, fp8 ...)."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _encode(arr: np.ndarray) -> np.ndarray:
+    """npz cannot round-trip ml_dtypes arrays — store them as a same-width
+    uint view; the manifest keeps the logical dtype for decode."""
+    if arr.dtype.name not in np.sctypeDict:
+        return arr.view(np.dtype(f"u{arr.dtype.itemsize}"))
+    return arr
+
+
+def _decode(arr: np.ndarray, dtype_name: str) -> np.ndarray:
+    want = _np_dtype(dtype_name)
+    if arr.dtype != want and arr.dtype.itemsize == want.itemsize \
+            and arr.dtype.kind in ("u", "V"):
+        return arr.view(want)
+    return arr
+
+
+def _flatten_with_paths(tree: Any):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return paths, leaves, treedef
+
+
+def save_checkpoint(directory: str, step: int, tree: Any,
+                    extra: Optional[Dict[str, Any]] = None,
+                    chunk_leaves: int = 64) -> str:
+    """Write ``tree`` (params/opt state/... pytree) atomically."""
+    paths, leaves, _ = _flatten_with_paths(tree)
+    final = os.path.join(directory, f"step_{step:09d}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    manifest = {
+        "step": step,
+        "extra": extra or {},
+        "leaves": [],
+        "n_files": 0,
+    }
+    for i in range(0, len(leaves), chunk_leaves):
+        fname = f"arr_{i // chunk_leaves:05d}.npz"
+        payload = {}
+        for j, (p, leaf) in enumerate(
+                zip(paths[i:i + chunk_leaves], leaves[i:i + chunk_leaves])):
+            arr = np.asarray(leaf)
+            payload[f"a{j}"] = _encode(arr)
+            manifest["leaves"].append(
+                {"path": p, "file": fname, "key": f"a{j}",
+                 "shape": list(arr.shape), "dtype": str(arr.dtype)})
+        np.savez(os.path.join(tmp, fname), **payload)
+        manifest["n_files"] += 1
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)          # atomic publish
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for d in os.listdir(directory)
+             if (m := re.fullmatch(r"step_(\d+)", d))]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, step: Optional[int] = None,
+                       target: Any = None, shardings: Any = None):
+    """Returns (tree, extra).  ``target`` provides the pytree structure;
+    ``shardings`` (same structure) device_puts each leaf (resharding)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    d = os.path.join(directory, f"step_{step:09d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    by_file: Dict[str, Any] = {}
+    values: Dict[str, np.ndarray] = {}
+    for leaf in manifest["leaves"]:
+        if leaf["file"] not in by_file:
+            by_file[leaf["file"]] = np.load(os.path.join(d, leaf["file"]))
+        values[leaf["path"]] = _decode(by_file[leaf["file"]][leaf["key"]],
+                                       leaf["dtype"])
+
+    if target is None:
+        return values, manifest["extra"]
+
+    paths, leaves, treedef = _flatten_with_paths(target)
+    out = []
+    flat_shardings = [None] * len(paths)
+    if shardings is not None:
+        _, flat_shardings, _ = _flatten_with_paths(shardings)
+    for p, ref, shd in zip(paths, leaves, flat_shardings):
+        if p not in values:
+            raise KeyError(f"checkpoint missing leaf {p}")
+        arr = values[p]
+        want = tuple(ref.shape) if hasattr(ref, "shape") else None
+        if want is not None and tuple(arr.shape) != want:
+            raise ValueError(f"shape mismatch for {p}: {arr.shape} vs {want}")
+        if hasattr(ref, "dtype"):
+            arr = arr.astype(ref.dtype)
+        out.append(jax.device_put(arr, shd) if shd is not None else arr)
+    return jax.tree.unflatten(treedef, out), manifest["extra"]
+
+
+class AsyncCheckpointer:
+    """Snapshot-to-host synchronously, persist on a background thread."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self.saved_steps: list = []
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save(self, step: int, tree: Any,
+             extra: Optional[Dict[str, Any]] = None) -> None:
+        self.wait()                                  # one in flight at a time
+        # device→host snapshot; np.array (not asarray) so host-resident
+        # leaves are COPIED — the caller may mutate them after save()
+        host_tree = jax.tree.map(lambda x: np.array(x), tree)
+
+        def work():
+            save_checkpoint(self.directory, step, host_tree, extra)
+            self.saved_steps.append(step)
+            self._gc()
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def _gc(self) -> None:
+        steps = sorted(s for d in os.listdir(self.directory)
+                       if (m := re.fullmatch(r"step_(\d+)", d))
+                       for s in [int(m.group(1))])
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:09d}"),
+                          ignore_errors=True)
+
+
+class CheckpointManager:
+    """Save-every-N policy + resume helper used by ``launch/train.py``."""
+
+    def __init__(self, directory: str, every: int = 100, keep: int = 3,
+                 async_save: bool = True):
+        self.every = every
+        self.ckpt = AsyncCheckpointer(directory, keep)
+        self.async_save = async_save
+        self.directory = directory
+
+    def maybe_save(self, step: int, tree: Any, extra=None) -> bool:
+        if step % self.every != 0:
+            return False
+        if self.async_save:
+            self.ckpt.save(step, tree, extra)
+        else:
+            save_checkpoint(self.directory, step, jax.tree.map(np.asarray, tree),
+                            extra)
+        return True
+
+    def restore_latest(self, target: Any, shardings: Any = None):
+        return restore_checkpoint(self.directory, None, target, shardings)
+
+    def finish(self) -> None:
+        self.ckpt.wait()

@@ -1,0 +1,30 @@
+"""repro.core — the paper's auto-parallelizer.
+
+Public API:
+  task, io_task, trace, placeholder, checkpoint_barrier   (build a DAG)
+  TaskGraph                                               (the IR)
+  list_schedule, replan                                   (static scheduling)
+  ClusterSim, simulate, WorkerEvent                       (cluster simulator)
+  execute_sequential, ThreadedExecutor, run_graph         (real execution)
+  MeshExecutor                                            (SPMD lowering)
+  recovery_plan, recover                                  (lineage FT)
+  standard_rules, logical_to_spec, tree_shardings         (auto-sharding)
+"""
+from .graph import TaskGraph, TaskNode, TaskKind, GraphError
+from .tracing import (task, io_task, trace, placeholder, checkpoint_barrier,
+                      Trace, TaskRef, fuse_cheap_chains, substitute_refs)
+from .purity import infer_purity, declare, declared_purity
+from .effects import EffectToken, initial_token
+from .scheduler import (Schedule, Placement, list_schedule, replan,
+                        theoretical_speedup)
+from .simulator import ClusterSim, SimResult, WorkerEvent, simulate
+from .executor import (execute_sequential, ThreadedExecutor, run_graph,
+                       output_values, TaskFailed)
+from .lineage import recovery_plan, recover, replay, lineage_depth, NonIdempotentReplay
+from .placement import (standard_rules, sequence_parallel_rules,
+                        logical_to_spec, sharding_for, tree_specs,
+                        tree_shardings, ValueInfo, refine_placements,
+                        resharding_bytes, total_resharding_bytes, spec_shards)
+from .mesh_executor import MeshExecutor
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,33 @@
+"""RealWorld-token threading.
+
+The paper: "Notice that RealWorld is considered an input and output by each
+IO function."  We realize the same state-token model with an explicit value:
+every effectful task consumes the current :class:`EffectToken` and produces a
+fresh one, which linearizes effects in the DAG while pure work floats freely.
+
+The token is a real (scalar) array so the SPMD mesh executor can thread it
+through a jitted program without special-casing.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class EffectToken:
+    """Opaque ordering token. ``epoch`` is only for debugging/printing."""
+
+    epoch: int = 0
+
+    def next(self) -> "EffectToken":
+        return EffectToken(self.epoch + 1)
+
+    def as_array(self):
+        # Used when a token flows through a jitted SPMD program.
+        return jnp.zeros((), dtype=jnp.float32) + self.epoch
+
+
+def initial_token() -> EffectToken:
+    return EffectToken(0)

@@ -1,0 +1,79 @@
+"""Lineage-based fault tolerance (the Spark/RDD idea the paper points at).
+
+Because every non-``IO`` task is pure, a lost result can always be
+reconstructed by re-running its lineage — the minimal set of ancestor tasks
+whose results are also unavailable.  Checkpoint BARRIER nodes cut lineage:
+anything materialized at a barrier is durable, so recovery never recomputes
+past one.
+
+Effectful tasks are NOT replayed blindly (re-running ``IO`` may duplicate a
+side effect); :func:`recovery_plan` flags them so callers can substitute a
+checkpointed value or re-run only idempotent ones (``meta={'idempotent': True}``).
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, Set, Tuple
+
+from .graph import TaskGraph, TaskKind
+
+
+class NonIdempotentReplay(RuntimeError):
+    pass
+
+
+def recovery_plan(
+    graph: TaskGraph,
+    lost: Iterable[int],
+    available: Set[int],
+    *,
+    allow_effect_replay: bool = True,
+) -> Set[int]:
+    """Minimal recompute set to rebuild ``lost`` given ``available`` results.
+
+    Walks lineage upward from each lost task, stopping at results that are
+    still available (or durable barriers).  Raises
+    :class:`NonIdempotentReplay` if an effectful, non-idempotent task would
+    have to be replayed and ``allow_effect_replay`` is False.
+    """
+    plan: Set[int] = set()
+    stack = [t for t in lost if t not in available]
+    while stack:
+        tid = stack.pop()
+        if tid in plan:
+            continue
+        node = graph.nodes[tid]
+        if node.kind is TaskKind.EFFECTFUL and not allow_effect_replay:
+            if not node.meta.get("idempotent", False):
+                raise NonIdempotentReplay(
+                    f"recovery would replay non-idempotent IO task "
+                    f"{node.name}#{tid}; checkpoint its output instead")
+        plan.add(tid)
+        for d in node.all_deps:
+            if d not in available and d not in plan:
+                stack.append(d)
+    return plan
+
+
+def replay(graph: TaskGraph, plan: Set[int], results: Dict[int, object]) -> None:
+    """Execute ``plan`` in topo order, writing into ``results`` in place."""
+    from .executor import _run_node   # local import to avoid a cycle
+    order = [t for t in graph.topo_order() if t in plan]
+    for tid in order:
+        results[tid] = _run_node(graph, tid, results)
+
+
+def recover(graph: TaskGraph, lost: Iterable[int],
+            results: Dict[int, object], **kw) -> Set[int]:
+    """Convenience: plan + replay. Returns the set of recomputed tasks."""
+    lost = set(lost)
+    for t in lost:
+        results.pop(t, None)
+    plan = recovery_plan(graph, lost, set(results), **kw)
+    replay(graph, plan, results)
+    return plan
+
+
+def lineage_depth(graph: TaskGraph, tid: int, available: Set[int]) -> int:
+    """How many tasks a single loss would force us to recompute — the metric
+    that motivates checkpoint-barrier placement."""
+    return len(recovery_plan(graph, {tid}, available - {tid}))

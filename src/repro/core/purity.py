@@ -1,0 +1,44 @@
+"""Purity inference — the JAX analogue of reading a Haskell type signature.
+
+In the paper, ``f :: A -> B`` is pure and ``f :: IO B`` is effectful, and the
+auto-parallelizer decides *from the signature alone* whether a call can float.
+JAX gives us the same decidability: a function that traces to a jaxpr with an
+empty effect set is pure by construction; anything that cannot be traced (or
+that the user declares with ``@io_task``) is treated as ``IO``.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+
+# Explicit declarations take precedence (the "type signature" the user wrote).
+_DECLARED: dict[int, bool] = {}   # id(fn) -> is_pure
+
+
+def declare(fn: Callable, pure: bool) -> None:
+    _DECLARED[id(fn)] = pure
+
+
+def declared_purity(fn: Callable) -> Optional[bool]:
+    return _DECLARED.get(id(fn))
+
+
+def infer_purity(fn: Callable, *abstract_args: Any, **abstract_kwargs: Any) -> bool:
+    """Return True iff ``fn`` is pure.
+
+    Order of evidence (mirrors "check the type signature"):
+      1. an explicit ``declare``/``@io_task``/``@task`` annotation;
+      2. trace to a jaxpr and inspect ``jaxpr.effects`` — JAX's effect system
+         records io_callback/debug effects exactly like ``IO`` in a type;
+      3. if tracing itself raises (side-effecting Python, unhashable state...),
+         conservatively report impure.
+    """
+    d = declared_purity(fn)
+    if d is not None:
+        return d
+    try:
+        jaxpr = jax.make_jaxpr(fn)(*abstract_args, **abstract_kwargs)
+    except Exception:
+        return False
+    return len(jaxpr.effects) == 0

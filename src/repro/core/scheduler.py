@@ -1,0 +1,172 @@
+"""Greedy ready-set scheduling — the paper's scheduler, made concrete.
+
+The paper: "a scheduler ... greedily schedules tasks to worker nodes as their
+inputs are ready".  We implement that greedy rule and extend it with the two
+standard refinements a production system needs:
+
+* **priority** within the ready set — critical-path (HEFT ``rank_u``) first,
+  FIFO and random as ablation baselines;
+* **worker choice** — earliest-finish-time over heterogeneous-speed workers,
+  with an optional per-edge communication delay (locality-aware).
+
+The static schedule produced here is used (a) directly by the mesh executor
+to order SPMD task launches, (b) as the baseline the work-stealing runtime
+(:mod:`repro.core.simulator`, :mod:`repro.core.executor`) is compared
+against, and (c) for elastic re-planning when the worker set changes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import random as _random
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from .graph import TaskGraph
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    tid: int
+    worker: int
+    start: float
+    end: float
+
+
+@dataclasses.dataclass
+class Schedule:
+    placements: Dict[int, Placement]
+    n_workers: int
+
+    @property
+    def makespan(self) -> float:
+        return max((p.end for p in self.placements.values()), default=0.0)
+
+    def order_for_worker(self, worker: int) -> List[int]:
+        ps = [p for p in self.placements.values() if p.worker == worker]
+        return [p.tid for p in sorted(ps, key=lambda p: p.start)]
+
+    def utilization(self) -> float:
+        busy = sum(p.end - p.start for p in self.placements.values())
+        total = self.makespan * self.n_workers
+        return busy / total if total > 0 else 1.0
+
+    def validate_against(self, graph: TaskGraph) -> None:
+        """Every dep finishes before its consumer starts; no worker overlap."""
+        for node in graph.nodes.values():
+            p = self.placements[node.tid]
+            for d in node.all_deps:
+                if self.placements[d].end > p.start + 1e-9:
+                    raise AssertionError(
+                        f"task {node.tid} starts before dep {d} ends")
+        by_worker: Dict[int, List[Placement]] = {}
+        for p in self.placements.values():
+            by_worker.setdefault(p.worker, []).append(p)
+        for ps in by_worker.values():
+            ps.sort(key=lambda p: p.start)
+            for a, b in zip(ps, ps[1:]):
+                if a.end > b.start + 1e-9:
+                    raise AssertionError("overlapping tasks on one worker")
+
+
+def list_schedule(
+    graph: TaskGraph,
+    n_workers: int,
+    *,
+    policy: str = "critical_path",       # | "fifo" | "random"
+    worker_speed: Optional[Sequence[float]] = None,
+    comm_cost: Optional[Callable[[int, int], float]] = None,
+    seed: int = 0,
+    start_time: float = 0.0,
+    done: Optional[Dict[int, float]] = None,
+) -> Schedule:
+    """Greedy list scheduling.
+
+    ``done`` maps already-completed task ids to their completion times —
+    used for elastic re-planning mid-flight (those tasks are not rescheduled
+    but their finish times gate successors).
+    """
+    if n_workers <= 0:
+        raise ValueError("need at least one worker")
+    speeds = list(worker_speed) if worker_speed else [1.0] * n_workers
+    if len(speeds) != n_workers:
+        raise ValueError("worker_speed length mismatch")
+    done = dict(done or {})
+    rng = _random.Random(seed)
+
+    rank = graph.critical_path_rank()
+    if policy == "critical_path":
+        prio = lambda tid: (-rank[tid], tid)
+    elif policy == "fifo":
+        prio = lambda tid: (tid,)
+    elif policy == "random":
+        jitter = {tid: rng.random() for tid in graph.nodes}
+        prio = lambda tid: (jitter[tid], tid)
+    else:
+        raise ValueError(f"unknown policy {policy!r}")
+
+    indeg = graph.in_degree()
+    succ = graph.successors()
+    finish: Dict[int, float] = dict(done)
+    for tid in done:
+        for s in succ.get(tid, []):
+            indeg[s] -= 1
+    ready: List[Tuple] = []
+    for tid, d in indeg.items():
+        if tid in done:
+            continue
+        if d == 0:
+            heapq.heappush(ready, (*prio(tid), tid))
+
+    worker_free = [start_time] * n_workers
+    placements: Dict[int, Placement] = {}
+
+    while ready:
+        entry = heapq.heappop(ready)
+        tid = entry[-1]
+        node = graph.nodes[tid]
+        deps_done = max((finish[d] for d in node.all_deps), default=start_time)
+        # earliest-finish-time worker choice
+        best = None
+        for w in range(n_workers):
+            est = max(worker_free[w], deps_done)
+            if comm_cost is not None:
+                for d in node.deps:
+                    pw = placements[d].worker if d in placements else w
+                    if pw != w:
+                        est = max(est, finish[d] + comm_cost(d, tid))
+            dur = node.cost / speeds[w]
+            eft = est + dur
+            if best is None or eft < best[0]:
+                best = (eft, est, w)
+        eft, est, w = best  # type: ignore[misc]
+        placements[tid] = Placement(tid, w, est, eft)
+        worker_free[w] = eft
+        finish[tid] = eft
+        for s in succ[tid]:
+            indeg[s] -= 1
+            if indeg[s] == 0:
+                heapq.heappush(ready, (*prio(s), s))
+
+    if len(placements) + len(done) != len(graph.nodes):
+        raise AssertionError("scheduler did not place every task")
+    return Schedule(placements, n_workers)
+
+
+def replan(
+    graph: TaskGraph,
+    completed: Dict[int, float],
+    n_workers: int,
+    now: float,
+    **kw,
+) -> Schedule:
+    """Elastic re-plan: schedule only the not-yet-completed tasks on the new
+    worker set (workers may have joined or left)."""
+    return list_schedule(graph, n_workers, done=completed, start_time=now, **kw)
+
+
+def theoretical_speedup(graph: TaskGraph, n_workers: int) -> float:
+    """Brent's bound: T_p >= max(T_1 / p, T_inf); speedup <= T_1 / that."""
+    t1 = graph.total_work()
+    tinf = graph.critical_path_length()
+    tp = max(t1 / n_workers, tinf)
+    return t1 / tp if tp > 0 else 1.0

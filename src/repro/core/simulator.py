@@ -1,0 +1,331 @@
+"""Deterministic discrete-event cluster simulator.
+
+The paper evaluates its greedy/work-stealing scheduler on Cloud Haskell
+workers.  This container has one CPU, so — exactly like the paper "simulated"
+workers with Cloud Haskell processes on one box — we simulate a cluster with
+a discrete-event model: heterogeneous worker speeds, work-stealing deques,
+steal latency, worker failures (→ lineage recovery), stragglers
+(→ speculative re-execution) and elastic joins.
+
+Everything is deterministic given the seed, which makes the scheduler's
+behaviour property-testable (see ``tests/test_scheduler.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import random as _random
+from collections import deque
+from typing import Dict, List, Optional, Set, Tuple
+
+from .graph import TaskGraph, TaskKind
+
+DURABLE = -1   # pseudo-worker id: result survives any failure (checkpointed)
+
+
+@dataclasses.dataclass
+class WorkerEvent:
+    """Cluster dynamics injected into a run."""
+    time: float
+    kind: str           # "fail" | "join" | "slow"
+    worker: int
+    factor: float = 1.0  # for "slow": multiply speed by this
+
+
+@dataclasses.dataclass
+class SimResult:
+    makespan: float
+    n_steals: int = 0
+    n_recomputed: int = 0
+    n_speculative: int = 0
+    n_failures: int = 0
+    busy_time: Dict[int, float] = dataclasses.field(default_factory=dict)
+    task_worker: Dict[int, int] = dataclasses.field(default_factory=dict)
+    timeline: List[Tuple[float, str]] = dataclasses.field(default_factory=list)
+
+    @property
+    def utilization(self) -> float:
+        if not self.busy_time or self.makespan <= 0:
+            return 1.0
+        return sum(self.busy_time.values()) / (self.makespan * len(self.busy_time))
+
+
+class ClusterSim:
+    def __init__(
+        self,
+        graph: TaskGraph,
+        n_workers: int,
+        *,
+        worker_speed: Optional[List[float]] = None,
+        steal_latency: float = 0.0,
+        allow_steal: bool = True,
+        comm_per_byte: float = 0.0,
+        events: Optional[List[WorkerEvent]] = None,
+        speculate_after: Optional[float] = None,  # ×expected-duration threshold
+        policy: str = "critical_path",
+        seed: int = 0,
+    ) -> None:
+        graph.validate()
+        self.graph = graph
+        self.n_workers = n_workers
+        self.speed = {w: (worker_speed[w] if worker_speed else 1.0)
+                      for w in range(n_workers)}
+        self.steal_latency = steal_latency
+        self.allow_steal = allow_steal
+        self.comm_per_byte = comm_per_byte
+        self.events = sorted(events or [], key=lambda e: e.time)
+        self.speculate_after = speculate_after
+        self.rng = _random.Random(seed)
+        self.rank = graph.critical_path_rank()
+        if policy not in ("critical_path", "fifo", "random"):
+            raise ValueError(policy)
+        self.policy = policy
+        self._jitter = {tid: self.rng.random() for tid in graph.nodes}
+
+    # priority of a ready task (lower = sooner)
+    def _prio(self, tid: int) -> Tuple:
+        if self.policy == "critical_path":
+            return (-self.rank[tid], tid)
+        if self.policy == "fifo":
+            return (tid,)
+        return (self._jitter[tid], tid)
+
+    # ---------------------------------------------------------------- run
+    def run(self) -> SimResult:
+        g = self.graph
+        succ = g.successors()
+        res = SimResult(makespan=0.0)
+
+        alive: Set[int] = set(range(self.n_workers))
+        deques: Dict[int, deque] = {w: deque() for w in alive}
+        # results_at[tid] = set of workers holding the value (or DURABLE)
+        results_at: Dict[int, Set[int]] = {}
+        done: Set[int] = set()
+        # running[w] = (tid, start, end, epoch); epoch invalidates stale events
+        running: Dict[int, Tuple[int, float, float, int]] = {}
+        busy: Dict[int, float] = {w: 0.0 for w in alive}
+        inflight: Dict[int, Set[int]] = {}   # tid -> workers currently running it
+        epoch = 0
+
+        evq: List[Tuple[float, int, str, tuple]] = []
+        seq = 0
+
+        def push(t: float, kind: str, data: tuple) -> None:
+            nonlocal seq
+            heapq.heappush(evq, (t, seq, kind, data))
+            seq += 1
+
+        for e in self.events:
+            push(e.time, e.kind, (e.worker, e.factor))
+
+        def ready_p(tid: int) -> bool:
+            # NB: inflight values are sets that may be empty after a
+            # discard — membership must be by truthiness, not key presence,
+            # or recomputed tasks are blocked forever.
+            return (tid not in done and not inflight.get(tid)
+                    and all(d in done for d in g.nodes[tid].all_deps))
+
+        pending: Set[int] = set(g.nodes)
+        central: List[Tuple] = []   # overflow queue for tasks with no owner
+
+        def enqueue_ready_from(tid_done: int, worker: int) -> None:
+            """Paper's greedy rule: schedule successors the moment their
+            inputs are ready; locality: place on the finishing worker's deque."""
+            for s in succ[tid_done]:
+                if s in pending and ready_p(s):
+                    deques[worker].appendleft(s) if worker in deques else \
+                        heapq.heappush(central, (*self._prio(s), s))
+
+        def start_task(w: int, tid: int, now: float, speculative: bool = False):
+            nonlocal epoch
+            node = g.nodes[tid]
+            dur = node.cost / self.speed[w]
+            # input fetch cost: bytes from deps whose results live elsewhere
+            if self.comm_per_byte > 0.0:
+                for d in node.deps:
+                    holders = results_at.get(d, set())
+                    if w not in holders and DURABLE not in holders:
+                        dur += g.nodes[d].out_bytes * self.comm_per_byte
+            epoch += 1
+            running[w] = (tid, now, now + dur, epoch)
+            inflight.setdefault(tid, set()).add(w)
+            if speculative:
+                res.n_speculative += 1
+            push(now + dur, "finish", (w, tid, epoch))
+
+        def try_acquire(w: int, now: float) -> bool:
+            if w in running or w not in alive:
+                return False
+            # 1. own deque (LIFO — classic work-stealing owner end)
+            if deques[w]:
+                tid = deques[w].popleft()
+                if ready_p(tid):
+                    start_task(w, tid, now)
+                    return True
+                return try_acquire(w, now)   # stale entry; keep looking
+            # 2. central overflow
+            while central:
+                entry = heapq.heappop(central)
+                tid = entry[-1]
+                if ready_p(tid):
+                    start_task(w, tid, now)
+                    return True
+            # 3. steal from the most-loaded victim (FIFO end)
+            victim = None if not self.allow_steal else \
+                max((v for v in alive if v != w and deques[v]),
+                    key=lambda v: len(deques[v]), default=None)
+            if victim is not None:
+                tid = deques[victim].pop()
+                if ready_p(tid):
+                    res.n_steals += 1
+                    start_task(w, tid, now + self.steal_latency)
+                    return True
+                return try_acquire(w, now)
+            # 4. speculation: duplicate the longest-overdue running task
+            if self.speculate_after is not None:
+                cand = None
+                for v, (tid, st, en, _) in running.items():
+                    node = g.nodes[tid]
+                    expect = node.cost  # at nominal speed 1.0
+                    overdue = (now - st) / max(expect, 1e-12)
+                    if overdue > self.speculate_after and len(inflight.get(tid, ())) == 1:
+                        if cand is None or overdue > cand[0]:
+                            cand = (overdue, tid)
+                if cand is not None:
+                    start_task(w, cand[1], now, speculative=True)
+                    return True
+            return False
+
+    # -- failure → lineage recovery (pure tasks recomputed from survivors) --
+        def handle_failure(w: int, now: float) -> None:
+            res.n_failures += 1
+            alive.discard(w)
+            lost_running = running.pop(w, None)
+            if lost_running is not None:
+                tid = lost_running[0]
+                inflight.get(tid, set()).discard(w)
+                # the in-flight task dies with the worker; unless a
+                # speculative twin still runs it elsewhere, put it back
+                if tid not in done and not inflight.get(tid):
+                    heapq.heappush(central, (*self._prio(tid), tid))
+            # orphan this worker's queued tasks into the central queue
+            while deques[w]:
+                tid = deques[w].pop()
+                heapq.heappush(central, (*self._prio(tid), tid))
+            del deques[w]
+            # results held only by w are lost unless durable
+            lost: Set[int] = set()
+            for tid, holders in results_at.items():
+                holders.discard(w)
+                if not holders:
+                    lost.add(tid)
+            if not lost:
+                return
+            # lineage: a lost result must be recomputed iff some not-done
+            # task (or a driver output) still needs it
+            needed: Set[int] = set(g.outputs)
+            for t in pending:
+                needed.update(g.nodes[t].all_deps)
+            to_redo = {t for t in lost if t in needed or t in g.outputs}
+            # recompute transitively: ancestors of to_redo that are also lost
+            frontier = set(to_redo)
+            while frontier:
+                t = frontier.pop()
+                for d in g.nodes[t].all_deps:
+                    if d in lost and d not in to_redo:
+                        to_redo.add(d)
+                        frontier.add(d)
+            for t in to_redo:
+                results_at.pop(t, None)
+                done.discard(t)
+                pending.add(t)
+                res.n_recomputed += 1
+            for t in sorted(to_redo):
+                if ready_p(t):
+                    heapq.heappush(central, (*self._prio(t), t))
+
+        # seed: all zero-dep tasks round-robin across workers
+        sources = [tid for tid in g.topo_order()
+                   if not g.nodes[tid].all_deps]
+        sources.sort(key=self._prio)
+        for i, tid in enumerate(sources):
+            deques[i % self.n_workers].append(tid)
+
+        now = 0.0
+        for w in list(alive):
+            try_acquire(w, now)
+
+        while evq:
+            now, _, kind, data = heapq.heappop(evq)
+            if kind == "finish":
+                w, tid, ep = data
+                cur = running.get(w)
+                if cur is None or cur[3] != ep:
+                    continue   # stale (worker failed / task re-assigned)
+                del running[w]
+                inflight.get(tid, set()).discard(w)
+                busy[w] = busy.get(w, 0.0) + (now - cur[1])
+                if tid in done:
+                    pass       # a speculative twin already finished
+                else:
+                    done.add(tid)
+                    pending.discard(tid)
+                    results_at.setdefault(tid, set()).add(w)
+                    res.task_worker[tid] = w
+                    node = g.nodes[tid]
+                    if node.kind is TaskKind.BARRIER:
+                        # checkpoint: node + its direct inputs become durable
+                        results_at.setdefault(tid, set()).add(DURABLE)
+                        for d in node.deps:
+                            results_at.setdefault(d, set()).add(DURABLE)
+                    enqueue_ready_from(tid, w)
+                    res.makespan = max(res.makespan, now)
+                try_acquire(w, now)
+                # a finish may unblock work for idle peers
+                for v in list(alive):
+                    if v not in running:
+                        try_acquire(v, now)
+            elif kind == "fail":
+                w, _ = data
+                if w in alive:
+                    handle_failure(w, now)
+                    res.timeline.append((now, f"fail w{w}"))
+                    for v in list(alive):
+                        if v not in running:
+                            try_acquire(v, now)
+            elif kind == "join":
+                w, _ = data
+                if w not in alive:
+                    alive.add(w)
+                    deques[w] = deque()
+                    busy.setdefault(w, 0.0)
+                    self.speed.setdefault(w, 1.0)
+                    res.timeline.append((now, f"join w{w}"))
+                    try_acquire(w, now)
+            elif kind == "slow":
+                w, factor = data
+                if w in self.speed:
+                    self.speed[w] *= factor
+                    res.timeline.append((now, f"slow w{w} ×{factor}"))
+
+        if pending:
+            n_ready = sum(1 for t in pending if ready_p(t))
+            frontier = [t for t in sorted(pending)
+                        if all(d in done or d not in pending
+                               for d in g.nodes[t].all_deps)][:5]
+            detail = {t: {"inflight": sorted(inflight.get(t, ())),
+                          "missing_deps": [d for d in g.nodes[t].all_deps
+                                           if d not in done]}
+                      for t in frontier}
+            raise RuntimeError(
+                f"simulation deadlocked with {len(pending)} tasks pending "
+                f"({n_ready} ready; alive={sorted(alive)}; "
+                f"running={ {w: r[0] for w, r in running.items()} }; "
+                f"deques={ {w: len(d) for w, d in deques.items() if d} }; "
+                f"central={len(central)}; frontier={detail})")
+        res.busy_time = busy
+        return res
+
+
+def simulate(graph: TaskGraph, n_workers: int, **kw) -> SimResult:
+    return ClusterSim(graph, n_workers, **kw).run()

@@ -1,0 +1,1 @@
+from .pipeline import SyntheticLMDataset, Prefetcher, make_data_source

@@ -1,0 +1,66 @@
+"""Blocked MXU matmul — the compute payload of the paper's Fig. 2 benchmark.
+
+TPU mapping of the paper's "large random matrix multiplication" tasks:
+(bm, bk) × (bk, bn) VMEM tiles streamed over a (M/bm, N/bn, K/bk) grid with a
+float32 VMEM accumulator.  Block sizes default to 256/512 — multiples of the
+128-lane MXU dimension, sized so 3 tiles + accumulator ≈ 1.4 MB ≪ 16 MB VMEM
+(double buffering headroom for the HBM→VMEM pipeline).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, acc_ref, *, k_steps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], y_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _fit_block(dim: int, want: int) -> int:
+    """Largest divisor of ``dim`` that is <= want, preferring multiples of
+    128 (the MXU lane width) when one divides."""
+    want = min(want, dim)
+    for b in range(want - want % 128, 0, -128):
+        if dim % b == 0:
+            return b
+    for b in range(want, 0, -1):
+        if dim % b == 0:
+            return b
+    return dim
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def matmul(x: jax.Array, y: jax.Array, *, bm: int = 256, bn: int = 256,
+           bk: int = 512, interpret: bool = True) -> jax.Array:
+    """x: (M, K) @ y: (K, N) -> (M, N).  Block sizes are fitted down to
+    divisors of the dims (128-multiples preferred for the MXU)."""
+    M, K = x.shape
+    K2, N = y.shape
+    assert K == K2
+    bm, bn, bk = _fit_block(M, bm), _fit_block(N, bn), _fit_block(K, bk)
+    k_steps = K // bk
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, k_steps=k_steps),
+        grid=(M // bm, N // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, y)

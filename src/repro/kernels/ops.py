@@ -1,0 +1,48 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+``interpret`` defaults to True on CPU backends (this container) and False on
+TPU — the same call sites work in both worlds.  Model code selects the
+kernel path with ``use_kernels(cfg)``; the jnp reference path remains the
+default so the 512-device dry-run lowers without a TPU backend.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from . import ref
+from .matmul_pallas import matmul as _matmul_pallas
+from .flash_attention import flash_attention as _flash_pallas
+from .ssm_scan import ssm_scan as _ssm_pallas
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def matmul(x, y, *, impl: str = "pallas", interpret: Optional[bool] = None):
+    if impl == "ref":
+        return ref.matmul(x, y)
+    return _matmul_pallas(x, y, interpret=_default_interpret()
+                          if interpret is None else interpret)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, impl: str = "pallas",
+                    bq: int = 256, bk: int = 512,
+                    interpret: Optional[bool] = None):
+    if impl == "ref":
+        return ref.attention(q, k, v, causal=causal)
+    return _flash_pallas(q, k, v, causal=causal, bq=bq, bk=bk,
+                         interpret=_default_interpret()
+                         if interpret is None else interpret)
+
+
+def ssm_scan(x, dt, B, C, A, *, impl: str = "pallas", chunk: int = 64,
+             bd: int = 512, interpret: Optional[bool] = None):
+    if impl == "ref":
+        return ref.ssm_scan(x, dt, B, C, A)
+    return _ssm_pallas(x, dt, B, C, A, chunk=chunk, bd=bd,
+                       interpret=_default_interpret()
+                       if interpret is None else interpret)

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul(x: jax.Array, y: jax.Array) -> jax.Array:
+    return jnp.dot(x.astype(jnp.float32), y.astype(jnp.float32)
+                   ).astype(x.dtype)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True) -> jax.Array:
+    """q: (B, H, Sq, D); k, v: (B, KH, Sk, D)."""
+    B, H, Sq, D = q.shape
+    KH, Sk = k.shape[1], k.shape[2]
+    if H != KH:
+        k = jnp.repeat(k, H // KH, axis=1)
+        v = jnp.repeat(v, H // KH, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (D ** -0.5)
+    if causal:
+        qpos = jnp.arange(Sq)[:, None]
+        kpos = jnp.arange(Sk)[None, :]
+        s = jnp.where(kpos <= qpos, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssm_scan(x: jax.Array, dt: jax.Array, B: jax.Array, C: jax.Array,
+             A: jax.Array) -> jax.Array:
+    """Naive step-by-step selective scan (float32)."""
+    Bsz, S, D = x.shape
+    N = A.shape[-1]
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    Bf, Cf = B.astype(jnp.float32), C.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp
+        da = jnp.exp(dtt[:, :, None] * Af[None])           # (Bsz, D, N)
+        h = da * h + (dtt * xt)[:, :, None] * bt[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, ct)
+        return h, y
+
+    h0 = jnp.zeros((Bsz, D, N), jnp.float32)
+    _, ys = jax.lax.scan(step, h0,
+                         (xf.transpose(1, 0, 2), dtf.transpose(1, 0, 2),
+                          Bf.transpose(1, 0, 2), Cf.transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2).astype(x.dtype)

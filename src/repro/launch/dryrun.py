@@ -1,0 +1,356 @@
+"""Multi-pod dry-run: AOT lower+compile every (arch × shape × mesh) cell.
+
+MUST be run as a module: ``PYTHONPATH=src python -m repro.launch.dryrun
+--arch qwen3-14b --shape train_4k --mesh single``.  The first two lines
+create 512 placeholder CPU devices BEFORE any jax import (jax pins the
+device count at first init); smoke tests / benches import repro normally
+and see 1 device.
+"""
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import re                # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+from typing import Dict, Optional  # noqa: E402
+
+import jax               # noqa: E402
+
+from repro.configs import ARCHS                       # noqa: E402
+from repro.models.config import SHAPES                # noqa: E402
+from repro.launch.mesh import make_production_mesh    # noqa: E402
+from repro.launch import steps as steps_mod           # noqa: E402
+
+# --------------------------------------------------------------------------
+# v5e hardware constants (assignment §ROOFLINE)
+# --------------------------------------------------------------------------
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (~per chip per direction)
+DCN_BW = 25e9                # bytes/s per chip across pods (assumed, 2x slower)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute|"
+    r"collective-broadcast)(-start)?\(",
+)
+# replica_groups={{0,1},{2,3}}  (explicit)
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{(\{.*?\})\}")
+# replica_groups=[32,16]<=[2,16,16]T(1,0,2)  (iota form: 32 groups of 16)
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{(.*?)\}")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _parse_groups(line: str) -> Optional[list]:
+    """Return replica groups as a list of id-lists, or None if absent."""
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        import numpy as np
+        ng, gs = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        ids = np.arange(int(np.prod(dims))).reshape(dims)
+        if m.group(4):
+            perm = [int(x) for x in m.group(4).split(",")]
+            ids = ids.transpose(perm)
+        return ids.reshape(ng, gs).tolist()
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return [[int(x) for x in re.findall(r"\d+", grp)]
+                for grp in m.group(1).split("},{")]
+    return None
+
+
+# Ring-algorithm per-device wire-byte factors, as a function of the printed
+# (per-device) RESULT size b and the replica-group size g:
+#   all-gather      result is the gathered buffer; wire = b·(g-1)/g
+#   all-reduce      operand == result;            wire = 2·b·(g-1)/g
+#   reduce-scatter  operand = b·g;                wire = b·(g-1)
+#   all-to-all      operand == result;            wire = b·(g-1)/g
+#   collective-permute / broadcast                wire = b
+def _wire_bytes(op: str, b: float, g: int) -> float:
+    if g <= 1:
+        return 0.0 if op not in ("collective-permute",) else b
+    if op == "all-gather":
+        return b * (g - 1) / g
+    if op == "all-reduce":
+        return 2.0 * b * (g - 1) / g
+    if op == "reduce-scatter":
+        return b * (g - 1)
+    if op == "all-to-all":
+        return b * (g - 1) / g
+    return b   # permute / broadcast
+
+
+def parse_collectives(hlo: str, pod_boundary: Optional[int] = None) -> Dict:
+    """Per-device collective traffic from partitioned HLO.
+
+    Returns raw RESULT bytes per op type (inspectable), plus modeled wire
+    bytes (``_wire_ici_bytes`` / ``_wire_dcn_bytes``) using ring-algorithm
+    factors and the parsed replica-group size of every op.
+
+    ``pod_boundary``: device id where pod 1 starts (256 for the 2-pod mesh);
+    an op whose replica group (or permute pair) spans the boundary is
+    attributed to DCN in full (conservative — a hierarchical algorithm
+    would split it; noted in EXPERIMENTS.md §Roofline).
+    """
+    out: Dict[str, float] = {}
+    wire_ici = 0.0
+    wire_dcn = 0.0
+    dcn_bytes = 0.0
+    n_ops = 0
+    for line in hlo.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shape_str, op, is_start = m.group(1), m.group(2), m.group(3)
+        if is_start and shape_str.startswith("("):
+            # async start returns (operand, result[, scratch]) — count the
+            # result only (second element)
+            inner = [s for s in re.findall(r"[a-z0-9]+\[[0-9,]*\]", shape_str)]
+            b = _shape_bytes(inner[1]) if len(inner) >= 2 else _shape_bytes(shape_str)
+        else:
+            b = _shape_bytes(shape_str)
+        if b == 0:
+            continue
+        # XLA:CPU promotes bf16 all-reduces to f32 (reduction computed in
+        # f32 on host); the TPU wire width is the SEMANTIC bf16 — count
+        # half.  Promoted ops are tagged by their "..._promoted" reducer.
+        if "promoted" in line:
+            b *= 0.5
+        n_ops += 1
+        out[op] = out.get(op, 0.0) + b
+
+        crosses = False
+        if op == "collective-permute":
+            g = 2
+            pm = _PAIRS_RE.search(line)
+            if pm and pod_boundary is not None:
+                pairs = [[int(x) for x in re.findall(r"\d+", p)]
+                         for p in pm.group(1).split("},{")]
+                crosses = any(len(p) == 2 and
+                              (p[0] < pod_boundary) != (p[1] < pod_boundary)
+                              for p in pairs)
+        else:
+            groups = _parse_groups(line)
+            g = len(groups[0]) if groups else 1
+            if groups and pod_boundary is not None:
+                crosses = any(min(grp) < pod_boundary <= max(grp)
+                              for grp in groups if grp)
+        w = _wire_bytes(op, b, g)
+        if crosses:
+            wire_dcn += w
+            dcn_bytes += b
+        else:
+            wire_ici += w
+    out["_dcn_bytes"] = dcn_bytes
+    out["_wire_ici_bytes"] = wire_ici
+    out["_wire_dcn_bytes"] = wire_dcn
+    out["_n_ops"] = n_ops
+    return out
+
+
+def _probe_depths(cfg) -> tuple:
+    """Layer counts for the two unrolled cost probes.  The period p is the
+    smallest depth after which the layer plan repeats (zamba2's shared-attn
+    cadence, llama4's interleaved MoE); probing at (p, 2p) layers makes the
+    linear extrapolation to full depth exact for plan-periodic stacks."""
+    import math
+    p = 1
+    if cfg.shared_attn_every:
+        p = cfg.shared_attn_every
+    if cfg.n_experts and cfg.moe_every > 1:
+        p = p * cfg.moe_every // math.gcd(p, cfg.moe_every)
+    L1 = p if p > 1 else 2
+    return L1, 2 * L1
+
+
+def probe_correction(arch: str, shape: str, mesh, mode: str,
+                     overrides: Optional[Dict]) -> Dict:
+    """Depth-corrected per-device cost terms.
+
+    XLA's ``cost_analysis`` counts a while/scan body ONCE regardless of trip
+    count, so the production (scanned) program under-reports FLOPs/bytes/
+    collectives by ~n_layers×.  We compile two small UNROLLED models at
+    depths (L1, L2) and extrapolate each cost linearly to the full depth:
+    ``X(L) = X(L1) + (X(L2)-X(L1))·(L-L1)/(L2-L1)`` — exact for
+    plan-periodic layer stacks since cost is affine in depth.
+    """
+    from repro.configs import get_config
+    cfg = get_config(arch)
+    L_full = cfg.n_layers
+    L1, L2 = _probe_depths(cfg)
+    probes = {}
+    for L in (L1, L2):
+        upd = dict(overrides or {})
+        upd.update(n_layers=L, layer_plan=(), scan_layers=False)
+        if cfg.is_encoder_decoder:
+            upd["n_enc_layers"] = L
+        case = build_case_for(arch, shape, mesh, mode, upd)
+        with mesh:
+            compiled = steps_mod.lower_case(case).compile()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        probes[L] = {
+            "flops_per_device": float(cost.get("flops", 0.0)),
+            "bytes_per_device": float(cost.get("bytes accessed", 0.0)),
+            "collectives": parse_collectives(hlo),
+        }
+        del hlo, compiled
+
+    def lerp(x1: float, x2: float) -> float:
+        return x1 + (x2 - x1) * (L_full - L1) / (L2 - L1)
+
+    p1, p2 = probes[L1], probes[L2]
+    coll_keys = set(p1["collectives"]) | set(p2["collectives"])
+    return {
+        "probe_depths": [L1, L2],
+        "flops_per_device": lerp(p1["flops_per_device"],
+                                 p2["flops_per_device"]),
+        "bytes_per_device": lerp(p1["bytes_per_device"],
+                                 p2["bytes_per_device"]),
+        "collectives": {k: lerp(p1["collectives"].get(k, 0.0),
+                                p2["collectives"].get(k, 0.0))
+                        for k in coll_keys},
+        "probes": probes,
+    }
+
+
+def build_case_for(arch: str, shape: str, mesh, mode: str,
+                   overrides: Optional[Dict]):
+    return steps_mod.build_case(arch, shape, mesh, mode, overrides=overrides)
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, out_dir: str,
+             mode: str = "fsdp_tp", overrides: Optional[Dict] = None,
+             tag: str = "", verbose: bool = True) -> Dict:
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    n_chips = mesh.size
+    rec: Dict = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                 "chips": n_chips, "mode": mode, "tag": tag}
+    t0 = time.time()
+    try:
+        case = steps_mod.build_case(arch, shape, mesh, mode,
+                                    overrides=overrides)
+        if case.skip_reason:
+            rec["status"] = "SKIP"
+            rec["reason"] = case.skip_reason
+            return _finish(rec, out_dir, t0, verbose)
+        with mesh:
+            lowered = steps_mod.lower_case(case)
+            compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        rec["status"] = "OK"
+        rec["flops_per_device"] = float(cost.get("flops", 0.0))
+        rec["bytes_per_device"] = float(cost.get("bytes accessed", 0.0))
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes",
+                     "peak_memory_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                rec[attr] = int(v)
+        rec["collectives"] = parse_collectives(
+            hlo, pod_boundary=256 if multi else None)
+        rec["hlo_lines"] = hlo.count("\n")
+        del hlo, compiled, lowered
+        if not multi:
+            # depth-corrected costs from unrolled probes (single-pod only —
+            # the roofline table reads these; multi-pod is a pass/fail +
+            # DCN-attribution check)
+            try:
+                rec["corrected"] = probe_correction(
+                    arch, shape, mesh, mode, overrides)
+            except Exception as e:      # probe failure must not fail the cell
+                rec["corrected_error"] = f"{type(e).__name__}: {e}"
+    except Exception as e:
+        rec["status"] = "FAIL"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    return _finish(rec, out_dir, t0, verbose)
+
+
+def _finish(rec: Dict, out_dir: str, t0: float, verbose: bool) -> Dict:
+    rec["compile_seconds"] = round(time.time() - t0, 2)
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"_{rec['tag']}" if rec.get("tag") else ""
+    path = os.path.join(
+        out_dir, f"{rec['arch']}__{rec['shape']}__{rec['mesh']}{tag}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    if verbose:
+        status = rec["status"]
+        extra = ""
+        if status == "OK":
+            extra = (f" flops/dev={rec['flops_per_device']:.3e}"
+                     f" bytes/dev={rec['bytes_per_device']:.3e}"
+                     f" coll_ops={rec['collectives'].get('_n_ops', 0)}")
+        elif status == "FAIL":
+            extra = " " + rec["error"][:200]
+        elif status == "SKIP":
+            extra = " " + rec["reason"][:80]
+        print(f"[{rec['compile_seconds']:7.1f}s] {rec['arch']:28s} "
+              f"{rec['shape']:12s} {rec['mesh']:6s} {status}{extra}",
+              flush=True)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", help="shape id or 'all'")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--mode", default="fsdp_tp")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCHS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    n_fail = 0
+    for mesh_kind in meshes:
+        for arch in archs:
+            for shape in shapes:
+                tag = f"_{args.tag}" if args.tag else ""
+                path = os.path.join(
+                    args.out, f"{arch}__{shape}__{mesh_kind}{tag}.json")
+                if args.skip_existing and os.path.exists(path):
+                    with open(path) as f:
+                        if json.load(f).get("status") == "OK":
+                            continue
+                rec = run_cell(arch, shape, mesh_kind, args.out,
+                               mode=args.mode, tag=args.tag)
+                n_fail += rec["status"] == "FAIL"
+    print(f"dry-run complete, {n_fail} failures", flush=True)
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

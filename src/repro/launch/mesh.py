@@ -1,0 +1,8 @@
+"""Production mesh entry point (assignment §MULTI-POD DRY-RUN item 1).
+
+Functions only — importing this module never touches jax device state.
+"""
+from repro.parallel.mesh import (make_production_mesh, make_mesh_for,
+                                 single_device_mesh)
+
+__all__ = ["make_production_mesh", "make_mesh_for", "single_device_mesh"]

@@ -1,0 +1,262 @@
+"""Per-cell step builders: (arch × shape × mesh) → abstract inputs,
+shardings and the jit-able step function.
+
+This is the glue the dry-run, the roofline benchmarks and the real train /
+serve launchers all share, so what we compile in the dry-run is EXACTLY what
+would execute on hardware.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.core.placement import standard_rules, logical_to_spec, tree_shardings
+from repro.models.config import ModelConfig, ShapeSpec, SHAPES
+from repro.models import transformer as TF
+from repro.models import encdec as ED
+from repro.models import frontends
+from repro.optim import AdamW, Adafactor
+from repro.parallel.sharding import ShardingCtx
+
+
+@dataclasses.dataclass
+class Case:
+    arch: str
+    shape: str
+    cfg: ModelConfig
+    fn: Callable
+    args: Tuple[Any, ...]              # ShapeDtypeStructs (dry-run safe)
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+    kind: str                          # train | prefill | decode
+    skip_reason: Optional[str] = None
+
+
+def skip_reason(cfg: ModelConfig, shape: ShapeSpec) -> Optional[str]:
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return ("full-attention arch at 512k context: quadratic prefill / "
+                "full-length KV cache out of scope per assignment "
+                "(DESIGN.md §Arch-applicability)")
+    return None
+
+
+def make_optimizer(cfg: ModelConfig, lr: float = 3e-4):
+    if cfg.name.startswith("llama4"):
+        return Adafactor(lr=lr)        # Adam state cannot fit (DESIGN.md §5)
+    return AdamW(lr=lr, weight_decay=0.1)
+
+
+# --------------------------------------------------------------------------
+# sharding helpers
+# --------------------------------------------------------------------------
+
+def make_rules(mesh: Mesh, mode: str, global_batch: int):
+    pod = "pod" if "pod" in mesh.axis_names else None
+    rules = standard_rules(mode, pod_axis=pod)
+    batch_ways = mesh.shape["data"] * (mesh.shape["pod"] if pod else 1)
+    if global_batch % batch_ways != 0:
+        # tiny batches (long_500k B=1): replicate batch, keep TP/FSDP
+        rules = [("batch", None), ("expert_group", None)] + \
+            [r for r in rules if r[0] not in ("batch", "expert_group")]
+    return rules
+
+
+def opt_state_shardings(opt, params_axes, params_abs, rules, mesh):
+    """m/v mirror the param specs; Adafactor's factored vr/vc drop the
+    last / second-to-last logical axis (matching its init by shape)."""
+    def spec(axes):
+        return NamedSharding(mesh, logical_to_spec(axes, rules, mesh))
+
+    if isinstance(opt, AdamW):
+        pm = jax.tree.map(spec, params_axes,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        return {"step": NamedSharding(mesh, P()), "m": pm, "v": pm}
+
+    def vspec(axes, p):
+        if opt._factored(p.shape):
+            return {"vr": spec(axes[:-1]), "vc": spec(axes[:-2] + axes[-1:])}
+        return {"v": spec(axes)}
+    vt = jax.tree.map(vspec, params_axes, params_abs,
+                      is_leaf=lambda x: isinstance(x, tuple))
+    return {"step": NamedSharding(mesh, P()), "v": vt}
+
+
+def _sh(mesh, rules, axes):
+    return NamedSharding(mesh, logical_to_spec(axes, rules, mesh))
+
+
+# --------------------------------------------------------------------------
+# generic train step (dispatches dense-stack vs enc-dec)
+# --------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, optimizer, ctx) -> Callable:
+    M = ED if cfg.is_encoder_decoder else TF
+    loss_fn = M.make_loss_fn(cfg, ctx)
+
+    g_sh = None
+    if cfg.shard_grads and ctx is not None and ctx.mesh is not None:
+        axes = M.logical_axes(cfg)
+        g_sh = jax.tree.map(
+            lambda a: NamedSharding(ctx.mesh,
+                                    logical_to_spec(a, ctx.rules, ctx.mesh)),
+            axes, is_leaf=lambda x: isinstance(x, tuple))
+
+    def train_step(params, opt_state, batch):
+        grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+        (total, metrics), grads = grad_fn(params, batch)
+        if g_sh is not None:
+            # pin grads to the param layout: the DP reduction lowers as a
+            # reduce-scatter to the shard each device owns (1× wire) rather
+            # than an all-reduce of the full gradient (2× wire)
+            grads = jax.lax.with_sharding_constraint(grads, g_sh)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = jax.tree.map(lambda p, u: (p + u).astype(p.dtype),
+                              params, updates)
+        metrics = dict(metrics, total_loss=total)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+# --------------------------------------------------------------------------
+# case builders
+# --------------------------------------------------------------------------
+
+def build_case(arch: str, shape_name: str, mesh: Mesh,
+               mode: str = "fsdp_tp", *,
+               remat: Optional[str] = None,
+               serve_mode: Optional[str] = None,
+               overrides: Optional[Dict[str, Any]] = None) -> Case:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    reason = skip_reason(cfg, shape)
+    if reason:
+        return Case(arch, shape_name, cfg, None, (), (), None, (),
+                    shape.kind, skip_reason=reason)
+
+    B, S = shape.global_batch, shape.seq_len
+    upd: Dict[str, Any] = {"max_cache_len": S}
+    if shape.kind != "train":
+        upd["param_dtype"] = "bfloat16"       # serving runs bf16 weights
+        mode = serve_mode or mode
+    if remat is not None:
+        upd["remat"] = remat
+    if overrides:
+        upd.update(overrides)
+    cfg = dataclasses.replace(cfg, **upd)
+
+    rules = make_rules(mesh, mode, B)
+    ctx = ShardingCtx(mesh, rules)
+    is_ed = cfg.is_encoder_decoder
+    M = ED if is_ed else TF
+
+    params_abs = M.abstract_params(cfg)
+    params_axes = M.logical_axes(cfg)
+    params_sh = jax.tree.map(functools.partial(_sh, mesh, rules),
+                             params_axes,
+                             is_leaf=lambda x: isinstance(x, tuple))
+    tok = jax.ShapeDtypeStruct
+    tok_sh = _sh(mesh, rules, ("batch", "seq"))
+
+    if shape.kind == "train":
+        opt = make_optimizer(cfg)
+        opt_abs = jax.eval_shape(opt.init, params_abs)
+        opt_sh = opt_state_shardings(opt, params_axes, params_abs, rules, mesh)
+        batch_abs = {"tokens": tok((B, S), jnp.int32),
+                     "labels": tok((B, S), jnp.int32)}
+        batch_sh = {"tokens": tok_sh, "labels": tok_sh}
+        if cfg.family == "vlm":
+            batch_abs["patch_embeds"] = frontends.vision_patch_spec(cfg, B)
+            batch_sh["patch_embeds"] = _sh(mesh, rules, ("batch", None, None))
+        if is_ed:
+            batch_abs["frames"] = frontends.audio_frame_spec(cfg, B)
+            batch_sh["frames"] = _sh(mesh, rules, ("batch", None, None))
+        fn = make_train_step(cfg, opt, ctx)
+        return Case(arch, shape_name, cfg, fn,
+                    (params_abs, opt_abs, batch_abs),
+                    (params_sh, opt_sh, batch_sh),
+                    None, (0, 1), "train")
+
+    cache_axes = (ED.cache_logical_axes(cfg) if is_ed
+                  else TF.cache_logical_axes(cfg))
+    cache_sh = jax.tree.map(functools.partial(_sh, mesh, rules),
+                            cache_axes,
+                            is_leaf=lambda x: isinstance(x, tuple))
+
+    if shape.kind == "prefill":
+        fn = (ED.make_prefill_step(cfg, ctx, max_len=S) if is_ed
+              else TF.make_prefill_step(cfg, ctx, max_len=S))
+        args: Tuple[Any, ...] = (params_abs, tok((B, S), jnp.int32))
+        in_sh: Tuple[Any, ...] = (params_sh, tok_sh)
+        if cfg.family == "vlm":
+            args = args + (frontends.vision_patch_spec(cfg, B),)
+            in_sh = in_sh + (_sh(mesh, rules, ("batch", None, None)),)
+        if is_ed:
+            args = args + (frontends.audio_frame_spec(cfg, B),)
+            in_sh = in_sh + (_sh(mesh, rules, ("batch", None, None)),)
+        logits_sh = _sh(mesh, rules, ("batch", "vocab"))
+        return Case(arch, shape_name, cfg, fn, args, in_sh,
+                    (logits_sh, cache_sh), (), "prefill")
+
+    # decode: one new token against a cache of length S
+    init = functools.partial(
+        (ED.init_cache if is_ed else TF.init_cache), cfg, B, S)
+    cache_abs = jax.eval_shape(init)
+    fn = (ED.make_decode_step(cfg, ctx) if is_ed
+          else TF.make_decode_step(cfg, ctx))
+    token_sh = _sh(mesh, rules, ("batch", None))
+    logits_sh = _sh(mesh, rules, ("batch", "vocab"))
+    return Case(arch, shape_name, cfg, fn,
+                (params_abs, cache_abs, tok((B, 1), jnp.int32)),
+                (params_sh, cache_sh, token_sh),
+                (logits_sh, cache_sh), (1,), "decode")
+
+
+def _fit_sharding(abs_leaf, sh):
+    """Drop mesh axes whose shard count does not divide the dim size —
+    jit I/O shardings require exact divisibility (padding only applies to
+    internal constraints).  E.g. whisper's vocab=51865 cannot shard 16-way;
+    the embedding is replicated on that dim instead."""
+    if sh is None or not isinstance(sh, NamedSharding):
+        return sh
+    shape = abs_leaf.shape
+    spec = sh.spec
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    new_parts = []
+    for dim, part in zip(shape, parts):
+        if part is None:
+            new_parts.append(None)
+            continue
+        axes = (part,) if isinstance(part, str) else tuple(part)
+        n = 1
+        for a in axes:
+            n *= sh.mesh.shape[a]
+        new_parts.append(part if dim % n == 0 else None)
+    while new_parts and new_parts[-1] is None:
+        new_parts.pop()
+    return NamedSharding(sh.mesh, P(*new_parts))
+
+
+def fit_case_shardings(case: Case) -> Case:
+    in_sh = jax.tree.map(_fit_sharding, case.args, case.in_shardings)
+    out_sh = case.out_shardings
+    if out_sh is not None:
+        out_abs = jax.eval_shape(case.fn, *case.args)
+        out_sh = jax.tree.map(_fit_sharding, out_abs, out_sh)
+    return dataclasses.replace(case, in_shardings=in_sh, out_shardings=out_sh)
+
+
+def lower_case(case: Case):
+    case = fit_case_shardings(case)
+    jitted = jax.jit(case.fn,
+                     in_shardings=case.in_shardings,
+                     out_shardings=case.out_shardings,
+                     donate_argnums=case.donate_argnums)
+    return jitted.lower(*case.args)

@@ -1,0 +1,179 @@
+"""Production training launcher.
+
+Runs the SAME ``launch.steps`` train step the dry-run compiles, on whatever
+devices exist: the full assigned configs on a real pod/multi-pod mesh, or
+``--reduced`` configs on this CPU container (the end-to-end examples).
+
+Features (assignment §large-scale runnability):
+  * checkpoint/restart: sharded async save every ``--ckpt-every`` steps;
+    ``--resume`` restores params+opt+data cursor (elastic: restore works
+    across mesh shapes — shardings are re-derived from logical axes);
+  * fault tolerance: the whole program is (step, host)-deterministic, so a
+    restarted job replays the exact token stream from the cursor;
+  * straggler detection: per-step wall-time EWMA; steps slower than
+    ``--straggler-x`` times the EWMA are logged (on hardware this feeds the
+    eviction policy — on CPU it just reports);
+  * the driver loop is traced by the paper's auto-parallelizer: data loading
+    is an ``@io_task`` source, the jitted SPMD step is a pure task, and
+    checkpointing is an ``@io_task`` sink — ``--show-graph`` prints the DAG.
+
+Example (CPU, ~17M-param qwen2-family, 50 steps):
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-7b --reduced \\
+      --steps 50 --batch 8 --seq 64 --ckpt-dir /tmp/ckpt --ckpt-every 20
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, ARCHS
+from repro.core import trace, task, io_task, checkpoint_barrier
+from repro.core.placement import standard_rules
+from repro.checkpoint.store import CheckpointManager, latest_step
+from repro.data.pipeline import SyntheticLMDataset, Prefetcher
+from repro.launch import steps as steps_mod
+from repro.models import transformer as TF
+from repro.models import encdec as ED
+from repro.models import frontends
+from repro.optim.schedules import cosine_schedule
+from repro.parallel.mesh import make_mesh_for, single_device_mesh
+from repro.parallel.sharding import ShardingCtx
+
+
+def build_runtime(args) -> Dict[str, Any]:
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    cfg = dataclasses.replace(cfg, remat=args.remat)
+
+    n_dev = len(jax.devices())
+    mesh = (make_mesh_for(n_dev, model_parallel=args.tp)
+            if n_dev > 1 else single_device_mesh())
+    rules = standard_rules(args.mode, pod_axis=None)
+    ctx = ShardingCtx(mesh, rules)
+
+    M = ED if cfg.is_encoder_decoder else TF
+    opt = steps_mod.make_optimizer(cfg, lr=cosine_schedule(
+        args.lr, args.warmup, args.steps))
+    step_fn = steps_mod.make_train_step(cfg, opt, ctx)
+
+    params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
+    opt_state = opt.init(params)
+    jitted = jax.jit(step_fn, donate_argnums=(0, 1))
+    return dict(cfg=cfg, mesh=mesh, ctx=ctx, opt=opt, params=params,
+                opt_state=opt_state, step=jitted, module=M)
+
+
+def main(argv: Optional[list] = None) -> Dict[str, Any]:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-7b", choices=ARCHS)
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-sized config of the same family")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--tp", type=int, default=1, help="model-parallel ways")
+    ap.add_argument("--mode", default="fsdp_tp")
+    ap.add_argument("--remat", default="selective")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--straggler-x", type=float, default=3.0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--show-graph", action="store_true")
+    args = ap.parse_args(argv)
+
+    rt = build_runtime(args)
+    cfg = rt["cfg"]
+    params, opt_state = rt["params"], rt["opt_state"]
+    jitted = rt["step"]
+
+    start_step = 0
+    mgr = None
+    if args.ckpt_dir:
+        mgr = CheckpointManager(args.ckpt_dir, every=args.ckpt_every, keep=3)
+        if args.resume and latest_step(args.ckpt_dir) is not None:
+            tree = {"params": params, "opt": opt_state}
+            restored, extra = mgr.restore_latest(tree)
+            params, opt_state = restored["params"], restored["opt"]
+            start_step = int(extra["step"]) + 1
+            print(f"resumed from step {extra['step']} "
+                  f"(data cursor {start_step})", flush=True)
+
+    ds = SyntheticLMDataset(cfg.vocab_size, args.seq, args.batch,
+                            seed=args.seed)
+    pf = Prefetcher(ds, start_step=start_step, depth=2)
+
+    # ---- the paper's interface: trace ONE driver iteration into a DAG ----
+    if args.show_graph:
+        @io_task(cost=0.01, meta={"idempotent": True})
+        def load_batch():
+            return pf.next()
+
+        @task(cost=1.0, name="spmd_train_step")
+        def do_step(p, o, b):
+            return jitted(p, o, b)
+
+        @io_task(cost=0.05, name="save_ckpt")
+        def save(state):
+            return state
+
+        def driver(p, o):
+            b = load_batch()
+            out = do_step(p, o, b)
+            return checkpoint_barrier(save(out))
+
+        g, _ = trace(driver, None, None)
+        print(g.summary())
+        print(g.to_dot())
+
+    losses = []
+    ewma: Optional[float] = None
+    stragglers = 0
+    t_total = time.time()
+    final_step = start_step
+    for s in range(start_step, args.steps):
+        batch = {k: jax.numpy.asarray(v) for k, v in pf.next().items()}
+        if cfg.family == "vlm":
+            batch["patch_embeds"] = frontends.synth_patches(cfg, args.batch)
+        if cfg.is_encoder_decoder:
+            batch["frames"] = frontends.synth_frames(cfg, args.batch)
+        t0 = time.time()
+        params, opt_state, metrics = jitted(params, opt_state, batch)
+        loss = float(metrics["total_loss"])
+        dt = time.time() - t0
+        if ewma is not None and dt > args.straggler_x * ewma:
+            stragglers += 1
+            print(f"[straggler] step {s}: {dt:.3f}s vs EWMA {ewma:.3f}s",
+                  flush=True)
+        ewma = dt if ewma is None else 0.9 * ewma + 0.1 * dt
+        losses.append(loss)
+        final_step = s
+        if s % args.log_every == 0:
+            print(f"step {s:5d} loss {loss:8.4f} "
+                  f"aux {float(metrics.get('aux', 0.0)):7.4f} "
+                  f"{dt*1e3:7.1f} ms", flush=True)
+        if mgr is not None and mgr.maybe_save(
+                s, {"params": params, "opt": opt_state}, {"step": s}):
+            pass
+    if mgr is not None:
+        mgr.finish()
+    pf.close()
+    wall = time.time() - t_total
+    print(f"done: steps {start_step}..{final_step} in {wall:.1f}s | "
+          f"loss {losses[0]:.4f} -> {losses[-1]:.4f} | "
+          f"stragglers {stragglers}", flush=True)
+    return {"losses": losses, "params": params, "wall": wall,
+            "start_step": start_step}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from .config import ModelConfig, ShapeSpec, SHAPES
+from .transformer import (init_params, logical_axes, forward, make_train_step,
+                          make_prefill_step, make_decode_step, init_cache,
+                          count_params, model_flops_per_token)

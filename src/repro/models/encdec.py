@@ -1,0 +1,194 @@
+"""Encoder-decoder transformer (Whisper-style backbone).
+
+The audio conv frontend is a STUB per the assignment: ``input_specs`` feeds
+precomputed frame embeddings (B, enc_seq, d_model) directly to the encoder.
+Decoder uses learned positional embeddings, LayerNorm, GeLU MLP, biases —
+i.e. ``cfg.norm_type='layernorm', mlp_act='gelu', qkv_bias=True,
+use_rope=False`` as set by ``configs/whisper_tiny.py``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import (Builder, init_attention, attention_block, init_mlp,
+                     mlp_block, init_norm, apply_norm, init_embed,
+                     embed_tokens, unembed, shard_act, maybe_scan)
+
+
+def _build(cfg: ModelConfig, b: Builder) -> Dict:
+    Le, Ld = cfg.n_enc_layers, cfg.n_layers
+    return {
+        "embed": init_embed(b, cfg),
+        "enc_pos": b.p("enc_pos", (cfg.enc_seq, cfg.d_model), (None, "embed"),
+                       scale=0.02),
+        "enc_layers": {
+            "attn": init_attention(b, "enc/attn", cfg, stacked=Le),
+            "norm1": init_norm(b, "enc/norm1", cfg, stacked=Le),
+            "mlp": init_mlp(b, "enc/mlp", cfg, stacked=Le),
+            "norm2": init_norm(b, "enc/norm2", cfg, stacked=Le),
+        },
+        "enc_norm": init_norm(b, "enc_norm", cfg),
+        "dec_layers": {
+            "self_attn": init_attention(b, "dec/self_attn", cfg, stacked=Ld),
+            "norm1": init_norm(b, "dec/norm1", cfg, stacked=Ld),
+            "cross_attn": init_attention(b, "dec/cross_attn", cfg, stacked=Ld),
+            "normx": init_norm(b, "dec/normx", cfg, stacked=Ld),
+            "mlp": init_mlp(b, "dec/mlp", cfg, stacked=Ld),
+            "norm2": init_norm(b, "dec/norm2", cfg, stacked=Ld),
+        },
+        "dec_norm": init_norm(b, "dec_norm", cfg),
+    }
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Dict:
+    return _build(cfg, Builder(cfg, key, mode="init"))
+
+
+def logical_axes(cfg: ModelConfig) -> Dict:
+    return _build(cfg, Builder(cfg, mode="axes"))
+
+
+def abstract_params(cfg: ModelConfig) -> Dict:
+    return jax.eval_shape(functools.partial(init_params, cfg),
+                          jax.random.PRNGKey(0))
+
+
+# --------------------------------------------------------------------------
+
+def encode(params: Dict, frames: jax.Array, cfg: ModelConfig, ctx=None) -> jax.Array:
+    """frames: (B, enc_seq, d_model) — stub frontend output."""
+    B, S, d = frames.shape
+    x = frames.astype(cfg.cdtype) + params["enc_pos"][None, :S].astype(cfg.cdtype)
+    x = shard_act(x, ("batch", "seq", "d_model"), ctx)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def body(x, lp):
+        h = apply_norm(x, lp["norm1"], cfg)
+        h, _ = attention_block(lp["attn"], h, cfg, positions=positions,
+                               causal=False, ctx=ctx)
+        x = x + h
+        h = apply_norm(x, lp["norm2"], cfg)
+        x = x + mlp_block(lp["mlp"], h, cfg, ctx=ctx)
+        return shard_act(x, ("batch", "seq", "d_model"), ctx), None
+
+    x, _ = maybe_scan(cfg, body, x, params["enc_layers"], cfg.n_enc_layers)
+    return apply_norm(x, params["enc_norm"], cfg)
+
+
+def cross_kv(params: Dict, enc_out: jax.Array, cfg: ModelConfig) -> Dict:
+    """Precompute per-layer cross-attention K/V: (L, B, enc_seq, KH, hd)."""
+    cd = cfg.cdtype
+    B, S, _ = enc_out.shape
+    KH, hd = cfg.n_kv_heads, cfg.head_dim
+
+    def one(lp):
+        k = jnp.einsum("bsd,dh->bsh", enc_out, lp["wk"].astype(cd))
+        v = jnp.einsum("bsd,dh->bsh", enc_out, lp["wv"].astype(cd))
+        if "bk" in lp:
+            k = k + lp["bk"].astype(cd)
+            v = v + lp["bv"].astype(cd)
+        return {"k": k.reshape(B, S, KH, hd), "v": v.reshape(B, S, KH, hd)}
+
+    return jax.vmap(one)(params["dec_layers"]["cross_attn"])
+
+
+def decoder_forward(params: Dict, tokens: jax.Array, xkv: Dict,
+                    cfg: ModelConfig, *, ctx=None,
+                    cache: Optional[Dict] = None
+                    ) -> Tuple[jax.Array, Optional[Dict]]:
+    B, S = tokens.shape
+    pos0 = cache["pos"] if cache is not None else jnp.zeros((), jnp.int32)
+    positions = jnp.broadcast_to(pos0[None, None] + jnp.arange(S)[None], (B, S))
+    x = embed_tokens(params["embed"], tokens, cfg, positions)
+    x = shard_act(x, ("batch", "seq", "d_model"), ctx)
+    use_cache = cache is not None
+
+    def body(carry, xs):
+        x = carry
+        lp, lkv, lcache = xs["params"], xs["xkv"], xs.get("cache")
+        h = apply_norm(x, lp["norm1"], cfg)
+        self_cache = ({"k": lcache["k"], "v": lcache["v"]}
+                      if use_cache else None)
+        h, nc = attention_block(lp["self_attn"], h, cfg, positions=positions,
+                                cache=self_cache, cache_pos=pos0,
+                                causal=True, ctx=ctx)
+        x = x + h
+        h = apply_norm(x, lp["normx"], cfg)
+        h, _ = attention_block(lp["cross_attn"], h, cfg, positions=positions,
+                               kv_override=(lkv["k"], lkv["v"]),
+                               causal=False, ctx=ctx)
+        x = x + h
+        h = apply_norm(x, lp["norm2"], cfg)
+        x = x + mlp_block(lp["mlp"], h, cfg, ctx=ctx)
+        return shard_act(x, ("batch", "seq", "d_model"), ctx), nc
+
+    xs: Dict[str, Any] = {"params": params["dec_layers"], "xkv": xkv}
+    if use_cache:
+        xs["cache"] = cache["layers"]
+    x, layer_caches = maybe_scan(cfg, body, x, xs, cfg.n_layers)
+    x = apply_norm(x, params["dec_norm"], cfg)
+    logits = unembed(params["embed"], x, cfg)
+    new_cache = None
+    if use_cache:
+        new_cache = {"pos": pos0 + S, "layers": layer_caches, "xkv": xkv}
+    return logits, new_cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None) -> Dict:
+    dt = dtype or cfg.cdtype
+    L, KH, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "pos": jnp.zeros((), jnp.int32),
+        "layers": {"k": jnp.zeros((L, batch, max_len, KH, hd), dt),
+                   "v": jnp.zeros((L, batch, max_len, KH, hd), dt)},
+        "xkv": {"k": jnp.zeros((L, batch, cfg.enc_seq, KH, hd), dt),
+                "v": jnp.zeros((L, batch, cfg.enc_seq, KH, hd), dt)},
+    }
+
+
+def cache_logical_axes(cfg: ModelConfig) -> Dict:
+    kv = {"k": ("layers", "batch", "kv_seq", "kv_heads", None),
+          "v": ("layers", "batch", "kv_seq", "kv_heads", None)}
+    return {"pos": (), "layers": dict(kv), "xkv": dict(kv)}
+
+
+# --------------------------------------------------------------------------
+# steps
+# --------------------------------------------------------------------------
+
+def make_loss_fn(cfg: ModelConfig, ctx=None):
+    from .transformer import softmax_xent
+
+    def loss_fn(params, batch):
+        enc_out = encode(params, batch["frames"], cfg, ctx=ctx)
+        xkv = cross_kv(params, enc_out, cfg)
+        logits, _ = decoder_forward(params, batch["tokens"], xkv, cfg, ctx=ctx)
+        loss = softmax_xent(logits[:, :-1], batch["labels"][:, 1:])
+        return loss, {"loss": loss, "aux": jnp.zeros((), jnp.float32)}
+    return loss_fn
+
+
+def make_prefill_step(cfg: ModelConfig, ctx=None, max_len: Optional[int] = None):
+    def prefill(params, tokens, frames):
+        B, S = tokens.shape
+        enc_out = encode(params, frames, cfg, ctx=ctx)
+        xkv = cross_kv(params, enc_out, cfg)
+        cache = init_cache(cfg, B, max_len or cfg.max_cache_len or S)
+        cache["xkv"] = xkv
+        logits, cache = decoder_forward(params, tokens, xkv, cfg, ctx=ctx,
+                                        cache=cache)
+        return logits[:, -1, :], cache
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig, ctx=None):
+    def decode(params, cache, token):
+        logits, cache = decoder_forward(params, token, cache["xkv"], cfg,
+                                        ctx=ctx, cache=cache)
+        return logits[:, -1, :], cache
+    return decode

@@ -1,0 +1,34 @@
+"""Modality frontend STUBS (per assignment: backbone only).
+
+``[vlm]``/``[audio]`` cells feed precomputed patch/frame embeddings; these
+helpers produce the matching ShapeDtypeStructs for the dry-run and synthetic
+arrays for smoke tests.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+
+def vision_patch_spec(cfg: ModelConfig, batch: int) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((batch, cfg.n_patches, cfg.d_model), cfg.cdtype)
+
+
+def audio_frame_spec(cfg: ModelConfig, batch: int) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((batch, cfg.enc_seq, cfg.d_model), cfg.cdtype)
+
+
+def synth_patches(cfg: ModelConfig, batch: int, seed: int = 0) -> jax.Array:
+    k = jax.random.PRNGKey(seed)
+    return jax.random.normal(k, (batch, cfg.n_patches, cfg.d_model),
+                             cfg.cdtype) * 0.02
+
+
+def synth_frames(cfg: ModelConfig, batch: int, seed: int = 0) -> jax.Array:
+    k = jax.random.PRNGKey(seed)
+    return jax.random.normal(k, (batch, cfg.enc_seq, cfg.d_model),
+                             cfg.cdtype) * 0.02

@@ -1,0 +1,397 @@
+"""Shared neural-net layers (pure JAX, functional params).
+
+Conventions
+-----------
+* Params are nested dicts of arrays; a mirror pytree of **logical axis
+  tuples** is produced by the same builder code (``mode="axes"``), which is
+  what the auto-sharding placement pass consumes.
+* Weight logical axes use ``"embed"`` for the FSDP-shardable dimension and
+  ``"heads"/"d_ff"/"experts"/"ssm_inner"/"vocab"`` for the TP dimension.
+* Activation logical axes use ``"batch"/"seq"/"heads"/"d_model"``.
+* Compute runs in ``cfg.compute_dtype`` (bf16 on TPU), softmax/norm/loss
+  statistics in float32.
+"""
+from __future__ import annotations
+
+import zlib
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+Axes = Tuple[Optional[str], ...]
+
+
+class Builder:
+    """Creates params (mode='init') or their logical-axes mirror (mode='axes')."""
+
+    def __init__(self, cfg: ModelConfig, key: Optional[jax.Array] = None,
+                 mode: str = "init"):
+        assert mode in ("init", "axes")
+        self.cfg = cfg
+        self.key = key
+        self.mode = mode
+
+    def p(self, name: str, shape: Tuple[int, ...], axes: Axes,
+          init: str = "normal", scale: Optional[float] = None):
+        assert len(shape) == len(axes), (name, shape, axes)
+        if self.mode == "axes":
+            return axes
+        k = jax.random.fold_in(self.key, zlib.crc32(name.encode()))
+        dt = self.cfg.pdtype
+        if init == "zeros":
+            return jnp.zeros(shape, dt)
+        if init == "ones":
+            return jnp.ones(shape, dt)
+        if init == "normal":
+            if scale is None:
+                fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+                scale = fan_in ** -0.5
+            return (jax.random.normal(k, shape, jnp.float32) * scale).astype(dt)
+        if init == "mamba_A":       # log-spaced negative eigenvalues
+            n = shape[-1]
+            a = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32), shape[:-1] + (1,))
+            return jnp.log(a.reshape(shape)).astype(dt)
+        if init == "mamba_dt":      # dt bias so softplus(dt) ∈ [1e-3, 1e-1]
+            u = jax.random.uniform(k, shape, jnp.float32)
+            dtv = jnp.exp(u * (jnp.log(0.1) - jnp.log(1e-3)) + jnp.log(1e-3))
+            return (dtv + jnp.log(-jnp.expm1(-dtv))).astype(dt)  # inv-softplus
+        raise ValueError(init)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def init_norm(b: Builder, name: str, cfg: ModelConfig, dim: Optional[int] = None,
+              stacked: int = 0) -> Dict:
+    d = dim or cfg.d_model
+    shp: Tuple[int, ...] = (d,)
+    axes: Axes = ("norm_dim",)
+    if stacked:
+        shp = (stacked,) + shp
+        axes = ("layers",) + axes
+    out = {"scale": b.p(f"{name}/scale", shp, axes, "ones")}
+    if cfg.norm_type == "layernorm":
+        out["bias"] = b.p(f"{name}/bias", shp, axes, "zeros")
+    return out
+
+
+def apply_norm(x: jax.Array, p: Dict, cfg: ModelConfig) -> jax.Array:
+    if cfg.norm_type == "layernorm":
+        return layernorm(x, p["scale"], p["bias"], cfg.norm_eps)
+    return rmsnorm(x, p["scale"], cfg.norm_eps)
+
+
+# --------------------------------------------------------------------------
+# rotary embeddings
+# --------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                        # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+
+def init_attention(b: Builder, name: str, cfg: ModelConfig,
+                   stacked: int = 0, cross: bool = False) -> Dict:
+    d, H, KH, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    L: Tuple[int, ...] = (stacked,) if stacked else ()
+    A: Axes = ("layers",) if stacked else ()
+    p = {
+        "wq": b.p(f"{name}/wq", L + (d, H * hd), A + ("embed", "heads_dim")),
+        "wk": b.p(f"{name}/wk", L + (d, KH * hd), A + ("embed", "kv_dim")),
+        "wv": b.p(f"{name}/wv", L + (d, KH * hd), A + ("embed", "kv_dim")),
+        "wo": b.p(f"{name}/wo", L + (H * hd, d), A + ("heads_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = b.p(f"{name}/bq", L + (H * hd,), A + ("heads_dim",), "zeros")
+        p["bk"] = b.p(f"{name}/bk", L + (KH * hd,), A + ("kv_dim",), "zeros")
+        p["bv"] = b.p(f"{name}/bv", L + (KH * hd,), A + ("kv_dim",), "zeros")
+    if cfg.qk_norm:
+        p["q_norm"] = b.p(f"{name}/q_norm", L + (hd,), A + ("norm_dim",), "ones")
+        p["k_norm"] = b.p(f"{name}/k_norm", L + (hd,), A + ("norm_dim",), "ones")
+    return p
+
+
+def _repeat_kv(k: jax.Array, groups: int) -> jax.Array:
+    if groups == 1:
+        return k
+    return jnp.repeat(k, groups, axis=2)
+
+
+def _quantize_kv(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric int8 over the head_dim axis: x (B, S, KH, hd) →
+    (int8 values, bf16 scales (B, S, KH))."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def attention_scores(q: jax.Array, k: jax.Array, v: jax.Array,
+                     *, causal: bool, q_pos: Optional[jax.Array] = None,
+                     kv_len: Optional[jax.Array] = None,
+                     softcap: float = 0.0, grouped: bool = False) -> jax.Array:
+    """Reference (XLA) attention.
+
+    q: (B, Sq, H, D); k, v: (B, Sk, KH, D).  ``kv_len`` masks cache slots
+    beyond the valid length (decode); ``q_pos`` gives absolute positions of
+    the queries for causal masking against cache positions.
+
+    ``grouped``: GQA by grouped einsum — K/V are contracted in their
+    (B, Sk, KH, D) layout instead of being repeat-materialized to H heads,
+    which keeps a sharded KV cache sharded through the contraction.
+    """
+    B, Sq, H, D = q.shape
+    KH = k.shape[2]
+    G = H // KH
+    scale = D ** -0.5
+    if grouped and G > 1:
+        qg = q.reshape(B, Sq, KH, G, D)
+        logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                            preferred_element_type=jnp.float32) * scale
+    else:
+        k = _repeat_kv(k, G)
+        v = _repeat_kv(v, G)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                            preferred_element_type=jnp.float32) * scale
+    if softcap > 0.0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    Sk = k.shape[1]
+    kpos = jnp.arange(Sk)[None, None, None, :]
+    if grouped and G > 1:
+        kpos = jnp.arange(Sk)[None, None, None, None, :]
+        mask = jnp.zeros((1, 1, 1, 1, Sk), jnp.bool_)
+        if causal:
+            qpos = (q_pos[:, None, None, :, None] if q_pos is not None
+                    else jnp.arange(Sq)[None, None, None, :, None])
+            mask = mask | (kpos > qpos)
+        if kv_len is not None:
+            mask = mask | (kpos >= kv_len[:, None, None, None, None])
+        logits = jnp.where(mask, -1e30, logits)
+        probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+        return out.reshape(B, Sq, H, D)
+    mask = jnp.zeros((1, 1, 1, Sk), jnp.bool_)
+    if causal:
+        qpos = (q_pos[:, None, :, None] if q_pos is not None
+                else jnp.arange(Sq)[None, None, :, None])
+        mask = mask | (kpos > qpos)
+    if kv_len is not None:
+        mask = mask | (kpos >= kv_len[:, None, None, None])
+    logits = jnp.where(mask, -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def shard_act(x: jax.Array, axes: Axes, ctx) -> jax.Array:
+    """Apply an activation sharding constraint when a mesh context is active."""
+    if ctx is None or ctx.mesh is None:
+        return x
+    return ctx.constrain(x, axes)
+
+
+def maybe_scan(cfg: ModelConfig, body, carry, xs, length: int):
+    """``lax.scan`` when ``cfg.scan_layers`` (O(1) HLO in depth) else an
+    unrolled Python loop (used by the dry-run's per-layer cost probes —
+    XLA's cost_analysis counts a scan body once regardless of trip count,
+    so probe models unroll a few layers and extrapolate per-layer cost)."""
+    if cfg.scan_layers:
+        return jax.lax.scan(body, carry, xs)
+    ys = []
+    for i in range(length):
+        xi = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, xi)
+        ys.append(y)
+    if not ys or ys[0] is None:
+        return carry, None
+    return carry, jax.tree.map(lambda *a: jnp.stack(a), *ys)
+
+
+def attention_block(p: Dict, x: jax.Array, cfg: ModelConfig, *,
+                    positions: jax.Array,
+                    cache: Optional[Dict] = None,
+                    cache_pos: Optional[jax.Array] = None,
+                    causal: bool = True,
+                    kv_override: Optional[Tuple[jax.Array, jax.Array]] = None,
+                    ctx=None) -> Tuple[jax.Array, Optional[Dict]]:
+    """GQA attention with optional KV cache.
+
+    * train/prefill: ``cache=None`` → full self-attention over x.
+    * prefill-with-cache: pass a fresh cache and ``cache_pos=0`` to fill it.
+    * decode: x is (B, 1, d); cache holds (B, S_max, KH, D), updated at
+      ``cache_pos``.
+    * cross-attention: ``kv_override=(k, v)`` skips projections/cache.
+    """
+    B, S, d = x.shape
+    H, KH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    cd = cfg.cdtype
+
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(cd))
+    if "bq" in p:
+        q = q + p["bq"].astype(cd)
+    q = q.reshape(B, S, H, hd)
+
+    if kv_override is None:
+        k = jnp.einsum("bsd,dh->bsh", x, p["wk"].astype(cd))
+        v = jnp.einsum("bsd,dh->bsh", x, p["wv"].astype(cd))
+        if "bk" in p:
+            k = k + p["bk"].astype(cd)
+            v = v + p["bv"].astype(cd)
+        k = k.reshape(B, S, KH, hd)
+        v = v.reshape(B, S, KH, hd)
+    else:
+        k, v = kv_override
+
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        if kv_override is None:
+            k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+
+    if cfg.use_rope and kv_override is None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    q = shard_act(q, ("batch", "seq", "heads", None), ctx)
+    new_cache = None
+    kv_len = None
+    q_pos: Optional[jax.Array] = positions
+    if cache is not None and kv_override is None:
+        if "k_scale" in cache:
+            # int8 cache: per-(token, head) symmetric quantization; the
+            # dequant multiply fuses into the attention contraction, so
+            # HBM reads the cache at half width (§Perf cell B follow-up)
+            ks, ksc = _quantize_kv(k)
+            vs, vsc = _quantize_kv(v)
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], ks, (0, cache_pos, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], vs, (0, cache_pos, 0, 0))
+            cks = jax.lax.dynamic_update_slice(
+                cache["k_scale"], ksc, (0, cache_pos, 0))
+            cvs = jax.lax.dynamic_update_slice(
+                cache["v_scale"], vsc, (0, cache_pos, 0))
+            new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs}
+            k = ck.astype(cd) * cks[..., None].astype(cd)
+            v = cv.astype(cd) * cvs[..., None].astype(cd)
+        else:
+            ck, cv = cache["k"], cache["v"]
+            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                              (0, cache_pos, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                              (0, cache_pos, 0, 0))
+            new_cache = {"k": ck, "v": cv}
+            k, v = ck.astype(cd), cv.astype(cd)
+        kv_len = jnp.broadcast_to(cache_pos + S, (B,))
+
+    out = attention_scores(q, k.astype(cd), v.astype(cd), causal=causal,
+                           q_pos=q_pos if causal else None, kv_len=kv_len,
+                           softcap=0.0, grouped=cfg.gqa_grouped)
+    out = out.reshape(B, S, H * hd)
+    out = jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(cd))
+    return out, new_cache
+
+
+# --------------------------------------------------------------------------
+# MLP
+# --------------------------------------------------------------------------
+
+def init_mlp(b: Builder, name: str, cfg: ModelConfig, stacked: int = 0,
+             d_ff: Optional[int] = None) -> Dict:
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    L: Tuple[int, ...] = (stacked,) if stacked else ()
+    A: Axes = ("layers",) if stacked else ()
+    if cfg.mlp_act == "swiglu":
+        return {
+            "wi_gate": b.p(f"{name}/wi_gate", L + (d, ff), A + ("embed", "d_ff")),
+            "wi_up": b.p(f"{name}/wi_up", L + (d, ff), A + ("embed", "d_ff")),
+            "wo": b.p(f"{name}/wo", L + (ff, d), A + ("d_ff", "embed")),
+        }
+    return {
+        "wi": b.p(f"{name}/wi", L + (d, ff), A + ("embed", "d_ff")),
+        "bi": b.p(f"{name}/bi", L + (ff,), A + ("d_ff",), "zeros"),
+        "wo": b.p(f"{name}/wo", L + (ff, d), A + ("d_ff", "embed")),
+        "bo": b.p(f"{name}/bo", L + (d,), A + ("norm_dim",), "zeros"),
+    }
+
+
+def mlp_block(p: Dict, x: jax.Array, cfg: ModelConfig, ctx=None) -> jax.Array:
+    cd = cfg.cdtype
+    if "wi_gate" in p:
+        g = jnp.einsum("bsd,df->bsf", x, p["wi_gate"].astype(cd))
+        u = jnp.einsum("bsd,df->bsf", x, p["wi_up"].astype(cd))
+        h = jax.nn.silu(g) * u
+        h = shard_act(h, ("batch", "seq", "d_ff"), ctx)
+        return jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(cd))
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(cd)) + p["bi"].astype(cd)
+    h = jax.nn.gelu(h)
+    h = shard_act(h, ("batch", "seq", "d_ff"), ctx)
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(cd)) + p["bo"].astype(cd)
+
+
+# --------------------------------------------------------------------------
+# embeddings / unembedding
+# --------------------------------------------------------------------------
+
+def init_embed(b: Builder, cfg: ModelConfig) -> Dict:
+    p = {"tok": b.p("embed/tok", (cfg.vocab_size, cfg.d_model),
+                    ("vocab", "embed"), scale=1.0)}
+    if not cfg.use_rope:
+        p["pos"] = b.p("embed/pos", (8192, cfg.d_model), (None, "embed"),
+                       scale=0.02)
+    if not cfg.tie_embeddings:
+        p["unembed"] = b.p("embed/unembed", (cfg.d_model, cfg.vocab_size),
+                           ("embed", "vocab"))
+    return p
+
+
+def embed_tokens(p: Dict, tokens: jax.Array, cfg: ModelConfig,
+                 positions: Optional[jax.Array] = None) -> jax.Array:
+    x = jnp.take(p["tok"], tokens, axis=0).astype(cfg.cdtype)
+    if not cfg.use_rope and positions is not None:
+        x = x + jnp.take(p["pos"], positions, axis=0).astype(cfg.cdtype)
+    return x
+
+
+def unembed(p: Dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    w = (p["tok"].T if cfg.tie_embeddings else p["unembed"]).astype(cfg.cdtype)
+    logits = jnp.einsum("bsd,dv->bsv", x, w,
+                        preferred_element_type=jnp.float32)
+    if cfg.logit_softcap > 0.0:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return logits

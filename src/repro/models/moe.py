@@ -1,0 +1,128 @@
+"""Mixture-of-Experts layer: top-k router + grouped capacity dispatch.
+
+GShard-style formulation: tokens are split into fixed-size groups (the
+``expert_group`` logical axis, sharded over the batch mesh axes); each group
+dispatches into per-expert capacity buffers through one-hot einsums.  The
+group size bounds the dispatch tensor to ``group × E × C`` elements
+regardless of global batch — without it, a flat one-hot dispatch at
+llama4-maverick scale (1M tokens × 128 experts) would materialize a ~TB
+intermediate and the dry-run could never fit.
+
+FLOPs equal the *active* expert compute (what the roofline's ``6·N_active·D``
+expects).  A Pallas grouped-matmul kernel (`repro.kernels.grouped_matmul`)
+can replace the einsum path on TPU.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import Builder, Axes, shard_act
+
+
+def init_moe(b: Builder, name: str, cfg: ModelConfig, stacked: int = 0) -> Dict:
+    d, ff, E = cfg.d_model, cfg.expert_d_ff, cfg.n_experts
+    L: Tuple[int, ...] = (stacked,) if stacked else ()
+    A: Axes = ("layers",) if stacked else ()
+    p = {
+        "router": b.p(f"{name}/router", L + (d, E), A + ("embed", None),
+                      scale=d ** -0.5),
+        "wi_gate": b.p(f"{name}/wi_gate", L + (E, d, ff),
+                       A + ("experts", "embed", "d_ff")),
+        "wi_up": b.p(f"{name}/wi_up", L + (E, d, ff),
+                     A + ("experts", "embed", "d_ff")),
+        "wo": b.p(f"{name}/wo", L + (E, ff, d),
+                  A + ("experts", "d_ff", "embed")),
+    }
+    if cfg.n_shared_experts:
+        sff = ff * cfg.n_shared_experts
+        p["shared_wi_gate"] = b.p(f"{name}/shared_wi_gate", L + (d, sff),
+                                  A + ("embed", "d_ff"))
+        p["shared_wi_up"] = b.p(f"{name}/shared_wi_up", L + (d, sff),
+                                A + ("embed", "d_ff"))
+        p["shared_wo"] = b.p(f"{name}/shared_wo", L + (sff, d),
+                             A + ("d_ff", "embed"))
+    return p
+
+
+def moe_block(p: Dict, x: jax.Array, cfg: ModelConfig,
+              ctx=None) -> Tuple[jax.Array, jax.Array]:
+    """Returns (output, aux_loss).  x: (B, S, d)."""
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.experts_per_token
+    cd = cfg.cdtype
+    T = B * S
+    gs = cfg.moe_group if (T % cfg.moe_group == 0 and T >= cfg.moe_group) else T
+    G = T // gs
+    # ceil, not floor: small groups (decode: gs = batch) otherwise round the
+    # capacity to 0-ish and drop almost everything
+    C = max(-(-int(cfg.capacity_factor * gs * K) // E), 1)
+    xt = x.reshape(G, gs, d)
+    xt = shard_act(xt, ("expert_group", None, None), ctx)
+
+    # ---- router (float32 for numerics)
+    logits = jnp.einsum("gtd,de->gte", xt.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                       # (G, gs, E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)                 # (G, gs, K)
+    gate_vals = gate_vals / jnp.clip(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # ---- load-balancing auxiliary loss (Switch-style), global over tokens
+    me = jnp.mean(probs, axis=(0, 1))                             # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(gate_idx, E, dtype=jnp.float32), axis=2),
+        axis=(0, 1))
+    aux = cfg.router_aux_weight * E * jnp.sum(me * ce)
+
+    # ---- capacity positions: per-group running count per expert
+    onehot_e = jax.nn.one_hot(gate_idx, E, dtype=jnp.int32)       # (G,gs,K,E)
+    flat = onehot_e.reshape(G, gs * K, E)
+    pos_flat = jnp.cumsum(flat, axis=1) - flat                    # (G,gs*K,E)
+    pos = jnp.sum(flat * pos_flat, axis=-1).reshape(G, gs, K)     # (G,gs,K)
+    keep = pos < C                                                # drop overflow
+    gate_vals = gate_vals * keep.astype(jnp.float32)
+
+    # ---- dispatch/combine, accumulated over k to avoid a (gs,K,E,C) tensor
+    dispatch = jnp.zeros((G, gs, E, C), cd)
+    combine = jnp.zeros((G, gs, E, C), cd)
+    for k in range(K):
+        oe = jax.nn.one_hot(gate_idx[..., k], E, dtype=cd) \
+            * keep[..., k, None].astype(cd)                       # (G,gs,E)
+        oc = jax.nn.one_hot(pos[..., k], C, dtype=cd)             # (G,gs,C)
+        dk = jnp.einsum("gte,gtc->gtec", oe, oc)
+        dispatch = dispatch + dk
+        combine = combine + dk * gate_vals[..., k, None, None].astype(cd)
+    dispatch = shard_act(dispatch, ("expert_group", None, "experts", None), ctx)
+
+    # ---- expert computation on capacity buffers
+    xe = jnp.einsum("gtd,gtec->gecd", xt.astype(cd), dispatch)    # (G,E,C,d)
+    xe = shard_act(xe, ("expert_group", "experts", None, None), ctx)
+    g = jnp.einsum("gecd,edf->gecf", xe, p["wi_gate"].astype(cd))
+    u = jnp.einsum("gecd,edf->gecf", xe, p["wi_up"].astype(cd))
+    h = jax.nn.silu(g) * u
+    ye = jnp.einsum("gecf,efd->gecd", h, p["wo"].astype(cd))      # (G,E,C,d)
+    y = jnp.einsum("gecd,gtec->gtd", ye, combine)                 # (G,gs,d)
+
+    if "shared_wi_gate" in p:
+        gsh = jnp.einsum("gtd,df->gtf", xt.astype(cd),
+                         p["shared_wi_gate"].astype(cd))
+        ush = jnp.einsum("gtd,df->gtf", xt.astype(cd),
+                         p["shared_wi_up"].astype(cd))
+        y = y + jnp.einsum("gtf,fd->gtd", jax.nn.silu(gsh) * ush,
+                           p["shared_wo"].astype(cd))
+
+    return y.reshape(B, S, d), aux.astype(jnp.float32)
+
+
+def moe_flops_per_token(cfg: ModelConfig) -> int:
+    """Active-parameter matmul FLOPs per token for one MoE layer (fwd)."""
+    d, ff, K = cfg.d_model, cfg.expert_d_ff, cfg.experts_per_token
+    f = 2 * d * cfg.n_experts                      # router
+    f += K * (3 * 2 * d * ff)                      # K experts, swiglu
+    if cfg.n_shared_experts:
+        f += cfg.n_shared_experts * 3 * 2 * d * ff
+    return f

@@ -1,0 +1,311 @@
+"""State-space blocks: Mamba1 (selective scan) and Mamba2 (SSD).
+
+Both use **chunked** scans: a sequential ``lax.scan`` over chunks carrying the
+SSM state, with parallel (associative-scan / quadratic-intra) work inside the
+chunk.  This bounds activation memory to O(B · chunk · d_inner · N) instead of
+O(B · S · d_inner · N) — at falcon-mamba's 32k-prefill cell the naive form
+would materialize ~0.5 TB of decay products; chunking is what makes the
+dry-run memory analysis come out sane.  The chunk loop also maps 1:1 onto the
+Pallas kernel's grid (see ``repro.kernels.ssm_scan``).
+
+Decode uses the O(1) recurrent step with a carried (conv window, state) cache.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import Builder, Axes, rmsnorm, shard_act
+
+
+def dt_rank(cfg: ModelConfig) -> int:
+    return math.ceil(cfg.d_model / 16)
+
+
+# ==========================================================================
+# Mamba1
+# ==========================================================================
+
+def init_mamba1(b: Builder, name: str, cfg: ModelConfig, stacked: int = 0) -> Dict:
+    d, di, N, k = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    R = dt_rank(cfg)
+    L: Tuple[int, ...] = (stacked,) if stacked else ()
+    A: Axes = ("layers",) if stacked else ()
+    return {
+        "in_proj": b.p(f"{name}/in_proj", L + (d, 2 * di), A + ("embed", "ssm_inner")),
+        "conv_w": b.p(f"{name}/conv_w", L + (k, di), A + (None, "ssm_inner"),
+                      scale=k ** -0.5),
+        "conv_b": b.p(f"{name}/conv_b", L + (di,), A + ("ssm_inner",), "zeros"),
+        "x_proj": b.p(f"{name}/x_proj", L + (di, R + 2 * N), A + ("ssm_inner", None)),
+        "dt_proj": b.p(f"{name}/dt_proj", L + (R, di), A + (None, "ssm_inner"),
+                       scale=R ** -0.5),
+        "dt_bias": b.p(f"{name}/dt_bias", L + (di,), A + ("ssm_inner",), "mamba_dt"),
+        "A_log": b.p(f"{name}/A_log", L + (di, N), A + ("ssm_inner", "state"),
+                     "mamba_A"),
+        "D": b.p(f"{name}/D", L + (di,), A + ("ssm_inner",), "ones"),
+        "out_proj": b.p(f"{name}/out_proj", L + (di, d), A + ("ssm_inner", "embed")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv1d.  x: (B, S, C); w: (k, C).
+
+    ``state`` is the trailing (k-1) inputs from the previous call (decode /
+    chunk streaming); returns (output, new_state).
+    """
+    Bsz, S, C = x.shape
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((Bsz, k - 1, C), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)            # (B, S+k-1, C)
+    out = jnp.zeros((Bsz, S, C), x.dtype)
+    for i in range(k):                                   # k is 4: unrolled
+        out = out + xp[:, i:i + S, :] * w[i][None, None, :].astype(x.dtype)
+    new_state = xp[:, S:, :] if S >= 1 else state
+    return out + b.astype(x.dtype), xp[:, -(k - 1):, :]
+
+
+def selective_scan(xs: jax.Array, dt: jax.Array, Bc: jax.Array, Cc: jax.Array,
+                   A: jax.Array, h0: Optional[jax.Array], chunk: int
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked selective scan.
+
+    xs, dt: (B, S, D);  Bc, Cc: (B, S, N);  A: (D, N) (negative reals).
+    Returns (y: (B, S, D), h_final: (B, D, N)).  float32 state math.
+    """
+    Bsz, S, D = xs.shape
+    N = A.shape[-1]
+    if S % chunk != 0:
+        chunk = S            # fall back to one chunk (small inputs)
+    nc = S // chunk
+
+    xs = xs.reshape(Bsz, nc, chunk, D).astype(jnp.float32)
+    dt = dt.reshape(Bsz, nc, chunk, D).astype(jnp.float32)
+    Bc = Bc.reshape(Bsz, nc, chunk, N).astype(jnp.float32)
+    Cc = Cc.reshape(Bsz, nc, chunk, N).astype(jnp.float32)
+    h = (jnp.zeros((Bsz, D, N), jnp.float32) if h0 is None
+         else h0.astype(jnp.float32))
+
+    def chunk_step(h, inp):
+        xc, dtc, bc, cc = inp                       # (B, Q, D), ..., (B, Q, N)
+        # decay a_t = exp(dt_t * A): (B, Q, D, N); input b_t = dt*x ⊗ B
+        a = jnp.exp(dtc[..., None] * A[None, None])             # (B,Q,D,N)
+        u = (dtc * xc)[..., None] * bc[:, :, None, :]           # (B,Q,D,N)
+
+        def comb(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, ar * bl + br
+
+        Acum, Bsum = jax.lax.associative_scan(comb, (a, u), axis=1)
+        hs = Acum * h[:, None] + Bsum                           # (B,Q,D,N)
+        y = jnp.einsum("bqdn,bqn->bqd", hs, cc)
+        return hs[:, -1], y
+
+    h, ys = jax.lax.scan(
+        chunk_step, h,
+        (xs.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2, 3),
+         Bc.transpose(1, 0, 2, 3), Cc.transpose(1, 0, 2, 3)))
+    y = ys.transpose(1, 0, 2, 3).reshape(Bsz, S, D)
+    return y, h
+
+
+def mamba1_block(p: Dict, x: jax.Array, cfg: ModelConfig, *,
+                 cache: Optional[Dict] = None, ctx=None
+                 ) -> Tuple[jax.Array, Optional[Dict]]:
+    """x: (B, S, d).  cache = {"conv": (B,k-1,di), "h": (B,di,N)} for decode."""
+    Bsz, S, d = x.shape
+    di, N = cfg.d_inner, cfg.ssm_state
+    R = dt_rank(cfg)
+    cd = cfg.cdtype
+
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(cd))
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs = shard_act(xs, ("batch", "seq", "ssm_inner"), ctx)
+
+    conv_state = cache["conv"] if cache is not None else None
+    xs, new_conv = _causal_conv(xs, p["conv_w"], p["conv_b"], conv_state)
+    xs = jax.nn.silu(xs)
+
+    proj = jnp.einsum("bsd,de->bse", xs, p["x_proj"].astype(cd))
+    dt_lr, Bc, Cc = jnp.split(proj, [R, R + N], axis=-1)
+    dt = jnp.einsum("bsr,rd->bsd", dt_lr, p["dt_proj"].astype(cd))
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                # (di, N)
+
+    h0 = cache["h"] if cache is not None else None
+    y, h = selective_scan(xs, dt, Bc, Cc, A, h0, cfg.ssm_chunk)
+    y = (y + xs.astype(jnp.float32) * p["D"].astype(jnp.float32)).astype(cd)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(cd))
+    new_cache = ({"conv": new_conv, "h": h} if cache is not None else None)
+    return out, new_cache
+
+
+# ==========================================================================
+# Mamba2 (SSD — scalar A per head, chunked dual form)
+# ==========================================================================
+
+def init_mamba2(b: Builder, name: str, cfg: ModelConfig, stacked: int = 0) -> Dict:
+    d, di, N = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    H = cfg.n_ssm_heads
+    conv_dim = di + 2 * N
+    k = cfg.ssm_conv
+    L: Tuple[int, ...] = (stacked,) if stacked else ()
+    A: Axes = ("layers",) if stacked else ()
+    return {
+        # order: [z (di), x (di), B (N), C (N), dt (H)]
+        "in_proj": b.p(f"{name}/in_proj", L + (d, 2 * di + 2 * N + H),
+                       A + ("embed", "ssm_inner")),
+        "conv_w": b.p(f"{name}/conv_w", L + (k, conv_dim),
+                      A + (None, "conv_dim"), scale=k ** -0.5),
+        "conv_b": b.p(f"{name}/conv_b", L + (conv_dim,), A + ("conv_dim",), "zeros"),
+        "A_log": b.p(f"{name}/A_log", L + (H,), A + ("ssm_heads",), "mamba_A"),
+        "dt_bias": b.p(f"{name}/dt_bias", L + (H,), A + ("ssm_heads",), "mamba_dt"),
+        "D": b.p(f"{name}/D", L + (H,), A + ("ssm_heads",), "ones"),
+        "norm": b.p(f"{name}/norm", L + (di,), A + ("norm_dim",), "ones"),
+        "out_proj": b.p(f"{name}/out_proj", L + (di, d), A + ("ssm_inner", "embed")),
+    }
+
+
+def ssd_chunked(xh: jax.Array, dt: jax.Array, Bc: jax.Array, Cc: jax.Array,
+                A: jax.Array, h0: Optional[jax.Array], chunk: int,
+                io_dtype=jnp.float32) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD (Mamba2) forward.
+
+    xh: (B, S, H, P); dt: (B, S, H); Bc, Cc: (B, S, N); A: (H,) negative.
+    Returns (y: (B, S, H, P), h_final: (B, H, P, N)).
+
+    ``io_dtype``: width of the big intra-chunk tensors/matmuls (x, B, C,
+    decay matrix).  bfloat16 matches the reference Mamba2 training recipe
+    (states, dt and cumulative decays stay f32) and halves the dominant
+    HLO bytes — §Perf hillclimb lever.
+    """
+    Bsz, S, H, P = xh.shape
+    N = Bc.shape[-1]
+    if S % chunk != 0:
+        chunk = S
+    nc = S // chunk
+
+    xh = xh.reshape(Bsz, nc, chunk, H, P).astype(io_dtype)
+    dt = dt.reshape(Bsz, nc, chunk, H).astype(jnp.float32)
+    Bc = Bc.reshape(Bsz, nc, chunk, N).astype(io_dtype)
+    Cc = Cc.reshape(Bsz, nc, chunk, N).astype(io_dtype)
+    h = (jnp.zeros((Bsz, H, P, N), jnp.float32) if h0 is None
+         else h0.astype(jnp.float32))
+
+    def chunk_step(h, inp):
+        xc, dtc, bc, cc = inp
+        dA = dtc * A[None, None]                         # (B,Q,H) negative
+        cum = jnp.cumsum(dA, axis=1)                     # (B,Q,H) f32
+        # intra-chunk (quadratic) term: masked "attention" with decay
+        Lmat = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])  # (B,Q,K,H)
+        q = jnp.arange(xc.shape[1])
+        causal = (q[:, None] >= q[None, :])[None, :, :, None]
+        Lmat = jnp.where(causal, Lmat, 0.0).astype(io_dtype)
+        scores = jnp.einsum("bqn,bkn->bqk", cc, bc,
+                            preferred_element_type=jnp.float32)  # (B,Q,K)
+        att = (scores.astype(io_dtype)[..., None] * Lmat)        # (B,Q,K,H)
+        y_intra = jnp.einsum("bqkh,bkh,bkhp->bqhp", att,
+                             dtc.astype(io_dtype), xc,
+                             preferred_element_type=jnp.float32)
+        # inter-chunk: contribution of carried state
+        decay_in = jnp.exp(cum).astype(io_dtype)         # decay from chunk start
+        y_inter = jnp.einsum("bqn,bqh,bhpn->bqhp", cc, decay_in,
+                             h.astype(io_dtype),
+                             preferred_element_type=jnp.float32)
+        # new state: h' = exp(sum dA) h + sum_k decay_to_end * dt x ⊗ B
+        tot = cum[:, -1]                                 # (B,H) f32
+        decay_out = jnp.exp(tot[:, None] - cum).astype(io_dtype)  # (B,Q,H)
+        h_new = (jnp.exp(tot)[..., None, None] * h
+                 + jnp.einsum("bkh,bkh,bkhp,bkn->bhpn",
+                              decay_out, dtc.astype(io_dtype), xc, bc,
+                              preferred_element_type=jnp.float32))
+        return h_new, y_intra + y_inter
+
+    h, ys = jax.lax.scan(
+        chunk_step, h,
+        (xh.transpose(1, 0, 2, 3, 4), dt.transpose(1, 0, 2, 3),
+         Bc.transpose(1, 0, 2, 3), Cc.transpose(1, 0, 2, 3)))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(Bsz, S, H, P)
+    return y, h
+
+
+def mamba2_block(p: Dict, x: jax.Array, cfg: ModelConfig, *,
+                 cache: Optional[Dict] = None, ctx=None
+                 ) -> Tuple[jax.Array, Optional[Dict]]:
+    """x: (B, S, d). cache = {"conv": (B,k-1,conv_dim), "h": (B,H,P,N)}."""
+    Bsz, S, d = x.shape
+    di, N = cfg.d_inner, cfg.ssm_state
+    H, P = cfg.n_ssm_heads, cfg.ssm_head_dim
+    cd = cfg.cdtype
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(cd))
+    z, xs, Bc, Cc, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
+
+    xbc = jnp.concatenate([xs, Bc, Cc], axis=-1)
+    conv_state = cache["conv"] if cache is not None else None
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xbc = jax.nn.silu(xbc)
+    xs, Bc, Cc = jnp.split(xbc, [di, di + N], axis=-1)
+    xs = shard_act(xs, ("batch", "seq", "ssm_inner"), ctx)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))    # (B,S,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                # (H,)
+
+    xh = xs.reshape(Bsz, S, H, P)
+    h0 = cache["h"] if cache is not None else None
+    y, h = ssd_chunked(xh, dt, Bc, Cc, A, h0, cfg.ssm_chunk,
+                       io_dtype=(jnp.bfloat16 if cfg.ssd_bf16
+                                 else jnp.float32))
+    y = y + xh.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(Bsz, S, di).astype(cd)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y, p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(cd))
+    new_cache = ({"conv": new_conv, "h": h} if cache is not None else None)
+    return out, new_cache
+
+
+# -- O(1) decode steps ------------------------------------------------------
+
+def mamba1_decode_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Dict:
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+        "h": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+    }
+
+
+def mamba2_decode_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Dict:
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        "h": jnp.zeros((batch, cfg.n_ssm_heads, cfg.ssm_head_dim,
+                        cfg.ssm_state), jnp.float32),
+    }
+
+
+def ssm_flops_per_token(cfg: ModelConfig, kind: str) -> int:
+    """Matmul-ish FLOPs per token for one SSM layer (fwd)."""
+    d, di, N = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    if kind == "mamba1":
+        R = dt_rank(cfg)
+        f = 2 * d * 2 * di + 2 * di * (R + 2 * N) + 2 * R * di + 2 * di * d
+        f += 2 * cfg.ssm_conv * di          # conv
+        f += 6 * di * N                      # scan update+output (per token)
+        return f
+    H, P = cfg.n_ssm_heads, cfg.ssm_head_dim
+    f = 2 * d * (2 * di + 2 * N + H) + 2 * di * d
+    f += 2 * cfg.ssm_conv * (di + 2 * N)
+    f += 2 * cfg.ssm_chunk * (N + H * P)     # intra-chunk quadratic amortized
+    f += 6 * H * P * N                       # state update/output
+    return f

@@ -1,0 +1,553 @@
+"""Unified decoder-only LM covering dense / MoE / SSM / hybrid / VLM configs.
+
+Layers are **stacked** (leading ``n_layers`` dim) and executed with
+``jax.lax.scan`` so the HLO stays O(1) in depth — essential for compiling
+81-layer configs on 512 host devices in the dry-run.  The per-layer plan
+(attention / mamba1 / mamba2 / mamba2+shared_attn / MLP-vs-MoE) must be
+homogeneous across layers for the scan; the zamba2 "shared attention block"
+is handled *inside* the scan body with a layer-index condition and a shared
+(unstacked) parameter set — its KV caches live at ``n_sites`` cache slots.
+
+Encoder-decoder models (whisper) are in :mod:`repro.models.encdec`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import (Builder, init_attention, attention_block, init_mlp,
+                     mlp_block, init_norm, apply_norm, init_embed,
+                     embed_tokens, unembed, shard_act, maybe_scan)
+from .moe import init_moe, moe_block, moe_flops_per_token
+from .ssm import (init_mamba1, init_mamba2, mamba1_block, mamba2_block,
+                  mamba1_decode_cache, mamba2_decode_cache, ssm_flops_per_token)
+
+
+# --------------------------------------------------------------------------
+# plan helpers
+# --------------------------------------------------------------------------
+
+def _plan_kind(cfg: ModelConfig) -> str:
+    kinds = set(cfg.layer_plan)
+    if kinds == {"attn"}:
+        return "attn"
+    if kinds == {"mamba1"}:
+        return "mamba1"
+    if kinds == {"mamba2"}:
+        return "mamba2"
+    if kinds <= {"mamba2", "mamba2+shared_attn"}:
+        return "mamba2_shared"
+    raise ValueError(f"unsupported layer plan {kinds} (scan needs homogeneity)")
+
+
+def _n_shared_sites(cfg: ModelConfig) -> int:
+    return sum(1 for p in cfg.layer_plan if p == "mamba2+shared_attn")
+
+
+def _mixer_init(b: Builder, cfg: ModelConfig, kind: str, L: int) -> Dict:
+    if kind == "attn":
+        return init_attention(b, "layers/attn", cfg, stacked=L)
+    if kind == "mamba1":
+        return init_mamba1(b, "layers/mamba1", cfg, stacked=L)
+    return init_mamba2(b, "layers/mamba2", cfg, stacked=L)
+
+
+def _superblock(cfg: ModelConfig) -> int:
+    """Scan super-block size: llama4-style interleaved MoE scans blocks of
+    ``moe_every`` layers (k-1 dense + 1 MoE) to keep xs homogeneous."""
+    if cfg.n_experts and cfg.moe_every > 1 and _plan_kind(cfg) == "attn":
+        assert cfg.n_layers % cfg.moe_every == 0
+        return cfg.moe_every
+    return 1
+
+
+def _ffn_init(b: Builder, cfg: ModelConfig, L: int) -> Optional[Dict]:
+    kind = _plan_kind(cfg)
+    if kind != "attn":
+        return None                      # mamba blocks have no separate FFN
+    if cfg.n_experts:
+        k = _superblock(cfg)
+        if k > 1:
+            L2 = L // k
+            return {"mlp": init_mlp(b, "layers/mlp", cfg, stacked=L - L2),
+                    "moe": init_moe(b, "layers/moe", cfg, stacked=L2)}
+        return init_moe(b, "layers/moe", cfg, stacked=L)
+    return init_mlp(b, "layers/mlp", cfg, stacked=L)
+
+
+def _build(cfg: ModelConfig, b: Builder) -> Dict:
+    L = cfg.n_layers
+    kind = _plan_kind(cfg)
+    params: Dict[str, Any] = {
+        "embed": init_embed(b, cfg),
+        "final_norm": init_norm(b, "final_norm", cfg),
+        "layers": {
+            "mixer": _mixer_init(b, cfg, kind, L),
+            "norm1": init_norm(b, "layers/norm1", cfg, stacked=L),
+        },
+    }
+    ffn = _ffn_init(b, cfg, L)
+    if ffn is not None:
+        params["layers"]["ffn"] = ffn
+        params["layers"]["norm2"] = init_norm(b, "layers/norm2", cfg, stacked=L)
+    if kind == "mamba2_shared":
+        # zamba2's shared block is a full transformer block (attn + MLP),
+        # ONE parameter set reused at every site.
+        params["shared_attn"] = init_attention(b, "shared_attn", cfg)
+        params["shared_norm"] = init_norm(b, "shared_norm", cfg)
+        params["shared_mlp"] = init_mlp(b, "shared_mlp", cfg)
+        params["shared_norm2"] = init_norm(b, "shared_norm2", cfg)
+    return params
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Dict:
+    return _build(cfg, Builder(cfg, key, mode="init"))
+
+
+def logical_axes(cfg: ModelConfig) -> Dict:
+    return _build(cfg, Builder(cfg, mode="axes"))
+
+
+def abstract_params(cfg: ModelConfig) -> Dict:
+    """ShapeDtypeStruct pytree (dry-run: no allocation)."""
+    return jax.eval_shape(functools.partial(init_params, cfg),
+                          jax.random.PRNGKey(0))
+
+
+# --------------------------------------------------------------------------
+# caches
+# --------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=None) -> Dict:
+    """Decode cache pytree. ``pos`` is the write cursor (same for the batch)."""
+    dt = dtype or cfg.cdtype
+    kind = _plan_kind(cfg)
+    L = cfg.n_layers
+    KH, hd = cfg.n_kv_heads, cfg.head_dim
+    cache: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    if kind == "attn":
+        if cfg.kv_cache_dtype == "int8":
+            cache["layers"] = {
+                "k": jnp.zeros((L, batch, max_len, KH, hd), jnp.int8),
+                "v": jnp.zeros((L, batch, max_len, KH, hd), jnp.int8),
+                "k_scale": jnp.zeros((L, batch, max_len, KH), jnp.bfloat16),
+                "v_scale": jnp.zeros((L, batch, max_len, KH), jnp.bfloat16),
+            }
+            return cache
+        cache["layers"] = {
+            "k": jnp.zeros((L, batch, max_len, KH, hd), dt),
+            "v": jnp.zeros((L, batch, max_len, KH, hd), dt),
+        }
+    elif kind == "mamba1":
+        c = mamba1_decode_cache(cfg, batch, dt)
+        cache["layers"] = jax.tree.map(
+            lambda x: jnp.zeros((L,) + x.shape, x.dtype), c)
+    else:  # mamba2 / mamba2_shared
+        c = mamba2_decode_cache(cfg, batch, dt)
+        cache["layers"] = jax.tree.map(
+            lambda x: jnp.zeros((L,) + x.shape, x.dtype), c)
+        if kind == "mamba2_shared":
+            sites = _n_shared_sites(cfg)
+            cache["shared"] = {
+                "k": jnp.zeros((sites, batch, max_len, KH, hd), dt),
+                "v": jnp.zeros((sites, batch, max_len, KH, hd), dt),
+            }
+    return cache
+
+
+def cache_logical_axes(cfg: ModelConfig) -> Dict:
+    kind = _plan_kind(cfg)
+    ax: Dict[str, Any] = {"pos": ()}
+    if kind == "attn":
+        ax["layers"] = {"k": ("layers", "batch", "kv_seq", "kv_heads", None),
+                        "v": ("layers", "batch", "kv_seq", "kv_heads", None)}
+        if cfg.kv_cache_dtype == "int8":
+            ax["layers"]["k_scale"] = ("layers", "batch", "kv_seq", "kv_heads")
+            ax["layers"]["v_scale"] = ("layers", "batch", "kv_seq", "kv_heads")
+    elif kind == "mamba1":
+        ax["layers"] = {"conv": ("layers", "batch", None, "ssm_inner"),
+                        "h": ("layers", "batch", "ssm_inner", "state")}
+    else:
+        ax["layers"] = {"conv": ("layers", "batch", None, "conv_dim"),
+                        "h": ("layers", "batch", "ssm_heads", None, "state")}
+        if kind == "mamba2_shared":
+            ax["shared"] = {"k": (None, "batch", "kv_seq", "kv_heads", None),
+                            "v": (None, "batch", "kv_seq", "kv_heads", None)}
+    return ax
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+
+def _layer_body(cfg: ModelConfig, ctx, *, use_cache: bool, train: bool,
+                positions, cache_pos, shared_params, shared_norm,
+                shared_mlp=None, shared_norm2=None, apply_remat: bool = True,
+                static_idx: Optional[int] = None):
+    """Returns fn(carry, xs) for lax.scan over stacked layers.
+
+    ``positions``/``cache_pos``/``shared_*`` are loop invariants closed over
+    (scan hoists them as constants — broadcasting them into xs would
+    materialize L copies of the shared-attention weights)."""
+    kind = _plan_kind(cfg)
+    every = cfg.shared_attn_every
+
+    def body(carry, xs):
+        x, aux, shared_k, shared_v = carry
+        lp, lcache = xs["params"], xs.get("cache")
+        # static_idx is bound by closure (NOT through xs) so that remat /
+        # checkpoint wrapping cannot re-trace it into a dynamic value
+        idx = static_idx if static_idx is not None else xs["idx"]
+
+        h = apply_norm(x, lp["norm1"], cfg)
+        new_cache = None
+        if kind == "attn":
+            attn_cache = dict(lcache) if use_cache else None
+            h, new_cache = attention_block(
+                lp["mixer"], h, cfg, positions=positions,
+                cache=attn_cache, cache_pos=cache_pos, causal=True, ctx=ctx)
+        elif kind == "mamba1":
+            h, new_cache = mamba1_block(lp["mixer"], h, cfg,
+                                        cache=lcache if use_cache else None,
+                                        ctx=ctx)
+        else:
+            h, new_cache = mamba2_block(lp["mixer"], h, cfg,
+                                        cache=lcache if use_cache else None,
+                                        ctx=ctx)
+        x = x + h
+
+        if "ffn" in lp:
+            h = apply_norm(x, lp["norm2"], cfg)
+            if "router" in lp["ffn"]:           # MoE vs dense by structure
+                h, a = moe_block(lp["ffn"], h, cfg, ctx=ctx)
+                aux = aux + a
+            else:
+                h = mlp_block(lp["ffn"], h, cfg, ctx=ctx)
+            x = x + h
+
+        if kind == "mamba2_shared" and every:
+            # zamba2: one SHARED attention block applied after every
+            # ``every``-th layer.
+            def apply_shared(operands, site):
+                x, sk, sv = operands
+                h = apply_norm(x, shared_norm, cfg)
+                if use_cache:
+                    ck = jax.lax.dynamic_index_in_dim(sk, site, 0, keepdims=False)
+                    cv = jax.lax.dynamic_index_in_dim(sv, site, 0, keepdims=False)
+                    h, nc = attention_block(
+                        shared_params, h, cfg, positions=positions,
+                        cache={"k": ck, "v": cv}, cache_pos=cache_pos,
+                        causal=True, ctx=ctx)
+                    sk = jax.lax.dynamic_update_index_in_dim(sk, nc["k"], site, 0)
+                    sv = jax.lax.dynamic_update_index_in_dim(sv, nc["v"], site, 0)
+                else:
+                    h, _ = attention_block(shared_params, h, cfg,
+                                           positions=positions,
+                                           causal=True, ctx=ctx)
+                x = x + h
+                if shared_mlp is not None:
+                    h = apply_norm(x, shared_norm2, cfg)
+                    x = x + mlp_block(shared_mlp, h, cfg, ctx=ctx)
+                return x, sk, sv
+
+            if isinstance(idx, (int, np.integer)):
+                # STATIC idx (unrolled cost probes / unrolled execution):
+                # the site test resolves at trace time, so the emitted HLO
+                # has shared-attn ops only at the real sites — important
+                # because cost_analysis counts BOTH branches of an HLO cond
+                # at every layer otherwise (§Perf cell C).
+                if (int(idx) + 1) % every == 0:
+                    x, shared_k, shared_v = apply_shared(
+                        (x, shared_k, shared_v), (int(idx) + 1) // every - 1)
+            else:
+                # scan path: lax.cond so non-site layers pay nothing at
+                # runtime (one branch executes on TPU)
+                is_site = (idx + 1) % every == 0
+                site = jnp.maximum((idx + 1) // every - 1, 0)
+                if shared_k is None:     # no cache: carry only x through cond
+                    x = jax.lax.cond(
+                        is_site,
+                        lambda x: apply_shared((x, None, None), site)[0],
+                        lambda x: x, x)
+                else:
+                    x, shared_k, shared_v = jax.lax.cond(
+                        is_site, lambda o: apply_shared(o, site),
+                        lambda o: o, (x, shared_k, shared_v))
+
+        x = shard_act(x, ("batch", "seq", "d_model"), ctx)
+        return (x, aux, shared_k, shared_v), new_cache
+
+    if apply_remat and train and cfg.remat != "none":
+        body = jax.checkpoint(body, policy=_remat_policy(cfg))
+    return body
+
+
+def _remat_policy(cfg: ModelConfig):
+    return (None if cfg.remat == "full"
+            else jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+
+def forward(params: Dict, tokens: jax.Array, cfg: ModelConfig, *,
+            ctx=None, cache: Optional[Dict] = None,
+            patch_embeds: Optional[jax.Array] = None,
+            train: bool = False) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
+    """Returns (logits, new_cache, aux_loss).
+
+    tokens: (B, S).  With ``cache``: prefill (pos=0, S>1) or decode (S==1,
+    write at ``cache['pos']``).  ``patch_embeds`` (B, P, d) overrides the
+    first P embeddings (VLM stub frontend).
+    """
+    B, S = tokens.shape
+    kind = _plan_kind(cfg)
+    pos0 = cache["pos"] if cache is not None else jnp.zeros((), jnp.int32)
+    positions = pos0[None, None] + jnp.arange(S)[None, :]          # (B=1bc, S)
+    positions = jnp.broadcast_to(positions, (B, S))
+
+    x = embed_tokens(params["embed"], tokens, cfg, positions)
+    if patch_embeds is not None:
+        P = patch_embeds.shape[1]
+        x = jnp.concatenate([patch_embeds.astype(x.dtype), x[:, P:, :]], axis=1)
+    x = shard_act(x, ("batch", "seq", "d_model"), ctx)
+
+    use_cache = cache is not None
+    shared_k = shared_v = None
+    if use_cache and "shared" in cache:
+        shared_k, shared_v = cache["shared"]["k"], cache["shared"]["v"]
+
+    L = cfg.n_layers
+    k_super = _superblock(cfg)
+    aux0 = jnp.zeros((), jnp.float32)
+    carry0 = (x, aux0, shared_k, shared_v)
+    body_kw = dict(
+        use_cache=use_cache, train=train,
+        positions=positions, cache_pos=pos0,
+        shared_params=params.get("shared_attn"),
+        shared_norm=params.get("shared_norm"),
+        shared_mlp=params.get("shared_mlp"),
+        shared_norm2=params.get("shared_norm2"))
+
+    if k_super == 1:
+        xs: Dict[str, Any] = {"params": params["layers"],
+                              "idx": jnp.arange(L, dtype=jnp.int32)}
+        if use_cache:
+            xs["cache"] = cache["layers"]
+        if cfg.scan_layers:
+            body = _layer_body(cfg, ctx, **body_kw)
+            carry, layer_caches = maybe_scan(cfg, body, carry0, xs, L)
+        else:
+            # unrolled (cost probes): per-layer bodies with a STATIC index
+            # so per-layer branches (zamba2 shared-attn sites) resolve at
+            # trace time — cost_analysis counts both branches of an HLO
+            # cond, which would charge every layer for the shared block
+            carry, ys = carry0, []
+            for i in range(L):
+                bi = _layer_body(cfg, ctx, static_idx=i, **body_kw)
+                carry, y = bi(carry, jax.tree.map(lambda a: a[i], xs))
+                ys.append(y)
+            layer_caches = (None if not ys or ys[0] is None else
+                            jax.tree.map(lambda *a: jnp.stack(a), *ys))
+    else:
+        # interleaved-MoE super-blocks: scan over L/k blocks of (k-1 dense
+        # + 1 MoE) layers so the xs pytree stays homogeneous.
+        L2 = L // k_super
+        to_super = lambda t: jax.tree.map(
+            lambda a: a.reshape((L2, k_super) + a.shape[1:]), t)
+        lay = params["layers"]
+        xs = {"mixer": to_super(lay["mixer"]),
+              "norm1": to_super(lay["norm1"]),
+              "norm2": to_super(lay["norm2"]),
+              "mlp": jax.tree.map(
+                  lambda a: a.reshape((L2, k_super - 1) + a.shape[1:]),
+                  lay["ffn"]["mlp"]),
+              "moe": lay["ffn"]["moe"],
+              "idx": jnp.arange(L, dtype=jnp.int32).reshape(L2, k_super)}
+        if use_cache:
+            xs["cache"] = to_super(cache["layers"])
+        sub_body = _layer_body(cfg, ctx, apply_remat=False, **body_kw)
+        tree_i = lambda t, i: jax.tree.map(lambda a: a[i], t)
+
+        def super_body(carry, xsb):
+            new_caches = []
+            for i in range(k_super):
+                lp = {"mixer": tree_i(xsb["mixer"], i),
+                      "norm1": tree_i(xsb["norm1"], i),
+                      "norm2": tree_i(xsb["norm2"], i),
+                      "ffn": (tree_i(xsb["mlp"], i) if i < k_super - 1
+                              else xsb["moe"])}
+                sub = {"params": lp, "idx": xsb["idx"][i]}
+                if use_cache:
+                    sub["cache"] = tree_i(xsb["cache"], i)
+                carry, nc = sub_body(carry, sub)
+                new_caches.append(nc)
+            ys = (None if new_caches[0] is None else
+                  jax.tree.map(lambda *a: jnp.stack(a), *new_caches))
+            return carry, ys
+
+        if train and cfg.remat != "none":
+            super_body = jax.checkpoint(super_body, policy=_remat_policy(cfg))
+        carry, layer_caches = maybe_scan(cfg, super_body, carry0, xs, L2)
+        if use_cache:
+            layer_caches = jax.tree.map(
+                lambda a: a.reshape((L,) + a.shape[2:]), layer_caches)
+    x, aux, shared_k, shared_v = carry
+
+    x = apply_norm(x, params["final_norm"], cfg)
+    logits = unembed(params["embed"], x, cfg)
+    logits = shard_act(logits, ("batch", "seq", "vocab"), ctx)
+
+    new_cache = None
+    if use_cache:
+        new_cache = {"pos": pos0 + S, "layers": layer_caches}
+        if "shared" in cache:
+            new_cache["shared"] = {"k": shared_k, "v": shared_v}
+    return logits, new_cache, aux
+
+
+# --------------------------------------------------------------------------
+# step builders
+# --------------------------------------------------------------------------
+
+def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean cross-entropy, float32; logits (B, S, V), labels (B, S)."""
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(
+        logits.astype(jnp.float32), labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+@functools.lru_cache(maxsize=None)
+def _xent_with_bwd_dtype(dtype_name: str):
+    """Cross-entropy whose backward emits ``dtype_name`` cotangents.
+
+    The softmax-xent gradient is (softmax(z) - onehot)/count — every entry
+    in [-1, 1], perfectly representable in bf16 — but jax's automatic VJP
+    inherits float32 from the f32 loss math, which doubles the width of the
+    ENTIRE backward pass: every activation-grad all-reduce (TP), every
+    gradient reduce-scatter (FSDP), every remat fusion.  This custom VJP
+    confines f32 to the loss statistics (still exact) and hands the model a
+    half-width cotangent.  §Perf hillclimb lever.
+    """
+    dt = jnp.dtype(dtype_name)
+
+    @jax.custom_vjp
+    def xent(logits, labels):
+        return softmax_xent(logits, labels)
+
+    def fwd(logits, labels):
+        return softmax_xent(logits, labels), (logits, labels)
+
+    def bwd(res, g):
+        logits, labels = res
+        z = logits.astype(jnp.float32)
+        p = jax.nn.softmax(z, axis=-1)
+        onehot = jax.nn.one_hot(labels, z.shape[-1], dtype=jnp.float32)
+        count = labels.size
+        dlogits = ((p - onehot) * (g / count)).astype(dt)
+        import numpy as _np
+        return dlogits, _np.zeros(labels.shape, jax.dtypes.float0)
+
+    xent.defvjp(fwd, bwd)
+    return xent
+
+
+def make_loss_fn(cfg: ModelConfig, ctx=None):
+    xent = (softmax_xent if cfg.grad_dtype == "float32"
+            else _xent_with_bwd_dtype(cfg.grad_dtype))
+
+    def loss_fn(params, batch):
+        logits, _, aux = forward(
+            params, batch["tokens"], cfg, ctx=ctx,
+            patch_embeds=batch.get("patch_embeds"), train=True)
+        loss = xent(logits[:, :-1], batch["labels"][:, 1:])
+        return loss + aux, {"loss": loss, "aux": aux}
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, optimizer, ctx=None):
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    loss_fn = make_loss_fn(cfg, ctx)
+
+    def train_step(params, opt_state, batch):
+        grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+        (total, metrics), grads = grad_fn(params, batch)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = jax.tree.map(lambda p, u: (p + u).astype(p.dtype),
+                              params, updates)
+        gnorm = optimizer.global_norm(grads)
+        metrics = dict(metrics, total_loss=total, grad_norm=gnorm)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, ctx=None, max_len: Optional[int] = None):
+    """(params, tokens[, patch_embeds]) -> (next_token_logits, cache)."""
+    def prefill(params, tokens, patch_embeds=None):
+        B, S = tokens.shape
+        cache = init_cache(cfg, B, max_len or cfg.max_cache_len or S)
+        logits, cache, _ = forward(params, tokens, cfg, ctx=ctx, cache=cache,
+                                   patch_embeds=patch_embeds)
+        return logits[:, -1, :], cache
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig, ctx=None):
+    """(params, cache, token (B,1)) -> (logits (B, V), cache)."""
+    def decode(params, cache, token):
+        logits, cache, _ = forward(params, token, cfg, ctx=ctx, cache=cache)
+        return logits[:, -1, :], cache
+    return decode
+
+
+# --------------------------------------------------------------------------
+# analytics
+# --------------------------------------------------------------------------
+
+def count_params(cfg: ModelConfig) -> int:
+    import math
+    return sum(math.prod(s.shape) for s in
+               jax.tree.leaves(abstract_params(cfg)))
+
+
+def count_active_params(cfg: ModelConfig) -> int:
+    """Params touched per token (MoE: top-k experts only; interleaved MoE
+    counts only the L//moe_every layers that actually have experts)."""
+    total = count_params(cfg)
+    if not cfg.n_experts:
+        return total
+    d, ff, E, K = cfg.d_model, cfg.expert_d_ff, cfg.n_experts, cfg.experts_per_token
+    n_moe_layers = cfg.n_layers // cfg.moe_every
+    expert_params_per_layer = 3 * d * ff
+    inactive = n_moe_layers * (E - K) * expert_params_per_layer
+    return total - inactive
+
+
+def model_flops_per_token(cfg: ModelConfig, seq_len: int) -> float:
+    """Forward matmul FLOPs per token (the 6·N·D convention divides into
+    2·N_active fwd + 4·N_active bwd; attention adds the S-dependent term)."""
+    d, hd = cfg.d_model, cfg.head_dim
+    f = 0.0
+    for plan in cfg.layer_plan:
+        if plan == "attn":
+            f += 2 * d * (cfg.n_heads + 2 * cfg.n_kv_heads) * hd  # qkv
+            f += 2 * cfg.n_heads * hd * d                         # out
+            f += 2 * 2 * cfg.n_heads * hd * seq_len / 2           # scores+pv (causal avg)
+            if cfg.n_experts:
+                f += moe_flops_per_token(cfg)
+            else:
+                mult = 3 if cfg.mlp_act == "swiglu" else 2
+                f += mult * 2 * d * cfg.d_ff
+        else:
+            f += ssm_flops_per_token(cfg, "mamba1" if plan == "mamba1" else "mamba2")
+            if "shared_attn" in plan:
+                f += 2 * d * (cfg.n_heads + 2 * cfg.n_kv_heads) * hd
+                f += 2 * cfg.n_heads * hd * d
+                f += 2 * 2 * cfg.n_heads * hd * seq_len / 2
+    f += 2 * d * cfg.vocab_size          # unembed
+    return f

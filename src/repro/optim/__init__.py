@@ -1,0 +1,2 @@
+from .optimizers import AdamW, Adafactor, SGD, global_norm, clip_by_global_norm
+from .schedules import cosine_schedule, linear_warmup

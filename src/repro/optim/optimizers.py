@@ -1,0 +1,168 @@
+"""Optimizers (functional, pytree-based — no external deps).
+
+* :class:`AdamW` — f32 moments regardless of param dtype (mixed precision),
+  decoupled weight decay, global-norm clipping, schedule support.
+* :class:`Adafactor` — factored second moment for very large models
+  (llama4-maverick's 400B params cannot afford Adam's 2×f32 state on a
+  single pod; see DESIGN.md memory budget).
+* Optimizer state carries the step count; all updates are jit-safe.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Union[float, Callable[[jax.Array], jax.Array]]
+
+
+def _lr_at(lr: Schedule, step: jax.Array) -> jax.Array:
+    return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(tree: Any, max_norm: float) -> Tuple[Any, jax.Array]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), tree), norm
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Schedule = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: Optional[float] = 1.0
+
+    def init(self, params: Any) -> Any:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def update(self, grads: Any, state: Any, params: Any) -> Tuple[Any, Any]:
+        step = state["step"] + 1
+        if self.clip_norm is not None:
+            grads, _ = clip_by_global_norm(grads, self.clip_norm)
+        else:
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        m = jax.tree.map(lambda m, g: self.b1 * m + (1 - self.b1) * g,
+                         state["m"], grads)
+        v = jax.tree.map(lambda v, g: self.b2 * v + (1 - self.b2) * g * g,
+                         state["v"], grads)
+        c1 = 1 - self.b1 ** step.astype(jnp.float32)
+        c2 = 1 - self.b2 ** step.astype(jnp.float32)
+        lr = _lr_at(self.lr, step)
+
+        def upd(p, m, v):
+            u = (m / c1) / (jnp.sqrt(v / c2) + self.eps)
+            if self.weight_decay:
+                u = u + self.weight_decay * p.astype(jnp.float32)
+            return (-lr * u).astype(jnp.float32)
+
+        updates = jax.tree.map(upd, params, m, v)
+        return updates, {"step": step, "m": m, "v": v}
+
+    @staticmethod
+    def global_norm(tree: Any) -> jax.Array:
+        return global_norm(tree)
+
+
+@dataclasses.dataclass(frozen=True)
+class Adafactor:
+    """Factored second-moment optimizer (Shazeer & Stern, 2018), the standard
+    trick for >100B-param models: O(n+m) state for an (n, m) matrix."""
+    lr: Schedule = 1e-2
+    decay: float = 0.8
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    min_dim_factored: int = 128
+
+    def _factored(self, shape) -> bool:
+        return len(shape) >= 2 and shape[-1] >= self.min_dim_factored \
+            and shape[-2] >= self.min_dim_factored
+
+    def init(self, params: Any) -> Any:
+        def one(p):
+            if self._factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"step": jnp.zeros((), jnp.int32),
+                "v": jax.tree.map(one, params,
+                                  is_leaf=lambda x: hasattr(x, "shape"))}
+
+    def update(self, grads: Any, state: Any, params: Any) -> Tuple[Any, Any]:
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        beta = 1.0 - t ** (-self.decay)
+        lr = _lr_at(self.lr, step)
+
+        def one(g, v, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + self.eps
+            if "vr" in v:
+                vr = beta * v["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * v["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                rfac = jax.lax.rsqrt(
+                    vr / jnp.mean(vr, axis=-1, keepdims=True) + self.eps)
+                cfac = jax.lax.rsqrt(vc + self.eps)
+                u = g * rfac[..., None] * cfac[..., None, :]
+                nv = {"vr": vr, "vc": vc}
+            else:
+                nvv = beta * v["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(nvv + self.eps)
+                nv = {"v": nvv}
+            # update clipping (RMS of update limited to clip_threshold)
+            rms = jnp.sqrt(jnp.mean(u * u) + self.eps)
+            u = u / jnp.maximum(1.0, rms / self.clip_threshold)
+            return (-lr * u).astype(jnp.float32), nv
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_v = tdef.flatten_up_to(state["v"])
+        flat_p = tdef.flatten_up_to(params)
+        outs = [one(g, v, p) for g, v, p in zip(flat_g, flat_v, flat_p)]
+        updates = tdef.unflatten([o[0] for o in outs])
+        new_v = tdef.unflatten([o[1] for o in outs])
+        return updates, {"step": step, "v": new_v}
+
+    @staticmethod
+    def global_norm(tree: Any) -> jax.Array:
+        return global_norm(tree)
+
+
+@dataclasses.dataclass(frozen=True)
+class SGD:
+    lr: Schedule = 1e-2
+    momentum: float = 0.0
+
+    def init(self, params: Any) -> Any:
+        st = {"step": jnp.zeros((), jnp.int32)}
+        if self.momentum:
+            st["m"] = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                   params)
+        return st
+
+    def update(self, grads, state, params):
+        step = state["step"] + 1
+        lr = _lr_at(self.lr, step)
+        if self.momentum:
+            m = jax.tree.map(lambda m, g: self.momentum * m
+                             + g.astype(jnp.float32), state["m"], grads)
+            updates = jax.tree.map(lambda m: -lr * m, m)
+            return updates, {"step": step, "m": m}
+        updates = jax.tree.map(lambda g: -lr * g.astype(jnp.float32), grads)
+        return updates, {"step": step}
+
+    @staticmethod
+    def global_norm(tree):
+        return global_norm(tree)

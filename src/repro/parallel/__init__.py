@@ -1,0 +1,2 @@
+from .sharding import ShardingCtx, param_shardings, act_spec
+from .mesh import make_production_mesh, single_device_mesh

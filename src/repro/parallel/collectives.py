@@ -1,0 +1,66 @@
+"""shard_map collective helpers used by the explicit-communication paths.
+
+The pjit/GSPMD paths let XLA insert collectives; these helpers exist for the
+places where we schedule communication BY HAND: the pipeline's
+collective_permute ring, compressed gradient all-reduce, and the
+bucketed/overlapped DP gradient sync.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+
+def psum_tree(tree: Any, axis: str) -> Any:
+    return jax.tree.map(lambda x: jax.lax.psum(x, axis), tree)
+
+
+def pmean_tree(tree: Any, axis: str) -> Any:
+    return jax.tree.map(lambda x: jax.lax.pmean(x, axis), tree)
+
+
+def ring_permute(x: jax.Array, axis: str, shift: int = 1) -> jax.Array:
+    n = jax.lax.axis_size(axis)
+    perm = [(i, (i + shift) % n) for i in range(n)]
+    return jax.lax.ppermute(x, axis, perm)
+
+
+def all_gather_seq(x: jax.Array, axis: str, dim: int = 1) -> jax.Array:
+    return jax.lax.all_gather(x, axis, axis=dim, tiled=True)
+
+
+def reduce_scatter(x: jax.Array, axis: str, dim: int = 0) -> jax.Array:
+    return jax.lax.psum_scatter(x, axis, scatter_dimension=dim, tiled=True)
+
+
+def dp_gradient_sync(grads: Any, mesh: Mesh, data_axes: Sequence[str],
+                     compressor: Optional[Callable] = None) -> Any:
+    """Explicit data-parallel gradient all-reduce via shard_map.
+
+    With ``compressor`` (see :mod:`repro.parallel.compression`) the
+    all-reduce runs on the compressed representation — the distributed-
+    optimization trick for DCN-crossing (pod-axis) reductions.
+    """
+    axes = tuple(a for a in data_axes if a in mesh.axis_names)
+    if not axes:
+        return grads
+
+    specs = jax.tree.map(lambda g: P(*([None] * g.ndim)), grads)
+
+    @functools.partial(shard_map, mesh=mesh, in_specs=(specs,),
+                       out_specs=specs)
+    def sync(g):
+        def one(x):
+            if compressor is not None:
+                return compressor.all_reduce(x, axes)
+            for ax in axes:
+                x = jax.lax.pmean(x, ax)
+            return x
+        return jax.tree.map(one, g)
+
+    return sync(grads)

@@ -1,0 +1,45 @@
+"""Mesh construction (kept as FUNCTIONS so importing never touches devices)."""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import AxisType, Mesh
+
+
+def _make(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
+    n = math.prod(shape)
+    devs = jax.devices()
+    if len(devs) == n:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    if len(devs) < n:
+        raise ValueError(f"need {n} devices for mesh {shape}, have {len(devs)}")
+    # more devices than the mesh needs (e.g. the 512-device dry-run world
+    # building a single-pod 256-chip mesh): take a prefix
+    arr = np.asarray(devs[:n]).reshape(shape)
+    return Mesh(arr, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """The assignment's production mesh: one v5e pod = (16, 16) over
+    (data, model); two pods = (2, 16, 16) over (pod, data, model)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _make(shape, axes)
+
+
+def make_mesh_for(n_devices: int, model_parallel: int = 1,
+                  pods: int = 1) -> Mesh:
+    """Generic mesh builder for tests/examples on arbitrary device counts."""
+    assert n_devices % (model_parallel * pods) == 0
+    data = n_devices // (model_parallel * pods)
+    if pods > 1:
+        return _make((pods, data, model_parallel), ("pod", "data", "model"))
+    return _make((data, model_parallel), ("data", "model"))
+
+
+def single_device_mesh() -> Mesh:
+    return _make((1, 1), ("data", "model"))

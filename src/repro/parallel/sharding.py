@@ -1,0 +1,51 @@
+"""Model-facing sharding context.
+
+Bridges the placement engine (:mod:`repro.core.placement`) and the model
+code: model layers call ``ctx.constrain(x, logical_axes)`` at block
+boundaries; the context resolves logical axes through the active rule table.
+``ctx=None`` (or mesh=None) is a no-op so the same model code runs on one
+CPU device in tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.core.placement import Rule, logical_to_spec, standard_rules, tree_shardings
+
+
+@dataclasses.dataclass
+class ShardingCtx:
+    mesh: Optional[Mesh]
+    rules: Sequence[Rule]
+
+    @classmethod
+    def make(cls, mesh: Optional[Mesh], mode: str = "fsdp_tp") -> "ShardingCtx":
+        pod = "pod" if (mesh is not None and "pod" in mesh.axis_names) else None
+        return cls(mesh, standard_rules(mode, pod_axis=pod))
+
+    def spec(self, axes: Tuple[Optional[str], ...]):
+        return logical_to_spec(axes, self.rules, self.mesh)
+
+    def constrain(self, x: jax.Array, axes: Tuple[Optional[str], ...]) -> jax.Array:
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.spec(axes)))
+
+    def sharding(self, axes: Tuple[Optional[str], ...]) -> NamedSharding:
+        assert self.mesh is not None
+        return NamedSharding(self.mesh, self.spec(axes))
+
+
+def act_spec(axes: Tuple[Optional[str], ...], ctx: Optional[ShardingCtx]):
+    return ctx.spec(axes) if ctx and ctx.mesh is not None else None
+
+
+def param_shardings(logical_tree: Any, ctx: ShardingCtx):
+    """Pytree of NamedShardings for a params pytree's logical axes."""
+    assert ctx.mesh is not None
+    return tree_shardings(logical_tree, ctx.rules, ctx.mesh)

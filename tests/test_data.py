@@ -1,0 +1,76 @@
+"""Data pipeline: (step, host) determinism, shard disjointness, prefetch,
+IO-task ordering."""
+import numpy as np
+
+from repro.core import trace, execute_sequential, TaskKind
+from repro.data.pipeline import (SyntheticLMDataset, Prefetcher,
+                                 make_data_source)
+
+
+def test_batch_at_deterministic_and_step_addressed():
+    ds = SyntheticLMDataset(1000, 16, 8, seed=3)
+    a = ds.batch_at(5)
+    b = ds.batch_at(5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = ds.batch_at(6)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+    assert a["tokens"].shape == (8, 16)
+    assert a["tokens"].dtype == np.int32
+    # labels are next-token shifted views of the same stream
+    np.testing.assert_array_equal(a["tokens"][:, 1:], a["labels"][:, :-1])
+
+
+def test_tokens_in_vocab_range():
+    ds = SyntheticLMDataset(100, 32, 4)
+    b = ds.batch_at(0)
+    assert b["tokens"].min() >= 0
+    assert b["tokens"].max() < 100
+
+
+def test_host_shards_differ_and_partition_batch():
+    n_hosts = 4
+    shards = [SyntheticLMDataset(1000, 16, 16, n_hosts=n_hosts, host_id=h,
+                                 seed=1).batch_at(3) for h in range(n_hosts)]
+    assert all(s["tokens"].shape == (4, 16) for s in shards)
+    for i in range(n_hosts):
+        for j in range(i + 1, n_hosts):
+            assert not np.array_equal(shards[i]["tokens"],
+                                      shards[j]["tokens"])
+
+
+def test_prefetcher_yields_in_order_and_resumes():
+    ds = SyntheticLMDataset(1000, 8, 4, seed=2)
+    pf = Prefetcher(ds, start_step=10, depth=2)
+    try:
+        b10 = pf.next()
+        b11 = pf.next()
+        np.testing.assert_array_equal(b10["tokens"], ds.batch_at(10)["tokens"])
+        np.testing.assert_array_equal(b11["tokens"], ds.batch_at(11)["tokens"])
+        assert pf.step == 12        # checkpointable cursor
+    finally:
+        pf.close()
+    # resume from the cursor reproduces the continuation exactly
+    pf2 = Prefetcher(ds, start_step=12, depth=2)
+    try:
+        b12 = pf2.next()
+        np.testing.assert_array_equal(b12["tokens"], ds.batch_at(12)["tokens"])
+    finally:
+        pf2.close()
+
+
+def test_data_source_is_effectful_and_ordered():
+    ds = SyntheticLMDataset(1000, 8, 4)
+    load = make_data_source(ds)
+
+    def driver():
+        return load(), load(), load()
+
+    g, _ = trace(driver)
+    nodes = list(g)
+    assert all(n.kind is TaskKind.EFFECTFUL for n in nodes)
+    # RealWorld chain: each load token-depends on the previous
+    assert nodes[1].token_deps == (nodes[0].tid,)
+    assert nodes[2].token_deps == (nodes[1].tid,)
+    res = execute_sequential(g)
+    np.testing.assert_array_equal(res[0]["tokens"], ds.batch_at(0)["tokens"])
+    np.testing.assert_array_equal(res[2]["tokens"], ds.batch_at(2)["tokens"])

@@ -1,0 +1,159 @@
+"""Threaded executor vs sequential oracle, effect ordering, lineage."""
+import random
+import threading
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (task, io_task, trace, execute_sequential,
+                        ThreadedExecutor, TaskGraph, TaskKind,
+                        recovery_plan, recover, lineage_depth,
+                        NonIdempotentReplay, checkpoint_barrier)
+from repro.core.tracing import RemappedRef as _Ref
+
+
+def exec_dag(seed: int, n: int, p: float) -> TaskGraph:
+    """Random dag whose nodes do real (cheap, deterministic) arithmetic."""
+    rng = random.Random(seed)
+    g = TaskGraph()
+    for i in range(n):
+        deps = [j for j in range(i) if rng.random() < p][-3:]
+
+        def fn(*xs, _i=i):
+            return _i + sum(xs) * 7 % 1_000_003
+
+        g.add_node(f"t{i}", fn, tuple(_Ref(d) for d in deps), {},
+                   TaskKind.PURE, deps=deps, cost=rng.uniform(0.1, 1.0))
+    g.mark_output(n - 1)
+    return g
+
+
+@given(st.integers(0, 5000), st.integers(2, 40), st.floats(0.0, 0.5),
+       st.integers(2, 8))
+@settings(max_examples=40, deadline=None)
+def test_threaded_matches_sequential(seed, n, p, workers):
+    g = exec_dag(seed, n, p)
+    seq = execute_sequential(g)
+    par = ThreadedExecutor(workers).run(g)
+    assert seq == par
+
+
+def test_failure_injection_recovers_and_matches():
+    g = exec_dag(123, 30, 0.3)
+    seq = execute_sequential(g)
+    failed = set()
+
+    def fail_some(worker, tid):
+        if tid % 7 == 3 and tid not in failed:
+            failed.add(tid)
+            return True
+        return False
+
+    ex = ThreadedExecutor(4, fail_task=fail_some)
+    par = ex.run(g)
+    assert par == seq
+    assert ex.stats["recomputed"] >= len(failed) > 0
+
+
+def test_io_tasks_serialized_under_concurrency():
+    lock = threading.Lock()
+    seen = []
+
+    @io_task(cost=0.0)
+    def io_step(i):
+        with lock:
+            seen.append(i)
+        return i
+
+    @task(cost=0.0)
+    def work(i):
+        return i * i
+
+    def driver():
+        outs = []
+        for i in range(10):
+            outs.append(io_step(i))
+            outs.append(work(i))
+        return outs
+
+    graph, _ = trace(driver)
+    for _ in range(3):
+        seen.clear()
+        ThreadedExecutor(6).run(graph)
+        assert seen == list(range(10))       # program order, always
+
+
+# ---------------------------------------------------------------- lineage
+
+def chain_graph(k: int) -> TaskGraph:
+    g = TaskGraph()
+    prev = None
+    for i in range(k):
+        deps = [prev] if prev is not None else []
+        g.add_node(f"c{i}", (lambda x=0: x + 1) if prev is None
+                   else (lambda x: x + 1), (_Ref(prev),) if prev is not None
+                   else (), {}, TaskKind.PURE, deps=deps)
+        prev = i
+    g.mark_output(k - 1)
+    return g
+
+
+def test_recovery_plan_minimal_on_chain():
+    g = chain_graph(10)
+    all_results = set(range(10))
+    # lose the tail only -> recompute just the tail
+    assert recovery_plan(g, {9}, all_results - {9}) == {9}
+    # lose 5 with 0..4 available -> recompute 5 only
+    assert recovery_plan(g, {5}, {0, 1, 2, 3, 4}) == {5}
+    # lose 5 with nothing available -> recompute 0..5
+    assert recovery_plan(g, {5}, set()) == {0, 1, 2, 3, 4, 5}
+
+
+def test_recover_executes_and_restores_values():
+    g = chain_graph(6)
+    res = execute_sequential(g)
+    want = dict(res)
+    plan = recover(g, [3, 4], res)
+    assert plan == {3, 4}
+    assert res == want
+
+
+def test_barrier_cuts_lineage():
+    @task(cost=1.0)
+    def inc(x):
+        return x + 1
+
+    def driver():
+        a = inc(0)
+        b = inc(a)
+        cp = checkpoint_barrier(b)
+        c = inc(cp)
+        return inc(c)
+
+    g, _ = trace(driver)
+    res = execute_sequential(g)
+    barrier_tid = next(n.tid for n in g if n.kind is TaskKind.BARRIER)
+    final = g.outputs[0]
+    # losing everything after the barrier never recomputes before it
+    plan = recovery_plan(g, {final}, {barrier_tid})
+    assert all(t > barrier_tid for t in plan)
+    assert lineage_depth(g, final, set(res)) == 1
+
+
+def test_non_idempotent_io_refuses_replay():
+    @io_task(cost=1.0)
+    def send_email():
+        return "sent"
+
+    @io_task(cost=1.0, meta={"idempotent": True})
+    def write_log():
+        return "logged"
+
+    g, _ = trace(lambda: (send_email(), write_log()))
+    email_tid, log_tid = 0, 1
+    with pytest.raises(NonIdempotentReplay):
+        recovery_plan(g, {email_tid}, set(), allow_effect_replay=False)
+    # idempotent IO is fine
+    assert recovery_plan(g, {log_tid}, {email_tid},
+                         allow_effect_replay=False) == {log_tid}

@@ -1,0 +1,145 @@
+"""TaskGraph IR + tracing unit tests (incl. fusion and purity inference)."""
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (task, io_task, trace, placeholder, TaskGraph,
+                        GraphError, fuse_cheap_chains, execute_sequential,
+                        infer_purity, checkpoint_barrier)
+
+
+@task(cost=1.0)
+def f(x):
+    return x + 1
+
+
+@task(cost=1.0)
+def g(x):
+    return x * 2
+
+
+@task(cost=10.0)
+def big(x):
+    return x - 3
+
+
+def test_topo_and_cycle_detection():
+    gr = TaskGraph()
+    a = gr.add_node("a", lambda: 1, (), {}, kind=__import__(
+        "repro.core.graph", fromlist=["TaskKind"]).TaskKind.PURE,
+        deps=())
+    with pytest.raises(GraphError):
+        gr.add_node("b", None, (), {}, kind=gr.nodes[a].kind, deps=(99,))
+
+
+def test_trace_builds_linear_chain_and_fusion():
+    def driver(x0):
+        return big(f(g(f(x0))))
+
+    graph, _ = trace(driver, 5)
+    assert len(graph) == 4
+    fused = fuse_cheap_chains(graph, threshold=5.0)
+    # f,g,f fuse into one node; big stays
+    assert len(fused) == 2
+    r1 = execute_sequential(graph)[graph.outputs[0]]
+    r2 = execute_sequential(fused)[fused.outputs[0]]
+    assert r1 == r2 == ((5 + 1) * 2 + 1) - 3
+
+
+def test_fusion_preserves_driver_outputs():
+    def driver(x0):
+        a = f(x0)          # also an output: must not be fused past
+        b = g(a)
+        return a, b
+
+    graph, _ = trace(driver, 3)
+    fused = fuse_cheap_chains(graph, threshold=5.0)
+    ra = execute_sequential(fused)
+    vals = sorted(ra[t] for t in fused.outputs)
+    assert vals == [4, 8]
+
+
+def test_critical_path_and_parallelism():
+    def driver():
+        xs = [f(i) for i in range(8)]
+        return g(sum_task(*xs))
+
+    @task(cost=2.0, name="sum")
+    def sum_task(*xs):
+        return sum(xs)
+
+    graph, _ = trace(driver)
+    assert graph.total_work() == pytest.approx(8 * 1.0 + 2.0 + 1.0)
+    assert graph.critical_path_length() == pytest.approx(1 + 2 + 1)
+    assert graph.max_parallelism() == pytest.approx(11.0 / 4.0)
+
+
+def test_placeholder_inputs():
+    def driver():
+        x = placeholder("x")
+        return f(x)
+
+    graph, _ = trace(driver)
+    res = execute_sequential(graph, inputs={"x": 10})
+    assert res[graph.outputs[0]] == 11
+    with pytest.raises(KeyError):
+        execute_sequential(graph, inputs={})
+
+
+def test_purity_inference_from_jaxpr():
+    def pure_fn(x):
+        return jnp.sin(x) * 2
+
+    def impure_fn(x):
+        jax.debug.print("side effect {}", x)   # ordered effect in jaxpr
+        return x
+
+    import jax
+    assert infer_purity(pure_fn, jnp.ones(3))
+    assert not infer_purity(impure_fn, jnp.ones(3))
+
+
+def test_effect_token_chain_orders_all_io():
+    order = []
+
+    @io_task
+    def io1():
+        order.append(1)
+
+    @io_task
+    def io2():
+        order.append(2)
+
+    @io_task
+    def io3():
+        order.append(3)
+
+    def driver():
+        a = io1()
+        b = io2()
+        c = io3()
+        return c
+
+    graph, _ = trace(driver)
+    toks = [n for n in graph if n.token_deps]
+    assert len(toks) == 2               # io2 after io1, io3 after io2
+    execute_sequential(graph)
+    assert order == [1, 2, 3]
+
+
+def test_barrier_node():
+    def driver(x0):
+        a = f(x0)
+        cp = checkpoint_barrier(a)
+        return g(cp)
+
+    graph, _ = trace(driver, 1)
+    kinds = [n.kind.value for n in graph]
+    assert "barrier" in kinds
+    res = execute_sequential(graph)
+    assert res[graph.outputs[0]] == 4
+
+
+def test_dot_export():
+    graph, _ = trace(lambda: g(f(1)))
+    dot = graph.to_dot()
+    assert "digraph" in dot and "->" in dot

@@ -1,0 +1,132 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True on CPU).
+
+Per assignment: sweep shapes/dtypes per kernel and assert_allclose against
+``kernels/ref.py``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+def allclose(a, b, dtype):
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), **tol(dtype))
+
+
+# ------------------------------------------------------------------ matmul
+
+@pytest.mark.parametrize("M,K,N", [(128, 128, 128), (256, 512, 128),
+                                   (384, 256, 512), (512, 1024, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_matches_ref(M, K, N, dtype):
+    k1, k2 = jax.random.split(KEY)
+    x = jax.random.normal(k1, (M, K), dtype)
+    y = jax.random.normal(k2, (K, N), dtype)
+    out = ops.matmul(x, y, interpret=True)
+    assert out.shape == (M, N) and out.dtype == dtype
+    allclose(out, ref.matmul(x, y), dtype)
+
+
+@given(st.sampled_from([64, 128, 256]), st.sampled_from([64, 128, 256]),
+       st.sampled_from([64, 128]))
+@settings(max_examples=8, deadline=None)
+def test_matmul_block_shape_independent(bm, bn, bk):
+    """Property: result does not depend on the BlockSpec tiling."""
+    from repro.kernels.matmul_pallas import matmul
+    x = jax.random.normal(KEY, (256, 256), jnp.float32)
+    y = jax.random.normal(jax.random.PRNGKey(1), (256, 256), jnp.float32)
+    out = matmul(x, y, bm=bm, bn=bn, bk=bk, interpret=True)
+    allclose(out, ref.matmul(x, y), jnp.float32)
+
+
+# -------------------------------------------------------- flash attention
+
+@pytest.mark.parametrize("B,H,KH,S,D", [
+    (1, 4, 4, 256, 64),      # MHA
+    (2, 4, 2, 256, 64),      # GQA 2:1
+    (1, 8, 1, 512, 128),     # MQA
+])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(B, H, KH, S, D, causal, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, S, D), dtype)
+    k = jax.random.normal(ks[1], (B, KH, S, D), dtype)
+    v = jax.random.normal(ks[2], (B, KH, S, D), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, bq=128, bk=128,
+                              interpret=True)
+    assert out.shape == q.shape and out.dtype == dtype
+    allclose(out, ref.attention(q, k, v, causal=causal), dtype)
+
+
+def test_flash_attention_cross_shaped_kv():
+    """Sq != Sk (cross-attention shape)."""
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 4, 128, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 4, 384, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 4, 384, 64), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=False, bq=128, bk=128,
+                              interpret=True)
+    allclose(out, ref.attention(q, k, v, causal=False), jnp.float32)
+
+
+@given(st.sampled_from([64, 128, 256]), st.sampled_from([64, 128, 256]))
+@settings(max_examples=6, deadline=None)
+def test_flash_attention_block_shape_independent(bq, bk):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 2, 256, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 2, 256, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 2, 256, 64), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=True, bq=bq, bk=bk,
+                              interpret=True)
+    allclose(out, ref.attention(q, k, v, causal=True), jnp.float32)
+
+
+# ------------------------------------------------------------- ssm scan
+
+@pytest.mark.parametrize("Bsz,S,D,N", [(1, 64, 64, 8), (2, 128, 128, 16),
+                                       (1, 256, 64, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssm_scan_matches_ref(Bsz, S, D, N, dtype):
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (Bsz, S, D), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bsz, S, D), dtype)) * 0.1
+    B = jax.random.normal(ks[2], (Bsz, S, N), dtype)
+    C = jax.random.normal(ks[3], (Bsz, S, N), dtype)
+    A = -jax.nn.softplus(jax.random.normal(ks[4], (D, N), jnp.float32))
+    out = ops.ssm_scan(x, dt, B, C, A, chunk=32, bd=64, interpret=True)
+    assert out.shape == x.shape
+    # recurrences accumulate error in bf16 — loosen
+    t = dict(rtol=5e-2, atol=5e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32),
+        np.asarray(ref.ssm_scan(x, dt, B, C, A), np.float32), **t)
+
+
+@given(st.sampled_from([16, 32, 64]))
+@settings(max_examples=4, deadline=None)
+def test_ssm_scan_chunk_independent(chunk):
+    """Property: chunked scan == step-by-step scan for any chunk size."""
+    ks = jax.random.split(KEY, 5)
+    Bsz, S, D, N = 1, 128, 64, 8
+    x = jax.random.normal(ks[0], (Bsz, S, D), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bsz, S, D))) * 0.1
+    B = jax.random.normal(ks[2], (Bsz, S, N))
+    C = jax.random.normal(ks[3], (Bsz, S, N))
+    A = -jax.nn.softplus(jax.random.normal(ks[4], (D, N)))
+    out = ops.ssm_scan(x, dt, B, C, A, chunk=chunk, bd=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.ssm_scan(x, dt, B, C, A)),
+                               rtol=1e-4, atol=1e-4)

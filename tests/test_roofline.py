@@ -1,0 +1,89 @@
+"""Unit tests for the dry-run HLO parsers and roofline math."""
+import pytest
+
+from repro.launch.dryrun import (_shape_bytes, _parse_groups, _wire_bytes,
+                                 parse_collectives)
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[16,4096,5120]") == 16 * 4096 * 5120 * 4
+    assert _shape_bytes("bf16[8,8]") == 128
+    assert _shape_bytes("(f32[4,4], bf16[2,2])") == 64 + 8
+    assert _shape_bytes("pred[10]") == 10
+    assert _shape_bytes("token[]") == 0
+
+
+def test_parse_groups_brace():
+    line = "x = f32[4] all-reduce(y), replica_groups={{0,1},{2,3}}, to_apply=add"
+    assert _parse_groups(line) == [[0, 1], [2, 3]]
+
+
+def test_parse_groups_iota():
+    line = ("x = f32[4] all-gather(y), "
+            "replica_groups=[2,4]<=[8], dimensions={0}")
+    assert _parse_groups(line) == [[0, 1, 2, 3], [4, 5, 6, 7]]
+
+
+def test_parse_groups_iota_transposed():
+    # mesh (2,2): groups over the FIRST axis via transpose
+    line = ("x = f32[4] all-reduce(y), "
+            "replica_groups=[2,2]<=[2,2]T(1,0), to_apply=add")
+    assert _parse_groups(line) == [[0, 2], [1, 3]]
+
+
+def test_wire_bytes_factors():
+    b, g = 1000.0, 4
+    assert _wire_bytes("all-gather", b, g) == pytest.approx(750.0)
+    assert _wire_bytes("all-reduce", b, g) == pytest.approx(1500.0)
+    assert _wire_bytes("reduce-scatter", b, g) == pytest.approx(3000.0)
+    assert _wire_bytes("all-to-all", b, g) == pytest.approx(750.0)
+    assert _wire_bytes("collective-permute", b, g) == pytest.approx(1000.0)
+    assert _wire_bytes("all-reduce", b, 1) == 0.0
+
+
+def test_parse_collectives_end_to_end():
+    hlo = "\n".join([
+        "%ar = f32[256] all-reduce(%x), replica_groups={{0,1,2,3}}, "
+        "to_apply=%add",
+        # promoted bf16 AR counted at half width
+        "%arp = f32[256] all-reduce(%y), replica_groups={{0,1,2,3}}, "
+        "to_apply=%add.clone_promoted",
+        "%ag = bf16[512] all-gather(%z), replica_groups=[2,2]<=[4], "
+        "dimensions={0}",
+        "%cp = f32[64] collective-permute(%w), "
+        "source_target_pairs={{0,1},{1,0}}",
+    ])
+    out = parse_collectives(hlo)
+    assert out["_n_ops"] == 4
+    assert out["all-reduce"] == 1024 + 512       # second at half width
+    assert out["all-gather"] == 1024
+    # wire: AR 2·b·3/4 (=1536+768), AG b/2, permute b
+    assert out["_wire_ici_bytes"] == pytest.approx(
+        1536 + 768 + 512 + 256)
+
+
+def test_dcn_attribution():
+    hlo = ("%ar = f32[256] all-reduce(%x), replica_groups={{0,300}}, "
+           "to_apply=%add")
+    out = parse_collectives(hlo, pod_boundary=256)
+    assert out["_wire_dcn_bytes"] > 0
+    assert out["_wire_ici_bytes"] == 0
+    out2 = parse_collectives(hlo, pod_boundary=512)
+    assert out2["_wire_dcn_bytes"] == 0
+
+
+def test_model_flops_sane():
+    from benchmarks.roofline import model_flops, _param_counts
+    total, active = _param_counts("qwen2-7b")
+    assert 6e9 < total < 9e9
+    assert total == active
+    t_moe, a_moe = _param_counts("dbrx-132b")
+    assert 1.2e11 < t_moe < 1.45e11
+    assert 3.0e10 < a_moe < 4.5e10          # top-4 of 16 experts
+    t_l4, a_l4 = _param_counts("llama4-maverick-400b-a17b")
+    assert 3.7e11 < t_l4 < 4.3e11
+    assert 1.0e10 < a_l4 < 2.2e10           # "a17b"
+    # train counts fwd+bwd (6ND), decode counts 2ND on 1 token/seq
+    assert model_flops("qwen2-7b", "train_4k") == \
+        6 * total * 4096 * 256
+    assert model_flops("qwen2-7b", "decode_32k") == 2 * total * 128

@@ -1,0 +1,136 @@
+"""Scheduler + simulator property tests (hypothesis over random DAGs)."""
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (TaskGraph, TaskKind, list_schedule, replan, simulate,
+                        ClusterSim, WorkerEvent, theoretical_speedup)
+
+
+def random_dag(seed: int, n: int, p_edge: float = 0.25,
+               max_cost: float = 4.0) -> TaskGraph:
+    rng = random.Random(seed)
+    g = TaskGraph()
+    for i in range(n):
+        deps = [j for j in range(i) if rng.random() < p_edge][-4:]
+        g.add_node(f"t{i}", None, (), {}, TaskKind.PURE, deps=deps,
+                   cost=rng.uniform(0.1, max_cost),
+                   out_bytes=rng.randint(0, 1 << 20))
+    for t in range(n):
+        g.mark_output(t) if rng.random() < 0.1 else None
+    return g
+
+
+dag_params = st.tuples(st.integers(0, 10_000), st.integers(1, 60),
+                       st.floats(0.0, 0.6))
+
+
+@given(dag_params, st.integers(1, 16),
+       st.sampled_from(["critical_path", "fifo", "random"]))
+@settings(max_examples=60, deadline=None)
+def test_list_schedule_is_valid_and_bounded(params, workers, policy):
+    seed, n, p = params
+    g = random_dag(seed, n, p)
+    s = list_schedule(g, workers, policy=policy)
+    s.validate_against(g)                      # deps + no overlap
+    span = g.critical_path_length()
+    work = g.total_work()
+    assert s.makespan >= span - 1e-9           # Brent lower bounds
+    assert s.makespan >= work / workers - 1e-9
+    # greedy (list scheduling) 2-approximation: T <= work/p + span
+    assert s.makespan <= work / workers + span + 1e-6
+
+
+@given(dag_params, st.integers(1, 32))
+@settings(max_examples=40, deadline=None)
+def test_simulator_executes_everything_within_greedy_bound(params, workers):
+    seed, n, p = params
+    g = random_dag(seed, n, p)
+    r = simulate(g, workers)
+    assert r.makespan >= g.critical_path_length() - 1e-9
+    # work stealing keeps the greedy bound too (with no steal latency)
+    assert r.makespan <= g.total_work() / workers + g.critical_path_length() + 1e-6
+
+
+@given(dag_params)
+@settings(max_examples=20, deadline=None)
+def test_simulator_deterministic(params):
+    seed, n, p = params
+    g = random_dag(seed, n, p)
+    r1 = simulate(g, 7, seed=3)
+    r2 = simulate(g, 7, seed=3)
+    assert r1.makespan == r2.makespan
+    assert r1.n_steals == r2.n_steals
+    assert r1.task_worker == r2.task_worker
+
+
+def test_more_workers_never_hurt_much():
+    g = random_dag(42, 80, 0.15)
+    m = [simulate(g, w).makespan for w in (1, 2, 4, 8, 16)]
+    for a, b in zip(m, m[1:]):
+        assert b <= a * 1.05 + 1e-9        # small steal jitter allowed
+
+
+def test_critical_path_beats_random_on_average():
+    wins = 0
+    for seed in range(30):
+        g = random_dag(seed, 60, 0.2)
+        mc = simulate(g, 4, policy="critical_path").makespan
+        mr = simulate(g, 4, policy="random", seed=seed).makespan
+        wins += mc <= mr + 1e-9
+    assert wins >= 18                      # CP should win most of the time
+
+
+def test_failure_recovery_completes_all_tasks():
+    g = random_dag(7, 50, 0.25)
+    ev = [WorkerEvent(time=g.total_work() / 16, kind="fail", worker=0),
+          WorkerEvent(time=g.total_work() / 12, kind="fail", worker=1)]
+    r = ClusterSim(g, 4, events=ev).run()
+    assert r.n_failures == 2
+    assert r.makespan > 0
+    # makespan still bounded: remaining 2 workers do all the (re)work
+    assert r.makespan <= (g.total_work() + r.n_recomputed * 4.0) / 2 \
+        + g.critical_path_length() + ev[1].time
+
+
+def test_straggler_speculation_helps():
+    g = TaskGraph()
+    for i in range(16):
+        g.add_node(f"t{i}", None, (), {}, TaskKind.PURE, deps=(), cost=1.0)
+    slow = [WorkerEvent(time=0.0, kind="slow", worker=0, factor=0.02)]
+    base = ClusterSim(g, 4, events=list(slow), seed=1).run()
+    spec = ClusterSim(g, 4, events=list(slow), speculate_after=3.0,
+                      seed=1).run()
+    assert spec.n_speculative >= 1
+    assert spec.makespan < base.makespan
+
+
+def test_elastic_join_speeds_up():
+    g = random_dag(11, 120, 0.05)
+    r_static = simulate(g, 2)
+    r_elastic = ClusterSim(
+        g, 2, events=[WorkerEvent(time=1.0, kind="join", worker=2),
+                      WorkerEvent(time=1.0, kind="join", worker=3)]).run()
+    assert r_elastic.makespan < r_static.makespan
+
+
+def test_replan_after_worker_loss():
+    g = random_dag(3, 40, 0.2)
+    s1 = list_schedule(g, 8)
+    t_cut = s1.makespan / 3
+    done = {tid: p.end for tid, p in s1.placements.items() if p.end <= t_cut}
+    s2 = replan(g, done, n_workers=4, now=t_cut)
+    s2.validate_against(g) if not done else None
+    placed = set(done) | set(s2.placements)
+    assert placed == set(g.nodes)
+    assert s2.makespan >= t_cut
+
+
+def test_theoretical_speedup_monotone():
+    g = random_dag(5, 60, 0.2)
+    sp = [theoretical_speedup(g, w) for w in (1, 2, 4, 8, 1000)]
+    assert sp[0] == pytest.approx(1.0)
+    for a, b in zip(sp, sp[1:]):
+        assert b >= a - 1e-9
+    assert sp[-1] == pytest.approx(g.max_parallelism(), rel=1e-6)

@@ -1,0 +1,129 @@
+"""End-to-end behaviour of the paper's system: the exact example from §2
+(clean_files / complex_evaluation / semantic_analysis) plus the matrix
+workload from §4, traced → scheduled → executed in parallel.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (task, io_task, trace, execute_sequential,
+                        ThreadedExecutor, simulate, list_schedule,
+                        theoretical_speedup, TaskKind)
+
+
+# ---- the paper's §2 example, transliterated -------------------------------
+
+EFFECT_LOG = []
+
+
+@io_task(cost=2.0)
+def clean_files():
+    EFFECT_LOG.append("clean_files")
+    return jnp.arange(8.0)          # "Summary"
+
+
+@task(cost=5.0)
+def complex_evaluation(x):
+    return int(jnp.sum(x))
+
+
+@io_task(cost=2.0)
+def semantic_analysis():
+    EFFECT_LOG.append("semantic_analysis")
+    return 42
+
+
+def paper_main():
+    x = clean_files()
+    y = complex_evaluation(x)
+    z = semantic_analysis()
+    return y, z
+
+
+def test_paper_example_dependency_graph():
+    graph, (y, z) = trace(paper_main)
+    # 3 tasks; complex_evaluation depends on clean_files;
+    # semantic_analysis is token-ordered after clean_files (RealWorld edge)
+    assert len(graph) == 3
+    nodes = {n.name: n for n in graph}
+    ce = nodes["complex_evaluation"]
+    sa = nodes["semantic_analysis"]
+    cf = nodes["clean_files"]
+    assert cf.tid in ce.deps
+    assert cf.tid in sa.token_deps        # RealWorld threading
+    assert ce.kind is TaskKind.PURE
+    assert sa.kind is TaskKind.EFFECTFUL
+    # "once clean_files is done, both complex_evaluation and
+    # semantic_analysis can be scheduled"
+    sched = list_schedule(graph, 2)
+    sched.validate_against(graph)
+    p = sched.placements
+    assert p[ce.tid].start >= p[cf.tid].end
+    assert p[sa.tid].start >= p[cf.tid].end
+    # and they can overlap on 2 workers
+    assert (p[ce.tid].start < p[sa.tid].end
+            and p[sa.tid].start < p[ce.tid].end)
+
+
+def test_paper_example_execution_matches_and_orders_effects():
+    EFFECT_LOG.clear()
+    graph, _ = trace(paper_main)
+    seq = execute_sequential(graph)
+    log_seq = list(EFFECT_LOG)
+
+    EFFECT_LOG.clear()
+    par = ThreadedExecutor(4).run(graph)
+    log_par = list(EFFECT_LOG)
+
+    assert log_seq == log_par == ["clean_files", "semantic_analysis"]
+    for t in graph.outputs:
+        a, b = seq[t], par[t]
+        assert np.asarray(a).tolist() == np.asarray(b).tolist()
+
+
+# ---- the paper's §4 workload: matrix generation + multiplication ----------
+
+def matrix_driver(n_tasks: int, size: int):
+    @task(cost=1.0, name="gen")
+    def gen(seed):
+        return jax.random.normal(jax.random.PRNGKey(seed), (size, size))
+
+    @task(cost=2.0, name="mul")
+    def mul(a, b):
+        return a @ b
+
+    @task(cost=0.5, name="reduce")
+    def red(*xs):
+        return sum(jnp.sum(x) for x in xs)
+
+    outs = []
+    for i in range(n_tasks):
+        a = gen(2 * i)
+        b = gen(2 * i + 1)
+        outs.append(mul(a, b))
+    return red(*outs)
+
+
+def test_matrix_workload_parallel_equals_sequential():
+    graph, _ = trace(matrix_driver, 6, 32)
+    assert len(graph) == 6 * 3 + 1
+    seq = execute_sequential(graph)
+    ex = ThreadedExecutor(4)
+    par = ex.run(graph)
+    out = graph.outputs[0]
+    np.testing.assert_allclose(float(seq[out]), float(par[out]), rtol=1e-5)
+
+
+def test_matrix_workload_scales_in_simulation():
+    """The Fig. 2 claim: makespan falls ~linearly with workers until the
+    dependency structure runs out (Brent bound)."""
+    graph, _ = trace(matrix_driver, 16, 8)
+    m1 = simulate(graph, 1).makespan
+    m4 = simulate(graph, 4).makespan
+    m16 = simulate(graph, 16).makespan
+    assert m1 == pytest.approx(graph.total_work())
+    assert m4 < m1 / 2.5                        # decent scaling at 4
+    assert m16 <= m4                            # monotone
+    assert m16 >= graph.critical_path_length() - 1e-9   # Brent lower bound
+    assert m1 / m16 <= theoretical_speedup(graph, 16) + 1e-9
