@@ -24,6 +24,8 @@ import json          # noqa: E402
 import re            # noqa: E402
 from typing import Dict, Optional   # noqa: E402
 
+from repro.compat import cost_analysis_dict   # noqa: E402
+
 
 def parse_override(s: str):
     k, v = s.split("=", 1)
@@ -61,7 +63,7 @@ def diagnose(args) -> None:
     with mesh:
         compiled = steps_mod.lower_case(case).compile()
     hlo = compiled.as_text()
-    cost = compiled.cost_analysis()
+    cost = cost_analysis_dict(compiled)
     print(f"depth={args.depth or 'full'} flops/dev={cost.get('flops', 0):.3e}"
           f" bytes/dev={cost.get('bytes accessed', 0):.3e}")
 
@@ -140,7 +142,7 @@ def flashsim(args) -> None:
         sq = sum(dryrun._shape_bytes(m.group(1))
                  for m in sq_re.finditer(hlo)
                  if any(d.search(m.group(1)) for d in dim_res))
-        got[L] = (float(compiled.cost_analysis().get("bytes accessed", 0)),
+        got[L] = (float(cost_analysis_dict(compiled).get("bytes accessed", 0)),
                   float(sq))
         del hlo, compiled
     L = cfg.n_layers

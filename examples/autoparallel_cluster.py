@@ -1,10 +1,14 @@
 """The paper's full pipeline at cluster scale: trace → schedule →
 work-stealing execution under failures/stragglers → SPMD mesh lowering.
 
-Demonstrates the two levels of the auto-parallelizer:
-  inter-op: the matrix task DAG from the paper's §4 benchmark scheduled on a
-            simulated 64-worker cluster, with a worker failure and lineage
-            recovery mid-run;
+Demonstrates the three levels of the auto-parallelizer:
+  inter-op (simulated): the matrix task DAG from the paper's §4 benchmark
+            scheduled on a simulated 64-worker cluster, with a worker
+            failure and lineage recovery mid-run;
+  inter-op (REAL):      the same DAG executed by the multi-process
+            ClusterExecutor — OS-process workers, driver-side object
+            store — with one worker SIGKILLed mid-run and recovered via
+            lineage + an elastic replacement join;
   intra-op: the SAME traced DAG lowered into one pjit program on an 8-device
             mesh (run in a subprocess with forced host devices), with the
             placement pass choosing every intermediate's sharding.
@@ -20,7 +24,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import numpy as np                                     # noqa: E402
 
 from repro.core import (task, trace, simulate, WorkerEvent,        # noqa: E402
-                        theoretical_speedup)
+                        execute_sequential, theoretical_speedup)
+from repro.cluster import ClusterExecutor              # noqa: E402
 
 
 def matrix_driver(n_tasks=32, size=64):
@@ -75,7 +80,10 @@ ex = MeshExecutor(graph, mesh, standard_rules("dp_tp", pod_axis=None),
                   value_info=info)
 out = ex({})[0]
 want = execute_sequential(graph)[graph.outputs[0]]
-np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-4)
+# partitioned matmuls reduce in a different order than the single-device
+# oracle; tolerate reduction-reordering noise
+np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                           rtol=1e-4, atol=1e-4)
 coll = [l.split()[0] for l in ex.hlo_text().splitlines()
         if "all-reduce(" in l or "all-gather(" in l]
 print(f"   SPMD lowering on {mesh.shape}: output matches sequential;"
@@ -105,7 +113,22 @@ if __name__ == "__main__":
           f"recomputed {r.n_recomputed} tasks (lineage) | "
           f"{r.n_speculative} speculative re-executions")
 
-    print("\n4) lower the DAG onto an 8-device SPMD mesh (subprocess):")
+    print("\n4) REAL multi-process cluster: 4 OS-process workers, worker 0 "
+          "SIGKILLed mid-run,\n   a replacement joins; lineage recovery + "
+          "elastic replan keep the answer exact:")
+    ex = ClusterExecutor(4, fail_worker=(0, 4),
+                         join_after=(len(graph.nodes) // 2, 1))
+    res = ex.run(graph)
+    want = execute_sequential(graph)
+    assert all(np.allclose(res[t], want[t]) for t in graph.nodes)
+    plan_sizes = [len(e["plan"]) for e in ex.recovery_events]
+    print(f"   {len(graph.nodes)} tasks in {ex.wall_time:.2f}s | "
+          f"failures {ex.stats['failures']} (recomputed "
+          f"{ex.stats['recomputed']} = lineage plan {plan_sizes}) | "
+          f"joins {ex.stats['joins']} | transfers {ex.stats['transfers']} "
+          f"| matches sequential oracle ✓")
+
+    print("\n5) lower the DAG onto an 8-device SPMD mesh (subprocess):")
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
     p = subprocess.run([sys.executable, "-c", SPMD_SCRIPT], env=env,

@@ -1,0 +1,28 @@
+"""repro.cluster — multi-process distributed runtime for TaskGraphs.
+
+Backend choice (also see ROADMAP.md §runtime backends):
+
+* ``thread`` (:class:`repro.core.executor.ThreadedExecutor`) — one process,
+  work-stealing threads.  Zero serialization, shared memory; real speedups
+  only when task payloads release the GIL (jitted JAX compute).  No fault
+  isolation: a crashing task kills the run.
+* ``process`` (:class:`ClusterExecutor`, here) — driver + forked OS-process
+  workers over pipes.  True parallelism for Python-level work, per-worker
+  object stores with driver-mediated transfer, and real fault tolerance:
+  a SIGKILL'd worker triggers lineage recovery (recompute exactly the lost
+  results) plus an elastic replan onto the survivors.  This is the template
+  for the multi-host backend — swapping the fork+pipe transport for sockets
+  changes no driver logic.
+
+Both satisfy the :class:`repro.core.executor.Executor` protocol and are
+differentially tested against ``execute_sequential`` (tasks are pure, so
+every backend must agree bit-for-bit).
+
+Public API: :class:`ClusterExecutor`, :class:`ClusterFuture`,
+:func:`gather`, :class:`DriverObjectStore`.
+"""
+from .executor import ClusterExecutor
+from .futures import ClusterFuture, gather
+from .objectstore import DriverObjectStore
+
+__all__ = ["ClusterExecutor", "ClusterFuture", "gather", "DriverObjectStore"]

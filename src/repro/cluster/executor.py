@@ -1,0 +1,592 @@
+"""ClusterExecutor — the multi-process distributed runtime.
+
+This is the paper's driver/worker architecture made real on one host:
+OS-process workers (the stand-in for cluster nodes — same protocol, a
+socket transport is a drop-in follow-up), a driver that schedules ready
+tasks onto them, a driver-side :class:`DriverObjectStore` tracking where
+every result lives, and lineage-based recovery when a worker dies.
+
+Design points (mirroring the Haskell#/Cloud-Haskell driver designs and the
+mapping-decision framing of Mapple):
+
+* **Static plan, dynamic execution.**  ``scheduler.list_schedule`` produces
+  a placement hint (critical-path priority, earliest-finish-time worker);
+  the driver follows it opportunistically and *steals* — dispatches a ready
+  task to an idle worker that wasn't its planned home — whenever the plan
+  goes stale, so heterogeneity or stragglers never serialize the run.
+* **Pipelined dispatch.**  Up to ``pipeline_depth`` tasks are in a worker's
+  pipe at once, so the driver overlaps dispatch/transfer with execution
+  (the futures-style async core of ``submit``/``gather``).
+* **Ownership, not broadcast.**  Results stay in the producing worker's
+  local store; the driver pulls a value only when a consumer lands on a
+  different worker (driver-mediated transfer, cached → durable) or at
+  final collection.  Locality-aware dispatch makes most transfers no-ops.
+* **Lineage fault tolerance.**  On worker death the lost set is exactly
+  ``owned(worker) - driver_cache``; ``lineage.recovery_plan`` gives the
+  minimal recompute set (walking past GC'd ancestors in ``outputs_only``
+  runs), ``scheduler.replan`` re-places the remaining work on the
+  survivors, and ``stats["recomputed"]`` counts exactly ``len(plan)``.
+* **Elasticity.**  ``add_worker()`` forks a fresh worker mid-run and
+  replans onto the grown pool.
+
+Failure injection for tests/benchmarks: ``fail_worker=(wid, n)`` SIGKILLs
+worker ``wid`` after it completes ``n`` tasks; ``join_after=(n, k)`` forks
+``k`` extra workers once ``n`` tasks have completed cluster-wide.
+"""
+from __future__ import annotations
+
+import multiprocessing as mp
+import os
+import signal
+import threading
+import time
+from dataclasses import dataclass, field
+from multiprocessing.connection import wait as conn_wait
+from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.core.executor import MissingInput, TaskFailed
+from repro.core.graph import TaskGraph
+from repro.core.lineage import recovery_plan
+from repro.core.scheduler import list_schedule, replan
+
+from .futures import ClusterFuture
+from .objectstore import DriverObjectStore
+from .worker import worker_main
+
+PENDING, READY, WAITING, INFLIGHT, DONE = range(5)
+
+
+@dataclass
+class _Worker:
+    wid: int
+    proc: Any
+    conn: Any
+    alive: bool = True
+    inflight: Set[int] = field(default_factory=set)   # run sent, not done
+    assigned: Set[int] = field(default_factory=set)   # waiting on transfers
+    n_done: int = 0
+
+    def load(self) -> int:
+        return len(self.inflight) + len(self.assigned)
+
+
+class ClusterExecutor:
+    """Executes a :class:`TaskGraph` on ``n_workers`` forked processes.
+
+    Satisfies the :class:`repro.core.executor.Executor` protocol — results
+    are bit-identical to :func:`repro.core.executor.execute_sequential`
+    because tasks are pure and the value tables are exact.
+
+    ``outputs_only=True`` returns just ``{tid: value for tid in outputs}``
+    and garbage-collects intermediates once their last consumer finishes —
+    the memory-bounded production mode, and the mode where lineage recovery
+    has to recompute *dropped* ancestors, not only directly lost values.
+    """
+
+    def __init__(
+        self,
+        n_workers: int = 2,
+        *,
+        policy: str = "critical_path",
+        worker_speed: Optional[Sequence[float]] = None,
+        pipeline_depth: int = 2,
+        outputs_only: bool = False,
+        fail_worker: Optional[Tuple[int, int]] = None,
+        join_after: Optional[Tuple[int, int]] = None,
+        progress_timeout: float = 60.0,
+        start_method: str = "fork",
+        seed: int = 0,
+    ) -> None:
+        if n_workers < 1:
+            raise ValueError("n_workers >= 1")
+        if start_method not in ("fork", "spawn", "forkserver"):
+            raise ValueError(f"unknown start_method {start_method!r}")
+        self.start_method = start_method
+        self.n_workers = n_workers
+        self.policy = policy
+        self.worker_speed = list(worker_speed) if worker_speed else None
+        self.pipeline_depth = max(1, pipeline_depth)
+        self.outputs_only = outputs_only
+        self.fail_worker = fail_worker
+        self.join_after = join_after
+        self.progress_timeout = progress_timeout
+        self.seed = seed
+        self.stats: Dict[str, int] = {}
+        self.wall_time = 0.0
+        self.recovery_events: List[Dict[str, Any]] = []
+        self._commands: List[Tuple] = []
+        self._cmd_lock = threading.Lock()
+        # stats/recovery_events/wall_time are per-run instance attributes,
+        # so one executor runs ONE graph at a time; concurrent submissions
+        # queue on this lock (use separate executors for parallel jobs)
+        self._run_lock = threading.Lock()
+        self._active = False
+
+    # ------------------------------------------------------------- frontend
+    def run(self, graph: TaskGraph,
+            inputs: Optional[Dict[str, Any]] = None) -> Dict[int, Any]:
+        return self._execute(graph, inputs)
+
+    def submit(self, graph: TaskGraph,
+               inputs: Optional[Dict[str, Any]] = None,
+               label: str = "") -> ClusterFuture:
+        """Async submission: returns immediately with a future; the run
+        executes on a background driver thread with a fresh worker pool.
+        Runs on the SAME executor serialize (stats are per-run) — use one
+        executor per job for true inter-job concurrency."""
+        fut = ClusterFuture(label)
+
+        def drive() -> None:
+            try:
+                fut._set_result(self._execute(graph, inputs))
+            except BaseException as e:   # noqa: BLE001 — carried by future
+                fut._set_error(e)
+
+        threading.Thread(target=drive, daemon=True,
+                         name=f"cluster-driver-{label or id(fut)}").start()
+        return fut
+
+    def add_worker(self) -> None:
+        """Elastic join: grow the pool (mid-run if a run is active)."""
+        with self._cmd_lock:
+            if self._active:
+                self._commands.append(("join",))
+            else:
+                self.n_workers += 1
+
+    def kill_worker(self, wid: int) -> None:
+        """Chaos hook: SIGKILL worker ``wid`` of the active run."""
+        with self._cmd_lock:
+            self._commands.append(("kill", wid))
+
+    # -------------------------------------------------------------- driver
+    def _execute(self, graph: TaskGraph,
+                 inputs: Optional[Dict[str, Any]]) -> Dict[int, Any]:
+        graph.validate()
+        with self._run_lock:
+            return self._execute_locked(graph, inputs)
+
+    def _execute_locked(self, graph: TaskGraph,
+                        inputs: Optional[Dict[str, Any]]) -> Dict[int, Any]:
+        ctx = mp.get_context(self.start_method)
+        stats = self.stats = {
+            "dispatched": 0, "steals": 0, "transfers": 0, "recomputed": 0,
+            "failures": 0, "joins": 0, "dropped": 0,
+        }
+        self.recovery_events = []
+        t0 = time.perf_counter()
+
+        store = DriverObjectStore(graph)
+        workers: Dict[int, _Worker] = {}
+        next_wid = 0
+
+        def spawn() -> _Worker:
+            nonlocal next_wid
+            wid = next_wid
+            next_wid += 1
+            parent, child = ctx.Pipe(duplex=True)
+            proc = ctx.Process(target=worker_main,
+                               args=(wid, child, graph, inputs),
+                               daemon=True, name=f"cluster-worker-{wid}")
+            proc.start()
+            child.close()
+            w = _Worker(wid, proc, parent)
+            workers[wid] = w
+            store.add_worker(wid)
+            return w
+
+        for _ in range(self.n_workers):
+            spawn()
+
+        rank = graph.critical_path_rank()
+        succ = store.successors
+        n_total = len(graph.nodes)
+        required = (set(graph.outputs) if self.outputs_only
+                    else set(graph.nodes))
+
+        state: Dict[int, int] = {}
+        for tid, node in graph.nodes.items():
+            state[tid] = READY if not node.all_deps else PENDING
+        done: Set[int] = set()
+        finish_times: Dict[int, float] = {}
+        # tid -> (wid, still-missing dep tids) for transfer-blocked dispatches
+        waiting: Dict[int, Tuple[int, Set[int]]] = {}
+        fetching: Set[int] = set()          # dep tids with a fetch in flight
+        error: List[BaseException] = []
+        join_after = self.join_after     # consumed per run, not per executor
+        last_progress = time.perf_counter()
+
+        def alive_ids() -> List[int]:
+            return [w.wid for w in workers.values() if w.alive]
+
+        def speeds_for(wids: List[int]) -> Optional[List[float]]:
+            if self.worker_speed is None:
+                return None
+            return [self.worker_speed[w % len(self.worker_speed)]
+                    for w in wids]
+
+        # planned placement: schedule slot i -> i-th alive worker id
+        plan_worker: Dict[int, int] = {}
+
+        def make_plan(initial: bool) -> None:
+            wids = alive_ids()
+            if not wids:
+                return
+            try:
+                if initial:
+                    sched = list_schedule(
+                        graph, len(wids), policy=self.policy,
+                        worker_speed=speeds_for(wids), seed=self.seed)
+                else:
+                    sched = replan(
+                        graph, dict(finish_times), len(wids),
+                        now=time.perf_counter() - t0, policy=self.policy,
+                        worker_speed=speeds_for(wids), seed=self.seed)
+            except Exception:            # plan is advisory; never fatal
+                plan_worker.clear()
+                return
+            plan_worker.clear()
+            for tid, p in sched.placements.items():
+                plan_worker[tid] = wids[p.worker]
+
+        make_plan(initial=True)
+
+        # ---------------------------------------------------------- helpers
+        def safe_send(w: _Worker, msg: tuple) -> bool:
+            """Send to a worker; an already-dead peer (organic SIGKILL, OOM,
+            segfault) becomes a failure-handled event, never an exception
+            out of the driver loop."""
+            try:
+                w.conn.send(msg)
+                return True
+            except (BrokenPipeError, OSError):
+                on_worker_death(w)
+                return False
+
+        def try_dispatch(tid: int, w: _Worker) -> bool:
+            """Assign READY task ``tid`` to worker ``w``; ship or fetch
+            whatever remote inputs it needs.  Returns False when a recovery
+            ran underneath (caller must re-snapshot the ready set)."""
+            node = graph.nodes[tid]
+            extra: Dict[int, Any] = {}
+            missing: Set[int] = set()
+            for d in node.all_deps:
+                if store.location(d) == w.wid:
+                    continue                       # already local
+                if d in store.cache:
+                    extra[d] = store.cache[d]      # ship with the dispatch
+                else:
+                    missing.add(d)
+            if missing:
+                # a "done" dep with no live owner and no cached copy is a
+                # lost value the death handler didn't see (e.g. GC raced a
+                # transfer): recover it through lineage like any other loss
+                unreachable = {
+                    d for d in missing if d not in fetching
+                    and (store.location(d) is None
+                         or not workers[store.location(d)].alive)}
+                if unreachable:
+                    state[tid] = READY
+                    recompute_lost(unreachable, unreachable, None)
+                    return False
+                state[tid] = WAITING
+                waiting[tid] = (w.wid, missing)
+                w.assigned.add(tid)
+                for d in missing:
+                    if d not in fetching:
+                        if not safe_send(workers[store.location(d)],
+                                         ("fetch", d)):
+                            return False    # owner died; recovery ran
+                        fetching.add(d)
+                        stats["transfers"] += 1
+                return True
+            stats["transfers"] += len(extra)
+            state[tid] = INFLIGHT
+            w.inflight.add(tid)
+            if not safe_send(w, ("run", tid, extra)):
+                return False        # death handler reset tid to READY
+            stats["dispatched"] += 1
+            return True
+
+        def finish_waiting(tid: int) -> None:
+            """All transfers for a WAITING task arrived — launch it."""
+            wid, _ = waiting.pop(tid)
+            w = workers[wid]
+            w.assigned.discard(tid)
+            if not w.alive:
+                state[tid] = READY
+                return
+            node = graph.nodes[tid]
+            extra = {d: store.cache[d] for d in node.all_deps
+                     if store.location(d) != wid and d in store.cache}
+            state[tid] = INFLIGHT
+            w.inflight.add(tid)
+            if not safe_send(w, ("run", tid, extra)):
+                return              # death handler reset tid to READY
+            stats["dispatched"] += 1
+            stats["transfers"] += len(extra)
+
+        def dispatch() -> None:
+            ready = [t for t, s in state.items() if s == READY]
+            if not ready:
+                return
+            ready.sort(key=lambda t: (-rank[t], t))
+            for w in list(workers.values()):
+                if not w.alive:
+                    continue
+                while w.load() < self.pipeline_depth and ready:
+                    mine = next((t for t in ready
+                                 if plan_worker.get(t, w.wid) == w.wid), None)
+                    if mine is None:
+                        mine = ready[0]            # steal off-plan work
+                        stats["steals"] += 1
+                    ready.remove(mine)
+                    if state.get(mine) != READY:
+                        continue    # demoted since the snapshot
+                    if not try_dispatch(mine, w):
+                        return      # recovery invalidated the snapshot
+
+        def maybe_gc(tid: int) -> None:
+            if not self.outputs_only or not store.collectable(tid):
+                return
+            owner = store.location(tid)
+            if owner is not None and workers[owner].alive:
+                safe_send(workers[owner], ("drop", [tid]))
+            store.invalidate({tid})
+            stats["dropped"] += 1
+
+        def on_done(w: _Worker, tid: int, wall: float) -> None:
+            nonlocal last_progress
+            last_progress = time.perf_counter()
+            w.inflight.discard(tid)
+            if state.get(tid) == DONE:
+                return                              # stale duplicate
+            state[tid] = DONE
+            done.add(tid)
+            finish_times[tid] = time.perf_counter() - t0
+            store.record(tid, w.wid)
+            w.n_done += 1
+            for d in graph.nodes[tid].all_deps:
+                store.consumed(d)
+                maybe_gc(d)
+            for s in succ[tid]:
+                if state[s] == PENDING and \
+                        all(state[d] == DONE for d in graph.nodes[s].all_deps):
+                    state[s] = READY
+            if self.fail_worker and w.wid == self.fail_worker[0] \
+                    and w.n_done >= self.fail_worker[1] and w.alive:
+                kill(w)
+            nonlocal join_after
+            if join_after and len(done) >= join_after[0]:
+                n_new, join_after = join_after[1], None
+                for _ in range(n_new):
+                    join_one()
+
+        def kill(w: _Worker) -> None:
+            """SIGKILL + immediate failure handling (used by injection and
+            the kill_worker command; organic deaths arrive via the pipe)."""
+            try:
+                os.kill(w.proc.pid, signal.SIGKILL)
+                w.proc.join(timeout=5.0)
+            except (ProcessLookupError, OSError):
+                pass
+            on_worker_death(w)
+
+        def join_one() -> None:
+            w = spawn()
+            stats["joins"] += 1
+            make_plan(initial=False)
+            return w
+
+        def recompute_lost(needed: Set[int], lost: Set[int],
+                           cause: Any) -> None:
+            """Lineage recovery: schedule the minimal recompute set for
+            ``needed`` lost values, then replan onto the live workers."""
+            available = store.available(set(alive_ids()))
+            plan = recovery_plan(graph, needed, available)
+            stats["recomputed"] += len(plan)
+            self.recovery_events.append({
+                "worker": cause, "lost": set(lost), "needed": set(needed),
+                "available": set(available), "plan": set(plan),
+            })
+
+            will_run = plan | {t for t, s in state.items() if s != DONE}
+            store.invalidate(plan)
+            store.reset_consumers(plan, will_run)
+            for t in plan:                  # deps outside the plan get re-read
+                for d in graph.nodes[t].all_deps:
+                    if d not in plan:
+                        store.consumers_left[d] = \
+                            store.consumers_left.get(d, 0) + 1
+            for t in plan:
+                done.discard(t)
+                finish_times.pop(t, None)
+            # WAITING tasks elsewhere may block on a lost value: reset them
+            for tid in list(waiting):
+                wid, need = waiting[tid]
+                if need & plan:
+                    waiting.pop(tid)
+                    workers[wid].assigned.discard(tid)
+                    state[tid] = READY
+            for t in plan:
+                state[t] = (READY if all(state[d] == DONE
+                                         for d in graph.nodes[t].all_deps)
+                            else PENDING)
+            # demote READY tasks whose deps just un-completed
+            for tid, s in list(state.items()):
+                if s == READY and any(state[d] != DONE
+                                      for d in graph.nodes[tid].all_deps):
+                    state[tid] = PENDING
+
+            if not alive_ids():
+                error.append(RuntimeError(
+                    "cluster lost every worker; cannot recover"))
+                return
+            make_plan(initial=False)       # replan onto the survivors
+
+        def on_worker_death(w: _Worker) -> None:
+            nonlocal last_progress
+            if not w.alive:
+                return
+            last_progress = time.perf_counter()
+            w.alive = False
+            try:
+                w.conn.close()
+            except OSError:
+                pass
+            stats["failures"] += 1
+
+            # tasks that never completed there simply go back in the pool
+            for tid in list(w.inflight):
+                state[tid] = READY
+            w.inflight.clear()
+            for tid in list(w.assigned):
+                waiting.pop(tid, None)
+                state[tid] = READY
+            w.assigned.clear()
+
+            # results that lived only in its store are lost -> lineage
+            lost = store.drop_worker(w.wid)
+            fetching.difference_update(lost)       # those replies never come
+            if self.outputs_only:
+                needed = {t for t in lost
+                          if t in graph.outputs
+                          or store.consumers_left.get(t, 0) > 0}
+            else:
+                needed = set(lost)
+            recompute_lost(needed, lost, w.wid)
+
+        def on_value(w: _Worker, tid: int, found: bool, value: Any) -> None:
+            nonlocal last_progress
+            last_progress = time.perf_counter()
+            fetching.discard(tid)
+            if not found:
+                # owner dropped/lost it between request and reply; treat the
+                # value as lost and recover exactly like a partial failure
+                if state.get(tid) == DONE and tid not in store.cache:
+                    store.invalidate({tid})
+                    recompute_lost({tid}, {tid}, None)
+                return
+            store.cache_value(tid, value)
+            for t in list(waiting):
+                entry = waiting.get(t)
+                if entry is None:     # popped by a recovery mid-loop
+                    continue
+                _, need = entry
+                need.discard(tid)
+                if not need:
+                    finish_waiting(t)
+
+        def pump(timeout: float) -> None:
+            nonlocal last_progress
+            conns = {w.conn: w for w in workers.values() if w.alive}
+            if not conns:
+                return
+            for conn in conn_wait(list(conns), timeout=timeout):
+                w = conns[conn]
+                try:
+                    msg = conn.recv()
+                except (EOFError, OSError):
+                    on_worker_death(w)
+                    continue
+                verb = msg[0]
+                if verb == "done":
+                    on_done(w, msg[2], msg[3])
+                elif verb == "value":
+                    on_value(w, msg[2], msg[3], msg[4])
+                elif verb == "error":
+                    if msg[3] == "MissingInput":
+                        # caller-error contract: never wrapped in TaskFailed
+                        error.append(MissingInput(msg[4]))
+                    else:
+                        error.append(TaskFailed(
+                            msg[2], graph.nodes[msg[2]].name,
+                            RuntimeError(f"{msg[3]}: {msg[4]}")))
+                elif verb == "bye":
+                    pass
+
+        def check_commands() -> None:
+            with self._cmd_lock:
+                cmds, self._commands = self._commands, []
+            for cmd in cmds:
+                if cmd[0] == "join":
+                    join_one()
+                elif cmd[0] == "kill" and cmd[1] in workers \
+                        and workers[cmd[1]].alive:
+                    kill(workers[cmd[1]])
+
+        def check_deaths() -> None:
+            for w in list(workers.values()):
+                if w.alive and not w.proc.is_alive():
+                    on_worker_death(w)
+
+        # ------------------------------------------------------- main loop
+        self._active = True
+        try:
+            while not error:
+                check_commands()
+                if len(done) >= n_total:
+                    missing = [t for t in required if t not in store.cache]
+                    if not missing:
+                        break
+                    for t in missing:       # final collection
+                        if t in fetching:
+                            continue
+                        owner = store.location(t)
+                        if owner is not None and workers[owner].alive:
+                            if not safe_send(workers[owner], ("fetch", t)):
+                                break       # recovery ran; resume main loop
+                            fetching.add(t)
+                else:
+                    dispatch()
+                pump(timeout=0.02)
+                check_deaths()
+                if time.perf_counter() - last_progress > self.progress_timeout:
+                    by_state: Dict[int, List[int]] = {}
+                    for t, s in state.items():
+                        by_state.setdefault(s, []).append(t)
+                    error.append(RuntimeError(
+                        f"cluster made no progress for "
+                        f"{self.progress_timeout}s "
+                        f"(done {len(done)}/{n_total}, states "
+                        f"{ {s: sorted(ts)[:8] for s, ts in by_state.items() if s != DONE} }, "
+                        f"waiting {dict(list(waiting.items())[:4])}, "
+                        f"fetching {sorted(fetching)[:8]}, "
+                        f"inflight {[sorted(w.inflight) for w in workers.values()]})"))
+        finally:
+            self._active = False
+            for w in workers.values():
+                if w.alive:
+                    try:
+                        w.conn.send(("stop",))
+                    except (BrokenPipeError, OSError):
+                        pass
+            for w in workers.values():
+                w.proc.join(timeout=5.0)
+                if w.proc.is_alive():
+                    w.proc.terminate()
+            self.wall_time = time.perf_counter() - t0
+
+        if error:
+            raise error[0]
+        return {t: store.cache[t] for t in required}

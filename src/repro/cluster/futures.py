@@ -1,0 +1,64 @@
+"""Futures for async graph submission (``submit``/``gather``).
+
+A :class:`ClusterFuture` is the driver-side handle for one submitted
+:class:`~repro.core.graph.TaskGraph`.  The heavy lifting happens on a
+background driver thread per submission; every run gets a fresh worker
+pool, and submissions to the SAME executor queue behind its run lock (its
+stats are per-run) — use one executor per job for true concurrency.  The
+future just carries completion state across threads.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+
+class ClusterFuture:
+    def __init__(self, label: str = "") -> None:
+        self.label = label
+        self._event = threading.Event()
+        self._result: Optional[Dict[int, Any]] = None
+        self._error: Optional[BaseException] = None
+
+    # -- producer side ------------------------------------------------------
+    def _set_result(self, value: Dict[int, Any]) -> None:
+        self._result = value
+        self._event.set()
+
+    def _set_error(self, exc: BaseException) -> None:
+        self._error = exc
+        self._event.set()
+
+    # -- consumer side ------------------------------------------------------
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> Dict[int, Any]:
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"future {self.label or id(self)} not done "
+                               f"after {timeout}s")
+        if self._error is not None:
+            raise self._error
+        assert self._result is not None
+        return self._result
+
+    def exception(self, timeout: Optional[float] = None):
+        self._event.wait(timeout)
+        return self._error
+
+
+def gather(*futures: ClusterFuture,
+           timeout: Optional[float] = None) -> List[Dict[int, Any]]:
+    """Wait for every future; returns their results in argument order.
+    ``timeout`` bounds the TOTAL wait (shared deadline across futures).
+    The first error encountered is raised (after all futures settle)."""
+    deadline = None if timeout is None else time.monotonic() + timeout
+    for f in futures:
+        remaining = (None if deadline is None
+                     else max(0.0, deadline - time.monotonic()))
+        if not f._event.wait(remaining):
+            raise TimeoutError(
+                f"gather: future {f.label or id(f)} not done within "
+                f"{timeout}s total")
+    return [f.result(0) for f in futures]

@@ -1,0 +1,97 @@
+"""Driver-side object store: ownership tracking + value cache + GC.
+
+The driver does not hold every value — workers do (see
+:mod:`repro.cluster.worker`).  What the driver tracks is *where* each task's
+result lives (``owner``), which values it has pulled into its own durable
+cache (``cache``), and how many consumers still need each value
+(``consumers_left``, driving the optional distributed GC in
+``outputs_only`` runs).
+
+This split is what gives the fault-tolerance story its teeth:
+
+* a value in ``cache`` survives any worker death (driver memory is the
+  durable tier here; a sharded/replicated store is the scale-out follow-up);
+* a value known only to a dead worker is **lost** and must be recomputed
+  via :func:`repro.core.lineage.recovery_plan`;
+* a value dropped by GC is gone *everywhere* — recovery for a later loss
+  walks past it and recomputes it too, exactly the Spark-lineage semantics
+  the paper points at.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Set
+
+from repro.core.graph import TaskGraph
+
+
+class DriverObjectStore:
+    def __init__(self, graph: TaskGraph) -> None:
+        self.graph = graph
+        self.cache: Dict[int, Any] = {}         # driver-held values
+        self.owner: Dict[int, int] = {}         # tid -> worker id
+        self.owned: Dict[int, Set[int]] = {}    # worker id -> {tid}
+        succ = graph.successors()
+        self.successors = succ
+        self.consumers_left: Dict[int, int] = {
+            tid: len(succ[tid]) for tid in graph.nodes}
+
+    # ------------------------------------------------------------ ownership
+    def add_worker(self, wid: int) -> None:
+        self.owned.setdefault(wid, set())
+
+    def record(self, tid: int, wid: int) -> None:
+        """Task ``tid`` completed on worker ``wid``; value lives there."""
+        self.owner[tid] = wid
+        self.owned.setdefault(wid, set()).add(tid)
+
+    def cache_value(self, tid: int, value: Any) -> None:
+        self.cache[tid] = value
+
+    def location(self, tid: int) -> Optional[int]:
+        return self.owner.get(tid)
+
+    def available(self, alive: Set[int]) -> Set[int]:
+        """Tids whose values still exist somewhere (driver or live worker)."""
+        out = set(self.cache)
+        for wid in alive:
+            out |= self.owned.get(wid, set())
+        return out
+
+    # -------------------------------------------------------------- failure
+    def drop_worker(self, wid: int) -> Set[int]:
+        """Worker died: forget its store.  Returns the tids whose values are
+        now *lost* (they lived only there — not in the driver cache)."""
+        held = self.owned.pop(wid, set())
+        lost = {t for t in held if t not in self.cache}
+        for t in held:
+            if self.owner.get(t) == wid:
+                del self.owner[t]
+        return lost
+
+    def invalidate(self, tids: Set[int]) -> None:
+        """Remove every trace of ``tids`` (they will be recomputed)."""
+        for t in tids:
+            self.cache.pop(t, None)
+            w = self.owner.pop(t, None)
+            if w is not None:
+                self.owned.get(w, set()).discard(t)
+
+    # ------------------------------------------------------------------- GC
+    def consumed(self, tid: int) -> None:
+        """A consumer of ``tid`` completed."""
+        if tid in self.consumers_left:
+            self.consumers_left[tid] -= 1
+
+    def collectable(self, tid: int) -> bool:
+        return (self.consumers_left.get(tid, 1) <= 0
+                and tid not in self.graph.outputs)
+
+    def reset_consumers(self, plan: Set[int], will_run: Set[int]) -> None:
+        """After scheduling a recovery ``plan``, a recomputed task's value is
+        needed once per consumer that will still execute: plan members being
+        recomputed AND successors that never ran in the first place
+        (``will_run`` = plan ∪ not-yet-done).  Consumers that stayed
+        completed never re-read it."""
+        for t in plan:
+            self.consumers_left[t] = sum(
+                1 for s in self.successors[t] if s in will_run)

@@ -1,0 +1,123 @@
+"""Worker-process side of the cluster runtime.
+
+A worker is one OS process connected to the driver by a single duplex pipe.
+It owns a *local object store* (``{tid: value}``) holding the results of
+every task it has executed and not yet dropped; values only cross the pipe
+when the driver explicitly asks (dispatch-time transfer of remote inputs, or
+an end-of-run / output fetch).  This is what makes worker loss *mean*
+something: results that lived only in a killed worker's store are gone and
+must be recomputed from lineage.
+
+Message protocol (tuples; first element is the verb):
+
+  driver -> worker
+    ("run",   tid, extra)   execute task ``tid``; ``extra`` maps dep tid ->
+                            value for inputs not in this worker's store
+    ("fetch", tid)          reply with the stored value of ``tid``
+    ("drop",  tids)         free stored values (driver-coordinated GC)
+    ("stop",)               drain and exit
+
+  worker -> driver
+    ("done",  wid, tid, wall)          task finished; value stays local
+    ("error", wid, tid, name, repr)    task raised
+    ("value", wid, tid, found, value)  fetch reply
+    ("bye",   wid)                     shutdown ack
+
+Workers are started with the ``fork`` start method, so the (closure-bearing,
+generally unpicklable) :class:`~repro.core.graph.TaskGraph` and the run's
+``inputs`` dict are inherited by memory copy — the paper's "ship the program
+to every node" step costs one fork, and per-task messages carry only ids and
+data values (which must be picklable, as in any distributed system).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+from repro.core.executor import _run_node as run_node   # noqa: F401 — the
+# worker executes nodes with the EXACT core implementation so both backends
+# share semantics (including the MissingInput contract; the driver re-raises
+# it by name on its side)
+from repro.core.graph import TaskGraph
+
+
+def worker_main(wid: int, conn, graph: TaskGraph,
+                inputs: Optional[Dict[str, Any]]) -> None:
+    """Worker process body: reader thread + sender thread + compute loop.
+
+    Deadlock-freedom argument (values can exceed the kernel pipe buffer):
+    the reader thread does *nothing but recv*, so the driver's blocking
+    dispatch-sends always drain; the sender thread does *nothing but send*
+    from an outbox queue, so neither the reader nor a long-running task can
+    ever stall an outgoing reply; the driver's pump loop drains worker
+    output whenever it isn't mid-send.  Any single blocked pipe therefore
+    unblocks without waiting on this process's compute.
+
+    The reader answers ``fetch``/``drop`` directly (peers' input transfers
+    are served while a task is running); ``run``/``stop`` are queued for
+    the compute loop.  ``store`` accesses are single-op (GIL-atomic) dict
+    operations.
+    """
+    import queue
+    import threading
+    import time
+
+    store: Dict[int, Any] = {}
+    runq: "queue.SimpleQueue[tuple]" = queue.SimpleQueue()
+    outq: "queue.SimpleQueue[Optional[tuple]]" = queue.SimpleQueue()
+
+    def sender() -> None:
+        while True:
+            msg = outq.get()
+            if msg is None:
+                return
+            try:
+                conn.send(msg)
+            except (BrokenPipeError, OSError):
+                return
+
+    def reader() -> None:
+        while True:
+            try:
+                msg = conn.recv()
+            except (EOFError, OSError):
+                runq.put(("stop",))      # driver went away
+                return
+            verb = msg[0]
+            if verb == "fetch":
+                tid = msg[1]
+                outq.put(("value", wid, tid, tid in store, store.get(tid)))
+            elif verb == "drop":
+                for t in msg[1]:
+                    store.pop(t, None)
+            else:                        # "run" / "stop"
+                runq.put(msg)
+                if verb == "stop":
+                    return
+
+    send_thread = threading.Thread(target=sender, daemon=True,
+                                   name=f"worker-{wid}-sender")
+    send_thread.start()
+    threading.Thread(target=reader, daemon=True,
+                     name=f"worker-{wid}-reader").start()
+    while True:
+        msg = runq.get()
+        verb = msg[0]
+        if verb == "stop":
+            outq.put(("bye", wid))
+            outq.put(None)
+            send_thread.join(timeout=5.0)
+            return
+        if verb != "run":                # pragma: no cover — protocol bug
+            raise RuntimeError(f"worker {wid}: unknown message {verb!r}")
+        _, tid, extra = msg
+        t0 = time.perf_counter()
+        try:
+            table = dict(extra)
+            for d in graph.nodes[tid].all_deps:
+                if d not in table:
+                    table[d] = store[d]
+            value = run_node(graph, tid, table, inputs)
+            store[tid] = value
+            outq.put(("done", wid, tid, time.perf_counter() - t0))
+        except BaseException as e:       # noqa: BLE001 — shipped to driver
+            outq.put(("error", wid, tid, type(e).__name__, repr(e)))

@@ -1,0 +1,48 @@
+"""Version compatibility shims for the installed JAX.
+
+The codebase targets current JAX semantics; on older installs two things
+drift and are papered over here:
+
+* ``jax.sharding.AxisType`` may not exist — handled locally in
+  :mod:`repro.parallel.mesh`;
+* the threefry RNG is not partitionable by default, so putting a sharding
+  constraint on the output of ``jax.random.*`` *changes the generated
+  values* — breaking the invariant every executor in this repo relies on
+  (sharded execution must be bit-identical to the sequential oracle).
+
+:func:`ensure_partitionable_rng` flips ``jax_threefry_partitionable`` on
+(newer JAX defaults to it) and is called when any sharding-aware module is
+imported, i.e. before either the oracle or the mesh program runs in a given
+process, keeping the two streams identical.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def ensure_partitionable_rng() -> None:
+    try:
+        if not jax.config.jax_threefry_partitionable:
+            jax.config.update("jax_threefry_partitionable", True)
+    except AttributeError:   # flag removed: modern JAX, always partitionable
+        pass
+
+
+def static_axis_size(name) -> int:
+    """Static size of a named mesh axis, inside shard_map/pmap bodies.
+
+    ``jax.lax.axis_size`` only exists on newer JAX; older releases expose the
+    same number through the trace context's axis environment.
+    """
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    return jax.core.axis_frame(name)
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """``Compiled.cost_analysis()`` returns a dict on current JAX but a
+    one-element list of dicts on older releases — normalize to a dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost or {})

@@ -5,7 +5,10 @@ Public API:
   TaskGraph                                               (the IR)
   list_schedule, replan                                   (static scheduling)
   ClusterSim, simulate, WorkerEvent                       (cluster simulator)
-  execute_sequential, ThreadedExecutor, run_graph         (real execution)
+  Executor, execute_sequential, ThreadedExecutor,
+  run_graph, make_executor                                (real execution;
+      backend="thread" stays in-process, backend="process" selects the
+      multi-process repro.cluster.ClusterExecutor runtime)
   MeshExecutor                                            (SPMD lowering)
   recovery_plan, recover                                  (lineage FT)
   standard_rules, logical_to_spec, tree_shardings         (auto-sharding)
@@ -19,7 +22,7 @@ from .scheduler import (Schedule, Placement, list_schedule, replan,
                         theoretical_speedup)
 from .simulator import ClusterSim, SimResult, WorkerEvent, simulate
 from .executor import (execute_sequential, ThreadedExecutor, run_graph,
-                       output_values, TaskFailed)
+                       make_executor, output_values, Executor, TaskFailed)
 from .lineage import recovery_plan, recover, replay, lineage_depth, NonIdempotentReplay
 from .placement import (standard_rules, sequence_parallel_rules,
                         logical_to_spec, sharding_for, tree_specs,

@@ -1,5 +1,9 @@
 """Executors that really run a TaskGraph.
 
+* :class:`Executor` — the protocol every runtime backend satisfies:
+  ``run(graph, inputs) -> {tid: value}`` plus ``stats``/``wall_time``
+  introspection.  Backends must be *oracle-faithful*: tasks are pure, so
+  results have to be bit-identical to :func:`execute_sequential`.
 * :func:`execute_sequential` — single-thread topo-order oracle (the paper's
   "single-thread baseline"); every parallel executor must match it exactly
   because tasks are pure.
@@ -7,17 +11,37 @@
   stealing (the paper's runtime, on one host).  Python threads still give real
   speedups here because task payloads release the GIL inside jitted JAX
   compute.
+* :class:`repro.cluster.ClusterExecutor` — the multi-process backend (OS
+  process workers, driver-side object store, lineage recovery); select it
+  with ``run_graph(..., backend="process")``.
 * Failure injection hooks drive the lineage-recovery tests.
 """
 from __future__ import annotations
 
 import threading
 import time as _time
-from typing import Any, Callable, Dict, List, Optional, Set
+from typing import (Any, Callable, Dict, List, Optional, Protocol, Set,
+                    runtime_checkable)
 
 from .graph import TaskGraph
 from .tracing import substitute_refs
 from .lineage import recovery_plan
+
+
+@runtime_checkable
+class Executor(Protocol):
+    """What the launchers/benchmarks require of a runtime backend.
+
+    ``stats`` holds backend-specific counters (every backend reports at
+    least ``recomputed``); ``wall_time`` is the last run's duration.
+    """
+
+    stats: Dict[str, int]
+    wall_time: float
+
+    def run(self, graph: TaskGraph,
+            inputs: Optional[Dict[str, Any]] = None) -> Dict[int, Any]:
+        ...
 
 
 class TaskFailed(RuntimeError):
@@ -189,11 +213,23 @@ class ThreadedExecutor:
         return results
 
 
+def make_executor(backend: str, n_workers: int, **kw) -> Executor:
+    """Factory over runtime backends: ``thread`` | ``process``."""
+    if backend == "thread":
+        return ThreadedExecutor(n_workers, **kw)
+    if backend == "process":
+        from repro.cluster import ClusterExecutor   # deferred: no cycle
+        return ClusterExecutor(n_workers, **kw)
+    raise ValueError(f"unknown backend {backend!r} "
+                     "(expected 'thread' or 'process')")
+
+
 def run_graph(graph: TaskGraph, n_workers: int = 1,
-              inputs: Optional[Dict[str, Any]] = None, **kw) -> Dict[int, Any]:
-    if n_workers == 1:
+              inputs: Optional[Dict[str, Any]] = None,
+              backend: str = "thread", **kw) -> Dict[int, Any]:
+    if n_workers == 1 and backend == "thread":
         return execute_sequential(graph, inputs)
-    return ThreadedExecutor(n_workers, **kw).run(graph, inputs)
+    return make_executor(backend, n_workers, **kw).run(graph, inputs)
 
 
 def output_values(graph: TaskGraph, results: Dict[int, Any]) -> List[Any]:

@@ -18,6 +18,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import ensure_partitionable_rng
 from .graph import TaskGraph
 from .tracing import substitute_refs
 from .placement import ValueInfo, refine_placements, logical_to_spec, Rule
@@ -42,6 +43,7 @@ class MeshExecutor:
         input_axes: Optional[Dict[str, tuple]] = None,
         donate_inputs: Sequence[str] = (),
     ) -> None:
+        ensure_partitionable_rng()
         graph.validate()
         self.graph = graph
         self.mesh = mesh
@@ -107,7 +109,8 @@ class MeshExecutor:
     # -- introspection used by the roofline benchmarks -------------------
     def cost_analysis(self) -> Dict[str, Any]:
         assert self._compiled is not None, "compile() first"
-        return self._compiled.cost_analysis()
+        from repro.compat import cost_analysis_dict
+        return cost_analysis_dict(self._compiled)
 
     def memory_analysis(self):
         assert self._compiled is not None, "compile() first"

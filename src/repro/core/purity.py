@@ -9,19 +9,40 @@ that the user declares with ``@io_task``) is treated as ``IO``.
 from __future__ import annotations
 
 from typing import Any, Callable, Optional
+import weakref
 
 import jax
 
 # Explicit declarations take precedence (the "type signature" the user wrote).
-_DECLARED: dict[int, bool] = {}   # id(fn) -> is_pure
+# Weak-keyed: an ``id()``-keyed dict would let a dead function's entry leak
+# onto whatever new function the allocator places at the same address.
+_DECLARED: "weakref.WeakKeyDictionary[Callable, bool]" = \
+    weakref.WeakKeyDictionary()
 
 
 def declare(fn: Callable, pure: bool) -> None:
-    _DECLARED[id(fn)] = pure
+    try:
+        _DECLARED[fn] = pure
+        return
+    except TypeError:   # non-weakref-able callable: annotate directly
+        pass
+    try:
+        fn.__declared_pure__ = pure
+    except (AttributeError, TypeError):
+        # neither weakref-able nor attribute-assignable (numpy ufuncs, C
+        # builtins): leave undeclared — infer_purity falls back to jaxpr
+        # inspection, and the @task wrapper passes purity explicitly anyway
+        pass
 
 
 def declared_purity(fn: Callable) -> Optional[bool]:
-    return _DECLARED.get(id(fn))
+    try:
+        d = _DECLARED.get(fn)
+    except TypeError:
+        d = None
+    if d is None:
+        d = getattr(fn, "__declared_pure__", None)
+    return d
 
 
 def infer_purity(fn: Callable, *abstract_args: Any, **abstract_kwargs: Any) -> bool:

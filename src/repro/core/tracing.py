@@ -69,6 +69,25 @@ def _find_refs(obj: Any, acc: List[TaskRef]) -> None:
             _find_refs(o, acc)
 
 
+class _Project:
+    """Tuple-element projection node body.  A class (not a lambda) so traced
+    graphs stay picklable for spawn-based cluster workers."""
+
+    __slots__ = ("idx",)
+
+    def __init__(self, idx: int):
+        self.idx = idx
+
+    def __call__(self, t):
+        return t[self.idx]
+
+
+def _barrier_fn(*xs):
+    """Barrier node body: identity on one value, tuple otherwise (picklable
+    module-level function — see :class:`_Project`)."""
+    return xs if len(xs) != 1 else xs[0]
+
+
 class Trace:
     """Active tracing context; builds a :class:`TaskGraph`."""
 
@@ -114,7 +133,7 @@ class Trace:
 
     def add_projection(self, ref: TaskRef, idx: int) -> TaskRef:
         tid = self.graph.add_node(
-            name=f"π{idx}", fn=(lambda t, _i=idx: t[_i]),
+            name=f"π{idx}", fn=_Project(idx),
             args=(ref,), kwargs={}, kind=TaskKind.PROJECTION,
             deps=(ref.tid,), token_deps=(), cost=0.0, out_bytes=0,
         )
@@ -124,7 +143,7 @@ class Trace:
         """Materialization barrier — lineage recovery never recomputes past it."""
         deps = tuple(dict.fromkeys(r.tid for r in refs))
         tid = self.graph.add_node(
-            name=name, fn=(lambda *xs: xs if len(xs) != 1 else xs[0]),
+            name=name, fn=_barrier_fn,
             args=tuple(refs), kwargs={}, kind=TaskKind.BARRIER,
             deps=deps, token_deps=(), cost=0.0, out_bytes=0,
         )

@@ -1,0 +1,47 @@
+"""Runtime-backend selection for the launchers.
+
+``--backend thread`` executes a traced driver DAG with the in-process
+work-stealing :class:`~repro.core.executor.ThreadedExecutor`;
+``--backend process`` uses the multi-process
+:class:`~repro.cluster.ClusterExecutor` (forked workers, driver-side object
+store, lineage fault tolerance).  See ``repro/cluster/__init__.py`` for the
+full trade-off discussion.
+
+JAX payloads cannot run in a *forked* worker (the child inherits a dead XLA
+runtime and deadlocks), so the launchers use ``start_method="spawn"``:
+workers start as fresh interpreters and the graph is pickled across.  That
+is why the launcher demo tasks are module-level functions parameterized by
+literals (arch name, seed, step) that rebuild their model/jit lazily inside
+the worker — ship the *recipe*, not the weights, exactly like a real
+multi-host deployment.  Tests and numpy-level workloads keep the cheaper
+``fork`` default.
+"""
+from __future__ import annotations
+
+import argparse
+from typing import Any, Dict, Optional
+
+from repro.core import TaskGraph, make_executor
+from repro.core.executor import Executor
+
+
+def add_backend_args(ap: argparse.ArgumentParser) -> None:
+    ap.add_argument("--backend", default="thread",
+                    choices=["thread", "process"],
+                    help="runtime for --show-graph driver execution: "
+                         "in-process threads or spawned cluster workers")
+    ap.add_argument("--graph-workers", type=int, default=2,
+                    help="worker count for the traced-driver dry-run")
+
+
+def execute_traced(graph: TaskGraph, args,
+                   inputs: Optional[Dict[str, Any]] = None) -> Dict[int, Any]:
+    """Run a traced driver DAG on the selected backend and report stats."""
+    kw = ({"start_method": "spawn", "progress_timeout": 300.0}
+          if args.backend == "process" else {})
+    ex: Executor = make_executor(args.backend, args.graph_workers, **kw)
+    results = ex.run(graph, inputs)
+    print(f"[{args.backend} backend] executed {len(graph.nodes)} tasks on "
+          f"{args.graph_workers} workers in {ex.wall_time:.3f}s "
+          f"(stats {ex.stats})", flush=True)
+    return results

@@ -19,6 +19,7 @@ from typing import Dict, Optional  # noqa: E402
 
 import jax               # noqa: E402
 
+from repro.compat import cost_analysis_dict           # noqa: E402
 from repro.configs import ARCHS                       # noqa: E402
 from repro.models.config import SHAPES                # noqa: E402
 from repro.launch.mesh import make_production_mesh    # noqa: E402
@@ -211,7 +212,7 @@ def probe_correction(arch: str, shape: str, mesh, mode: str,
         case = build_case_for(arch, shape, mesh, mode, upd)
         with mesh:
             compiled = steps_mod.lower_case(case).compile()
-        cost = compiled.cost_analysis()
+        cost = cost_analysis_dict(compiled)
         hlo = compiled.as_text()
         probes[L] = {
             "flops_per_device": float(cost.get("flops", 0.0)),
@@ -263,7 +264,7 @@ def run_cell(arch: str, shape: str, mesh_kind: str, out_dir: str,
             lowered = steps_mod.lower_case(case)
             compiled = lowered.compile()
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = cost_analysis_dict(compiled)
         hlo = compiled.as_text()
         rec["status"] = "OK"
         rec["flops_per_device"] = float(cost.get("flops", 0.0))

@@ -28,10 +28,56 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, ARCHS
+from repro.core import task, trace
+from repro.launch.backend import add_backend_args, execute_traced
 from repro.models import transformer as TF
 from repro.parallel.mesh import make_mesh_for, single_device_mesh
 from repro.core.placement import standard_rules
 from repro.parallel.sharding import ShardingCtx
+
+
+# --------------------------------------------------------------------------
+# traced-driver demo tasks (--show-graph): module-level + literal args so
+# the graph pickles into spawn-started cluster workers; each worker lazily
+# rebuilds params + prefill/decode jits from the recipe (see
+# launch/backend.py and the same pattern in train.py).
+# --------------------------------------------------------------------------
+import functools
+
+
+@functools.lru_cache(maxsize=2)
+def _serve_runtime(arch, reduced, max_len, seed):
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    ctx = ShardingCtx(single_device_mesh(),
+                      standard_rules("dp_tp", pod_axis=None))
+    params = TF.init_params(cfg, jax.random.PRNGKey(seed))
+    pre = jax.jit(TF.make_prefill_step(cfg, ctx, max_len=max_len))
+    dec = jax.jit(TF.make_decode_step(cfg, ctx))
+    return params, pre, dec
+
+
+def _demo_prefill(arch, reduced, max_len, seed, prompt):
+    params, pre, _ = _serve_runtime(arch, reduced, max_len, seed)
+    last, cache = pre(params, jnp.asarray(np.asarray(prompt)[None, :]))
+    return int(jnp.argmax(last[0])), jax.device_get(cache)
+
+
+def _demo_decode(arch, reduced, max_len, seed, tok, cache):
+    params, _, dec = _serve_runtime(arch, reduced, max_len, seed)
+    cache = jax.tree.map(jnp.asarray, cache)
+    logits, cache = dec(params, cache, jnp.asarray([[tok]], jnp.int32))
+    return int(jnp.argmax(logits[0])), jax.device_get(cache)
+
+
+def _demo_respond(*toks):
+    return list(toks)
+
+
+demo_prefill = task(_demo_prefill, cost=1.0, name="prefill", n_outputs=2)
+demo_decode = task(_demo_decode, cost=0.2, name="decode", n_outputs=2)
+demo_respond = task(_demo_respond, cost=0.01, name="respond")
 
 
 @dataclasses.dataclass
@@ -66,6 +112,10 @@ def main(argv=None) -> Dict[str, Any]:
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--tp", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--show-graph", action="store_true",
+                    help="trace one request (prefill + decode chain) into "
+                         "a task DAG, print it, and execute on --backend")
+    add_backend_args(ap)
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -83,6 +133,31 @@ def main(argv=None) -> Dict[str, Any]:
     params = TF.init_params(cfg, jax.random.PRNGKey(args.seed))
     prefill = jax.jit(TF.make_prefill_step(cfg, ctx, max_len=args.max_len))
     decode = jax.jit(TF.make_decode_step(cfg, ctx))
+
+    # ---- traced one-request driver executed on the chosen backend ----
+    # The serving analogue of train.py's --show-graph: prefill is the DAG
+    # root, decode ticks are pure tasks chained through the (pickled) KV
+    # cache, respond collects the token chain — the paper's driver view of
+    # one request, executable on either runtime backend.
+    if args.show_graph:
+        demo_prompt = tuple(
+            synth_requests(1, cfg.vocab_size, max_new=3,
+                           seed=args.seed)[0].prompt.tolist())
+
+        def req_driver():
+            tok, cache = demo_prefill(args.arch, args.reduced, args.max_len,
+                                      args.seed, demo_prompt)
+            toks = [tok]
+            for _ in range(2):
+                tok, cache = demo_decode(args.arch, args.reduced,
+                                         args.max_len, args.seed, tok, cache)
+                toks.append(tok)
+            return demo_respond(*toks)
+
+        g, _ = trace(req_driver)
+        print(g.summary())
+        res = execute_traced(g, args)
+        print(f"traced request tokens: {res[g.outputs[0]]}", flush=True)
 
     reqs = synth_requests(args.requests, cfg.vocab_size,
                           max_new=args.max_new, seed=args.seed)

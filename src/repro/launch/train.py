@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import functools
 import time
 from typing import Any, Dict, Optional
 
@@ -37,12 +38,67 @@ from repro.core.placement import standard_rules
 from repro.checkpoint.store import CheckpointManager, latest_step
 from repro.data.pipeline import SyntheticLMDataset, Prefetcher
 from repro.launch import steps as steps_mod
+from repro.launch.backend import add_backend_args, execute_traced
 from repro.models import transformer as TF
 from repro.models import encdec as ED
 from repro.models import frontends
 from repro.optim.schedules import cosine_schedule
 from repro.parallel.mesh import make_mesh_for, single_device_mesh
 from repro.parallel.sharding import ShardingCtx
+
+
+# --------------------------------------------------------------------------
+# traced-driver demo tasks (--show-graph).  Module-level and parameterized
+# by LITERALS so the traced graph pickles into spawn-started cluster
+# workers (see launch/backend.py): each worker rebuilds the model/optimizer
+# from the recipe (arch, seed, ...) on first use — weights never cross the
+# wire, exactly like shipping the program to a remote node.
+# --------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=2)
+def _demo_runtime(arch, reduced, remat, mode, lr, warmup, steps, seed):
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    cfg = dataclasses.replace(cfg, remat=remat)
+    ctx = ShardingCtx(single_device_mesh(),
+                      standard_rules(mode, pod_axis=None))
+    opt = steps_mod.make_optimizer(cfg, lr=cosine_schedule(lr, warmup, steps))
+    step = jax.jit(steps_mod.make_train_step(cfg, opt, ctx))
+    M = ED if cfg.is_encoder_decoder else TF
+    params = M.init_params(cfg, jax.random.PRNGKey(seed))
+    return cfg, step, params, opt.init(params)
+
+
+def _demo_load_batch(arch, reduced, seq, batch, step, seed):
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    ds = SyntheticLMDataset(cfg.vocab_size, seq, batch, seed=seed)
+    b = {k: np.asarray(v) for k, v in ds.batch_at(step).items()}
+    if cfg.family == "vlm":
+        b["patch_embeds"] = np.asarray(frontends.synth_patches(cfg, batch))
+    if cfg.is_encoder_decoder:
+        b["frames"] = np.asarray(frontends.synth_frames(cfg, batch))
+    return b
+
+
+def _demo_train_step(arch, reduced, remat, mode, lr, warmup, steps, seed, b):
+    _, step, params, opt_state = _demo_runtime(
+        arch, reduced, remat, mode, lr, warmup, steps, seed)
+    b = {k: jax.numpy.asarray(v) for k, v in b.items()}
+    _, _, metrics = step(params, opt_state, b)
+    return float(metrics["total_loss"])
+
+
+def _demo_save(loss):
+    return loss
+
+
+demo_load_batch = io_task(_demo_load_batch, cost=0.01, name="load_batch",
+                          meta={"idempotent": True})
+demo_train_step = task(_demo_train_step, cost=1.0, name="spmd_train_step")
+demo_save = io_task(_demo_save, cost=0.05, name="save_ckpt")
 
 
 def build_runtime(args) -> Dict[str, Any]:
@@ -88,7 +144,10 @@ def main(argv: Optional[list] = None) -> Dict[str, Any]:
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--straggler-x", type=float, default=3.0)
     ap.add_argument("--log-every", type=int, default=10)
-    ap.add_argument("--show-graph", action="store_true")
+    ap.add_argument("--show-graph", action="store_true",
+                    help="trace one driver iteration into a task DAG, "
+                         "print it, and execute it on --backend")
+    add_backend_args(ap)
     args = ap.parse_args(argv)
 
     rt = build_runtime(args)
@@ -113,27 +172,25 @@ def main(argv: Optional[list] = None) -> Dict[str, Any]:
     pf = Prefetcher(ds, start_step=start_step, depth=2)
 
     # ---- the paper's interface: trace ONE driver iteration into a DAG ----
+    # and really execute it on the selected runtime backend (thread =
+    # in-process work stealing; process = spawned cluster workers).  The
+    # demo runtime is a fresh single-device, non-donating jit, so executing
+    # it cannot invalidate the training loop's donated buffers.
     if args.show_graph:
-        @io_task(cost=0.01, meta={"idempotent": True})
-        def load_batch():
-            return pf.next()
+        def demo_driver():
+            b = demo_load_batch(args.arch, args.reduced, args.seq,
+                                args.batch, start_step, args.seed)
+            loss = demo_train_step(args.arch, args.reduced, args.remat,
+                                   args.mode, args.lr, args.warmup,
+                                   args.steps, args.seed, b)
+            return checkpoint_barrier(demo_save(loss))
 
-        @task(cost=1.0, name="spmd_train_step")
-        def do_step(p, o, b):
-            return jitted(p, o, b)
-
-        @io_task(cost=0.05, name="save_ckpt")
-        def save(state):
-            return state
-
-        def driver(p, o):
-            b = load_batch()
-            out = do_step(p, o, b)
-            return checkpoint_barrier(save(out))
-
-        g, _ = trace(driver, None, None)
+        g, _ = trace(demo_driver)
         print(g.summary())
         print(g.to_dot())
+        res = execute_traced(g, args)
+        print(f"traced-driver step loss: {res[g.outputs[0]]:.4f}",
+              flush=True)
 
     losses = []
     ewma: Optional[float] = None

@@ -12,6 +12,8 @@ from typing import Any, Callable, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.compat import static_axis_size
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
@@ -25,7 +27,7 @@ def pmean_tree(tree: Any, axis: str) -> Any:
 
 
 def ring_permute(x: jax.Array, axis: str, shift: int = 1) -> jax.Array:
-    n = jax.lax.axis_size(axis)
+    n = static_axis_size(axis)
     perm = [(i, (i + shift) % n) for i in range(n)]
     return jax.lax.ppermute(x, axis, perm)
 

@@ -16,6 +16,8 @@ from typing import Any, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.compat import static_axis_size
+
 
 @dataclasses.dataclass(frozen=True)
 class Int8BlockCompressor:
@@ -63,7 +65,7 @@ class Int8BlockCompressor:
         n = 1
         for ax in axes:
             q = jax.lax.psum(q, ax)
-            n *= jax.lax.axis_size(ax)
+            n *= static_axis_size(ax)
         return self.dequantize(q.astype(jnp.float32), scale, x.shape) / n
 
 

@@ -1,4 +1,10 @@
-"""Mesh construction (kept as FUNCTIONS so importing never touches devices)."""
+"""Mesh construction (kept as FUNCTIONS so importing never touches devices).
+
+``jax.sharding.AxisType`` (explicit-sharding axis annotations) only exists in
+newer JAX releases; feature-detect it so ``repro.parallel`` imports — and the
+test suite collects — on any installed JAX.  When absent, meshes are built
+without axis types, which is exactly the old (implicit/auto) behaviour.
+"""
 from __future__ import annotations
 
 import math
@@ -6,21 +12,39 @@ from typing import Optional, Tuple
 
 import jax
 import numpy as np
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+from repro.compat import ensure_partitionable_rng
+
+try:  # jax >= 0.5-ish
+    from jax.sharding import AxisType
+except ImportError:  # older JAX: no explicit axis types
+    AxisType = None
+
+# sharded programs must see the same RNG stream as the sequential oracle
+ensure_partitionable_rng()
+
+
+def _axis_kwargs(n_axes: int) -> dict:
+    if AxisType is None:
+        return {}
+    return {"axis_types": (AxisType.Auto,) * n_axes}
 
 
 def _make(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
     n = math.prod(shape)
     devs = jax.devices()
     if len(devs) == n:
-        return jax.make_mesh(shape, axes,
-                             axis_types=(AxisType.Auto,) * len(axes))
+        if hasattr(jax, "make_mesh"):
+            return jax.make_mesh(shape, axes, **_axis_kwargs(len(axes)))
+        return Mesh(np.asarray(devs).reshape(shape), axes,
+                    **_axis_kwargs(len(axes)))
     if len(devs) < n:
         raise ValueError(f"need {n} devices for mesh {shape}, have {len(devs)}")
     # more devices than the mesh needs (e.g. the 512-device dry-run world
     # building a single-pod 256-chip mesh): take a prefix
     arr = np.asarray(devs[:n]).reshape(shape)
-    return Mesh(arr, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return Mesh(arr, axes, **_axis_kwargs(len(axes)))
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:

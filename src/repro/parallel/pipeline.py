@@ -76,7 +76,9 @@ def pipelined_forward(cfg: ModelConfig, mesh: Mesh, *, n_microbatch: int,
         def run(sp, xin):
             sp = jax.tree.map(lambda a: a[0], sp)       # this stage's layers
             stage = jax.lax.axis_index(stage_axis)
-            n = jax.lax.axis_size(stage_axis)
+            # static stage count (jax.lax.axis_size is missing on older JAX;
+            # the mesh's axis extent is the same number and always static)
+            n = mesh.shape[stage_axis]
             micro = xin.reshape(n_microbatch, mb, S, d)
             ticks = n_microbatch + n - 1
             out = jnp.zeros_like(micro)

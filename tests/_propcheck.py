@@ -1,0 +1,88 @@
+"""Property-testing front-end: real ``hypothesis`` when installed, otherwise
+a tiny derandomized fallback with the same decorator surface.
+
+The suites import ``given``/``settings``/``st`` from here instead of from
+``hypothesis`` directly, so tier-1 runs on a bare container (no hypothesis)
+and still gets shrinking + fuzzing wherever hypothesis *is* available.
+
+The fallback draws ``max_examples`` pseudo-random examples from each strategy
+with a seed derived from the test name — deterministic across runs, different
+across tests.  Only the strategy combinators the suites actually use are
+implemented (``integers``, ``floats``, ``sampled_from``, ``tuples``,
+``booleans``, ``lists``); extend as tests grow.
+"""
+from __future__ import annotations
+
+import functools
+import random
+import zlib
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        __slots__ = ("_draw",)
+
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example_from(self, rng: random.Random):
+            return self._draw(rng)
+
+    class _St:
+        """Namespace mimicking ``hypothesis.strategies``."""
+
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda r: r.random() < 0.5)
+
+        @staticmethod
+        def sampled_from(seq):
+            items = list(seq)
+            return _Strategy(lambda r: r.choice(items))
+
+        @staticmethod
+        def tuples(*ss):
+            return _Strategy(
+                lambda r: tuple(s.example_from(r) for s in ss))
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=8):
+            return _Strategy(
+                lambda r: [elem.example_from(r)
+                           for _ in range(r.randint(min_size, max_size))])
+
+    st = _St()
+
+    def settings(max_examples: int = 25, deadline=None, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def runner(*args, **kwargs):
+                n = getattr(fn, "_max_examples", 25)
+                rng = random.Random(zlib.crc32(fn.__name__.encode()))
+                for _ in range(n):
+                    drawn = tuple(s.example_from(rng) for s in strategies)
+                    fn(*args, *drawn, **kwargs)
+            # pytest must see a zero-arg signature, not the wrapped one —
+            # otherwise it tries to resolve the drawn params as fixtures
+            del runner.__wrapped__
+            runner.hypothesis_fallback = True
+            return runner
+        return deco

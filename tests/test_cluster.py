@@ -1,0 +1,240 @@
+"""Multi-process ClusterExecutor: differential vs the sequential oracle,
+SIGKILL lineage recovery, GC-mode deep recovery, elastic join, futures.
+
+Task payloads are cheap deterministic integer arithmetic so 200+-node DAGs
+run in seconds; fork-started workers inherit the graph (no pickling of
+closures needed).
+"""
+import random
+
+import pytest
+
+from _propcheck import given, settings, st
+
+from repro.core import (TaskGraph, TaskKind, execute_sequential,
+                        make_executor, run_graph, Executor, TaskFailed,
+                        recovery_plan, trace, io_task)
+from repro.core.tracing import RemappedRef as _Ref
+from repro.cluster import ClusterExecutor, gather
+
+
+def exec_dag(seed: int, n: int, p: float) -> TaskGraph:
+    """Random DAG whose nodes do real (cheap, deterministic) arithmetic."""
+    rng = random.Random(seed)
+    g = TaskGraph()
+    for i in range(n):
+        deps = [j for j in range(i) if rng.random() < p][-3:]
+
+        def fn(*xs, _i=i):
+            return (_i + sum(xs) * 7) % 1_000_003
+
+        g.add_node(f"t{i}", fn, tuple(_Ref(d) for d in deps), {},
+                   TaskKind.PURE, deps=deps, cost=rng.uniform(0.1, 1.0))
+    g.mark_output(n - 1)
+    return g
+
+
+# ------------------------------------------------------------ differential
+
+def test_cluster_matches_sequential_on_200_node_dag():
+    """Acceptance: >=2 process workers, 200+-node random DAG, bit-identical
+    to the sequential oracle."""
+    g = exec_dag(42, 220, 0.25)
+    seq = execute_sequential(g)
+    ex = ClusterExecutor(3)
+    assert ex.run(g) == seq
+    assert ex.stats["recomputed"] == 0
+    assert ex.stats["dispatched"] >= 220
+
+
+@given(st.tuples(st.integers(0, 5000), st.integers(2, 60),
+                 st.floats(0.0, 0.5)), st.integers(2, 4))
+@settings(max_examples=8, deadline=None)
+def test_cluster_matches_sequential_random(params, workers):
+    seed, n, p = params
+    g = exec_dag(seed, n, p)
+    assert ClusterExecutor(workers).run(g) == execute_sequential(g)
+
+
+def test_cluster_satisfies_executor_protocol_and_run_graph():
+    g = exec_dag(3, 30, 0.3)
+    ex = make_executor("process", 2)
+    assert isinstance(ex, Executor)
+    assert run_graph(g, n_workers=2, backend="process") == \
+        execute_sequential(g)
+    with pytest.raises(ValueError):
+        make_executor("quantum", 2)
+
+
+def test_cluster_inputs_and_io_ordering():
+    """placeholder inputs resolve in workers; token edges still order IO."""
+    from repro.core import placeholder, task
+
+    @task(cost=0.1)
+    def double(x):
+        return x * 2
+
+    @io_task(cost=0.1)
+    def log(x):
+        return x + 1
+
+    def driver():
+        x = placeholder("x")
+        a = log(double(x))
+        b = log(a)          # token edge: must run after the first log
+        return b
+
+    g, _ = trace(driver)
+    seq = execute_sequential(g, inputs={"x": 21})
+    assert ClusterExecutor(2).run(g, inputs={"x": 21}) == seq
+    # missing-input contract matches the thread/sequential backends:
+    # MissingInput is a caller error, never wrapped in TaskFailed
+    from repro.core.executor import MissingInput
+    with pytest.raises(MissingInput):
+        ClusterExecutor(2).run(g)
+
+
+def test_cluster_task_failure_propagates():
+    g = TaskGraph()
+
+    def boom():
+        raise ValueError("worker-side failure")
+
+    g.add_node("boom", boom, (), {}, TaskKind.PURE, deps=())
+    g.mark_output(0)
+    with pytest.raises(TaskFailed, match="boom"):
+        ClusterExecutor(2).run(g)
+
+
+# ------------------------------------------------------- lineage recovery
+
+def test_sigkill_recovery_matches_oracle_and_plan_size():
+    """Acceptance: SIGKILL one worker mid-run; results still match and
+    stats['recomputed'] equals the lineage recovery-plan size, which the
+    test recomputes independently from the recorded loss event."""
+    g = exec_dag(123, 200, 0.25)
+    seq = execute_sequential(g)
+    ex = ClusterExecutor(3, fail_worker=(1, 5))
+    assert ex.run(g) == seq
+    assert ex.stats["failures"] == 1
+    assert len(ex.recovery_events) >= 1
+    total_plan = 0
+    for ev in ex.recovery_events:
+        # the executor's plan is exactly lineage.recovery_plan of what died
+        assert ev["plan"] == recovery_plan(g, ev["needed"], ev["available"])
+        # full-results mode: every lost value is needed, so plan == lost
+        assert ev["plan"] == ev["lost"]
+        total_plan += len(ev["plan"])
+    assert ex.stats["recomputed"] == total_plan > 0
+
+
+def test_outputs_only_gc_recovers_dropped_ancestors():
+    """In outputs_only mode intermediates are GC'd once consumed, so a kill
+    forces recovery THROUGH dropped ancestors: plan ⊇ needed, and the plan
+    still matches recovery_plan exactly."""
+    g = exec_dag(5, 150, 0.25)
+    seq = execute_sequential(g)
+    want = {t: seq[t] for t in g.outputs}
+    ex = ClusterExecutor(3, outputs_only=True, fail_worker=(0, 8))
+    res = ex.run(g)
+    assert res == want
+    assert ex.stats["dropped"] > 0
+    assert ex.stats["failures"] == 1
+    for ev in ex.recovery_events:
+        assert ev["plan"] == recovery_plan(g, ev["needed"], ev["available"])
+    assert ex.stats["recomputed"] == \
+        sum(len(ev["plan"]) for ev in ex.recovery_events)
+
+
+def test_two_failures_still_recover():
+    g = exec_dag(9, 120, 0.3)
+    seq = execute_sequential(g)
+    ex = ClusterExecutor(4, fail_worker=(2, 3))
+    assert ex.run(g) == seq
+    ex2 = ClusterExecutor(3, fail_worker=(0, 10))
+    assert ex2.run(g) == seq
+
+
+def test_organic_worker_death_recovers(tmp_path):
+    """A worker that dies WITHOUT the driver killing it (the task SIGKILLs
+    its own process mid-execution) must be detected via the pipe EOF /
+    liveness check and recovered — the un-injected failure path."""
+    import os
+    import signal
+
+    flag = tmp_path / "already-died"
+
+    def suicide(x):
+        if not flag.exists():
+            flag.write_text("1")
+            os.kill(os.getpid(), signal.SIGKILL)
+        return x + 1
+
+    g = TaskGraph()
+    g.add_node("a", lambda: 10, (), {}, TaskKind.PURE, deps=())
+    g.add_node("kill", suicide, (_Ref(0),), {}, TaskKind.PURE, deps=[0])
+    for i in range(2, 12):
+
+        def fn(*xs, _i=i):
+            return (_i + sum(xs) * 3) % 997
+
+        g.add_node(f"t{i}", fn, (_Ref(i - 1),), {}, TaskKind.PURE,
+                   deps=[i - 1])
+    g.mark_output(11)
+    ex = ClusterExecutor(2)
+    res = ex.run(g)
+    assert ex.stats["failures"] == 1
+    # safe now: the flag exists, so the oracle's suicide() just returns
+    assert res == execute_sequential(g)
+
+
+# ------------------------------------------------------------- elasticity
+
+def test_elastic_join_mid_run():
+    g = exec_dag(11, 150, 0.2)
+    seq = execute_sequential(g)
+    ex = ClusterExecutor(2, join_after=(30, 2))
+    assert ex.run(g) == seq
+    assert ex.stats["joins"] == 2
+
+
+def test_kill_then_elastic_replacement():
+    g = exec_dag(13, 150, 0.2)
+    seq = execute_sequential(g)
+    ex = ClusterExecutor(3, fail_worker=(0, 5), join_after=(40, 1))
+    assert ex.run(g) == seq
+    assert ex.stats["failures"] == 1
+    assert ex.stats["joins"] == 1
+
+
+# ---------------------------------------------------------------- futures
+
+def test_submit_gather_two_graphs():
+    g1, g2 = exec_dag(21, 60, 0.3), exec_dag(22, 60, 0.3)
+    f1 = ClusterExecutor(2).submit(g1, label="g1")
+    f2 = ClusterExecutor(2).submit(g2, label="g2")
+    r1, r2 = gather(f1, f2, timeout=120)
+    assert r1 == execute_sequential(g1)
+    assert r2 == execute_sequential(g2)
+    assert f1.done() and f2.done()
+
+
+def test_submit_twice_same_executor_serializes_safely():
+    """Two submissions to ONE executor queue behind its run lock and both
+    still match the oracle (stats are per-run, so runs may not overlap)."""
+    g1, g2 = exec_dag(31, 50, 0.3), exec_dag(32, 50, 0.3)
+    ex = ClusterExecutor(2)
+    f1, f2 = ex.submit(g1), ex.submit(g2)
+    r1, r2 = gather(f1, f2, timeout=120)
+    assert r1 == execute_sequential(g1)
+    assert r2 == execute_sequential(g2)
+
+
+def test_future_carries_error():
+    g = TaskGraph()
+    g.add_node("bad", lambda: 1 / 0, (), {}, TaskKind.PURE, deps=())
+    g.mark_output(0)
+    f = ClusterExecutor(2).submit(g)
+    assert isinstance(f.exception(timeout=60), TaskFailed)
+    with pytest.raises(TaskFailed):
+        f.result(1)

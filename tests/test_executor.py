@@ -4,7 +4,7 @@ import threading
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, st
 
 from repro.core import (task, io_task, trace, execute_sequential,
                         ThreadedExecutor, TaskGraph, TaskKind,

@@ -52,3 +52,28 @@ def test_serve_rejects_encdec():
     with pytest.raises(SystemExit):
         serve_mod.main(["--arch", "whisper-tiny", "--reduced",
                         "--requests", "1"])
+
+
+def test_train_show_graph_executes_on_thread_backend(capsys):
+    """--show-graph traces one driver iteration and really executes it on
+    the selected backend; the traced-step loss must equal the main loop's
+    step-0 loss (same recipe, same seed, same batch)."""
+    r = train_mod.main(["--arch", "qwen2-7b", "--reduced", "--steps", "1",
+                        "--batch", "2", "--seq", "16", "--log-every", "100",
+                        "--show-graph", "--backend", "thread"])
+    out = capsys.readouterr().out
+    assert "[thread backend] executed 4 tasks" in out
+    traced = float(out.split("traced-driver step loss:")[1].split()[0])
+    assert traced == pytest.approx(r["losses"][0], rel=1e-4)
+
+
+def test_serve_show_graph_executes_on_thread_backend(capsys):
+    """The traced prefill→decode chain executed on the thread backend must
+    produce the same first tokens as the real serving loop."""
+    out_res = serve_mod.main(["--arch", "qwen2-7b", "--reduced",
+                              "--requests", "1", "--slots", "1",
+                              "--max-new", "4", "--show-graph",
+                              "--backend", "thread"])
+    out = capsys.readouterr().out
+    traced = eval(out.split("traced request tokens:")[1].splitlines()[0])
+    assert traced == out_res["finished"][0].out[:3]

@@ -2,7 +2,7 @@
 import random
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, st
 
 from repro.core import (TaskGraph, TaskKind, list_schedule, replan, simulate,
                         ClusterSim, WorkerEvent, theoretical_speedup)
@@ -125,6 +125,94 @@ def test_replan_after_worker_loss():
     placed = set(done) | set(s2.placements)
     assert placed == set(g.nodes)
     assert s2.makespan >= t_cut
+
+
+@given(dag_params, st.integers(1, 12),
+       st.sampled_from(["critical_path", "fifo", "random"]),
+       st.sampled_from(["uniform", "hetero", "extreme"]))
+@settings(max_examples=40, deadline=None)
+def test_schedule_invariants_all_policies_and_speeds(params, workers,
+                                                     policy, speed_kind):
+    """Schedule.validate_against invariants — no dependency inversion, no
+    per-worker overlap — must hold for every policy under heterogeneous
+    worker speeds, and the invariants are re-checked here by hand so the
+    test does not only trust the validator."""
+    seed, n, p = params
+    g = random_dag(seed, n, p)
+    speeds = {
+        "uniform": [1.0] * workers,
+        "hetero": [0.5 + (w % 3) for w in range(workers)],
+        "extreme": [0.05 if w == 0 else 2.0 for w in range(workers)],
+    }[speed_kind]
+    s = list_schedule(g, workers, policy=policy, worker_speed=speeds,
+                      seed=seed)
+    s.validate_against(g)
+    # manual re-check 1: every task placed exactly once, on a real worker
+    assert set(s.placements) == set(g.nodes)
+    for p_ in s.placements.values():
+        assert 0 <= p_.worker < workers
+        assert p_.end >= p_.start - 1e-12
+        # duration reflects the worker's speed
+        want = g.nodes[p_.tid].cost / speeds[p_.worker]
+        assert p_.end - p_.start == pytest.approx(want, rel=1e-9, abs=1e-12)
+    # manual re-check 2: no dep inversion
+    for node in g.nodes.values():
+        for d in node.all_deps:
+            assert s.placements[d].end <= s.placements[node.tid].start + 1e-9
+    # manual re-check 3: no overlap on any worker
+    by_worker = {}
+    for p_ in s.placements.values():
+        by_worker.setdefault(p_.worker, []).append(p_)
+    for ps in by_worker.values():
+        ps.sort(key=lambda q: q.start)
+        for a, b in zip(ps, ps[1:]):
+            assert a.end <= b.start + 1e-9
+    assert 0.0 < s.utilization() <= 1.0 + 1e-9
+
+
+@given(dag_params, st.sampled_from(["critical_path", "fifo", "random"]))
+@settings(max_examples=20, deadline=None)
+def test_validate_against_catches_violations(params, policy):
+    """The validator itself must reject corrupted schedules (otherwise the
+    invariant tests above prove nothing)."""
+    seed, n, p = params
+    g = random_dag(seed, n, p)
+    if len(g.nodes) < 2:
+        return
+    s = list_schedule(g, 3, policy=policy)
+    dep_edge = next(((d, t) for t in g.nodes
+                     for d in g.nodes[t].all_deps), None)
+    if dep_edge is not None:
+        from repro.core import Placement
+        d, t = dep_edge
+        bad = dict(s.placements)
+        # move the consumer to start BEFORE its dependency finishes
+        orig = bad[t]
+        bad[t] = Placement(t, orig.worker, bad[d].start - 1.0,
+                           bad[d].start - 0.5)
+        from repro.core.scheduler import Schedule
+        with pytest.raises(AssertionError):
+            Schedule(bad, s.n_workers).validate_against(g)
+
+
+def test_replan_respects_invariants_after_worker_loss_and_join():
+    for new_workers in (2, 6, 12):      # shrink and grow
+        g = random_dag(17, 60, 0.2)
+        s1 = list_schedule(g, 4)
+        t_cut = s1.makespan / 2
+        done = {tid: p.end for tid, p in s1.placements.items()
+                if p.end <= t_cut}
+        s2 = replan(g, done, n_workers=new_workers, now=t_cut)
+        assert set(done) | set(s2.placements) == set(g.nodes)
+        for p in s2.placements.values():
+            assert p.start >= t_cut - 1e-9
+            assert 0 <= p.worker < new_workers
+        # remaining deps still respected among replanned tasks
+        for tid in s2.placements:
+            for d in g.nodes[tid].all_deps:
+                if d in s2.placements:
+                    assert s2.placements[d].end <= \
+                        s2.placements[tid].start + 1e-9
 
 
 def test_theoretical_speedup_monotone():
