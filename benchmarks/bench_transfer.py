@@ -1,0 +1,181 @@
+"""Data-plane benchmark: driver-mediated vs zero-copy direct transfers.
+
+A wide shuffle-style graph — ``producers`` tasks each emit a float32 array
+of ``payload_mb`` MiB, ``consumers`` tasks each combine ``fan_in`` of them
+(strided, so most reads are cross-worker), and a final reduce collapses to
+a scalar — is executed twice on the process backend: once with
+``transport="driver"`` (the PR-1 relay: every cross-worker value is
+double-pickled through the driver pipe) and once with the zero-copy plane
+(``shm``, or ``sock`` where shared memory is unavailable).
+
+Writes ``BENCH_transfer.json`` at the repo root with wall times, the bytes
+that crossed the driver pipe vs moved directly, and the speedup /
+pipe-byte-reduction ratios the acceptance criteria pin (>= 2x wall, >= 10x
+fewer driver-pipe bytes at the default payload).  ``--smoke`` shrinks the
+payload for CI.
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.bench_transfer [--payload-mb 4]
+        [--producers 8] [--consumers 8] [--fan-in 4] [--workers 4]
+        [--reps 3] [--smoke] [--check]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.core import TaskGraph, TaskKind, execute_sequential
+from repro.core.tracing import RemappedRef as _Ref
+from repro.cluster import ClusterExecutor, serde
+
+from .common import print_rows
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_transfer.json")
+
+
+def build_shuffle(producers: int, consumers: int, fan_in: int,
+                  payload_elems: int) -> TaskGraph:
+    """Producers -> strided all-to-some shuffle -> elementwise combine ->
+    scalar reduce.  Arrays are deterministic, so every backend/transport
+    must agree with the sequential oracle bit-for-bit."""
+    g = TaskGraph()
+    for i in range(producers):
+
+        def produce(_i=i, _n=payload_elems):
+            return np.arange(_n, dtype=np.float32) * np.float32(_i + 1)
+
+        g.add_node(f"produce{i}", produce, (), {}, TaskKind.PURE,
+                   deps=(), cost=1.0)
+    for j in range(consumers):
+        deps = [(j * 3 + k) % producers for k in range(fan_in)]
+
+        def combine(*xs, _j=j):
+            acc = xs[0] + np.float32(_j)
+            for x in xs[1:]:
+                acc = acc + x
+            return acc
+
+        g.add_node(f"combine{j}", combine, tuple(_Ref(d) for d in deps),
+                   {}, TaskKind.PURE, deps=deps, cost=1.0)
+    rdeps = list(range(producers, producers + consumers))
+
+    def reduce_all(*xs):
+        return float(sum(float(x.sum()) for x in xs))
+
+    g.add_node("reduce", reduce_all, tuple(_Ref(d) for d in rdeps), {},
+               TaskKind.PURE, deps=rdeps, cost=1.0)
+    g.mark_output(producers + consumers)
+    return g
+
+
+def run_once(graph: TaskGraph, transport: str, workers: int,
+             reps: int, pipeline_depth: int = 4) -> Dict[str, Any]:
+    """Median wall time + data-plane counters for one transport."""
+    walls: List[float] = []
+    stats: Dict[str, int] = {}
+    used = transport
+    for _ in range(reps):
+        ex = ClusterExecutor(workers, transport=transport,
+                             outputs_only=True, progress_timeout=180.0,
+                             pipeline_depth=pipeline_depth)
+        t0 = time.perf_counter()
+        ex.run(graph)
+        walls.append(time.perf_counter() - t0)
+        stats = dict(ex.stats)
+        used = ex.transport_used or transport
+    walls.sort()
+    return {
+        "transport": used,
+        "wall_s": walls[len(walls) // 2],
+        "bytes_driver_pipe": stats.get("bytes_driver", 0),
+        "bytes_direct": stats.get("bytes_direct", 0),
+        "bytes_moved": stats.get("bytes_moved", 0),
+        "transfers_direct": stats.get("transfers_direct", 0),
+        "transfers_driver": stats.get("transfers_driver", 0),
+    }
+
+
+def main(argv: Optional[List[str]] = None) -> Dict[str, Any]:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--payload-mb", type=float, default=24.0)
+    ap.add_argument("--producers", type=int, default=6)
+    ap.add_argument("--consumers", type=int, default=8)
+    ap.add_argument("--fan-in", type=int, default=4)
+    ap.add_argument("--pipeline-depth", type=int, default=4)
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny payloads / single rep for CI")
+    ap.add_argument("--check", action="store_true",
+                    help="also pin both transports to the sequential oracle")
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args(argv if argv is not None else [])
+    if args.smoke:
+        if args.out == OUT_PATH:    # never clobber the headline artifact
+            args.out = OUT_PATH.replace(".json", "_smoke.json")
+        args.payload_mb = min(args.payload_mb, 1.0)
+        args.producers = min(args.producers, 4)
+        args.consumers = min(args.consumers, 4)
+        args.workers = min(args.workers, 2)
+        args.fan_in = min(args.fan_in, 3)
+        args.reps = 1
+
+    payload_elems = max(1, int(args.payload_mb * (1 << 20) / 4))
+    graph = build_shuffle(args.producers, args.consumers, args.fan_in,
+                          payload_elems)
+    zero_copy = serde.resolve_transport("auto")
+    if zero_copy == "driver":
+        print("bench_transfer: no shm and no unix sockets available; "
+              "nothing to compare", flush=True)
+        return {}
+
+    if args.check or args.smoke:
+        seq = execute_sequential(graph)
+        want = float(seq[graph.outputs[0]])
+        for transport in ("driver", zero_copy):
+            ex = ClusterExecutor(args.workers, transport=transport,
+                                 outputs_only=True, progress_timeout=180.0,
+                                 pipeline_depth=args.pipeline_depth)
+            got = float(ex.run(graph)[graph.outputs[0]])
+            assert got == want, (transport, got, want)
+        print("oracle check: both transports bit-identical", flush=True)
+
+    results = {t: run_once(graph, t, args.workers, args.reps,
+                           args.pipeline_depth)
+               for t in ("driver", zero_copy)}
+    drv, zc = results["driver"], results[zero_copy]
+    speedup = drv["wall_s"] / zc["wall_s"] if zc["wall_s"] > 0 else 0.0
+    pipe_reduction = (drv["bytes_driver_pipe"] /
+                      max(1, zc["bytes_driver_pipe"]))
+    payload = {
+        "config": {
+            "payload_mb": args.payload_mb, "producers": args.producers,
+            "consumers": args.consumers, "fan_in": args.fan_in,
+            "workers": args.workers, "reps": args.reps,
+            "smoke": args.smoke, "tasks": len(graph.nodes),
+        },
+        "driver": drv,
+        "zero_copy": zc,
+        "speedup": speedup,
+        "driver_pipe_byte_reduction": pipe_reduction,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print_rows("transfer: driver-relay vs zero-copy "
+               f"({args.payload_mb} MiB payloads)",
+               [{"path": k, **v} for k, v in results.items()])
+    print(f"\nspeedup {speedup:.2f}x, driver-pipe bytes reduced "
+          f"{pipe_reduction:.0f}x -> {args.out}", flush=True)
+    return payload
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -8,6 +8,9 @@ Suites:
   fault      — failures, elasticity, stragglers, checkpoint barriers
   roofline   — per-(arch × shape) roofline terms from the dry-run artifacts
                (requires ``python -m repro.launch.dryrun`` results on disk)
+  transfer   — data plane: driver-relayed vs zero-copy (shm / unix-socket)
+               cross-worker transfers on a wide shuffle graph; writes
+               BENCH_transfer.json at the repo root
 """
 from __future__ import annotations
 
@@ -15,13 +18,15 @@ import argparse
 import sys
 import time
 
-from . import matmul_scaling, scheduler_bench, fault_bench, roofline
+from . import (matmul_scaling, scheduler_bench, fault_bench, roofline,
+               bench_transfer)
 
 SUITES = {
     "matmul": matmul_scaling.main,
     "scheduler": scheduler_bench.main,
     "fault": fault_bench.main,
     "roofline": roofline.main,
+    "transfer": bench_transfer.main,
 }
 
 

@@ -8,21 +8,38 @@ Backend choice (also see ROADMAP.md §runtime backends):
   isolation: a crashing task kills the run.
 * ``process`` (:class:`ClusterExecutor`, here) — driver + forked OS-process
   workers over pipes.  True parallelism for Python-level work, per-worker
-  object stores with driver-mediated transfer, and real fault tolerance:
-  a SIGKILL'd worker triggers lineage recovery (recompute exactly the lost
-  results) plus an elastic replan onto the survivors.  This is the template
-  for the multi-host backend — swapping the fork+pipe transport for sockets
-  changes no driver logic.
+  object stores, and real fault tolerance: a SIGKILL'd worker triggers
+  lineage recovery (recompute exactly the lost results) plus an elastic
+  replan onto the survivors.
+
+The **data plane** is zero-copy (:mod:`repro.cluster.serde`): cross-worker
+values move as handles — payload buffers are published once into
+``multiprocessing.shared_memory`` segments (or pulled over a per-worker
+unix socket when shm is unavailable) and mapped directly by the consumer,
+so the driver pipe carries only control messages.  The
+``transport={"auto","shm","sock","driver"}`` knob selects the channel
+(``driver`` restores the PR-1 relay for A/B benchmarks), and the
+``stats`` fields ``bytes_moved`` / ``bytes_driver`` / ``bytes_direct`` /
+``transfers_direct`` / ``transfers_driver`` make the split observable.
+Dispatch is **locality-aware**: per-value sizes recorded at completion
+drive both the scheduler's comm-cost term and a transfer-cost score in the
+driver's stealing loop, so consumers land on the worker already holding
+the largest share of their input bytes.  This is the template for the
+multi-host backend — swapping the fork+pipe transport for sockets changes
+no driver logic.
 
 Both satisfy the :class:`repro.core.executor.Executor` protocol and are
 differentially tested against ``execute_sequential`` (tasks are pure, so
-every backend must agree bit-for-bit).
+every backend must agree bit-for-bit), including under SIGKILL mid-run and
+mid-transfer.
 
 Public API: :class:`ClusterExecutor`, :class:`ClusterFuture`,
-:func:`gather`, :class:`DriverObjectStore`.
+:func:`gather`, :class:`DriverObjectStore`, :mod:`repro.cluster.serde`.
 """
+from . import serde
 from .executor import ClusterExecutor
 from .futures import ClusterFuture, gather
 from .objectstore import DriverObjectStore
 
-__all__ = ["ClusterExecutor", "ClusterFuture", "gather", "DriverObjectStore"]
+__all__ = ["ClusterExecutor", "ClusterFuture", "gather",
+           "DriverObjectStore", "serde"]

@@ -13,21 +13,39 @@ mapping-decision framing of Mapple):
   a placement hint (critical-path priority, earliest-finish-time worker);
   the driver follows it opportunistically and *steals* — dispatches a ready
   task to an idle worker that wasn't its planned home — whenever the plan
-  goes stale, so heterogeneity or stragglers never serialize the run.
+  goes stale.  Both the plan (via ``data_sizes``/``placed`` comm costs in
+  the scheduler) and the stealing choice (via a transfer-cost score over
+  per-value sizes recorded at completion) are **locality-aware**: work
+  prefers the worker already holding the largest share of its input bytes.
+* **Zero-copy data plane.**  Cross-worker values move as *handles*
+  (:mod:`repro.cluster.serde`): the owner publishes the payload once into
+  a ``multiprocessing.shared_memory`` segment (or serves it over its unix
+  socket when shm is unavailable), and the consumer maps/pulls it
+  directly.  The driver pipe carries only control messages and handles —
+  ``stats["bytes_driver"]`` vs ``stats["bytes_direct"]`` make the split
+  observable; ``transport="driver"`` restores the PR-1 relay for A/B runs.
 * **Pipelined dispatch.**  Up to ``pipeline_depth`` tasks are in a worker's
   pipe at once, so the driver overlaps dispatch/transfer with execution
   (the futures-style async core of ``submit``/``gather``).
-* **Ownership, not broadcast.**  Results stay in the producing worker's
-  local store; the driver pulls a value only when a consumer lands on a
-  different worker (driver-mediated transfer, cached → durable) or at
-  final collection.  Locality-aware dispatch makes most transfers no-ops.
+* **Replicas, not broadcast.**  Results stay in the producing worker's
+  local store; a transfer leaves the consumer holding a replica (tracked
+  per-value as a *set* of holders), so later consumers read locally and a
+  value is only lost when its last holder dies without a durable handle.
 * **Lineage fault tolerance.**  On worker death the lost set is exactly
-  ``owned(worker) - driver_cache``; ``lineage.recovery_plan`` gives the
-  minimal recompute set (walking past GC'd ancestors in ``outputs_only``
-  runs), ``scheduler.replan`` re-places the remaining work on the
-  survivors, and ``stats["recomputed"]`` counts exactly ``len(plan)``.
+  the values with no surviving replica, no shm-published handle, and no
+  driver-cached copy; ``lineage.recovery_plan`` gives the minimal
+  recompute set (walking past GC'd ancestors in ``outputs_only`` runs),
+  ``scheduler.replan`` re-places the remaining work on the survivors, and
+  ``stats["recomputed"]`` counts exactly ``len(plan)``.  A SIGKILL
+  mid-transfer degrades the same way: consumers that already hold a stale
+  handle report ``deplost`` and the task re-queues behind the recovery.
 * **Elasticity.**  ``add_worker()`` forks a fresh worker mid-run and
   replans onto the grown pool.
+* **Segment hygiene.**  The driver is the single unlink authority:
+  handles are released when the ``consumers_left`` GC drains a value
+  (``outputs_only`` runs unlink eagerly), and a run-scoped ``/dev/shm``
+  sweep in the shutdown path catches orphans from workers killed
+  mid-publish.  No segment survives executor shutdown.
 
 Failure injection for tests/benchmarks: ``fail_worker=(wid, n)`` SIGKILLs
 worker ``wid`` after it completes ``n`` tasks; ``join_after=(n, k)`` forks
@@ -37,9 +55,12 @@ from __future__ import annotations
 
 import multiprocessing as mp
 import os
+import shutil
 import signal
+import tempfile
 import threading
 import time
+import uuid
 from dataclasses import dataclass, field
 from multiprocessing.connection import wait as conn_wait
 from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
@@ -49,6 +70,7 @@ from repro.core.graph import TaskGraph
 from repro.core.lineage import recovery_plan
 from repro.core.scheduler import list_schedule, replan
 
+from . import serde
 from .futures import ClusterFuture
 from .objectstore import DriverObjectStore
 from .worker import worker_main
@@ -77,10 +99,17 @@ class ClusterExecutor:
     are bit-identical to :func:`repro.core.executor.execute_sequential`
     because tasks are pure and the value tables are exact.
 
+    ``transport`` selects the data plane: ``"shm"`` (zero-copy shared
+    memory), ``"sock"`` (direct unix-socket pulls), ``"driver"`` (the PR-1
+    relay through the driver pipe), or ``"auto"`` (best available; the
+    default).  ``shm_threshold`` is the payload size at which values leave
+    the pipe.  The resolved choice of an ``auto`` run is exposed as
+    ``transport_used`` after ``run``.
+
     ``outputs_only=True`` returns just ``{tid: value for tid in outputs}``
     and garbage-collects intermediates once their last consumer finishes —
-    the memory-bounded production mode, and the mode where lineage recovery
-    has to recompute *dropped* ancestors, not only directly lost values.
+    the memory-bounded production mode, where shm segments are unlinked
+    eagerly and lineage recovery recomputes *dropped* ancestors too.
     """
 
     def __init__(
@@ -96,11 +125,17 @@ class ClusterExecutor:
         progress_timeout: float = 60.0,
         start_method: str = "fork",
         seed: int = 0,
+        transport: str = "auto",
+        shm_threshold: int = serde.SHM_THRESHOLD,
+        bandwidth: float = float(256 << 20),
     ) -> None:
         if n_workers < 1:
             raise ValueError("n_workers >= 1")
         if start_method not in ("fork", "spawn", "forkserver"):
             raise ValueError(f"unknown start_method {start_method!r}")
+        if transport not in serde.TRANSPORTS:
+            raise ValueError(f"unknown transport {transport!r} "
+                             f"(expected one of {serde.TRANSPORTS})")
         self.start_method = start_method
         self.n_workers = n_workers
         self.policy = policy
@@ -111,6 +146,11 @@ class ClusterExecutor:
         self.join_after = join_after
         self.progress_timeout = progress_timeout
         self.seed = seed
+        self.transport = transport
+        self.transport_used: Optional[str] = None
+        self.shm_threshold = max(1, shm_threshold)
+        self.bandwidth = bandwidth
+        self.seg_prefix: Optional[str] = None    # last run's shm name prefix
         self.stats: Dict[str, int] = {}
         self.wall_time = 0.0
         self.recovery_events: List[Dict[str, Any]] = []
@@ -138,7 +178,8 @@ class ClusterExecutor:
 
         def drive() -> None:
             try:
-                fut._set_result(self._execute(graph, inputs))
+                result, stats, wall = self._execute_with_stats(graph, inputs)
+                fut._set_result(result, stats=stats, wall_time=wall)
             except BaseException as e:   # noqa: BLE001 — carried by future
                 fut._set_error(e)
 
@@ -162,16 +203,33 @@ class ClusterExecutor:
     # -------------------------------------------------------------- driver
     def _execute(self, graph: TaskGraph,
                  inputs: Optional[Dict[str, Any]]) -> Dict[int, Any]:
+        return self._execute_with_stats(graph, inputs)[0]
+
+    def _execute_with_stats(self, graph: TaskGraph,
+                            inputs: Optional[Dict[str, Any]]):
+        """Run + a stats/wall_time snapshot taken while the run lock is
+        still held — a queued submission on the same executor reassigns
+        the per-run fields the moment the lock is released."""
         graph.validate()
         with self._run_lock:
-            return self._execute_locked(graph, inputs)
+            result = self._execute_locked(graph, inputs)
+            return result, dict(self.stats), self.wall_time
 
     def _execute_locked(self, graph: TaskGraph,
                         inputs: Optional[Dict[str, Any]]) -> Dict[int, Any]:
         ctx = mp.get_context(self.start_method)
+        transport = self.transport_used = serde.resolve_transport(
+            self.transport)
+        seg_prefix = self.seg_prefix = f"rr{os.getpid():x}" \
+                                       f"{uuid.uuid4().hex[:8]}"
+        peer_dir = (tempfile.mkdtemp(prefix="rrpeer")
+                    if transport == "sock" else None)
+        driver_namer = serde.SegmentNamer(f"{seg_prefix}d")
         stats = self.stats = {
             "dispatched": 0, "steals": 0, "transfers": 0, "recomputed": 0,
             "failures": 0, "joins": 0, "dropped": 0,
+            "transfers_direct": 0, "transfers_driver": 0,
+            "bytes_moved": 0, "bytes_driver": 0, "bytes_direct": 0,
         }
         self.recovery_events = []
         t0 = time.perf_counter()
@@ -186,7 +244,9 @@ class ClusterExecutor:
             next_wid += 1
             parent, child = ctx.Pipe(duplex=True)
             proc = ctx.Process(target=worker_main,
-                               args=(wid, child, graph, inputs),
+                               args=(wid, child, graph, inputs, transport,
+                                     self.shm_threshold, seg_prefix,
+                                     peer_dir),
                                daemon=True, name=f"cluster-worker-{wid}")
             proc.start()
             child.close()
@@ -211,7 +271,7 @@ class ClusterExecutor:
         finish_times: Dict[int, float] = {}
         # tid -> (wid, still-missing dep tids) for transfer-blocked dispatches
         waiting: Dict[int, Tuple[int, Set[int]]] = {}
-        fetching: Set[int] = set()          # dep tids with a fetch in flight
+        fetching: Dict[int, int] = {}    # dep tid -> wid the fetch went to
         error: List[BaseException] = []
         join_after = self.join_after     # consumed per run, not per executor
         last_progress = time.perf_counter()
@@ -224,6 +284,10 @@ class ClusterExecutor:
                 return None
             return [self.worker_speed[w % len(self.worker_speed)]
                     for w in wids]
+
+        def alive_owner(tid: int) -> Optional[int]:
+            return next((x for x in store.locations(tid)
+                         if x in workers and workers[x].alive), None)
 
         # planned placement: schedule slot i -> i-th alive worker id
         plan_worker: Dict[int, int] = {}
@@ -238,10 +302,20 @@ class ClusterExecutor:
                         graph, len(wids), policy=self.policy,
                         worker_speed=speeds_for(wids), seed=self.seed)
                 else:
+                    # replanning mid-run knows value sizes and current
+                    # placements: make the comm-cost term real so the new
+                    # plan keeps consumers next to the bytes they need
+                    placed = {}
+                    for t in finish_times:
+                        ow = alive_owner(t)
+                        if ow is not None:
+                            placed[t] = wids.index(ow)
                     sched = replan(
                         graph, dict(finish_times), len(wids),
                         now=time.perf_counter() - t0, policy=self.policy,
-                        worker_speed=speeds_for(wids), seed=self.seed)
+                        worker_speed=speeds_for(wids), seed=self.seed,
+                        data_sizes=dict(store.sizes),
+                        bandwidth=self.bandwidth, placed=placed)
             except Exception:            # plan is advisory; never fatal
                 plan_worker.clear()
                 return
@@ -263,28 +337,90 @@ class ClusterExecutor:
                 on_worker_death(w)
                 return False
 
-        def try_dispatch(tid: int, w: _Worker) -> bool:
-            """Assign READY task ``tid`` to worker ``w``; ship or fetch
-            whatever remote inputs it needs.  Returns False when a recovery
-            ran underneath (caller must re-snapshot the ready set)."""
-            node = graph.nodes[tid]
+        def account_pipe(handle: serde.Handle) -> None:
+            n = serde.pipe_nbytes(handle)
+            stats["bytes_driver"] += n
+            stats["bytes_moved"] += n
+
+        def account_transfer(handle: serde.Handle) -> None:
+            p, d = serde.pipe_nbytes(handle), serde.direct_nbytes(handle)
+            stats["bytes_driver"] += p
+            stats["bytes_direct"] += d
+            stats["bytes_moved"] += p + d
+            if d > 0:
+                stats["transfers_direct"] += 1
+            else:
+                stats["transfers_driver"] += 1
+            stats["transfers"] += 1
+
+        def publish_cached(d: int) -> Optional[serde.Handle]:
+            """Encode a driver-cached value for shipping; a value that
+            cannot be serialized is a task error, not a worker death."""
+            try:
+                h = serde.encode(store.cache[d], transport=transport,
+                                 threshold=self.shm_threshold,
+                                 namer=driver_namer)
+            except Exception as e:      # noqa: BLE001 — surfaced on future
+                error.append(TaskFailed(
+                    d, graph.nodes[d].name,
+                    RuntimeError(f"SerializationError: result of task {d} "
+                                 f"cannot be shipped to a worker: {e!r}")))
+                return None
+            store.set_handle(d, h)
+            return h
+
+        def build_extra(tid: int, wid: int
+                        ) -> Tuple[Optional[Dict[int, Any]], Set[int]]:
+            """Transfer handles for every input of ``tid`` not already
+            replicated on ``wid``; the missing set needs fetches first.
+            Returns (None, _) when a value failed to serialize (error set)."""
             extra: Dict[int, Any] = {}
             missing: Set[int] = set()
-            for d in node.all_deps:
-                if store.location(d) == w.wid:
-                    continue                       # already local
-                if d in store.cache:
-                    extra[d] = store.cache[d]      # ship with the dispatch
+            for d in graph.nodes[tid].all_deps:
+                if store.has_replica(d, wid):
+                    continue                   # already local
+                h = store.handles.get(d)
+                if h is None and d in store.cache:
+                    h = publish_cached(d)
+                    if h is None:
+                        return None, missing
+                if h is not None:
+                    extra[d] = h
                 else:
                     missing.add(d)
+            return extra, missing
+
+        def move_cost(tid: int, wid: int) -> int:
+            """Bytes that must move for ``tid`` to run on ``wid``.  A
+            published value costs half (one consumer-side materialization);
+            an unpublished remote value costs its full size (publish +
+            materialize)."""
+            cost = 0
+            for d in graph.nodes[tid].all_deps:
+                if store.has_replica(d, wid):
+                    continue
+                size = store.sizes.get(d, 0)
+                if d in store.handles or d in store.cache:
+                    cost += size // 2
+                else:
+                    cost += size
+            return cost
+
+        def try_dispatch(tid: int, w: _Worker) -> bool:
+            """Assign READY task ``tid`` to worker ``w``; ship handles or
+            request publication of whatever remote inputs it needs.
+            Returns False when a recovery ran underneath (caller must
+            re-snapshot the ready set)."""
+            extra, missing = build_extra(tid, w.wid)
+            if extra is None:
+                return False                    # serialization task error
             if missing:
-                # a "done" dep with no live owner and no cached copy is a
+                # a "done" dep with no live owner and no durable copy is a
                 # lost value the death handler didn't see (e.g. GC raced a
                 # transfer): recover it through lineage like any other loss
                 unreachable = {
-                    d for d in missing if d not in fetching
-                    and (store.location(d) is None
-                         or not workers[store.location(d)].alive)}
+                    d for d in missing
+                    if d not in fetching and alive_owner(d) is None}
                 if unreachable:
                     state[tid] = READY
                     recompute_lost(unreachable, unreachable, None)
@@ -294,18 +430,34 @@ class ClusterExecutor:
                 w.assigned.add(tid)
                 for d in missing:
                     if d not in fetching:
-                        if not safe_send(workers[store.location(d)],
-                                         ("fetch", d)):
-                            return False    # owner died; recovery ran
-                        fetching.add(d)
-                        stats["transfers"] += 1
+                        ow = alive_owner(d)
+                        if ow is None or \
+                                not safe_send(workers[ow], ("fetch", d)):
+                            # the owner died under this loop.  If the dep
+                            # survives on a replica the death handler has
+                            # no record of THIS waiter (fetching[d] was
+                            # never set) — unwind to READY so dispatch
+                            # retries against the survivors, instead of
+                            # stranding the task in WAITING forever.
+                            if waiting.pop(tid, None) is not None:
+                                w.assigned.discard(tid)
+                            if state.get(tid) == WAITING:
+                                state[tid] = READY
+                            return False
+                        fetching[d] = ow
                 return True
-            stats["transfers"] += len(extra)
+            return launch(tid, w, extra)
+
+        def launch(tid: int, w: _Worker, extra: Dict[int, Any]) -> bool:
+            """Ship the run message; False when the worker died under the
+            send (the death handler has already reset ``tid`` to READY)."""
             state[tid] = INFLIGHT
             w.inflight.add(tid)
             if not safe_send(w, ("run", tid, extra)):
-                return False        # death handler reset tid to READY
+                return False
             stats["dispatched"] += 1
+            for h in extra.values():
+                account_transfer(h)
             return True
 
         def finish_waiting(tid: int) -> None:
@@ -316,15 +468,24 @@ class ClusterExecutor:
             if not w.alive:
                 state[tid] = READY
                 return
-            node = graph.nodes[tid]
-            extra = {d: store.cache[d] for d in node.all_deps
-                     if store.location(d) != wid and d in store.cache}
-            state[tid] = INFLIGHT
-            w.inflight.add(tid)
-            if not safe_send(w, ("run", tid, extra)):
-                return              # death handler reset tid to READY
-            stats["dispatched"] += 1
-            stats["transfers"] += len(extra)
+            extra, missing = build_extra(tid, wid)
+            if extra is None:
+                return                  # serialization task error
+            if missing:                 # a handle vanished under us (GC /
+                state[tid] = READY      # racing recovery): re-dispatch
+                return
+            launch(tid, w, extra)
+
+        def stealable(tid: int) -> bool:
+            """A task may run off-plan only when its planned home cannot
+            take it now (dead, or pipeline full) — stealing exists for
+            stragglers, not for letting the first worker vacuum the whole
+            ready set before its peers get a dispatch turn."""
+            ow = plan_worker.get(tid)
+            if ow is None or ow not in workers:
+                return True
+            home = workers[ow]
+            return not home.alive or home.load() >= self.pipeline_depth
 
         def dispatch() -> None:
             ready = [t for t, s in state.items() if s == READY]
@@ -335,11 +496,19 @@ class ClusterExecutor:
                 if not w.alive:
                     continue
                 while w.load() < self.pipeline_depth and ready:
-                    mine = next((t for t in ready
-                                 if plan_worker.get(t, w.wid) == w.wid), None)
-                    if mine is None:
-                        mine = ready[0]            # steal off-plan work
-                        stats["steals"] += 1
+                    # locality-aware choice: among this worker's planned
+                    # tasks (or, stealing, the stealable ready window) run
+                    # the one needing the fewest remote input bytes
+                    window = ready[:32]
+                    planned = [t for t in window
+                               if plan_worker.get(t, w.wid) == w.wid]
+                    pool = planned or [t for t in window if stealable(t)]
+                    if not pool:
+                        break       # everything here belongs to live peers
+                    mine = min(pool, key=lambda t: (move_cost(t, w.wid),
+                                                    -rank[t], t))
+                    if not planned:
+                        stats["steals"] += 1   # off-plan work
                     ready.remove(mine)
                     if state.get(mine) != READY:
                         continue    # demoted since the snapshot
@@ -349,22 +518,29 @@ class ClusterExecutor:
         def maybe_gc(tid: int) -> None:
             if not self.outputs_only or not store.collectable(tid):
                 return
-            owner = store.location(tid)
-            if owner is not None and workers[owner].alive:
-                safe_send(workers[owner], ("drop", [tid]))
-            store.invalidate({tid})
+            for wid in list(store.locations(tid)):
+                if wid in workers and workers[wid].alive:
+                    safe_send(workers[wid], ("drop", [tid]))
+            store.invalidate({tid})     # also unlinks its shm segments
             stats["dropped"] += 1
 
-        def on_done(w: _Worker, tid: int, wall: float) -> None:
+        def on_done(w: _Worker, tid: int, wall: float, nbytes: int,
+                    replicated: Sequence[int]) -> None:
             nonlocal last_progress
             last_progress = time.perf_counter()
             w.inflight.discard(tid)
             if state.get(tid) == DONE:
                 return                              # stale duplicate
+            # record transfer replicas first, so GC drops reach them too;
+            # skip deps a racing recovery has invalidated (stale-but-pure
+            # copies are harmless, but must not resurrect tracking state)
+            for d in replicated:
+                if state.get(d) == DONE:
+                    store.record_replica(d, w.wid)
             state[tid] = DONE
             done.add(tid)
             finish_times[tid] = time.perf_counter() - t0
-            store.record(tid, w.wid)
+            store.record(tid, w.wid, nbytes)
             w.n_done += 1
             for d in graph.nodes[tid].all_deps:
                 store.consumed(d)
@@ -465,9 +641,20 @@ class ClusterExecutor:
                 state[tid] = READY
             w.assigned.clear()
 
-            # results that lived only in its store are lost -> lineage
+            # values whose LAST copy lived in its store are lost -> lineage
+            # (replicas / shm-published handles / driver cache survive)
             lost = store.drop_worker(w.wid)
-            fetching.difference_update(lost)       # those replies never come
+            # fetches sent to the dead worker never reply: re-aim them at a
+            # surviving replica, or let the recovery below reset the waiters
+            for d, target in list(fetching.items()):
+                if target != w.wid:
+                    continue
+                fetching.pop(d, None)
+                if d in lost:
+                    continue               # recovery resets its waiters
+                ow = alive_owner(d)
+                if ow is not None and safe_send(workers[ow], ("fetch", d)):
+                    fetching[d] = ow
             if self.outputs_only:
                 needed = {t for t in lost
                           if t in graph.outputs
@@ -476,18 +663,29 @@ class ClusterExecutor:
                 needed = set(lost)
             recompute_lost(needed, lost, w.wid)
 
-        def on_value(w: _Worker, tid: int, found: bool, value: Any) -> None:
+        def on_value(w: _Worker, tid: int, found: bool, handle: Any) -> None:
             nonlocal last_progress
             last_progress = time.perf_counter()
-            fetching.discard(tid)
+            fetching.pop(tid, None)
             if not found:
-                # owner dropped/lost it between request and reply; treat the
-                # value as lost and recover exactly like a partial failure
-                if state.get(tid) == DONE and tid not in store.cache:
+                # owner dropped/lost it between request and reply; try a
+                # surviving replica, else recover like a partial failure
+                if state.get(tid) == DONE and not store.durable(tid):
+                    ow = alive_owner(tid)
+                    if ow is not None:
+                        if safe_send(workers[ow], ("fetch", tid)):
+                            fetching[tid] = ow
+                        return
                     store.invalidate({tid})
                     recompute_lost({tid}, {tid}, None)
                 return
-            store.cache_value(tid, value)
+            if state.get(tid) != DONE:
+                # a recovery invalidated tid while this reply was in flight:
+                # the recompute supersedes it; free the stale segments
+                serde.release(handle)
+                return
+            account_pipe(handle)
+            store.set_handle(tid, handle)
             for t in list(waiting):
                 entry = waiting.get(t)
                 if entry is None:     # popped by a recovery mid-loop
@@ -496,6 +694,28 @@ class ClusterExecutor:
                 need.discard(tid)
                 if not need:
                     finish_waiting(t)
+
+        def on_deplost(w: _Worker, tid: int, deps: Sequence[int]) -> None:
+            """A dispatched task's input handles would not resolve (owner
+            died mid-transfer / GC raced): re-queue the task and recover
+            any input that is genuinely gone."""
+            nonlocal last_progress
+            last_progress = time.perf_counter()
+            w.inflight.discard(tid)
+            if state.get(tid) == INFLIGHT:
+                state[tid] = READY
+            bad = {d for d in deps
+                   if state.get(d) == DONE and not store.durable(d)
+                   and alive_owner(d) is None}
+            if bad:
+                store.invalidate(bad)
+                recompute_lost(bad, bad, None)
+            # inputs may themselves be mid-recompute (an earlier recovery):
+            # wait for them instead of re-triggering loss detection
+            if state.get(tid) == READY and any(
+                    state.get(d) != DONE
+                    for d in graph.nodes[tid].all_deps):
+                state[tid] = PENDING
 
         def pump(timeout: float) -> None:
             nonlocal last_progress
@@ -511,19 +731,60 @@ class ClusterExecutor:
                     continue
                 verb = msg[0]
                 if verb == "done":
-                    on_done(w, msg[2], msg[3])
+                    on_done(w, msg[2], msg[3], msg[4], msg[5])
                 elif verb == "value":
                     on_value(w, msg[2], msg[3], msg[4])
+                elif verb == "deplost":
+                    on_deplost(w, msg[2], msg[3])
                 elif verb == "error":
                     if msg[3] == "MissingInput":
                         # caller-error contract: never wrapped in TaskFailed
                         error.append(MissingInput(msg[4]))
                     else:
+                        node = graph.nodes.get(msg[2])
                         error.append(TaskFailed(
-                            msg[2], graph.nodes[msg[2]].name,
+                            msg[2], node.name if node else f"#{msg[2]}",
                             RuntimeError(f"{msg[3]}: {msg[4]}")))
                 elif verb == "bye":
                     pass
+
+        def collect_finals() -> bool:
+            """All tasks done: materialize ``required`` values into the
+            driver cache — decoding published handles directly (no pipe
+            traffic), fetching handles for the rest.  Returns True when
+            everything required is cached."""
+            nonlocal last_progress
+            missing = [t for t in required if t not in store.cache]
+            if not missing:
+                return True
+            for t in missing:
+                h = store.handles.get(t)
+                if h is not None:
+                    try:
+                        value = serde.resolve(h)
+                    except serde.TransferLost:
+                        store.invalidate({t})
+                        recompute_lost({t}, {t}, None)
+                        return False
+                    store.cache_value(t, value)
+                    d = serde.direct_nbytes(h)
+                    if d > 0:
+                        stats["bytes_direct"] += d
+                        stats["bytes_moved"] += d
+                        stats["transfers_direct"] += 1
+                    last_progress = time.perf_counter()
+                    continue
+                if t in fetching:
+                    continue
+                ow = alive_owner(t)
+                if ow is None:
+                    store.invalidate({t})
+                    recompute_lost({t}, {t}, None)
+                    return False
+                if not safe_send(workers[ow], ("fetch", t)):
+                    return False        # recovery ran; resume main loop
+                fetching[t] = ow
+            return not [t for t in required if t not in store.cache]
 
         def check_commands() -> None:
             with self._cmd_lock:
@@ -546,17 +807,8 @@ class ClusterExecutor:
             while not error:
                 check_commands()
                 if len(done) >= n_total:
-                    missing = [t for t in required if t not in store.cache]
-                    if not missing:
+                    if collect_finals():
                         break
-                    for t in missing:       # final collection
-                        if t in fetching:
-                            continue
-                        owner = store.location(t)
-                        if owner is not None and workers[owner].alive:
-                            if not safe_send(workers[owner], ("fetch", t)):
-                                break       # recovery ran; resume main loop
-                            fetching.add(t)
                 else:
                     dispatch()
                 pump(timeout=0.02)
@@ -571,7 +823,7 @@ class ClusterExecutor:
                         f"(done {len(done)}/{n_total}, states "
                         f"{ {s: sorted(ts)[:8] for s, ts in by_state.items() if s != DONE} }, "
                         f"waiting {dict(list(waiting.items())[:4])}, "
-                        f"fetching {sorted(fetching)[:8]}, "
+                        f"fetching {dict(list(fetching.items())[:8])}, "
                         f"inflight {[sorted(w.inflight) for w in workers.values()]})"))
         finally:
             self._active = False
@@ -585,6 +837,13 @@ class ClusterExecutor:
                 w.proc.join(timeout=5.0)
                 if w.proc.is_alive():
                     w.proc.terminate()
+                    w.proc.join(timeout=5.0)
+            # segment hygiene: free tracked handles, then sweep the run's
+            # /dev/shm prefix for orphans (workers killed mid-publish)
+            store.release_all()
+            serde.sweep_segments(seg_prefix)
+            if peer_dir is not None:
+                shutil.rmtree(peer_dir, ignore_errors=True)
             self.wall_time = time.perf_counter() - t0
 
         if error:

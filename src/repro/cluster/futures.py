@@ -5,7 +5,10 @@ A :class:`ClusterFuture` is the driver-side handle for one submitted
 background driver thread per submission; every run gets a fresh worker
 pool, and submissions to the SAME executor queue behind its run lock (its
 stats are per-run) — use one executor per job for true concurrency.  The
-future just carries completion state across threads.
+future carries completion state across threads plus a snapshot of the
+run's ``stats`` (including the data-plane counters ``bytes_moved`` /
+``transfers_direct`` / ``transfers_driver``) and ``wall_time``, so callers
+of overlapping submissions don't race on the executor's per-run fields.
 """
 from __future__ import annotations
 
@@ -20,10 +23,16 @@ class ClusterFuture:
         self._event = threading.Event()
         self._result: Optional[Dict[int, Any]] = None
         self._error: Optional[BaseException] = None
+        self._stats: Dict[str, int] = {}
+        self._wall_time = 0.0
 
     # -- producer side ------------------------------------------------------
-    def _set_result(self, value: Dict[int, Any]) -> None:
+    def _set_result(self, value: Dict[int, Any],
+                    stats: Optional[Dict[str, int]] = None,
+                    wall_time: float = 0.0) -> None:
         self._result = value
+        self._stats = dict(stats or {})
+        self._wall_time = wall_time
         self._event.set()
 
     def _set_error(self, exc: BaseException) -> None:
@@ -46,6 +55,15 @@ class ClusterFuture:
     def exception(self, timeout: Optional[float] = None):
         self._event.wait(timeout)
         return self._error
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        """Per-run stats snapshot (empty until the run completes)."""
+        return dict(self._stats)
+
+    @property
+    def wall_time(self) -> float:
+        return self._wall_time
 
 
 def gather(*futures: ClusterFuture,

@@ -1,35 +1,51 @@
-"""Driver-side object store: ownership tracking + value cache + GC.
+"""Driver-side object store: replica tracking + handles + value cache + GC.
 
 The driver does not hold every value — workers do (see
-:mod:`repro.cluster.worker`).  What the driver tracks is *where* each task's
-result lives (``owner``), which values it has pulled into its own durable
-cache (``cache``), and how many consumers still need each value
-(``consumers_left``, driving the optional distributed GC in
-``outputs_only`` runs).
+:mod:`repro.cluster.worker`).  What the driver tracks is *where* each
+task's result lives, and since the zero-copy data plane a value can live in
+several places at once:
 
-This split is what gives the fault-tolerance story its teeth:
+* ``replicas[tid]`` — the set of workers holding the decoded value in
+  their local stores (the producer, plus every consumer a transfer landed
+  on).  A value is only *lost* when its **last** live replica dies and no
+  durable copy exists — the post-transfer replica bug class the PR-1
+  single-``owner`` field had.
+* ``handles[tid]`` — the published transfer handle
+  (:class:`~repro.cluster.serde.Encoded` or ``PeerRef``).  Shm/inline
+  handles are **durable**: the payload lives in tmpfs or driver memory and
+  survives the producing worker's death.  Peer handles die with their
+  worker and are dropped in :meth:`drop_worker`.
+* ``cache[tid]`` — values the driver has materialized (final collection);
+  always durable.
+* ``sizes[tid]`` — payload bytes reported at completion, feeding the
+  locality-aware placement score in the executor's dispatch loop and the
+  ``data_sizes`` comm-cost in :func:`repro.core.scheduler.list_schedule`.
 
-* a value in ``cache`` survives any worker death (driver memory is the
-  durable tier here; a sharded/replicated store is the scale-out follow-up);
-* a value known only to a dead worker is **lost** and must be recomputed
-  via :func:`repro.core.lineage.recovery_plan`;
-* a value dropped by GC is gone *everywhere* — recovery for a later loss
-  walks past it and recomputes it too, exactly the Spark-lineage semantics
-  the paper points at.
+Fault-tolerance contract (unchanged from PR-1 in spirit): a value with no
+live replica, no durable handle, and no cached copy must be recomputed via
+:func:`repro.core.lineage.recovery_plan`; a value dropped by GC is gone
+*everywhere* and recovery walks past it.  The store is also the segment
+refcount authority: :meth:`invalidate` releases a handle's shared-memory
+segments, so the ``consumers_left`` GC unlinks ``/dev/shm`` entries the
+moment the last consumer finishes.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Set
+from typing import Any, Dict, Set
 
 from repro.core.graph import TaskGraph
+
+from . import serde
 
 
 class DriverObjectStore:
     def __init__(self, graph: TaskGraph) -> None:
         self.graph = graph
-        self.cache: Dict[int, Any] = {}         # driver-held values
-        self.owner: Dict[int, int] = {}         # tid -> worker id
-        self.owned: Dict[int, Set[int]] = {}    # worker id -> {tid}
+        self.cache: Dict[int, Any] = {}          # driver-held decoded values
+        self.replicas: Dict[int, Set[int]] = {}  # tid -> worker ids holding it
+        self.handles: Dict[int, serde.Handle] = {}   # tid -> published handle
+        self.sizes: Dict[int, int] = {}          # tid -> payload bytes
+        self.known: Dict[int, Set[int]] = {}     # worker id -> {tid} it holds
         succ = graph.successors()
         self.successors = succ
         self.consumers_left: Dict[int, int] = {
@@ -37,44 +53,86 @@ class DriverObjectStore:
 
     # ------------------------------------------------------------ ownership
     def add_worker(self, wid: int) -> None:
-        self.owned.setdefault(wid, set())
+        self.known.setdefault(wid, set())
 
-    def record(self, tid: int, wid: int) -> None:
+    def record(self, tid: int, wid: int, nbytes: int = 0) -> None:
         """Task ``tid`` completed on worker ``wid``; value lives there."""
-        self.owner[tid] = wid
-        self.owned.setdefault(wid, set()).add(tid)
+        self.replicas.setdefault(tid, set()).add(wid)
+        self.known.setdefault(wid, set()).add(tid)
+        if nbytes:
+            self.sizes[tid] = nbytes
+
+    def record_replica(self, tid: int, wid: int) -> None:
+        """A transfer landed the (pure, hence identical) value of ``tid``
+        in ``wid``'s local store too — a real copy, usable for future
+        locality and surviving the original owner's death."""
+        self.replicas.setdefault(tid, set()).add(wid)
+        self.known.setdefault(wid, set()).add(tid)
+
+    def has_replica(self, tid: int, wid: int) -> bool:
+        return wid in self.replicas.get(tid, ())
+
+    def locations(self, tid: int) -> Set[int]:
+        return self.replicas.get(tid, set())
+
+    def set_handle(self, tid: int, handle: serde.Handle) -> None:
+        old = self.handles.get(tid)
+        if old is not None and old is not handle:
+            serde.release(old)
+        self.handles[tid] = handle
+
+    def durable(self, tid: int) -> bool:
+        h = self.handles.get(tid)
+        return tid in self.cache or (h is not None and serde.is_durable(h))
 
     def cache_value(self, tid: int, value: Any) -> None:
         self.cache[tid] = value
 
-    def location(self, tid: int) -> Optional[int]:
-        return self.owner.get(tid)
-
     def available(self, alive: Set[int]) -> Set[int]:
-        """Tids whose values still exist somewhere (driver or live worker)."""
+        """Tids whose values still exist somewhere: driver cache, a durable
+        published handle (tmpfs / driver memory), or a live replica."""
         out = set(self.cache)
+        out |= {t for t, h in self.handles.items() if serde.is_durable(h)}
         for wid in alive:
-            out |= self.owned.get(wid, set())
+            out |= self.known.get(wid, set())
         return out
 
     # -------------------------------------------------------------- failure
     def drop_worker(self, wid: int) -> Set[int]:
         """Worker died: forget its store.  Returns the tids whose values are
-        now *lost* (they lived only there — not in the driver cache)."""
-        held = self.owned.pop(wid, set())
-        lost = {t for t in held if t not in self.cache}
+        now *lost* — no surviving replica AND no durable copy.  A value
+        replicated by an earlier transfer, published to shared memory, or
+        cached on the driver is NOT lost (the replica-set fix: PR-1's single
+        ``owner`` field reported any multiply-held value as lost)."""
+        held = self.known.pop(wid, set())
+        lost: Set[int] = set()
         for t in held:
-            if self.owner.get(t) == wid:
-                del self.owner[t]
+            reps = self.replicas.get(t)
+            if reps is not None:
+                reps.discard(wid)
+                if not reps:
+                    del self.replicas[t]
+            h = self.handles.get(t)
+            if isinstance(h, serde.PeerRef) and h.wid == wid:
+                del self.handles[t]          # peer handle died with it
+            if not self.replicas.get(t) and not self.durable(t):
+                lost.add(t)
         return lost
 
     def invalidate(self, tids: Set[int]) -> None:
-        """Remove every trace of ``tids`` (they will be recomputed)."""
+        """Remove every trace of ``tids`` (they will be recomputed), and
+        unlink any shared-memory segments their handles held."""
         for t in tids:
             self.cache.pop(t, None)
-            w = self.owner.pop(t, None)
-            if w is not None:
-                self.owned.get(w, set()).discard(t)
+            serde.release(self.handles.pop(t, None))
+            for wid in self.replicas.pop(t, set()):
+                self.known.get(wid, set()).discard(t)
+
+    def release_all(self) -> None:
+        """End of run: free every outstanding handle's segments."""
+        for h in self.handles.values():
+            serde.release(h)
+        self.handles.clear()
 
     # ------------------------------------------------------------------- GC
     def consumed(self, tid: int) -> None:

@@ -1,0 +1,466 @@
+"""Zero-copy serde for the cluster data plane.
+
+PR-1 moved every cross-worker value through the driver as a double-pickled
+pipe payload (worker → driver pipe → driver → consumer pipe): four
+serialization copies plus two kernel pipe traversals per transfer.  This
+module replaces the *payload* path with handle passing:
+
+* :func:`encode` serializes a task value with **pickle protocol 5** and
+  captures its out-of-band buffers (numpy/jax array bodies).  Buffers at or
+  above ``threshold`` are written once into a
+  :mod:`multiprocessing.shared_memory` segment; the returned
+  :class:`Encoded` carries only the pickle *stream* and
+  :class:`ShmRef` handles, so what crosses the driver pipe is a few hundred
+  bytes regardless of payload size.  Large non-array payloads (big
+  ``bytes``, deeply pickled objects) are covered too: when the pickle
+  stream itself exceeds the threshold it is spilled to a segment as well.
+* :func:`decode` attaches the named segments, materializes a
+  process-private copy, and unmaps.  Consumers therefore never hold a
+  mapping after decode, which is what lets the driver unlink segments the
+  moment refcounts drain (``consumers_left`` GC) without use-after-unmap
+  hazards — the crash-safety property the kill-mid-transfer tests pin.
+* :class:`PeerRef` + :class:`PeerServer` are the fallback channel when
+  POSIX shared memory is unavailable: every worker binds a unix-domain
+  socket and serves its local store; a consumer resolves a ``PeerRef`` by
+  connecting to the owner directly.  Bytes still bypass the driver pipe.
+
+Ownership/lifecycle contract: the **driver is the single unlink
+authority**.  Creating or attaching a segment immediately unregisters it
+from this process's ``resource_tracker`` (which would otherwise unlink
+segments at the *creator's* exit — exactly wrong when a worker produces a
+segment the driver must outlive).  The driver unlinks via
+:func:`release` when a value's refcount drains, and sweeps any orphans by
+run-scoped name prefix (:func:`sweep_segments`) on exit, so a SIGKILL'd
+worker can never leak ``/dev/shm`` entries past the run.
+"""
+from __future__ import annotations
+
+import glob
+import os
+import pickle
+import socket
+import struct
+import sys
+import threading
+import uuid
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Union
+
+SHM_THRESHOLD = 1 << 16     # buffers >= 64 KiB go out-of-band to /dev/shm
+_SHM_DIR = "/dev/shm"       # POSIX shm backing dir (Linux); probed, not assumed
+
+TRANSPORTS = ("auto", "shm", "sock", "driver")
+
+
+class TransferLost(RuntimeError):
+    """A handle could not be resolved (segment unlinked / peer gone).
+
+    This is a *recoverable* data-plane failure: the caller treats the value
+    as lost and falls back to lineage recovery, exactly like a worker death.
+    """
+
+
+# --------------------------------------------------------------------- refs
+@dataclass(frozen=True)
+class ShmRef:
+    """Name + length of one shared-memory segment (picklable, ~100 B)."""
+    name: str
+    nbytes: int
+
+
+@dataclass(frozen=True)
+class PeerRef:
+    """Handle to a value held in a peer worker's store, reachable over that
+    worker's unix socket.  NOT durable — dies with the owning process."""
+    addr: str
+    tid: int
+    nbytes: int
+    wid: int
+
+
+@dataclass
+class Encoded:
+    """A serialized value: pickle stream + out-of-band buffers, each either
+    inline ``bytes`` (small) or a :class:`ShmRef` (large, zero-copy path).
+    Durable: inline parts live wherever the object lives; shm parts live in
+    tmpfs and survive the death of the process that wrote them."""
+    data: Union[bytes, ShmRef]
+    buffers: List[Union[bytes, ShmRef]] = field(default_factory=list)
+    nbytes: int = 0             # total payload size (for stats/placement)
+
+    def pipe_nbytes(self) -> int:
+        """Bytes this object adds to a driver-pipe message."""
+        n = 64 if isinstance(self.data, ShmRef) else len(self.data)
+        for b in self.buffers:
+            n += 64 if isinstance(b, ShmRef) else len(b)
+        return n
+
+    def direct_nbytes(self) -> int:
+        """Bytes moved out-of-band through shared memory."""
+        n = self.data.nbytes if isinstance(self.data, ShmRef) else 0
+        for b in self.buffers:
+            if isinstance(b, ShmRef):
+                n += b.nbytes
+        return n
+
+    def shm_refs(self) -> List[ShmRef]:
+        refs = [self.data] if isinstance(self.data, ShmRef) else []
+        refs.extend(b for b in self.buffers if isinstance(b, ShmRef))
+        return refs
+
+
+Handle = Union[Encoded, PeerRef]
+
+
+def is_durable(handle: Handle) -> bool:
+    """Durable handles survive the owning worker's death (driver memory or
+    tmpfs); a PeerRef is only as alive as its worker."""
+    return isinstance(handle, Encoded)
+
+
+def pipe_nbytes(handle: Handle) -> int:
+    return handle.pipe_nbytes() if isinstance(handle, Encoded) else 64
+
+
+def direct_nbytes(handle: Handle) -> int:
+    return handle.direct_nbytes() if isinstance(handle, Encoded) \
+        else handle.nbytes
+
+
+# ------------------------------------------------------------ shm plumbing
+def _untrack(seg) -> None:
+    """Remove ``seg`` from this process's resource_tracker: lifecycle is
+    driver-owned, and the tracker would otherwise unlink at *this*
+    process's exit (CPython registers on both create and attach)."""
+    try:
+        from multiprocessing import resource_tracker
+        resource_tracker.unregister(getattr(seg, "_name", seg.name),
+                                    "shared_memory")
+    except Exception:
+        pass
+
+
+_SHM_OK: Optional[bool] = None
+
+
+def shm_available() -> bool:
+    """Probe (once) whether POSIX shared memory works in this environment
+    (containers sometimes mount no /dev/shm, or deny shm_open)."""
+    global _SHM_OK
+    if _SHM_OK is None:
+        try:
+            from multiprocessing.shared_memory import SharedMemory
+            probe = SharedMemory(create=True, size=1,
+                                 name=f"rrprobe{os.getpid():x}"
+                                      f"{uuid.uuid4().hex[:6]}")
+            probe.unlink()      # unlink() also unregisters from the tracker
+            probe.close()
+            _SHM_OK = True
+        except Exception:
+            _SHM_OK = False
+    return _SHM_OK
+
+
+def resolve_transport(transport: str) -> str:
+    """Map ``auto`` to the best channel this host supports."""
+    if transport not in TRANSPORTS:
+        raise ValueError(f"unknown transport {transport!r} "
+                         f"(expected one of {TRANSPORTS})")
+    if transport != "auto":
+        return transport
+    if shm_available():
+        return "shm"
+    if hasattr(socket, "AF_UNIX"):
+        return "sock"
+    return "driver"
+
+
+class SegmentNamer:
+    """Generates unique, run-scoped segment names (``<prefix>_<n>``) so the
+    driver can sweep every segment of a run by glob, even orphans whose
+    creating worker was SIGKILL'd before reporting the handle."""
+
+    def __init__(self, prefix: str) -> None:
+        self.prefix = prefix
+        self._n = 0
+        self._lock = threading.Lock()
+
+    def __call__(self) -> str:
+        with self._lock:
+            self._n += 1
+            return f"{self.prefix}_{self._n}"
+
+
+def _write_segment(mv: memoryview, name: str) -> ShmRef:
+    from multiprocessing.shared_memory import SharedMemory
+    seg = SharedMemory(create=True, size=max(1, mv.nbytes), name=name)
+    _untrack(seg)
+    seg.buf[:mv.nbytes] = mv
+    seg.close()
+    return ShmRef(name, mv.nbytes)
+
+
+def _read_segment(ref: ShmRef) -> bytearray:
+    from multiprocessing.shared_memory import SharedMemory
+    try:
+        seg = SharedMemory(name=ref.name)
+    except (FileNotFoundError, OSError) as e:
+        raise TransferLost(f"shm segment {ref.name} gone: {e!r}") from e
+    _untrack(seg)
+    try:
+        # bytearray keeps copy-decoded arrays writable (backend parity)
+        return bytearray(seg.buf[:ref.nbytes])
+    finally:
+        seg.close()
+
+
+def _unlink_ref(ref: ShmRef) -> None:
+    path = os.path.join(_SHM_DIR, ref.name)
+    try:
+        os.unlink(path)
+        return
+    except FileNotFoundError:
+        return
+    except OSError:
+        pass
+    try:            # non-Linux fallback: attach + unlink through the API
+        from multiprocessing.shared_memory import SharedMemory
+        seg = SharedMemory(name=ref.name)   # attach registers; unlink()
+        seg.unlink()                        # unregisters — tracker balanced
+        seg.close()
+    except Exception:
+        pass
+
+
+def release(handle: Optional[Handle]) -> None:
+    """Driver-side: free a handle's shared-memory segments (idempotent)."""
+    if isinstance(handle, Encoded):
+        for ref in handle.shm_refs():
+            _unlink_ref(ref)
+
+
+def sweep_segments(prefix: str) -> int:
+    """Unlink every ``/dev/shm`` segment of a run (by name prefix).  Run at
+    driver exit: catches orphans from workers killed mid-publish, whose
+    handles never reached the driver.  Returns the number unlinked."""
+    if not prefix or not os.path.isdir(_SHM_DIR):
+        return 0
+    n = 0
+    for path in glob.glob(os.path.join(_SHM_DIR, glob.escape(prefix) + "*")):
+        try:
+            os.unlink(path)
+            n += 1
+        except OSError:
+            pass
+    return n
+
+
+# ------------------------------------------------------------ encode/decode
+def encode(value: Any, *, transport: str = "shm",
+           threshold: int = SHM_THRESHOLD,
+           namer: Optional[Callable[[], str]] = None) -> Encoded:
+    """Serialize ``value`` with pickle protocol 5; spill large buffers (and
+    a large pickle stream) to shared memory when ``transport == 'shm'``.
+    Raises whatever pickle raises for unserializable values — callers turn
+    that into a task error, never a worker death."""
+    threshold = max(1, threshold)
+    raw: List[pickle.PickleBuffer] = []
+    data = pickle.dumps(value, protocol=5, buffer_callback=raw.append)
+    use_shm = transport == "shm" and shm_available()
+    gen = namer or (lambda: f"rr{os.getpid():x}{uuid.uuid4().hex[:8]}")
+    total = len(data)
+    buffers: List[Union[bytes, ShmRef]] = []
+    for pb in raw:
+        mv = pb.raw()
+        total += mv.nbytes
+        if use_shm and mv.nbytes >= threshold:
+            buffers.append(_write_segment(mv, gen()))
+        else:
+            # bytearray, not bytes: reconstructed arrays stay writable,
+            # matching what the thread/sequential backends hand back
+            buffers.append(bytearray(mv))
+        pb.release()
+    stream: Union[bytes, ShmRef] = data
+    if use_shm and len(data) >= threshold:
+        stream = _write_segment(memoryview(data), gen())
+    return Encoded(stream, buffers, total)
+
+
+class SegmentKeeper:
+    """Pins shared-memory attachments alive for zero-copy decoded values.
+
+    A zero-copy decode reconstructs arrays *viewing* the mapped segment, and
+    a pure task's output may alias its input (identity, slicing), so a held
+    mapping can never be safely unmapped — it is pinned for the life of the
+    process and reclaimed by the OS at exit (``seg.close`` is disarmed so
+    ``SharedMemory.__del__`` doesn't raise ``BufferError`` over the live
+    array views at interpreter shutdown).  Unlinking (the driver's job) is
+    safe while held: POSIX keeps the pages until the last mapping dies.
+    Workers use a keeper; the driver, which outlives runs, always takes the
+    copying path instead.
+    """
+
+    def __init__(self) -> None:
+        self._segs: List[Any] = []
+
+    def hold(self, seg: Any) -> None:
+        seg.close = lambda: None     # pinned: only process exit unmaps
+        self._segs.append(seg)
+
+    def close(self) -> None:
+        """Drop the pin bookkeeping (mappings live until process exit)."""
+        self._segs.clear()
+
+
+def _attach_view(ref: ShmRef, keeper: SegmentKeeper) -> memoryview:
+    from multiprocessing.shared_memory import SharedMemory
+    try:
+        seg = SharedMemory(name=ref.name)
+    except (FileNotFoundError, OSError) as e:
+        raise TransferLost(f"shm segment {ref.name} gone: {e!r}") from e
+    _untrack(seg)
+    keeper.hold(seg)
+    return seg.buf[:ref.nbytes]
+
+
+def decode(enc: Encoded, keeper: Optional[SegmentKeeper] = None) -> Any:
+    """Reconstruct the value from an :class:`Encoded`.
+
+    Without a ``keeper`` shared-memory parts are copied out and unmapped
+    immediately — the safe mode for the long-lived driver, where eager
+    unlink must never race a held mapping.  With a ``keeper`` the decode is
+    **zero-copy**: array buffers alias the mapping (exactly the object
+    sharing the thread backend gets for free), and the keeper pins the
+    attachment until process exit.  Raises :class:`TransferLost` if a
+    segment was already unlinked."""
+    if keeper is None:
+        data: Any = _read_segment(enc.data) \
+            if isinstance(enc.data, ShmRef) else enc.data
+        buffers = [_read_segment(b) if isinstance(b, ShmRef) else b
+                   for b in enc.buffers]
+    else:
+        data = _attach_view(enc.data, keeper) \
+            if isinstance(enc.data, ShmRef) else enc.data
+        buffers = [_attach_view(b, keeper) if isinstance(b, ShmRef) else b
+                   for b in enc.buffers]
+    return pickle.loads(data, buffers=buffers)
+
+
+def resolve(handle: Handle,
+            keeper: Optional[SegmentKeeper] = None) -> Any:
+    """Materialize any handle: decode shm/inline, or pull from a peer."""
+    if isinstance(handle, Encoded):
+        return decode(handle, keeper)
+    if isinstance(handle, PeerRef):
+        return peer_fetch(handle)
+    raise TypeError(f"not a transfer handle: {type(handle).__name__}")
+
+
+# ------------------------------------------------------------- peer channel
+_LEN = struct.Struct("<q")
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    chunks = []
+    while n:
+        chunk = sock.recv(min(n, 1 << 20))
+        if not chunk:
+            raise ConnectionError("peer closed mid-message")
+        chunks.append(chunk)
+        n -= len(chunk)
+    return b"".join(chunks)
+
+
+class PeerServer:
+    """Worker-side unix-socket server: peers (and the driver, for final
+    collection) pull values straight from this worker's local store,
+    bypassing the driver pipe entirely.  One request per connection:
+    ``<tid:int64>`` in, ``<len:int64><pickled Encoded>`` out (len == -1
+    when the value is not in the store)."""
+
+    def __init__(self, path: str, store: Dict[int, Any]) -> None:
+        self.path = path
+        self._store = store
+        self._sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        self._sock.bind(path)
+        self._sock.listen(16)
+        self._closed = False
+        threading.Thread(target=self._accept_loop, daemon=True,
+                         name=f"peer-server-{os.path.basename(path)}").start()
+
+    def _accept_loop(self) -> None:
+        while not self._closed:
+            try:
+                conn, _ = self._sock.accept()
+            except OSError:
+                return
+            threading.Thread(target=self._serve_one, args=(conn,),
+                             daemon=True).start()
+
+    def _serve_one(self, conn: socket.socket) -> None:
+        try:
+            with conn:
+                (tid,) = _LEN.unpack(_recv_exact(conn, _LEN.size))
+                if tid not in self._store:
+                    conn.sendall(_LEN.pack(-1))
+                    return
+                enc = encode(self._store[tid], transport="driver")
+                blob = pickle.dumps(enc, protocol=5)
+                conn.sendall(_LEN.pack(len(blob)) + blob)
+        except Exception:
+            pass        # consumer sees a broken stream -> TransferLost
+
+    def close(self) -> None:
+        self._closed = True
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+        try:
+            os.unlink(self.path)
+        except OSError:
+            pass
+
+
+def peer_fetch(ref: PeerRef, timeout: float = 30.0) -> Any:
+    """Pull ``ref.tid`` from the owning worker's socket.  Any failure is a
+    :class:`TransferLost` — the owner died or dropped the value."""
+    try:
+        with socket.socket(socket.AF_UNIX, socket.SOCK_STREAM) as sock:
+            sock.settimeout(timeout)
+            sock.connect(ref.addr)
+            sock.sendall(_LEN.pack(ref.tid))
+            (n,) = _LEN.unpack(_recv_exact(sock, _LEN.size))
+            if n < 0:
+                raise TransferLost(
+                    f"peer {ref.addr} no longer holds task {ref.tid}")
+            blob = _recv_exact(sock, n)
+    except TransferLost:
+        raise
+    except (OSError, ConnectionError, socket.timeout) as e:
+        raise TransferLost(
+            f"peer {ref.addr} unreachable for task {ref.tid}: {e!r}") from e
+    return decode(pickle.loads(blob))
+
+
+# ------------------------------------------------------------------- sizing
+def payload_nbytes(value: Any) -> int:
+    """Cheap recursive payload-size estimate (exact for array leaves via
+    ``.nbytes``); recorded per completed task and fed to the
+    transfer-cost-aware placement score."""
+    nb = getattr(value, "nbytes", None)
+    if isinstance(nb, int):
+        return nb
+    if isinstance(value, (bytes, bytearray, memoryview)):
+        return len(value)
+    if isinstance(value, (str,)):
+        return len(value)
+    if isinstance(value, (list, tuple, set, frozenset)):
+        return 64 + sum(payload_nbytes(v) for v in value)
+    if isinstance(value, dict):
+        return 64 + sum(payload_nbytes(k) + payload_nbytes(v)
+                        for k, v in value.items())
+    try:
+        return sys.getsizeof(value)
+    except Exception:
+        return 64

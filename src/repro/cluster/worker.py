@@ -2,36 +2,48 @@
 
 A worker is one OS process connected to the driver by a single duplex pipe.
 It owns a *local object store* (``{tid: value}``) holding the results of
-every task it has executed and not yet dropped; values only cross the pipe
-when the driver explicitly asks (dispatch-time transfer of remote inputs, or
-an end-of-run / output fetch).  This is what makes worker loss *mean*
-something: results that lived only in a killed worker's store are gone and
-must be recomputed from lineage.
+every task it has executed — plus, since the zero-copy data plane, a
+replica of every transferred input it has resolved (reported back to the
+driver in the ``done`` message so replica sets stay exact).  Bulk values no
+longer cross the pipe: a ``fetch`` is answered with a small *handle*
+(:class:`~repro.cluster.serde.Encoded` shared-memory refs, or a ``PeerRef``
+to this worker's unix socket when shm is unavailable), and the consumer
+maps/pulls the payload directly — worker-to-worker, driver untouched.
 
 Message protocol (tuples; first element is the verb):
 
   driver -> worker
     ("run",   tid, extra)   execute task ``tid``; ``extra`` maps dep tid ->
-                            value for inputs not in this worker's store
-    ("fetch", tid)          reply with the stored value of ``tid``
+                            transfer handle for inputs not already in this
+                            worker's store
+    ("fetch", tid)          publish ``tid`` and reply with its handle
     ("drop",  tids)         free stored values (driver-coordinated GC)
     ("stop",)               drain and exit
 
   worker -> driver
-    ("done",  wid, tid, wall)          task finished; value stays local
-    ("error", wid, tid, name, repr)    task raised
-    ("value", wid, tid, found, value)  fetch reply
-    ("bye",   wid)                     shutdown ack
+    ("done",    wid, tid, wall, nbytes, replicated)
+                            task finished; value stays local.  ``nbytes``
+                            feeds locality-aware placement; ``replicated``
+                            lists dep tids this worker now also holds.
+    ("error",   wid, tid, name, repr)    task raised; ``SerializationError``
+                            means the *value* could not be published/moved —
+                            surfaced as a task error, never a worker death
+    ("value",   wid, tid, found, handle) fetch reply (handle, not payload)
+    ("deplost", wid, tid, deps)          transfer handles in a ``run`` could
+                            not be resolved (owner died mid-transfer);
+                            driver re-queues the task and recovers the deps
+    ("bye",     wid)                     shutdown ack
 
 Workers are started with the ``fork`` start method, so the (closure-bearing,
 generally unpicklable) :class:`~repro.core.graph.TaskGraph` and the run's
 ``inputs`` dict are inherited by memory copy — the paper's "ship the program
 to every node" step costs one fork, and per-task messages carry only ids and
-data values (which must be picklable, as in any distributed system).
+handles (a few hundred bytes, independent of payload size).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+import os
+from typing import Any, Dict, List, Optional
 
 from repro.core.executor import _run_node as run_node   # noqa: F401 — the
 # worker executes nodes with the EXACT core implementation so both backends
@@ -39,18 +51,25 @@ from repro.core.executor import _run_node as run_node   # noqa: F401 — the
 # it by name on its side)
 from repro.core.graph import TaskGraph
 
+from . import serde
+
 
 def worker_main(wid: int, conn, graph: TaskGraph,
-                inputs: Optional[Dict[str, Any]]) -> None:
+                inputs: Optional[Dict[str, Any]],
+                transport: str = "driver",
+                shm_threshold: int = serde.SHM_THRESHOLD,
+                seg_prefix: str = "",
+                peer_dir: Optional[str] = None) -> None:
     """Worker process body: reader thread + sender thread + compute loop.
 
-    Deadlock-freedom argument (values can exceed the kernel pipe buffer):
-    the reader thread does *nothing but recv*, so the driver's blocking
-    dispatch-sends always drain; the sender thread does *nothing but send*
-    from an outbox queue, so neither the reader nor a long-running task can
-    ever stall an outgoing reply; the driver's pump loop drains worker
-    output whenever it isn't mid-send.  Any single blocked pipe therefore
-    unblocks without waiting on this process's compute.
+    Deadlock-freedom argument (handles are small, but driver-transport
+    payloads can still exceed the kernel pipe buffer): the reader thread
+    does *nothing but recv*, so the driver's blocking dispatch-sends always
+    drain; the sender thread does *nothing but send* from an outbox queue,
+    so neither the reader nor a long-running task can ever stall an
+    outgoing reply; the driver's pump loop drains worker output whenever it
+    isn't mid-send.  Any single blocked pipe therefore unblocks without
+    waiting on this process's compute.
 
     The reader answers ``fetch``/``drop`` directly (peers' input transfers
     are served while a task is running); ``run``/``stop`` are queued for
@@ -62,8 +81,38 @@ def worker_main(wid: int, conn, graph: TaskGraph,
     import time
 
     store: Dict[int, Any] = {}
+    published: Dict[int, serde.Handle] = {}     # memoized publish per tid
+    keeper = serde.SegmentKeeper()      # pins zero-copy decoded mappings
     runq: "queue.SimpleQueue[tuple]" = queue.SimpleQueue()
     outq: "queue.SimpleQueue[Optional[tuple]]" = queue.SimpleQueue()
+    namer = serde.SegmentNamer(f"{seg_prefix}w{wid}") if seg_prefix else None
+
+    peer_server: Optional[serde.PeerServer] = None
+    if transport == "sock" and peer_dir:
+        try:
+            peer_server = serde.PeerServer(
+                os.path.join(peer_dir, f"w{wid}.sock"), store)
+        except OSError:
+            peer_server = None      # degrade to inline (driver) publishes
+
+    def publish(tid: int) -> serde.Handle:
+        """Produce (and memoize) the transfer handle for a stored value:
+        shm-backed Encoded, a PeerRef to this worker's socket, or inline
+        bytes for small values / driver transport."""
+        handle = published.get(tid)
+        if handle is not None:
+            return handle
+        value = store[tid]
+        if (peer_server is not None
+                and serde.payload_nbytes(value) >= shm_threshold):
+            handle = serde.PeerRef(peer_server.path, tid,
+                                   serde.payload_nbytes(value), wid)
+        else:
+            handle = serde.encode(
+                value, transport=transport if transport != "sock" else
+                "driver", threshold=shm_threshold, namer=namer)
+        published[tid] = handle
+        return handle
 
     def sender() -> None:
         while True:
@@ -74,6 +123,18 @@ def worker_main(wid: int, conn, graph: TaskGraph,
                 conn.send(msg)
             except (BrokenPipeError, OSError):
                 return
+            except Exception as e:      # unpicklable/oversized payload in a
+                # reply: report it as a task error instead of wedging the
+                # outbox (which would read as a dead worker to the driver)
+                tid = msg[2] if len(msg) > 2 and isinstance(msg[2], int) \
+                    else -1
+                try:
+                    conn.send(("error", wid, tid,
+                               "SerializationError", repr(e)))
+                except (BrokenPipeError, OSError):
+                    return
+                except Exception:
+                    pass
 
     def reader() -> None:
         while True:
@@ -85,10 +146,20 @@ def worker_main(wid: int, conn, graph: TaskGraph,
             verb = msg[0]
             if verb == "fetch":
                 tid = msg[1]
-                outq.put(("value", wid, tid, tid in store, store.get(tid)))
+                if tid not in store:
+                    outq.put(("value", wid, tid, False, None))
+                else:
+                    try:
+                        outq.put(("value", wid, tid, True, publish(tid)))
+                    except Exception as e:  # noqa: BLE001 — a value that
+                        # cannot be serialized must surface on the consumer's
+                        # future as a task error, not kill this worker
+                        outq.put(("error", wid, tid,
+                                  "SerializationError", repr(e)))
             elif verb == "drop":
                 for t in msg[1]:
                     store.pop(t, None)
+                    published.pop(t, None)
             else:                        # "run" / "stop"
                 runq.put(msg)
                 if verb == "stop":
@@ -103,21 +174,42 @@ def worker_main(wid: int, conn, graph: TaskGraph,
         msg = runq.get()
         verb = msg[0]
         if verb == "stop":
+            if peer_server is not None:
+                peer_server.close()
             outq.put(("bye", wid))
             outq.put(None)
             send_thread.join(timeout=5.0)
+            keeper.close()       # last mappings: safe, nothing runs after
             return
         if verb != "run":                # pragma: no cover — protocol bug
             raise RuntimeError(f"worker {wid}: unknown message {verb!r}")
         _, tid, extra = msg
         t0 = time.perf_counter()
         try:
-            table = dict(extra)
+            table: Dict[int, Any] = {}
+            lost: List[int] = []
+            replicated: List[int] = []
+            for d, handle in extra.items():
+                try:        # zero-copy: arrays view the mapped segment
+                    table[d] = serde.resolve(handle, keeper)
+                except serde.TransferLost:
+                    lost.append(d)
+            if lost:
+                # owner died (or GC raced) between dispatch and resolve:
+                # hand the task back; the driver recovers the inputs
+                outq.put(("deplost", wid, tid, lost))
+                continue
+            for d, v in table.items():   # keep transferred inputs: replicas
+                store[d] = v
+                published.pop(d, None)
+                replicated.append(d)
             for d in graph.nodes[tid].all_deps:
                 if d not in table:
                     table[d] = store[d]
             value = run_node(graph, tid, table, inputs)
             store[tid] = value
-            outq.put(("done", wid, tid, time.perf_counter() - t0))
+            published.pop(tid, None)     # recompute invalidates old handle
+            outq.put(("done", wid, tid, time.perf_counter() - t0,
+                      serde.payload_nbytes(value), replicated))
         except BaseException as e:       # noqa: BLE001 — shipped to driver
             outq.put(("error", wid, tid, type(e).__name__, repr(e)))

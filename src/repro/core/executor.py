@@ -84,6 +84,13 @@ def execute_sequential(graph: TaskGraph,
     return results
 
 
+# threads share one address space, so the data-plane counters every backend
+# reports (see ClusterExecutor) are structurally zero here — "zero-copy"
+# is the hardware default in-process
+_THREAD_STATS = {"steals": 0, "recomputed": 0, "bytes_moved": 0,
+                 "transfers_direct": 0, "transfers_driver": 0}
+
+
 class ThreadedExecutor:
     """Work-stealing thread-pool executor.
 
@@ -103,7 +110,7 @@ class ThreadedExecutor:
             raise ValueError("n_workers >= 1")
         self.n_workers = n_workers
         self.fail_task = fail_task
-        self.stats = {"steals": 0, "recomputed": 0}
+        self.stats = dict(_THREAD_STATS)
         self.wall_time = 0.0
 
     def run(self, graph: TaskGraph,
@@ -121,7 +128,7 @@ class ThreadedExecutor:
         inflight: Set[int] = set()
         lost: Set[int] = set()        # tids already failure-injected once
         errors: List[BaseException] = []
-        stats = self.stats = {"steals": 0, "recomputed": 0}
+        stats = self.stats = dict(_THREAD_STATS)
 
         def ready_p(tid: int) -> bool:
             return (tid not in results and tid not in inflight
@@ -226,10 +233,32 @@ def make_executor(backend: str, n_workers: int, **kw) -> Executor:
 
 def run_graph(graph: TaskGraph, n_workers: int = 1,
               inputs: Optional[Dict[str, Any]] = None,
-              backend: str = "thread", **kw) -> Dict[int, Any]:
+              backend: str = "thread", with_report: bool = False, **kw):
+    """Run ``graph`` on the selected backend.
+
+    ``with_report=True`` returns ``(results, report)`` where ``report``
+    carries the backend, worker count, wall time, and the backend's stats
+    counters — including the data-plane fields ``bytes_moved`` /
+    ``transfers_direct`` / ``transfers_driver`` for the process backend.
+    """
     if n_workers == 1 and backend == "thread":
-        return execute_sequential(graph, inputs)
-    return make_executor(backend, n_workers, **kw).run(graph, inputs)
+        t0 = _time.perf_counter()
+        results = execute_sequential(graph, inputs)
+        if with_report:
+            return results, {"backend": "sequential", "n_workers": 1,
+                             "wall_time": _time.perf_counter() - t0,
+                             "stats": {}}
+        return results
+    ex = make_executor(backend, n_workers, **kw)
+    results = ex.run(graph, inputs)
+    if with_report:
+        report = {"backend": backend, "n_workers": n_workers,
+                  "wall_time": ex.wall_time, "stats": dict(ex.stats)}
+        transport = getattr(ex, "transport_used", None)
+        if transport is not None:
+            report["transport"] = transport
+        return results, report
+    return results
 
 
 def output_values(graph: TaskGraph, results: Dict[int, Any]) -> List[Any]:

@@ -78,12 +78,23 @@ def list_schedule(
     seed: int = 0,
     start_time: float = 0.0,
     done: Optional[Dict[int, float]] = None,
+    data_sizes: Optional[Dict[int, int]] = None,
+    bandwidth: float = float(256 << 20),
+    placed: Optional[Dict[int, int]] = None,
 ) -> Schedule:
     """Greedy list scheduling.
 
     ``done`` maps already-completed task ids to their completion times —
     used for elastic re-planning mid-flight (those tasks are not rescheduled
     but their finish times gate successors).
+
+    Transfer-cost-aware placement: ``data_sizes`` (task id -> payload
+    bytes, as recorded by the cluster runtime at completion) synthesizes a
+    per-edge ``comm_cost`` of ``size / bandwidth`` when none is given, and
+    ``placed`` (task id -> worker index for already-completed tasks) makes
+    that cost apply to edges out of *completed* work too — so a mid-run
+    replan keeps consumers next to the worker already holding their input
+    bytes instead of treating finished values as free everywhere.
     """
     if n_workers <= 0:
         raise ValueError("need at least one worker")
@@ -91,6 +102,10 @@ def list_schedule(
     if len(speeds) != n_workers:
         raise ValueError("worker_speed length mismatch")
     done = dict(done or {})
+    placed = dict(placed or {})
+    if comm_cost is None and data_sizes:
+        sizes = data_sizes
+        comm_cost = lambda d, t: sizes.get(d, 0) / bandwidth  # noqa: E731
     rng = _random.Random(seed)
 
     rank = graph.critical_path_rank()
@@ -131,7 +146,10 @@ def list_schedule(
             est = max(worker_free[w], deps_done)
             if comm_cost is not None:
                 for d in node.deps:
-                    pw = placements[d].worker if d in placements else w
+                    if d in placements:
+                        pw = placements[d].worker
+                    else:           # completed task: known owner, else local
+                        pw = placed.get(d, w)
                     if pw != w:
                         est = max(est, finish[d] + comm_cost(d, tid))
             dur = node.cost / speeds[w]

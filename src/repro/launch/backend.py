@@ -32,16 +32,25 @@ def add_backend_args(ap: argparse.ArgumentParser) -> None:
                          "in-process threads or spawned cluster workers")
     ap.add_argument("--graph-workers", type=int, default=2,
                     help="worker count for the traced-driver dry-run")
+    ap.add_argument("--transport", default="auto",
+                    choices=["auto", "shm", "sock", "driver"],
+                    help="process-backend data plane: zero-copy shared "
+                         "memory, direct unix-socket pulls, or the "
+                         "driver-relayed pipe path (A/B baseline)")
 
 
 def execute_traced(graph: TaskGraph, args,
                    inputs: Optional[Dict[str, Any]] = None) -> Dict[int, Any]:
-    """Run a traced driver DAG on the selected backend and report stats."""
-    kw = ({"start_method": "spawn", "progress_timeout": 300.0}
+    """Run a traced driver DAG on the selected backend and report stats
+    (including the data-plane counters for the process backend)."""
+    kw = ({"start_method": "spawn", "progress_timeout": 300.0,
+           "transport": getattr(args, "transport", "auto")}
           if args.backend == "process" else {})
     ex: Executor = make_executor(args.backend, args.graph_workers, **kw)
     results = ex.run(graph, inputs)
-    print(f"[{args.backend} backend] executed {len(graph.nodes)} tasks on "
-          f"{args.graph_workers} workers in {ex.wall_time:.3f}s "
+    transport = getattr(ex, "transport_used", None)
+    via = f" via {transport} transport" if transport else ""
+    print(f"[{args.backend} backend{via}] executed {len(graph.nodes)} tasks "
+          f"on {args.graph_workers} workers in {ex.wall_time:.3f}s "
           f"(stats {ex.stats})", flush=True)
     return results
