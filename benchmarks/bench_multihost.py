@@ -1,0 +1,199 @@
+"""Multi-host control/data plane benchmark: pipe vs TCP.
+
+Two questions, one artifact (``BENCH_multihost.json``):
+
+1. **Control-plane overhead** — the same cheap 300-node DAG (integer
+   arithmetic, ~zero compute) on forked pipe workers vs local TCP-dialed
+   workers.  Every dispatch/done crosses the control channel, so the
+   per-task wall-time delta is the price of framing + TCP + heartbeats
+   over a kernel pipe.
+
+2. **Per-transport shuffle wall-clock** — the wide shuffle from
+   ``bench_transfer`` run over every data plane this host supports
+   (``driver`` relay, ``shm``, ``sock``, ``tcp``), on both control
+   planes where it makes sense.  This is the transport matrix a deploy
+   chooses from: same-host shm vs the cross-host-capable TCP pulls.
+
+``--smoke`` is the CI gate: 2 workers over the TCP channel, a 50-node
+differential against the sequential oracle (bit-for-bit), plus a
+SIGKILL-mid-run recovery check — then a tiny timing pass.
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.bench_multihost [--tasks 300]
+        [--payload-mb 4] [--workers 2] [--reps 3] [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import random
+import sys
+import time
+from typing import Any, Dict, List, Optional
+
+from repro.core import TaskGraph, TaskKind, execute_sequential
+from repro.core.tracing import RemappedRef as _Ref
+from repro.cluster import ClusterExecutor, serde
+
+from .bench_transfer import build_shuffle
+from .common import print_rows
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_multihost.json")
+
+
+def control_dag(n: int, p: float = 0.25, seed: int = 0) -> TaskGraph:
+    """Cheap integer DAG: wall time ~= pure control-plane traffic."""
+    rng = random.Random(seed)
+    g = TaskGraph()
+    for i in range(n):
+        deps = [j for j in range(i) if rng.random() < p][-3:]
+
+        def fn(*xs, _i=i):
+            return (_i + sum(xs) * 7) % 1_000_003
+
+        g.add_node(f"t{i}", fn, tuple(_Ref(d) for d in deps), {},
+                   TaskKind.PURE, deps=deps, cost=rng.uniform(0.1, 1.0))
+    g.mark_output(n - 1)
+    return g
+
+
+def _median(xs: List[float]) -> float:
+    xs = sorted(xs)
+    return xs[len(xs) // 2]
+
+
+def time_channel(graph: TaskGraph, channel: str, workers: int,
+                 reps: int) -> Dict[str, Any]:
+    walls = []
+    stats: Dict[str, int] = {}
+    for _ in range(reps):
+        ex = ClusterExecutor(workers, channel=channel,
+                             progress_timeout=180.0)
+        t0 = time.perf_counter()
+        ex.run(graph)
+        walls.append(time.perf_counter() - t0)
+        stats = dict(ex.stats)
+        ex.close()
+    n = len(graph.nodes)
+    wall = _median(walls)
+    return {"channel": channel, "wall_s": wall,
+            "per_task_ms": 1e3 * wall / n,
+            "dispatched": stats.get("dispatched", 0)}
+
+
+def time_shuffle(graph: TaskGraph, channel: str, transport: str,
+                 workers: int, reps: int) -> Dict[str, Any]:
+    walls = []
+    stats: Dict[str, int] = {}
+    used = transport
+    for _ in range(reps):
+        ex = ClusterExecutor(workers, channel=channel, transport=transport,
+                             outputs_only=True, progress_timeout=180.0,
+                             pipeline_depth=4)
+        t0 = time.perf_counter()
+        ex.run(graph)
+        walls.append(time.perf_counter() - t0)
+        stats = dict(ex.stats)
+        used = ex.transport_used or transport
+        ex.close()
+    return {"channel": channel, "transport": used,
+            "wall_s": _median(walls),
+            "bytes_driver": stats.get("bytes_driver", 0),
+            "bytes_direct": stats.get("bytes_direct", 0),
+            "transfers_direct": stats.get("transfers_direct", 0)}
+
+
+def smoke_differential(workers: int = 2) -> None:
+    """CI gate: localhost-TCP control plane vs the sequential oracle,
+    healthy and with a SIGKILL'd worker (heartbeat/EOF detection +
+    lineage recovery)."""
+    g = control_dag(50, 0.3, seed=7)
+    seq = execute_sequential(g)
+    ex = ClusterExecutor(workers, channel="tcp", progress_timeout=120.0)
+    got = ex.run(g)
+    ex.close()
+    assert got == seq, "TCP-channel run diverged from the oracle"
+    ex = ClusterExecutor(workers + 1, channel="tcp", fail_worker=(1, 2),
+                         progress_timeout=120.0)
+    got = ex.run(g)
+    assert got == seq, "TCP-channel recovery run diverged from the oracle"
+    assert ex.stats["failures"] == 1 and ex.stats["recomputed"] > 0, \
+        ex.stats
+    ex.close()
+    print(f"smoke: 50-node DAG over TcpChannel x{workers} workers "
+          "bit-identical to oracle (healthy + SIGKILL-recovered)",
+          flush=True)
+
+
+def main(argv: Optional[List[str]] = None) -> Dict[str, Any]:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--tasks", type=int, default=300)
+    ap.add_argument("--payload-mb", type=float, default=4.0)
+    ap.add_argument("--producers", type=int, default=6)
+    ap.add_argument("--consumers", type=int, default=6)
+    ap.add_argument("--fan-in", type=int, default=3)
+    ap.add_argument("--workers", type=int, default=2)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI: differential gate + tiny timing pass")
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args(argv if argv is not None else [])
+    if args.smoke:
+        if args.out == OUT_PATH:    # never clobber the headline artifact
+            args.out = OUT_PATH.replace(".json", "_smoke.json")
+        args.tasks = min(args.tasks, 120)
+        args.payload_mb = min(args.payload_mb, 0.5)
+        args.producers = min(args.producers, 4)
+        args.consumers = min(args.consumers, 4)
+        args.reps = 1
+        smoke_differential(args.workers)
+
+    # -- 1. control-plane overhead: pipe vs tcp on a cheap DAG ------------
+    ctl = control_dag(args.tasks)
+    control = {ch: time_channel(ctl, ch, args.workers, args.reps)
+               for ch in ("pipe", "tcp")}
+    overhead = (control["tcp"]["per_task_ms"]
+                - control["pipe"]["per_task_ms"])
+
+    # -- 2. per-transport shuffle wall-clock ------------------------------
+    payload_elems = max(1, int(args.payload_mb * (1 << 20) / 4))
+    shuffle = build_shuffle(args.producers, args.consumers, args.fan_in,
+                            payload_elems)
+    transports = ["driver", "tcp"]
+    if serde.shm_available():
+        transports.append("shm")
+    if hasattr(__import__("socket"), "AF_UNIX"):
+        transports.append("sock")
+    rows = [time_shuffle(shuffle, "pipe", t, args.workers, args.reps)
+            for t in transports]
+    # the full multi-host shape: TCP control plane + TCP bulk pulls
+    rows.append(time_shuffle(shuffle, "tcp", "tcp", args.workers,
+                             args.reps))
+
+    payload = {
+        "config": {
+            "tasks": args.tasks, "payload_mb": args.payload_mb,
+            "producers": args.producers, "consumers": args.consumers,
+            "fan_in": args.fan_in, "workers": args.workers,
+            "reps": args.reps, "smoke": args.smoke,
+        },
+        "control_plane": control,
+        "control_overhead_ms_per_task": overhead,
+        "shuffle": rows,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print_rows(f"control plane: {args.tasks}-task DAG, "
+               f"{args.workers} workers", list(control.values()))
+    print_rows(f"shuffle ({args.payload_mb} MiB payloads) per "
+               "channel x transport", rows)
+    print(f"\nTCP control-plane overhead: {overhead:+.2f} ms/task "
+          f"-> {args.out}", flush=True)
+    return payload
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

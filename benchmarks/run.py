@@ -11,6 +11,9 @@ Suites:
   transfer   — data plane: driver-relayed vs zero-copy (shm / unix-socket)
                cross-worker transfers on a wide shuffle graph; writes
                BENCH_transfer.json at the repo root
+  multihost  — control plane: fork+pipe vs localhost-TCP worker channels
+               (per-task dispatch overhead) and the per-transport shuffle
+               matrix incl. direct TCP pulls; writes BENCH_multihost.json
 """
 from __future__ import annotations
 
@@ -19,7 +22,7 @@ import sys
 import time
 
 from . import (matmul_scaling, scheduler_bench, fault_bench, roofline,
-               bench_transfer)
+               bench_transfer, bench_multihost)
 
 SUITES = {
     "matmul": matmul_scaling.main,
@@ -27,6 +30,7 @@ SUITES = {
     "fault": fault_bench.main,
     "roofline": roofline.main,
     "transfer": bench_transfer.main,
+    "multihost": bench_multihost.main,
 }
 
 

@@ -24,22 +24,32 @@ so the driver pipe carries only control messages.  The
 Dispatch is **locality-aware**: per-value sizes recorded at completion
 drive both the scheduler's comm-cost term and a transfer-cost score in the
 driver's stealing loop, so consumers land on the worker already holding
-the largest share of their input bytes.  This is the template for the
-multi-host backend — swapping the fork+pipe transport for sockets changes
-no driver logic.
+the largest share of their input bytes — with per-host grouping, so a
+same-host shm move is preferred over a cross-host TCP pull.
 
-Both satisfy the :class:`repro.core.executor.Executor` protocol and are
-differentially tested against ``execute_sequential`` (tasks are pure, so
-every backend must agree bit-for-bit), including under SIGKILL mid-run and
-mid-transfer.
+The **control plane** is an explicit channel layer
+(:mod:`repro.cluster.channel`): the driver speaks the same tuple protocol
+over forked duplex pipes (``channel="pipe"``), spawned fresh-interpreter
+pipes (``"spawn"``), or a length-prefixed framed TCP stream (``"tcp"``)
+that workers on any host dial into (``python -m repro.launch.remote
+--connect <driver address>``).  TCP liveness is heartbeat-based — socket
+death delivers no SIGCHLD — with an explicit goodbye distinguishing clean
+shutdown from a crash, and sends ride backpressure-bounded queues so a
+wedged peer reads as dead instead of wedging the driver.
+
+Both executors satisfy the :class:`repro.core.executor.Executor` protocol
+and are differentially tested against ``execute_sequential`` (tasks are
+pure, so every backend must agree bit-for-bit), including under SIGKILL
+mid-run and mid-transfer, over every channel and transport.
 
 Public API: :class:`ClusterExecutor`, :class:`ClusterFuture`,
-:func:`gather`, :class:`DriverObjectStore`, :mod:`repro.cluster.serde`.
+:func:`gather`, :class:`DriverObjectStore`, :mod:`repro.cluster.serde`,
+:mod:`repro.cluster.channel`.
 """
-from . import serde
+from . import channel, serde
 from .executor import ClusterExecutor
 from .futures import ClusterFuture, gather
 from .objectstore import DriverObjectStore
 
 __all__ = ["ClusterExecutor", "ClusterFuture", "gather",
-           "DriverObjectStore", "serde"]
+           "DriverObjectStore", "serde", "channel"]

@@ -1,0 +1,640 @@
+"""Transport-agnostic control-plane channels for the cluster runtime.
+
+The driver logic in :mod:`repro.cluster.executor` was always
+transport-agnostic *in spirit* — it exchanges small tuple messages with
+workers and never cares how they travel.  This module makes it so *in
+code*: the executor talks to every worker through a :class:`Channel`, and
+three implementations cover the deployment shapes the paper's
+"large clusters" claim needs:
+
+* :class:`PipeChannel` — today's fork+pipe path, kept as the in-host fast
+  path.  One ``multiprocessing`` duplex pipe per forked worker; liveness
+  is the OS truth (``proc.is_alive()`` — a SIGKILL is visible instantly).
+* :class:`SpawnChannel` — the same pipe wiring for ``spawn``/``forkserver``
+  workers (fresh interpreters; the graph must be picklable).  Kept as a
+  distinct class because the *launch* contract differs (ship the recipe,
+  not the memory image), not the wire format.
+* :class:`TcpChannel` — a length-prefixed, message-framed TCP stream.
+  This is the multi-host channel: a worker on any machine dials the
+  driver's :class:`TcpListener`, handshakes (magic + protocol version +
+  optional shared token + host identity), and then speaks the exact same
+  tuple protocol.  Because a remote peer's death does not deliver SIGCHLD,
+  liveness is **heartbeat-based**: both sides emit ``("hb",)`` frames on an
+  interval, every received frame refreshes the peer's ``last_seen``, and
+  :meth:`TcpChannel.dead` reports a peer silent past ``heartbeat_timeout``
+  (an explicit ``("bye", wid)`` goodbye marks a *clean* exit so shutdown
+  is never mistaken for a crash).  Sends go through a **bounded outbox**
+  drained by a sender thread — backpressure: a peer that stops reading
+  fills the queue and the send fails as a dead-peer event instead of
+  wedging the driver loop on a blocking ``sendall``.
+
+Driver-side contract (what the executor's event loop needs):
+
+  ``selectable()``       object for ``multiprocessing.connection.wait``
+  ``send(msg)``          enqueue/write one message; ``ChannelClosed`` if the
+                         peer is gone (the caller turns that into a death)
+  ``recv_available()``   drain every complete message currently readable
+                         (never blocks after ``wait`` reported readability);
+                         ``ChannelClosed`` on EOF
+  ``dead()``             liveness verdict: ``None`` while believed alive,
+                         else a human-readable reason
+  ``maybe_heartbeat()``  rate-limited keepalive (no-op for pipes)
+  ``close()``            release the endpoint
+
+Worker-side endpoints (:class:`WorkerPipeEndpoint`,
+:class:`WorkerTcpEndpoint`) expose blocking ``recv()`` + ``send()`` with
+the same ``ChannelClosed`` error surface, so
+:func:`repro.cluster.worker.worker_main` runs unchanged over any wire.
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import queue
+import socket
+import struct
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+PROTOCOL_MAGIC = "repro-cluster"
+PROTOCOL_VERSION = 1
+
+#: control-plane channels a ClusterExecutor can be built on (the
+#: transport matrix lives in serde.TRANSPORTS / serde.CROSS_HOST_TRANSPORTS)
+CHANNELS = ("pipe", "spawn", "tcp")
+
+_FRAME = struct.Struct("<Q")         # length prefix, host-order-independent
+_MAX_FRAME = 1 << 34                 # 16 GiB sanity bound on one message
+
+
+class ChannelClosed(ConnectionError):
+    """The peer is unreachable (EOF, reset, dead process, backpressure
+    overflow).  The executor treats this exactly like a worker death."""
+
+
+def host_id() -> str:
+    """Identity of this machine for per-host locality grouping and the
+    cross-host transport guard.  Hostname alone collides across cloned
+    VMs / default cloud images, so it is salted with the stable
+    machine-id when one exists — every process on one machine must agree
+    on the id, so no per-process randomness is allowed here."""
+    name = socket.gethostname() or "localhost"
+    try:
+        with open("/etc/machine-id") as f:
+            mid = f.read().strip()[:12]
+        if mid:
+            return f"{name}-{mid}"
+    except OSError:
+        pass
+    return name
+
+
+def routable_ip() -> str:
+    """Best-effort non-loopback IP of this machine.  Used as the peer
+    data-plane advertise address for *local* workers in a mixed
+    local+remote pool: they dial the driver over loopback, but a remote
+    consumer pulling from their PeerServer must reach this machine's real
+    interface, not 127.0.0.1 on its own."""
+    try:
+        s = socket.socket(socket.AF_INET, socket.SOCK_DGRAM)
+        try:        # routing-table lookup only; no packet is sent
+            s.connect(("10.254.254.254", 1))
+            ip = s.getsockname()[0]
+        finally:
+            s.close()
+        if not ip.startswith("127."):
+            return ip
+    except OSError:
+        pass
+    try:
+        ip = socket.gethostbyname(socket.gethostname())
+        if not ip.startswith("127."):
+            return ip
+    except OSError:
+        pass
+    return "127.0.0.1"
+
+
+# --------------------------------------------------------------------- pipe
+class PipeChannel:
+    """Driver-side endpoint of a forked worker's duplex pipe.
+
+    Liveness is authoritative: the worker is a child process, so
+    ``proc.is_alive()`` sees SIGKILL/OOM the moment the OS reaps it —
+    no heartbeats needed on this channel.
+    """
+
+    kind = "pipe"
+
+    def __init__(self, conn, proc) -> None:
+        self.conn = conn
+        self.proc = proc
+        self._closed = False
+
+    def selectable(self):
+        return self.conn
+
+    def send(self, msg: tuple) -> None:
+        # NOTE: ValueError (an over-2GiB pipe message) deliberately
+        # propagates — it is a caller bug, not a dead worker, and mapping
+        # it to ChannelClosed would cascade fake deaths across the pool
+        try:
+            self.conn.send(msg)
+        except (BrokenPipeError, OSError) as e:
+            raise ChannelClosed(f"pipe send failed: {e!r}") from e
+
+    def recv_available(self) -> List[tuple]:
+        # mp pipes deliver whole messages; one recv per readability event
+        # matches the pre-channel driver loop exactly
+        try:
+            return [self.conn.recv()]
+        except (EOFError, OSError) as e:
+            raise ChannelClosed(f"pipe EOF: {e!r}") from e
+
+    def dead(self) -> Optional[str]:
+        if self.proc is not None and not self.proc.is_alive():
+            return f"process exited (code {self.proc.exitcode})"
+        return None
+
+    def maybe_heartbeat(self) -> None:     # pipes don't need keepalives
+        pass
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        try:
+            self.conn.close()
+        except OSError:
+            pass
+
+
+class SpawnChannel(PipeChannel):
+    """Pipe wiring for ``spawn``/``forkserver`` workers.  Wire-identical to
+    :class:`PipeChannel`; the difference is the launch contract (the child
+    is a fresh interpreter, so the graph crossed by pickling, exactly like
+    a remote worker receives it over TCP)."""
+
+    kind = "spawn"
+
+
+class WorkerPipeEndpoint:
+    """Worker-side face of a duplex pipe, matching the TCP endpoint API."""
+
+    def __init__(self, conn) -> None:
+        self.conn = conn
+
+    def recv(self) -> tuple:
+        try:
+            return self.conn.recv()
+        except (EOFError, OSError) as e:
+            raise ChannelClosed(f"driver gone: {e!r}") from e
+
+    def send(self, msg: tuple) -> None:
+        try:
+            self.conn.send(msg)
+        except (BrokenPipeError, OSError) as e:
+            raise ChannelClosed(f"driver gone: {e!r}") from e
+
+    def close(self) -> None:
+        try:
+            self.conn.close()
+        except OSError:
+            pass
+
+
+# ---------------------------------------------------------------- tcp frames
+def _send_frame(sock: socket.socket, payload: bytes,
+                lock: Optional[threading.Lock] = None) -> None:
+    data = _FRAME.pack(len(payload)) + payload
+    if lock is None:
+        sock.sendall(data)
+    else:
+        with lock:
+            sock.sendall(data)
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    chunks = []
+    while n:
+        chunk = sock.recv(min(n, 1 << 20))
+        if not chunk:
+            raise ChannelClosed("peer closed mid-frame")
+        chunks.append(chunk)
+        n -= len(chunk)
+    return b"".join(chunks)
+
+
+def _recv_raw_frame(sock: socket.socket, max_len: int = _MAX_FRAME) -> bytes:
+    (n,) = _FRAME.unpack(_recv_exact(sock, _FRAME.size))
+    if not 0 <= n <= max_len:
+        raise ChannelClosed(f"insane frame length {n}")
+    return _recv_exact(sock, n)
+
+
+def _recv_frame(sock: socket.socket) -> tuple:
+    return pickle.loads(_recv_raw_frame(sock))
+
+
+class _FrameBuffer:
+    """Incremental parser for length-prefixed frames (driver side, where
+    reads happen in non-blocking bites after ``wait`` reports data)."""
+
+    def __init__(self) -> None:
+        self._buf = bytearray()
+
+    def feed(self, data: bytes) -> List[tuple]:
+        self._buf.extend(data)
+        msgs: List[tuple] = []
+        while True:
+            if len(self._buf) < _FRAME.size:
+                return msgs
+            (n,) = _FRAME.unpack_from(self._buf)
+            if not 0 <= n <= _MAX_FRAME:
+                raise ChannelClosed(f"insane frame length {n}")
+            end = _FRAME.size + n
+            if len(self._buf) < end:
+                return msgs
+            msgs.append(pickle.loads(bytes(self._buf[_FRAME.size:end])))
+            del self._buf[:end]
+
+
+# ----------------------------------------------------------------- tcp chan
+class TcpChannel:
+    """Driver-side endpoint of one dialed-in worker.
+
+    * **Framing** — ``<u64 len><pickle>`` per message; a partial read parks
+      bytes in a :class:`_FrameBuffer` until the frame completes.
+    * **Liveness** — every received frame (heartbeats included) refreshes
+      ``last_seen``; :meth:`dead` trips after ``heartbeat_timeout`` of
+      silence.  A clean ``bye`` sets :attr:`said_goodbye` so shutdown
+      drains are not misread as crashes.  EOF/reset surface as
+      :class:`ChannelClosed` from :meth:`recv_available`.
+    * **Backpressure** — :meth:`send` enqueues into a bounded outbox; a
+      dedicated sender thread owns the socket's write side.  A peer that
+      stops draining fills the queue and the next send raises
+      :class:`ChannelClosed` after ``send_timeout`` instead of blocking
+      the driver loop forever.
+    """
+
+    kind = "tcp"
+
+    def __init__(self, sock: socket.socket, *,
+                 heartbeat_interval: float = 2.0,
+                 heartbeat_timeout: float = 10.0,
+                 outbox_size: int = 256,
+                 send_timeout: float = 30.0,
+                 proc=None) -> None:
+        self.sock = sock
+        self.proc = proc            # local dialer's process, if any (chaos
+        # hooks use it; liveness does NOT — multi-host has no proc to ask)
+        self.heartbeat_interval = heartbeat_interval
+        self.heartbeat_timeout = heartbeat_timeout
+        self.send_timeout = send_timeout
+        self.last_seen = time.monotonic()
+        self.said_goodbye = False
+        self._frames = _FrameBuffer()
+        self._outbox: "queue.Queue[Optional[bytes]]" = queue.Queue(
+            maxsize=max(1, outbox_size))
+        self._send_failed: Optional[str] = None
+        self._last_hb = 0.0
+        self._closed = False
+        try:
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        except OSError:
+            pass
+        self._sender = threading.Thread(
+            target=self._drain_outbox, daemon=True,
+            name=f"tcp-chan-sender-{sock.fileno()}")
+        self._sender.start()
+
+    # -- write side ---------------------------------------------------------
+    def _drain_outbox(self) -> None:
+        while True:
+            payload = self._outbox.get()
+            if payload is None:
+                return
+            try:
+                self.sock.sendall(_FRAME.pack(len(payload)) + payload)
+            except OSError as e:
+                self._send_failed = f"send failed: {e!r}"
+                return
+
+    def send(self, msg: tuple) -> None:
+        if self._closed or self._send_failed:
+            raise ChannelClosed(self._send_failed or "channel closed")
+        payload = pickle.dumps(msg, protocol=5)
+        try:
+            self._outbox.put(payload, timeout=self.send_timeout)
+        except queue.Full:
+            self._send_failed = (
+                f"backpressure: peer did not drain {self._outbox.maxsize} "
+                f"queued messages within {self.send_timeout}s")
+            raise ChannelClosed(self._send_failed) from None
+
+    def maybe_heartbeat(self) -> None:
+        now = time.monotonic()
+        if now - self._last_hb < self.heartbeat_interval:
+            return
+        self._last_hb = now
+        try:
+            self.send(("hb",))
+        except ChannelClosed:
+            pass                     # dead() / next send reports it
+
+    # -- read side ----------------------------------------------------------
+    def selectable(self):
+        return self.sock
+
+    def recv_available(self) -> List[tuple]:
+        try:
+            data = self.sock.recv(1 << 20)
+        except (BlockingIOError, InterruptedError):
+            return []
+        except OSError as e:
+            raise ChannelClosed(f"recv failed: {e!r}") from e
+        if not data:
+            raise ChannelClosed("peer closed connection")
+        self.last_seen = time.monotonic()
+        msgs = self._frames.feed(data)
+        if any(m and m[0] == "bye" for m in msgs):
+            self.said_goodbye = True
+        return msgs
+
+    def dead(self) -> Optional[str]:
+        if self._send_failed:
+            return self._send_failed
+        if self.said_goodbye:
+            return None              # clean exit is not a crash
+        silent = time.monotonic() - self.last_seen
+        if silent > self.heartbeat_timeout:
+            return (f"no heartbeat for {silent:.1f}s "
+                    f"(timeout {self.heartbeat_timeout}s)")
+        return None
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        try:
+            self._outbox.put_nowait(None)
+        except queue.Full:
+            # make room for the shutdown sentinel (sends are refused now
+            # that _closed is set), else the sender thread leaks blocked
+            # in get() after the queue drains
+            try:
+                self._outbox.get_nowait()
+            except queue.Empty:
+                pass
+            try:
+                self._outbox.put_nowait(None)
+            except queue.Full:
+                pass
+        # flush: queued messages (a final stop/die) should reach the wire
+        # before the socket drops; a wedged peer bounds the wait
+        self._sender.join(timeout=2.0)
+        try:
+            self.sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+
+
+class WorkerTcpEndpoint:
+    """Worker-side face of the TCP channel: blocking framed recv/send plus
+    a background heartbeat thread and a driver-silence watchdog (a worker
+    whose driver host vanished must not hang forever on a half-open
+    socket — it exits, exactly as a pipe worker does on EOF)."""
+
+    def __init__(self, sock: socket.socket, *,
+                 heartbeat_interval: float = 2.0,
+                 heartbeat_timeout: float = 30.0) -> None:
+        self.sock = sock
+        self.heartbeat_interval = heartbeat_interval
+        self.heartbeat_timeout = heartbeat_timeout
+        self.last_seen = time.monotonic()
+        self._send_lock = threading.Lock()
+        self._stop = threading.Event()
+        try:
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        except OSError:
+            pass
+        threading.Thread(target=self._heartbeat_loop, daemon=True,
+                         name="worker-tcp-heartbeat").start()
+
+    def _heartbeat_loop(self) -> None:
+        while not self._stop.wait(self.heartbeat_interval):
+            try:
+                self.send(("hb",))
+            except ChannelClosed:
+                return
+            if time.monotonic() - self.last_seen > self.heartbeat_timeout:
+                # driver silent past the deadline: orphaned worker.  Hard
+                # exit mirrors the pipe worker's EOF death (daemonized
+                # children of a dead driver must not linger).
+                os._exit(1)
+
+    def recv(self) -> tuple:
+        try:
+            msg = _recv_frame(self.sock)
+        except (OSError, pickle.UnpicklingError, EOFError) as e:
+            raise ChannelClosed(f"driver gone: {e!r}") from e
+        self.last_seen = time.monotonic()
+        return msg
+
+    def send(self, msg: tuple) -> None:
+        try:
+            _send_frame(self.sock, pickle.dumps(msg, protocol=5),
+                        self._send_lock)
+        except OSError as e:
+            raise ChannelClosed(f"driver gone: {e!r}") from e
+
+    def close(self) -> None:
+        self._stop.set()
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+
+
+# ----------------------------------------------------------------- listener
+class TcpListener:
+    """Driver-side accept loop for dialing workers.
+
+    Binds ``host:port`` (port 0 = ephemeral; the resolved address is
+    :attr:`address`), accepts connections on a background thread, performs
+    the **server half of the handshake** — read the worker's ``hello``
+    frame, check magic/version/token — and parks the authenticated
+    ``(socket, hello)`` pair for the executor to adopt via
+    :meth:`get_worker` (initial pool barrier) or :meth:`poll_worker`
+    (mid-run elastic joins: any `repro-worker` that dials a live run is a
+    join).  Rejected dials get a ``("reject", reason)`` frame and are
+    closed; they never reach the executor.
+    """
+
+    def __init__(self, address: str = "127.0.0.1:0",
+                 token: Optional[str] = None,
+                 handshake_timeout: float = 10.0) -> None:
+        host, _, port = address.rpartition(":")
+        if not host:
+            host, port = address or "127.0.0.1", "0"
+        self.token = token
+        self.handshake_timeout = handshake_timeout
+        self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._sock.bind((host, int(port)))
+        self._sock.listen(64)
+        self.address = "%s:%d" % self._sock.getsockname()[:2]
+        self._pending: "queue.Queue[Tuple[socket.socket, dict]]" = \
+            queue.Queue()
+        self._closed = False
+        threading.Thread(target=self._accept_loop, daemon=True,
+                         name=f"tcp-listener-{self.address}").start()
+
+    def _accept_loop(self) -> None:
+        while not self._closed:
+            try:
+                sock, _ = self._sock.accept()
+            except OSError:
+                return
+            threading.Thread(target=self._handshake, args=(sock,),
+                             daemon=True).start()
+
+    def _handshake(self, sock: socket.socket) -> None:
+        try:
+            sock.settimeout(self.handshake_timeout)
+            # SECURITY: the hello is the ONLY frame read from an
+            # unauthenticated peer, and it is JSON — pickle.loads on
+            # pre-auth bytes would hand arbitrary code execution to
+            # anyone who can reach the port, making the token check
+            # decorative.  Pickled frames start after the token passes.
+            import json
+            try:
+                info = json.loads(
+                    _recv_raw_frame(sock, max_len=1 << 16).decode("utf-8"))
+            except (ValueError, UnicodeDecodeError) as e:
+                raise ChannelClosed(f"malformed hello: {e!r}") from e
+            if not isinstance(info, dict):
+                raise ChannelClosed("malformed hello")
+            if info.get("magic") != PROTOCOL_MAGIC:
+                raise ChannelClosed("bad magic")
+            if info.get("version") != PROTOCOL_VERSION:
+                raise ChannelClosed(
+                    f"protocol version {info.get('version')} != "
+                    f"{PROTOCOL_VERSION}")
+            if self.token is not None and info.get("token") != self.token:
+                raise ChannelClosed("bad token")
+            try:
+                info["peer_ip"] = sock.getpeername()[0]
+            except OSError:
+                info["peer_ip"] = "127.0.0.1"
+            sock.settimeout(None)
+        except (ChannelClosed, OSError, pickle.UnpicklingError,
+                EOFError) as e:
+            try:
+                _send_frame(sock, pickle.dumps(("reject", repr(e)),
+                                               protocol=5))
+            except OSError:
+                pass
+            try:
+                sock.close()
+            except OSError:
+                pass
+            return
+        self._pending.put((sock, info))
+
+    def get_worker(self, timeout: float) -> Tuple[socket.socket, dict]:
+        """Block until a handshaken worker connection is available."""
+        try:
+            return self._pending.get(timeout=timeout)
+        except queue.Empty:
+            raise TimeoutError(
+                f"no worker dialed {self.address} within {timeout}s "
+                "(start workers with: python -m repro.launch.remote "
+                f"--connect {self.address})") from None
+
+    def poll_worker(self) -> Optional[Tuple[socket.socket, dict]]:
+        """Non-blocking variant for mid-run elastic joins."""
+        try:
+            return self._pending.get_nowait()
+        except queue.Empty:
+            return None
+
+    def close(self) -> None:
+        self._closed = True
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+
+
+# --------------------------------------------------------------- worker dial
+def dial_driver(address: str, *, token: Optional[str] = None,
+                has_graph: bool = False, timeout: float = 30.0,
+                retry_interval: float = 0.2,
+                heartbeat_interval: float = 2.0,
+                heartbeat_timeout: float = 30.0,
+                ) -> Tuple[WorkerTcpEndpoint, int, dict, Optional[bytes]]:
+    """Worker half of the handshake: connect to ``address``, send hello,
+    await the driver's welcome.
+
+    Retries the connect until ``timeout`` (workers routinely start before
+    the driver binds).  Returns ``(endpoint, wid, config, graph_blob)`` —
+    ``graph_blob`` is the pickled ``(graph, inputs)`` pair for workers
+    that did not inherit the graph (``has_graph=False``), else ``None``.
+    """
+    host, _, port = address.rpartition(":")
+    if not host:
+        raise ValueError(f"worker address must be host:port, got {address!r}")
+    deadline = time.monotonic() + timeout
+    last_err: Optional[BaseException] = None
+    sock: Optional[socket.socket] = None
+    while sock is None:
+        try:
+            sock = socket.create_connection((host, int(port)),
+                                            timeout=timeout)
+        except OSError as e:
+            last_err = e
+            if time.monotonic() >= deadline:
+                raise ChannelClosed(
+                    f"could not reach driver at {address}: {e!r}") from e
+            time.sleep(retry_interval)
+    import json
+    try:
+        sock.settimeout(timeout)
+        # hello is JSON (see TcpListener._handshake: the driver must not
+        # unpickle pre-auth bytes); everything after it is pickled frames
+        _send_frame(sock, json.dumps(
+            {"magic": PROTOCOL_MAGIC,
+             "version": PROTOCOL_VERSION,
+             "token": token,
+             "host": host_id(),
+             "pid": os.getpid(),
+             "has_graph": has_graph}).encode("utf-8"))
+        reply = _recv_frame(sock)
+    except (OSError, pickle.UnpicklingError, EOFError) as e:
+        try:
+            sock.close()
+        except OSError:
+            pass
+        raise ChannelClosed(
+            f"handshake with {address} failed: {e!r}") from (last_err or e)
+    if reply and reply[0] == "reject":
+        sock.close()
+        raise ChannelClosed(f"driver rejected worker: {reply[1]}")
+    if not (reply and reply[0] == "welcome" and len(reply) == 4):
+        sock.close()
+        raise ChannelClosed(f"unexpected handshake reply {reply!r}")
+    _, wid, config, graph_blob = reply
+    sock.settimeout(None)
+    endpoint = WorkerTcpEndpoint(
+        sock,
+        heartbeat_interval=config.get("heartbeat_interval",
+                                      heartbeat_interval),
+        heartbeat_timeout=config.get("worker_heartbeat_timeout",
+                                     heartbeat_timeout))
+    return endpoint, wid, config, graph_blob

@@ -1,10 +1,13 @@
-"""ClusterExecutor — the multi-process distributed runtime.
+"""ClusterExecutor — the multi-process / multi-host distributed runtime.
 
-This is the paper's driver/worker architecture made real on one host:
-OS-process workers (the stand-in for cluster nodes — same protocol, a
-socket transport is a drop-in follow-up), a driver that schedules ready
-tasks onto them, a driver-side :class:`DriverObjectStore` tracking where
-every result lives, and lineage-based recovery when a worker dies.
+This is the paper's driver/worker architecture made real: workers are OS
+processes on this host (forked or spawned, wired by duplex pipes) or on
+*any* host (dialed in over TCP), a driver that schedules ready tasks onto
+them, a driver-side :class:`DriverObjectStore` tracking where every result
+lives, and lineage-based recovery when a worker dies.  The driver speaks
+to every worker through the :class:`~repro.cluster.channel.Channel`
+abstraction, so none of the scheduling/recovery logic below knows (or
+cares) what wire its messages ride.
 
 Design points (mirroring the Haskell#/Cloud-Haskell driver designs and the
 mapping-decision framing of Mapple):
@@ -13,24 +16,33 @@ mapping-decision framing of Mapple):
   a placement hint (critical-path priority, earliest-finish-time worker);
   the driver follows it opportunistically and *steals* — dispatches a ready
   task to an idle worker that wasn't its planned home — whenever the plan
-  goes stale.  Both the plan (via ``data_sizes``/``placed`` comm costs in
-  the scheduler) and the stealing choice (via a transfer-cost score over
-  per-value sizes recorded at completion) are **locality-aware**: work
-  prefers the worker already holding the largest share of its input bytes.
+  goes stale.  Both the plan (via ``data_sizes``/``placed``/``worker_host``
+  comm costs in the scheduler) and the stealing choice (via a transfer-cost
+  score over per-value sizes recorded at completion) are **locality-aware**
+  at two radii: same-worker beats same-host beats cross-host, so a
+  consumer lands next to its bytes and cross-host TCP pulls are a last
+  resort.
 * **Zero-copy data plane.**  Cross-worker values move as *handles*
   (:mod:`repro.cluster.serde`): the owner publishes the payload once into
-  a ``multiprocessing.shared_memory`` segment (or serves it over its unix
-  socket when shm is unavailable), and the consumer maps/pulls it
-  directly.  The driver pipe carries only control messages and handles —
+  a ``multiprocessing.shared_memory`` segment (or serves it over its
+  unix/TCP socket server), and the consumer maps/pulls it directly.  The
+  control channel carries only messages and handles —
   ``stats["bytes_driver"]`` vs ``stats["bytes_direct"]`` make the split
   observable; ``transport="driver"`` restores the PR-1 relay for A/B runs.
+* **Channel-based liveness.**  A forked worker's death is OS truth
+  (``proc.is_alive``); a TCP worker's death is **missed heartbeats** or a
+  socket EOF — and a clean shutdown says an explicit goodbye so it is
+  never misread as a crash.  The driver asks each channel, not the
+  process table, so SIGKILL on another machine and SIGKILL on this one
+  take the same recovery path.
 * **Pipelined dispatch.**  Up to ``pipeline_depth`` tasks are in a worker's
-  pipe at once, so the driver overlaps dispatch/transfer with execution
+  channel at once, so the driver overlaps dispatch/transfer with execution
   (the futures-style async core of ``submit``/``gather``).
 * **Replicas, not broadcast.**  Results stay in the producing worker's
   local store; a transfer leaves the consumer holding a replica (tracked
-  per-value as a *set* of holders), so later consumers read locally and a
-  value is only lost when its last holder dies without a durable handle.
+  per-value as a *set* of holders, each tagged with its host), so later
+  consumers read locally and a value is only lost when its last holder
+  dies without a durable handle.
 * **Lineage fault tolerance.**  On worker death the lost set is exactly
   the values with no surviving replica, no shm-published handle, and no
   driver-cached copy; ``lineage.recovery_plan`` gives the minimal
@@ -40,22 +52,27 @@ mapping-decision framing of Mapple):
   mid-transfer degrades the same way: consumers that already hold a stale
   handle report ``deplost`` and the task re-queues behind the recovery.
 * **Elasticity.**  ``add_worker()`` forks a fresh worker mid-run and
-  replans onto the grown pool.
+  replans onto the grown pool; on a TCP control plane, any
+  ``repro-worker`` that dials the driver's address mid-run joins the same
+  way.
 * **Segment hygiene.**  The driver is the single unlink authority:
   handles are released when the ``consumers_left`` GC drains a value
-  (``outputs_only`` runs unlink eagerly), and a run-scoped ``/dev/shm``
-  sweep in the shutdown path catches orphans from workers killed
-  mid-publish.  No segment survives executor shutdown.
+  (``outputs_only`` runs unlink eagerly), and a run-scoped shutdown sweep
+  catches ``/dev/shm`` orphans *and* stale peer-socket files from workers
+  killed mid-publish.  No segment or socket file survives executor
+  shutdown.
 
 Failure injection for tests/benchmarks: ``fail_worker=(wid, n)`` SIGKILLs
-worker ``wid`` after it completes ``n`` tasks; ``join_after=(n, k)`` forks
-``k`` extra workers once ``n`` tasks have completed cluster-wide.
+worker ``wid`` after it completes ``n`` tasks (a remote worker is sent a
+``die`` message instead — the driver cannot signal a remote pid);
+``join_after=(n, k)`` starts ``k`` extra workers once ``n`` tasks have
+completed cluster-wide.
 """
 from __future__ import annotations
 
 import multiprocessing as mp
 import os
-import shutil
+import pickle
 import signal
 import tempfile
 import threading
@@ -71,18 +88,23 @@ from repro.core.lineage import recovery_plan
 from repro.core.scheduler import list_schedule, replan
 
 from . import serde
+from .channel import (CHANNELS, ChannelClosed, PipeChannel, SpawnChannel,
+                      TcpChannel, TcpListener, host_id, routable_ip)
 from .futures import ClusterFuture
 from .objectstore import DriverObjectStore
-from .worker import worker_main
+from .worker import pipe_worker_main, tcp_worker_main
 
 PENDING, READY, WAITING, INFLIGHT, DONE = range(5)
+
+WORKER_SPECS = ("local", "remote")
 
 
 @dataclass
 class _Worker:
     wid: int
-    proc: Any
-    conn: Any
+    chan: Any                       # driver-side Channel
+    host: str                       # machine identity (locality grouping)
+    proc: Any = None                # local process handle; None for remote
     alive: bool = True
     inflight: Set[int] = field(default_factory=set)   # run sent, not done
     assigned: Set[int] = field(default_factory=set)   # waiting on transfers
@@ -93,18 +115,31 @@ class _Worker:
 
 
 class ClusterExecutor:
-    """Executes a :class:`TaskGraph` on ``n_workers`` forked processes.
+    """Executes a :class:`TaskGraph` on a pool of worker processes.
 
     Satisfies the :class:`repro.core.executor.Executor` protocol — results
     are bit-identical to :func:`repro.core.executor.execute_sequential`
     because tasks are pure and the value tables are exact.
 
-    ``transport`` selects the data plane: ``"shm"`` (zero-copy shared
-    memory), ``"sock"`` (direct unix-socket pulls), ``"driver"`` (the PR-1
-    relay through the driver pipe), or ``"auto"`` (best available; the
-    default).  ``shm_threshold`` is the payload size at which values leave
-    the pipe.  The resolved choice of an ``auto`` run is exposed as
-    ``transport_used`` after ``run``.
+    **Control plane** (``channel``): ``"pipe"`` (forked in-host workers,
+    the default), ``"spawn"`` (fresh-interpreter in-host workers; implied
+    by ``start_method="spawn"``), or ``"tcp"`` (workers dial the driver's
+    listening address — the multi-host channel, with heartbeat liveness).
+    With ``channel="tcp"`` the driver binds ``connect`` (default
+    ``127.0.0.1:0``; the resolved address is :attr:`address`) and
+    ``workers`` describes the pool: ``"local"`` entries are forked dialers
+    started by the driver, ``"remote"`` entries are slots filled by
+    external ``repro-worker`` processes (``python -m repro.launch.remote
+    --connect <address>``) within ``accept_timeout``.  Extra dials during
+    a run join elastically.
+
+    **Data plane** (``transport``): ``"shm"`` (zero-copy shared memory),
+    ``"sock"`` (direct unix-socket pulls), ``"tcp"`` (direct TCP pulls —
+    the only bulk channel that crosses hosts), ``"driver"`` (relay through
+    the control channel), or ``"auto"`` (best available; ``tcp`` when the
+    pool spans hosts).  ``shm_threshold`` is the payload size at which
+    values leave the control channel.  The resolved choice of an ``auto``
+    run is exposed as ``transport_used`` after ``run``.
 
     ``outputs_only=True`` returns just ``{tid: value for tid in outputs}``
     and garbage-collects intermediates once their last consumer finishes —
@@ -128,15 +163,51 @@ class ClusterExecutor:
         transport: str = "auto",
         shm_threshold: int = serde.SHM_THRESHOLD,
         bandwidth: float = float(256 << 20),
+        channel: Optional[str] = None,
+        connect: Optional[str] = None,
+        workers: Optional[Sequence[str]] = None,
+        token: Optional[str] = None,
+        accept_timeout: float = 60.0,
+        heartbeat_interval: float = 1.0,
+        heartbeat_timeout: float = 15.0,
     ) -> None:
-        if n_workers < 1:
-            raise ValueError("n_workers >= 1")
         if start_method not in ("fork", "spawn", "forkserver"):
             raise ValueError(f"unknown start_method {start_method!r}")
+        if workers is not None:
+            workers = list(workers)
+            bad = [w for w in workers if w not in WORKER_SPECS]
+            if bad:
+                raise ValueError(f"unknown worker spec(s) {bad!r} "
+                                 f"(expected one of {WORKER_SPECS})")
+            n_workers = len(workers)
+        if n_workers < 1:
+            raise ValueError("n_workers >= 1")
+        self.worker_specs = workers or ["local"] * n_workers
+        self.multihost = "remote" in self.worker_specs
+        if channel is None:
+            if connect is not None or self.multihost:
+                channel = "tcp"
+            else:
+                channel = "pipe" if start_method == "fork" else "spawn"
+        if channel not in CHANNELS:
+            raise ValueError(f"unknown channel {channel!r} "
+                             f"(expected one of {CHANNELS})")
+        if channel == "spawn" and start_method == "fork":
+            start_method = "spawn"
+        if channel == "pipe" and start_method != "fork":
+            channel = "spawn"       # pipe wiring, spawn launch contract
+        if self.multihost and channel != "tcp":
+            raise ValueError("remote workers require channel='tcp'")
         if transport not in serde.TRANSPORTS:
             raise ValueError(f"unknown transport {transport!r} "
                              f"(expected one of {serde.TRANSPORTS})")
+        if self.multihost and transport not in serde.CROSS_HOST_TRANSPORTS:
+            raise ValueError(
+                f"transport {transport!r} is host-local and the worker pool "
+                f"declares remote workers; pick one of "
+                f"{serde.CROSS_HOST_TRANSPORTS}")
         self.start_method = start_method
+        self.channel = channel
         self.n_workers = n_workers
         self.policy = policy
         self.worker_speed = list(worker_speed) if worker_speed else None
@@ -150,6 +221,11 @@ class ClusterExecutor:
         self.transport_used: Optional[str] = None
         self.shm_threshold = max(1, shm_threshold)
         self.bandwidth = bandwidth
+        self.token = token
+        self.accept_timeout = accept_timeout
+        self.heartbeat_interval = heartbeat_interval
+        self.heartbeat_timeout = heartbeat_timeout
+        self.host = host_id()
         self.seg_prefix: Optional[str] = None    # last run's shm name prefix
         self.stats: Dict[str, int] = {}
         self.wall_time = 0.0
@@ -161,6 +237,14 @@ class ClusterExecutor:
         # queue on this lock (use separate executors for parallel jobs)
         self._run_lock = threading.Lock()
         self._active = False
+        # the listener outlives runs: remote workers need a stable address
+        # to dial before run() is even called
+        self.listener: Optional[TcpListener] = None
+        self.address: Optional[str] = None
+        if channel == "tcp":
+            self.listener = TcpListener(connect or "127.0.0.1:0",
+                                        token=token)
+            self.address = self.listener.address
 
     # ------------------------------------------------------------- frontend
     def run(self, graph: TaskGraph,
@@ -194,11 +278,24 @@ class ClusterExecutor:
                 self._commands.append(("join",))
             else:
                 self.n_workers += 1
+                self.worker_specs.append("local")
 
     def kill_worker(self, wid: int) -> None:
         """Chaos hook: SIGKILL worker ``wid`` of the active run."""
         with self._cmd_lock:
             self._commands.append(("kill", wid))
+
+    def close(self) -> None:
+        """Release the executor's listening socket (TCP channel only)."""
+        if self.listener is not None:
+            self.listener.close()
+            self.listener = None
+
+    def __del__(self) -> None:      # pragma: no cover — GC timing
+        try:
+            self.close()
+        except Exception:
+            pass
 
     # -------------------------------------------------------------- driver
     def _execute(self, graph: TaskGraph,
@@ -219,7 +316,7 @@ class ClusterExecutor:
                         inputs: Optional[Dict[str, Any]]) -> Dict[int, Any]:
         ctx = mp.get_context(self.start_method)
         transport = self.transport_used = serde.resolve_transport(
-            self.transport)
+            self.transport, multihost=self.multihost)
         seg_prefix = self.seg_prefix = f"rr{os.getpid():x}" \
                                        f"{uuid.uuid4().hex[:8]}"
         peer_dir = (tempfile.mkdtemp(prefix="rrpeer")
@@ -237,26 +334,196 @@ class ClusterExecutor:
         store = DriverObjectStore(graph)
         workers: Dict[int, _Worker] = {}
         next_wid = 0
+        listener = self.listener
+        # graph shipped once per run to graph-less (remote) dialers
+        graph_blob: List[Optional[bytes]] = [None]
+        # handshaken dials not yet matched to the local proc that owns them
+        dial_stash: List[Tuple[Any, dict]] = []
+
+        def run_config(hello: dict) -> dict:
+            # the address OTHER workers use to reach this worker's peer
+            # data-plane server.  A local worker dials the driver over
+            # loopback, so the IP the driver saw (127.x) is unroutable
+            # from remote consumers — advertise this machine's real
+            # interface instead when the pool spans hosts.
+            # any TCP-listener run can gain cross-host joiners mid-run
+            # (not just declared-remote pools), so the rewrite keys on
+            # the data plane being TCP, not on self.multihost
+            peer_ip = hello.get("peer_ip", "127.0.0.1")
+            if listener is not None and transport == "tcp" \
+                    and peer_ip.startswith("127."):
+                peer_ip = routable_ip()
+            return {
+                "transport": transport,
+                "shm_threshold": self.shm_threshold,
+                "seg_prefix": seg_prefix,
+                "peer_dir": peer_dir,
+                "peer_host": peer_ip,
+                "heartbeat_interval": self.heartbeat_interval,
+                # the worker tolerates a longer driver silence than the
+                # driver tolerates of it: the driver's loop always has
+                # traffic to send, a worker mid-task may not
+                "worker_heartbeat_timeout": max(self.heartbeat_timeout * 3,
+                                                self.progress_timeout),
+            }
+
+        def ship_graph() -> bytes:
+            if graph_blob[0] is None:
+                try:
+                    graph_blob[0] = pickle.dumps((graph, inputs), protocol=5)
+                except Exception as e:
+                    raise ValueError(
+                        "graph is not picklable, so it cannot be shipped to "
+                        "a remote worker that did not inherit it (use "
+                        "module-level task functions, as with "
+                        f"start_method='spawn'): {e!r}") from e
+            return graph_blob[0]
+
+        def adopt(sock, hello: dict, proc=None) -> _Worker:
+            """Driver half of the TCP handshake: assign a wid, send the
+            welcome (config + graph for graph-less workers), wrap the
+            socket in a heartbeat-tracked channel."""
+            nonlocal next_wid
+            worker_host = hello.get("host", "?")
+            if worker_host != self.host \
+                    and transport not in serde.CROSS_HOST_TRANSPORTS:
+                # a cross-host dial into a host-local data plane can never
+                # resolve handles; refuse it with a reason, loudly
+                msg = (f"worker on host {worker_host!r} cannot join a "
+                       f"transport={transport!r} run (host-local data "
+                       f"plane); use transport='tcp' or 'driver'")
+                try:
+                    from .channel import _send_frame
+                    _send_frame(sock, pickle.dumps(("reject", msg),
+                                                   protocol=5))
+                except OSError:
+                    pass
+                try:
+                    sock.close()
+                except OSError:
+                    pass
+                raise ValueError(msg)
+            try:
+                blob = None if hello.get("has_graph") else ship_graph()
+            except ValueError as e:
+                try:
+                    from .channel import _send_frame
+                    _send_frame(sock, pickle.dumps(("reject", str(e)),
+                                                   protocol=5))
+                except OSError:
+                    pass
+                try:
+                    sock.close()
+                except OSError:
+                    pass
+                raise
+            chan = TcpChannel(sock,
+                              heartbeat_interval=self.heartbeat_interval,
+                              heartbeat_timeout=self.heartbeat_timeout,
+                              proc=proc)
+            wid = next_wid
+            next_wid += 1
+            try:
+                chan.send(("welcome", wid, run_config(hello), blob))
+            except ChannelClosed as e:
+                chan.close()
+                raise TimeoutError(f"worker dial died during welcome: "
+                                   f"{e}") from e
+            w = _Worker(wid, chan, worker_host, proc=proc)
+            workers[wid] = w
+            store.add_worker(wid, host=worker_host)
+            return w
+
+        def heartbeat_all() -> None:
+            """Keep already-adopted workers' driver-silence watchdogs fed
+            while the driver is parked in an adoption barrier (the main
+            loop isn't running yet, so nobody else sends)."""
+            for w in workers.values():
+                if w.alive:
+                    w.chan.maybe_heartbeat()
+
+        def adopt_dialer_for(proc) -> _Worker:
+            """Match a handshaken dial to the local process we just
+            started (by pid), stashing unrelated dials (remote workers
+            arriving early) for later adoption."""
+            assert listener is not None
+            for i, (sock, hello) in enumerate(dial_stash):
+                if hello.get("pid") == proc.pid:
+                    dial_stash.pop(i)
+                    return adopt(sock, hello, proc=proc)
+            deadline = time.monotonic() + self.accept_timeout
+            while True:
+                if not proc.is_alive():
+                    # a dialer that died at bootstrap (import error, OOM)
+                    # will never dial: fail now with the real cause, not
+                    # after a silent accept_timeout hang
+                    raise RuntimeError(
+                        f"local worker (pid {proc.pid}) exited with code "
+                        f"{proc.exitcode} before dialing {self.address}")
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise TimeoutError(
+                        f"local worker pid {proc.pid} never dialed "
+                        f"{self.address} within {self.accept_timeout}s")
+                heartbeat_all()
+                try:
+                    sock, hello = listener.get_worker(min(0.5, remaining))
+                except TimeoutError:
+                    continue        # re-check the dialer's pulse
+                if hello.get("pid") == proc.pid:
+                    return adopt(sock, hello, proc=proc)
+                dial_stash.append((sock, hello))
 
         def spawn() -> _Worker:
+            """Start one local worker on the configured channel family."""
             nonlocal next_wid
+            if self.channel == "tcp":
+                proc = ctx.Process(
+                    target=tcp_worker_main, args=(self.address,),
+                    kwargs=({"token": self.token, "graph": graph,
+                             "inputs": inputs}
+                            if self.start_method == "fork"
+                            else {"token": self.token}),
+                    daemon=True, name="cluster-worker-dialer")
+                proc.start()
+                return adopt_dialer_for(proc)
             wid = next_wid
             next_wid += 1
             parent, child = ctx.Pipe(duplex=True)
-            proc = ctx.Process(target=worker_main,
+            proc = ctx.Process(target=pipe_worker_main,
                                args=(wid, child, graph, inputs, transport,
                                      self.shm_threshold, seg_prefix,
                                      peer_dir),
                                daemon=True, name=f"cluster-worker-{wid}")
             proc.start()
             child.close()
-            w = _Worker(wid, proc, parent)
+            cls = PipeChannel if self.channel == "pipe" else SpawnChannel
+            w = _Worker(wid, cls(parent, proc), self.host, proc=proc)
             workers[wid] = w
-            store.add_worker(wid)
+            store.add_worker(wid, host=self.host)
             return w
 
-        for _ in range(self.n_workers):
-            spawn()
+        def adopt_remote() -> _Worker:
+            """Fill one declared ``remote`` slot from the dial queue."""
+            assert listener is not None
+            if dial_stash:
+                sock, hello = dial_stash.pop(0)
+                return adopt(sock, hello, proc=None)
+            deadline = time.monotonic() + self.accept_timeout
+            while True:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise TimeoutError(
+                        f"no worker dialed {self.address} within "
+                        f"{self.accept_timeout}s (start workers with: "
+                        f"python -m repro.launch.remote --connect "
+                        f"{self.address})")
+                heartbeat_all()     # earlier adoptees must not starve
+                try:
+                    sock, hello = listener.get_worker(min(0.5, remaining))
+                except TimeoutError:
+                    continue
+                return adopt(sock, hello, proc=None)
 
         rank = graph.critical_path_rank()
         succ = store.successors
@@ -285,6 +552,9 @@ class ClusterExecutor:
             return [self.worker_speed[w % len(self.worker_speed)]
                     for w in wids]
 
+        def hosts_for(wids: List[int]) -> List[str]:
+            return [workers[w].host for w in wids]
+
         def alive_owner(tid: int) -> Optional[int]:
             return next((x for x in store.locations(tid)
                          if x in workers and workers[x].alive), None)
@@ -300,11 +570,13 @@ class ClusterExecutor:
                 if initial:
                     sched = list_schedule(
                         graph, len(wids), policy=self.policy,
-                        worker_speed=speeds_for(wids), seed=self.seed)
+                        worker_speed=speeds_for(wids), seed=self.seed,
+                        worker_host=hosts_for(wids))
                 else:
                     # replanning mid-run knows value sizes and current
                     # placements: make the comm-cost term real so the new
-                    # plan keeps consumers next to the bytes they need
+                    # plan keeps consumers next to the bytes they need —
+                    # and, via worker_host, on the right machine
                     placed = {}
                     for t in finish_times:
                         ow = alive_owner(t)
@@ -315,7 +587,8 @@ class ClusterExecutor:
                         now=time.perf_counter() - t0, policy=self.policy,
                         worker_speed=speeds_for(wids), seed=self.seed,
                         data_sizes=dict(store.sizes),
-                        bandwidth=self.bandwidth, placed=placed)
+                        bandwidth=self.bandwidth, placed=placed,
+                        worker_host=hosts_for(wids))
             except Exception:            # plan is advisory; never fatal
                 plan_worker.clear()
                 return
@@ -323,17 +596,16 @@ class ClusterExecutor:
             for tid, p in sched.placements.items():
                 plan_worker[tid] = wids[p.worker]
 
-        make_plan(initial=True)
-
         # ---------------------------------------------------------- helpers
         def safe_send(w: _Worker, msg: tuple) -> bool:
             """Send to a worker; an already-dead peer (organic SIGKILL, OOM,
-            segfault) becomes a failure-handled event, never an exception
-            out of the driver loop."""
+            segfault, socket reset, backpressure overflow) becomes a
+            failure-handled event, never an exception out of the driver
+            loop."""
             try:
-                w.conn.send(msg)
+                w.chan.send(msg)
                 return True
-            except (BrokenPipeError, OSError):
+            except ChannelClosed:
                 on_worker_death(w)
                 return False
 
@@ -391,19 +663,25 @@ class ClusterExecutor:
             return extra, missing
 
         def move_cost(tid: int, wid: int) -> int:
-            """Bytes that must move for ``tid`` to run on ``wid``.  A
+            """Bytes-weighted cost of running ``tid`` on ``wid``.  A
             published value costs half (one consumer-side materialization);
             an unpublished remote value costs its full size (publish +
-            materialize)."""
+            materialize) — and every byte whose nearest copy lives on
+            another *host* counts double, so the stealing loop prefers
+            same-host shm moves over cross-host TCP pulls."""
+            host = workers[wid].host
             cost = 0
             for d in graph.nodes[tid].all_deps:
                 if store.has_replica(d, wid):
                     continue
                 size = store.sizes.get(d, 0)
                 if d in store.handles or d in store.cache:
-                    cost += size // 2
+                    c = size // 2
                 else:
-                    cost += size
+                    c = size
+                if not store.on_host(d, host) and d not in store.cache:
+                    c *= 2          # nearest copy is on another machine
+                cost += c
             return cost
 
         def try_dispatch(tid: int, w: _Worker) -> bool:
@@ -560,16 +838,25 @@ class ClusterExecutor:
 
         def kill(w: _Worker) -> None:
             """SIGKILL + immediate failure handling (used by injection and
-            the kill_worker command; organic deaths arrive via the pipe)."""
-            try:
-                os.kill(w.proc.pid, signal.SIGKILL)
-                w.proc.join(timeout=5.0)
-            except (ProcessLookupError, OSError):
-                pass
+            the kill_worker command; organic deaths arrive via the
+            channel).  A remote worker has no local pid to signal, so it
+            is told to ``die`` — the executioner's message, then the same
+            death handling."""
+            if w.proc is not None:
+                try:
+                    os.kill(w.proc.pid, signal.SIGKILL)
+                    w.proc.join(timeout=5.0)
+                except (ProcessLookupError, OSError):
+                    pass
+            else:
+                try:
+                    w.chan.send(("die",))
+                except ChannelClosed:
+                    pass
             on_worker_death(w)
 
-        def join_one() -> None:
-            w = spawn()
+        def join_one(adopted: Optional[_Worker] = None) -> _Worker:
+            w = adopted if adopted is not None else spawn()
             stats["joins"] += 1
             make_plan(initial=False)
             return w
@@ -626,10 +913,7 @@ class ClusterExecutor:
                 return
             last_progress = time.perf_counter()
             w.alive = False
-            try:
-                w.conn.close()
-            except OSError:
-                pass
+            w.chan.close()
             stats["failures"] += 1
 
             # tasks that never completed there simply go back in the pool
@@ -717,40 +1001,46 @@ class ClusterExecutor:
                     for d in graph.nodes[tid].all_deps):
                 state[tid] = PENDING
 
+        def handle_msg(w: _Worker, msg: tuple) -> None:
+            verb = msg[0]
+            if verb == "done":
+                on_done(w, msg[2], msg[3], msg[4], msg[5])
+            elif verb == "value":
+                on_value(w, msg[2], msg[3], msg[4])
+            elif verb == "deplost":
+                on_deplost(w, msg[2], msg[3])
+            elif verb == "error":
+                if msg[3] == "MissingInput":
+                    # caller-error contract: never wrapped in TaskFailed
+                    error.append(MissingInput(msg[4]))
+                else:
+                    node = graph.nodes.get(msg[2])
+                    error.append(TaskFailed(
+                        msg[2], node.name if node else f"#{msg[2]}",
+                        RuntimeError(f"{msg[3]}: {msg[4]}")))
+            elif verb in ("hb", "bye"):
+                pass        # liveness bookkeeping happens in the channel
+
         def pump(timeout: float) -> None:
-            nonlocal last_progress
-            conns = {w.conn: w for w in workers.values() if w.alive}
-            if not conns:
+            chans = {w.chan.selectable(): w
+                     for w in workers.values() if w.alive}
+            if not chans:
                 return
-            for conn in conn_wait(list(conns), timeout=timeout):
-                w = conns[conn]
+            for sel in conn_wait(list(chans), timeout=timeout):
+                w = chans[sel]
                 try:
-                    msg = conn.recv()
-                except (EOFError, OSError):
+                    msgs = w.chan.recv_available()
+                except ChannelClosed:
                     on_worker_death(w)
                     continue
-                verb = msg[0]
-                if verb == "done":
-                    on_done(w, msg[2], msg[3], msg[4], msg[5])
-                elif verb == "value":
-                    on_value(w, msg[2], msg[3], msg[4])
-                elif verb == "deplost":
-                    on_deplost(w, msg[2], msg[3])
-                elif verb == "error":
-                    if msg[3] == "MissingInput":
-                        # caller-error contract: never wrapped in TaskFailed
-                        error.append(MissingInput(msg[4]))
-                    else:
-                        node = graph.nodes.get(msg[2])
-                        error.append(TaskFailed(
-                            msg[2], node.name if node else f"#{msg[2]}",
-                            RuntimeError(f"{msg[3]}: {msg[4]}")))
-                elif verb == "bye":
-                    pass
+                for msg in msgs:
+                    if not w.alive:
+                        break       # death handler ran under an earlier msg
+                    handle_msg(w, msg)
 
         def collect_finals() -> bool:
             """All tasks done: materialize ``required`` values into the
-            driver cache — decoding published handles directly (no pipe
+            driver cache — decoding published handles directly (no control
             traffic), fetching handles for the rest.  Returns True when
             everything required is cached."""
             nonlocal last_progress
@@ -795,15 +1085,41 @@ class ClusterExecutor:
                 elif cmd[0] == "kill" and cmd[1] in workers \
                         and workers[cmd[1]].alive:
                     kill(workers[cmd[1]])
+            # a repro-worker dialing a live TCP run is an elastic join —
+            # including dials parked in the stash while adopt_dialer_for
+            # was pid-matching a local spawn (they would otherwise hang
+            # unanswered until their handshake timeout)
+            if listener is not None:
+                while True:
+                    pair = dial_stash.pop(0) if dial_stash \
+                        else listener.poll_worker()
+                    if pair is None:
+                        break
+                    try:
+                        join_one(adopt(pair[0], pair[1], proc=None))
+                    except (ValueError, TimeoutError):
+                        pass    # cross-host dial into a host-local
+                        # transport, or the dialer died mid-welcome:
+                        # a bad joiner must never take down the run
 
         def check_deaths() -> None:
+            """Channel-based liveness: the OS truth for pipe workers
+            (``proc.is_alive``), missed heartbeats for TCP workers —
+            socket death delivers no SIGCHLD, so the *channel* is the
+            only witness."""
             for w in list(workers.values()):
-                if w.alive and not w.proc.is_alive():
+                if w.alive and w.chan.dead() is not None:
                     on_worker_death(w)
 
         # ------------------------------------------------------- main loop
         self._active = True
         try:
+            for spec in self.worker_specs:
+                if spec == "remote":
+                    adopt_remote()
+                else:
+                    spawn()
+            make_plan(initial=True)
             while not error:
                 check_commands()
                 if len(done) >= n_total:
@@ -813,6 +1129,9 @@ class ClusterExecutor:
                     dispatch()
                 pump(timeout=0.02)
                 check_deaths()
+                for w in workers.values():
+                    if w.alive:
+                        w.chan.maybe_heartbeat()
                 if time.perf_counter() - last_progress > self.progress_timeout:
                     by_state: Dict[int, List[int]] = {}
                     for t, s in state.items():
@@ -830,20 +1149,27 @@ class ClusterExecutor:
             for w in workers.values():
                 if w.alive:
                     try:
-                        w.conn.send(("stop",))
-                    except (BrokenPipeError, OSError):
+                        w.chan.send(("stop",))
+                    except ChannelClosed:
                         pass
             for w in workers.values():
-                w.proc.join(timeout=5.0)
-                if w.proc.is_alive():
-                    w.proc.terminate()
+                if w.proc is not None:
                     w.proc.join(timeout=5.0)
-            # segment hygiene: free tracked handles, then sweep the run's
-            # /dev/shm prefix for orphans (workers killed mid-publish)
+                    if w.proc.is_alive():
+                        w.proc.terminate()
+                        w.proc.join(timeout=5.0)
+                w.chan.close()
+            for sock, _ in dial_stash:      # dials we never adopted
+                try:
+                    sock.close()
+                except OSError:
+                    pass
+            # hygiene sweep: free tracked handles, then clear the run's
+            # /dev/shm prefix AND its peer-socket tmpdir — orphans from
+            # workers killed mid-publish never cleaned up after themselves
             store.release_all()
             serde.sweep_segments(seg_prefix)
-            if peer_dir is not None:
-                shutil.rmtree(peer_dir, ignore_errors=True)
+            serde.sweep_peer_sockets(peer_dir)
             self.wall_time = time.perf_counter() - t0
 
         if error:

@@ -46,14 +46,23 @@ class DriverObjectStore:
         self.handles: Dict[int, serde.Handle] = {}   # tid -> published handle
         self.sizes: Dict[int, int] = {}          # tid -> payload bytes
         self.known: Dict[int, Set[int]] = {}     # worker id -> {tid} it holds
+        self.worker_host: Dict[int, Any] = {}    # worker id -> machine id
         succ = graph.successors()
         self.successors = succ
         self.consumers_left: Dict[int, int] = {
             tid: len(succ[tid]) for tid in graph.nodes}
 
     # ------------------------------------------------------------ ownership
-    def add_worker(self, wid: int) -> None:
+    def add_worker(self, wid: int, host: Any = "local") -> None:
         self.known.setdefault(wid, set())
+        self.worker_host[wid] = host
+
+    def on_host(self, tid: int, host: Any) -> bool:
+        """True when some replica of ``tid`` lives on machine ``host`` —
+        the per-host locality grouping: a same-host copy is reachable over
+        shm/unix-socket (near), a cross-host one only over TCP (far)."""
+        return any(self.worker_host.get(w) == host
+                   for w in self.replicas.get(tid, ()))
 
     def record(self, tid: int, wid: int, nbytes: int = 0) -> None:
         """Task ``tid`` completed on worker ``wid``; value lives there."""
@@ -105,6 +114,7 @@ class DriverObjectStore:
         cached on the driver is NOT lost (the replica-set fix: PR-1's single
         ``owner`` field reported any multiply-held value as lost)."""
         held = self.known.pop(wid, set())
+        self.worker_host.pop(wid, None)
         lost: Set[int] = set()
         for t in held:
             reps = self.replicas.get(t)

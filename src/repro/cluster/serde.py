@@ -49,7 +49,12 @@ from typing import Any, Callable, Dict, List, Optional, Union
 SHM_THRESHOLD = 1 << 16     # buffers >= 64 KiB go out-of-band to /dev/shm
 _SHM_DIR = "/dev/shm"       # POSIX shm backing dir (Linux); probed, not assumed
 
-TRANSPORTS = ("auto", "shm", "sock", "driver")
+TRANSPORTS = ("auto", "shm", "sock", "tcp", "driver")
+
+#: transports whose handles resolve across host boundaries.  Shm segments
+#: and unix sockets are host-local; TCP peer pulls and driver-relayed
+#: inline bytes work anywhere the control plane reaches.
+CROSS_HOST_TRANSPORTS = ("auto", "tcp", "driver")
 
 
 class TransferLost(RuntimeError):
@@ -71,11 +76,20 @@ class ShmRef:
 @dataclass(frozen=True)
 class PeerRef:
     """Handle to a value held in a peer worker's store, reachable over that
-    worker's unix socket.  NOT durable — dies with the owning process."""
+    worker's socket server: ``addr`` is a unix-socket path, or
+    ``tcp://host:port`` for the multi-host data plane.  NOT durable —
+    dies with the owning process.
+
+    ``secret`` is a per-server capability for the TCP family: the server
+    only answers requests that present it, and the only way to learn it is
+    to receive a PeerRef over the (token-gated) control channel — so an
+    open network port does not expose task values to port scanners.  Unix
+    servers rely on filesystem permissions instead and leave it empty."""
     addr: str
     tid: int
     nbytes: int
     wid: int
+    secret: str = ""
 
 
 @dataclass
@@ -161,13 +175,26 @@ def shm_available() -> bool:
     return _SHM_OK
 
 
-def resolve_transport(transport: str) -> str:
-    """Map ``auto`` to the best channel this host supports."""
+def resolve_transport(transport: str, multihost: bool = False) -> str:
+    """Map ``auto`` to the best channel this deployment supports.
+
+    ``multihost=True`` means at least one worker may live on another
+    machine: shm segments and unix sockets do not exist over there, so
+    ``auto`` resolves to ``tcp`` and explicitly asking for a host-local
+    transport is a clear error instead of a cross-host resolve failure.
+    """
     if transport not in TRANSPORTS:
         raise ValueError(f"unknown transport {transport!r} "
                          f"(expected one of {TRANSPORTS})")
+    if multihost and transport not in CROSS_HOST_TRANSPORTS:
+        raise ValueError(
+            f"transport {transport!r} is host-local (shm segments / unix "
+            f"sockets cannot cross machines); multi-host runs support "
+            f"{CROSS_HOST_TRANSPORTS}")
     if transport != "auto":
         return transport
+    if multihost:
+        return "tcp"
     if shm_available():
         return "shm"
     if hasattr(socket, "AF_UNIX"):
@@ -252,6 +279,31 @@ def sweep_segments(prefix: str) -> int:
             n += 1
         except OSError:
             pass
+    return n
+
+
+def sweep_peer_sockets(peer_dir: Optional[str]) -> int:
+    """Remove a run's :class:`PeerServer` unix-socket files and their
+    tmpdir.  Part of the same shutdown sweep as :func:`sweep_segments`: a
+    SIGKILL'd worker never runs ``PeerServer.close``, so its ``w<id>.sock``
+    would otherwise outlive the run in the tmpdir.  Returns the number of
+    socket files removed (idempotent; a missing dir is fine)."""
+    if not peer_dir or not os.path.isdir(peer_dir):
+        return 0
+    n = 0
+    for name in os.listdir(peer_dir):
+        if not name.endswith(".sock"):
+            continue
+        try:
+            os.unlink(os.path.join(peer_dir, name))
+            n += 1
+        except OSError:
+            pass
+    try:
+        os.rmdir(peer_dir)
+    except OSError:          # non-socket stragglers: take the dir anyway
+        import shutil
+        shutil.rmtree(peer_dir, ignore_errors=True)
     return n
 
 
@@ -358,35 +410,56 @@ def resolve(handle: Handle,
 
 # ------------------------------------------------------------- peer channel
 _LEN = struct.Struct("<q")
+_SECRET_LEN = 32            # uuid4().hex — fixed-width capability token
 
-
-def _recv_exact(sock: socket.socket, n: int) -> bytes:
-    chunks = []
-    while n:
-        chunk = sock.recv(min(n, 1 << 20))
-        if not chunk:
-            raise ConnectionError("peer closed mid-message")
-        chunks.append(chunk)
-        n -= len(chunk)
-    return b"".join(chunks)
+# exact-read is shared with the control channel's framing (ChannelClosed
+# subclasses ConnectionError, so existing handlers here keep working)
+from .channel import _recv_exact        # noqa: E402
 
 
 class PeerServer:
-    """Worker-side unix-socket server: peers (and the driver, for final
+    """Worker-side socket server: peers (and the driver, for final
     collection) pull values straight from this worker's local store,
-    bypassing the driver pipe entirely.  One request per connection:
-    ``<tid:int64>`` in, ``<len:int64><pickled Encoded>`` out (len == -1
-    when the value is not in the store)."""
+    bypassing the driver control channel entirely.  One request per
+    connection: ``<tid:int64>`` in, ``<len:int64><pickled Encoded>`` out
+    (len == -1 when the value is not in the store).
 
-    def __init__(self, path: str, store: Dict[int, Any]) -> None:
-        self.path = path
+    Two address families share the protocol: a unix-domain socket at
+    ``path`` (the single-host ``sock`` transport), or — when ``path`` is
+    ``None`` — a TCP socket bound to an ephemeral port and advertised as
+    ``tcp://<advertise_host>:<port>`` (the multi-host ``tcp`` transport,
+    where a consumer on another machine dials the producer directly).
+    :attr:`path` is the advertised address either way, and is what goes
+    into every :class:`PeerRef` this worker hands out.
+    """
+
+    def __init__(self, path: Optional[str], store: Dict[int, Any], *,
+                 advertise_host: str = "127.0.0.1") -> None:
         self._store = store
-        self._sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
-        self._sock.bind(path)
+        self._unix_path: Optional[str] = path
+        if path is not None:
+            self.secret = ""        # unix: filesystem perms are the gate
+            self._sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+            try:
+                os.unlink(path)      # stale file from a recycled wid/run
+            except OSError:
+                pass
+            self._sock.bind(path)
+            self.path = path
+        else:
+            # TCP: an open port on 0.0.0.0 — requests must present the
+            # per-server capability secret, which travels only inside
+            # PeerRefs on the authenticated control channel
+            self.secret = uuid.uuid4().hex
+            self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+            self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+            self._sock.bind(("0.0.0.0", 0))
+            self.path = f"tcp://{advertise_host}:{self._sock.getsockname()[1]}"
         self._sock.listen(16)
         self._closed = False
         threading.Thread(target=self._accept_loop, daemon=True,
-                         name=f"peer-server-{os.path.basename(path)}").start()
+                         name=f"peer-server-{os.path.basename(self.path)}"
+                         ).start()
 
     def _accept_loop(self) -> None:
         while not self._closed:
@@ -400,7 +473,15 @@ class PeerServer:
     def _serve_one(self, conn: socket.socket) -> None:
         try:
             with conn:
+                # a client that connects and goes silent (port scanner on
+                # the open TCP family) must not pin this thread forever
+                conn.settimeout(60.0)
                 (tid,) = _LEN.unpack(_recv_exact(conn, _LEN.size))
+                if self.secret:
+                    import hmac
+                    got = _recv_exact(conn, _SECRET_LEN)
+                    if not hmac.compare_digest(got, self.secret.encode()):
+                        return      # unauthorized: drop the connection
                 if tid not in self._store:
                     conn.sendall(_LEN.pack(-1))
                     return
@@ -416,20 +497,40 @@ class PeerServer:
             self._sock.close()
         except OSError:
             pass
-        try:
-            os.unlink(self.path)
-        except OSError:
-            pass
+        if self._unix_path is not None:
+            try:
+                os.unlink(self._unix_path)
+            except OSError:
+                pass
+
+
+def _peer_connect(addr: str, timeout: float) -> socket.socket:
+    """Dial a peer address: ``tcp://host:port`` or a unix-socket path."""
+    if addr.startswith("tcp://"):
+        host, _, port = addr[len("tcp://"):].rpartition(":")
+        return socket.create_connection((host, int(port)), timeout=timeout)
+    sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+    sock.settimeout(timeout)
+    sock.connect(addr)
+    return sock
 
 
 def peer_fetch(ref: PeerRef, timeout: float = 30.0) -> Any:
-    """Pull ``ref.tid`` from the owning worker's socket.  Any failure is a
-    :class:`TransferLost` — the owner died or dropped the value."""
+    """Pull ``ref.tid`` from the owning worker's socket (unix or TCP).  Any
+    failure is a :class:`TransferLost` — the owner died or dropped the
+    value."""
     try:
-        with socket.socket(socket.AF_UNIX, socket.SOCK_STREAM) as sock:
+        with _peer_connect(ref.addr, timeout) as sock:
             sock.settimeout(timeout)
-            sock.connect(ref.addr)
-            sock.sendall(_LEN.pack(ref.tid))
+            request = _LEN.pack(ref.tid)
+            if ref.addr.startswith("tcp://"):
+                secret = ref.secret.encode()
+                if len(secret) != _SECRET_LEN:
+                    raise TransferLost(
+                        f"peer ref for task {ref.tid} carries no valid "
+                        f"capability secret")
+                request += secret
+            sock.sendall(request)
             (n,) = _LEN.unpack(_recv_exact(sock, _LEN.size))
             if n < 0:
                 raise TransferLost(
@@ -440,7 +541,15 @@ def peer_fetch(ref: PeerRef, timeout: float = 30.0) -> Any:
     except (OSError, ConnectionError, socket.timeout) as e:
         raise TransferLost(
             f"peer {ref.addr} unreachable for task {ref.tid}: {e!r}") from e
-    return decode(pickle.loads(blob))
+    try:
+        return decode(pickle.loads(blob))
+    except TransferLost:
+        raise
+    except Exception as e:      # truncated/garbled stream: the peer died
+        # mid-write (or something that isn't a PeerServer answered)
+        raise TransferLost(
+            f"peer {ref.addr} sent a corrupt stream for task "
+            f"{ref.tid}: {e!r}") from e
 
 
 # ------------------------------------------------------------------- sizing

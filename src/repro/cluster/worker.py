@@ -1,13 +1,19 @@
 """Worker-process side of the cluster runtime.
 
-A worker is one OS process connected to the driver by a single duplex pipe.
+A worker is one OS process connected to the driver by a control-plane
+*channel* (:mod:`repro.cluster.channel`): a duplex pipe for forked/spawned
+in-host workers, or a framed TCP stream for workers dialed in from other
+hosts.  The worker body below is channel-agnostic — it sees only blocking
+``recv()``/``send()`` with :class:`~repro.cluster.channel.ChannelClosed`
+as the "driver gone" signal.
+
 It owns a *local object store* (``{tid: value}``) holding the results of
 every task it has executed — plus, since the zero-copy data plane, a
 replica of every transferred input it has resolved (reported back to the
-driver in the ``done`` message so replica sets stay exact).  Bulk values no
-longer cross the pipe: a ``fetch`` is answered with a small *handle*
-(:class:`~repro.cluster.serde.Encoded` shared-memory refs, or a ``PeerRef``
-to this worker's unix socket when shm is unavailable), and the consumer
+driver in the ``done`` message so replica sets stay exact).  Bulk values do
+not cross the control channel: a ``fetch`` is answered with a small
+*handle* (:class:`~repro.cluster.serde.Encoded` shared-memory refs, or a
+``PeerRef`` to this worker's unix/TCP socket server), and the consumer
 maps/pulls the payload directly — worker-to-worker, driver untouched.
 
 Message protocol (tuples; first element is the verb):
@@ -18,6 +24,9 @@ Message protocol (tuples; first element is the verb):
                             worker's store
     ("fetch", tid)          publish ``tid`` and reply with its handle
     ("drop",  tids)         free stored values (driver-coordinated GC)
+    ("hb",)                 keepalive (TCP channels; refreshes liveness)
+    ("die",)                chaos hook: SIGKILL self (the driver cannot
+                            signal a remote pid directly)
     ("stop",)               drain and exit
 
   worker -> driver
@@ -32,17 +41,23 @@ Message protocol (tuples; first element is the verb):
     ("deplost", wid, tid, deps)          transfer handles in a ``run`` could
                             not be resolved (owner died mid-transfer);
                             driver re-queues the task and recovers the deps
-    ("bye",     wid)                     shutdown ack
+    ("hb",)                              heartbeat (TCP channels)
+    ("bye",     wid)                     explicit goodbye: clean shutdown,
+                            never to be mistaken for a missed-heartbeat
+                            death
 
-Workers are started with the ``fork`` start method, so the (closure-bearing,
-generally unpicklable) :class:`~repro.core.graph.TaskGraph` and the run's
-``inputs`` dict are inherited by memory copy — the paper's "ship the program
-to every node" step costs one fork, and per-task messages carry only ids and
-handles (a few hundred bytes, independent of payload size).
+Fork-started workers inherit the (closure-bearing, generally unpicklable)
+:class:`~repro.core.graph.TaskGraph` and the run's ``inputs`` dict by
+memory copy; spawn-started and remote TCP workers receive them pickled
+(via process args or the handshake's welcome frame) — the paper's "ship
+the program to every node" step either way, after which per-task messages
+carry only ids and handles (a few hundred bytes, independent of payload
+size).
 """
 from __future__ import annotations
 
 import os
+import signal
 from typing import Any, Dict, List, Optional
 
 from repro.core.executor import _run_node as run_node   # noqa: F401 — the
@@ -52,24 +67,39 @@ from repro.core.executor import _run_node as run_node   # noqa: F401 — the
 from repro.core.graph import TaskGraph
 
 from . import serde
+from .channel import ChannelClosed, WorkerPipeEndpoint
 
 
-def worker_main(wid: int, conn, graph: TaskGraph,
+def pipe_worker_main(wid: int, conn, graph: TaskGraph,
+                     inputs: Optional[Dict[str, Any]],
+                     transport: str = "driver",
+                     shm_threshold: int = serde.SHM_THRESHOLD,
+                     seg_prefix: str = "",
+                     peer_dir: Optional[str] = None) -> None:
+    """Process entrypoint for pipe/spawn channel workers: wrap the raw
+    duplex-pipe connection in the channel-agnostic endpoint and run."""
+    worker_main(wid, WorkerPipeEndpoint(conn), graph, inputs, transport,
+                shm_threshold, seg_prefix, peer_dir)
+
+
+def worker_main(wid: int, chan, graph: TaskGraph,
                 inputs: Optional[Dict[str, Any]],
                 transport: str = "driver",
                 shm_threshold: int = serde.SHM_THRESHOLD,
                 seg_prefix: str = "",
-                peer_dir: Optional[str] = None) -> None:
-    """Worker process body: reader thread + sender thread + compute loop.
+                peer_dir: Optional[str] = None,
+                peer_host: str = "127.0.0.1") -> None:
+    """Worker body: reader thread + sender thread + compute loop, over any
+    control channel ``chan`` (blocking ``recv``/``send`` endpoint).
 
     Deadlock-freedom argument (handles are small, but driver-transport
-    payloads can still exceed the kernel pipe buffer): the reader thread
-    does *nothing but recv*, so the driver's blocking dispatch-sends always
-    drain; the sender thread does *nothing but send* from an outbox queue,
-    so neither the reader nor a long-running task can ever stall an
-    outgoing reply; the driver's pump loop drains worker output whenever it
-    isn't mid-send.  Any single blocked pipe therefore unblocks without
-    waiting on this process's compute.
+    payloads can still exceed the kernel pipe/socket buffer): the reader
+    thread does *nothing but recv*, so the driver's blocking
+    dispatch-sends always drain; the sender thread does *nothing but send*
+    from an outbox queue, so neither the reader nor a long-running task can
+    ever stall an outgoing reply; the driver's pump loop drains worker
+    output whenever it isn't mid-send.  Any single blocked channel
+    therefore unblocks without waiting on this process's compute.
 
     The reader answers ``fetch``/``drop`` directly (peers' input transfers
     are served while a task is running); ``run``/``stop`` are queued for
@@ -94,11 +124,17 @@ def worker_main(wid: int, conn, graph: TaskGraph,
                 os.path.join(peer_dir, f"w{wid}.sock"), store)
         except OSError:
             peer_server = None      # degrade to inline (driver) publishes
+    elif transport == "tcp":
+        try:
+            peer_server = serde.PeerServer(None, store,
+                                           advertise_host=peer_host)
+        except OSError:
+            peer_server = None
 
     def publish(tid: int) -> serde.Handle:
         """Produce (and memoize) the transfer handle for a stored value:
-        shm-backed Encoded, a PeerRef to this worker's socket, or inline
-        bytes for small values / driver transport."""
+        shm-backed Encoded, a PeerRef to this worker's socket server, or
+        inline bytes for small values / driver transport."""
         handle = published.get(tid)
         if handle is not None:
             return handle
@@ -106,11 +142,12 @@ def worker_main(wid: int, conn, graph: TaskGraph,
         if (peer_server is not None
                 and serde.payload_nbytes(value) >= shm_threshold):
             handle = serde.PeerRef(peer_server.path, tid,
-                                   serde.payload_nbytes(value), wid)
+                                   serde.payload_nbytes(value), wid,
+                                   secret=peer_server.secret)
         else:
             handle = serde.encode(
-                value, transport=transport if transport != "sock" else
-                "driver", threshold=shm_threshold, namer=namer)
+                value, transport="driver" if transport in ("sock", "tcp")
+                else transport, threshold=shm_threshold, namer=namer)
         published[tid] = handle
         return handle
 
@@ -120,8 +157,8 @@ def worker_main(wid: int, conn, graph: TaskGraph,
             if msg is None:
                 return
             try:
-                conn.send(msg)
-            except (BrokenPipeError, OSError):
+                chan.send(msg)
+            except ChannelClosed:
                 return
             except Exception as e:      # unpicklable/oversized payload in a
                 # reply: report it as a task error instead of wedging the
@@ -129,9 +166,9 @@ def worker_main(wid: int, conn, graph: TaskGraph,
                 tid = msg[2] if len(msg) > 2 and isinstance(msg[2], int) \
                     else -1
                 try:
-                    conn.send(("error", wid, tid,
+                    chan.send(("error", wid, tid,
                                "SerializationError", repr(e)))
-                except (BrokenPipeError, OSError):
+                except ChannelClosed:
                     return
                 except Exception:
                     pass
@@ -139,8 +176,8 @@ def worker_main(wid: int, conn, graph: TaskGraph,
     def reader() -> None:
         while True:
             try:
-                msg = conn.recv()
-            except (EOFError, OSError):
+                msg = chan.recv()
+            except ChannelClosed:
                 runq.put(("stop",))      # driver went away
                 return
             verb = msg[0]
@@ -160,6 +197,10 @@ def worker_main(wid: int, conn, graph: TaskGraph,
                 for t in msg[1]:
                     store.pop(t, None)
                     published.pop(t, None)
+            elif verb == "hb":
+                pass                     # endpoint already refreshed liveness
+            elif verb == "die":          # chaos hook for remote workers
+                os.kill(os.getpid(), signal.SIGKILL)
             else:                        # "run" / "stop"
                 runq.put(msg)
                 if verb == "stop":
@@ -180,6 +221,7 @@ def worker_main(wid: int, conn, graph: TaskGraph,
             outq.put(None)
             send_thread.join(timeout=5.0)
             keeper.close()       # last mappings: safe, nothing runs after
+            chan.close()
             return
         if verb != "run":                # pragma: no cover — protocol bug
             raise RuntimeError(f"worker {wid}: unknown message {verb!r}")
@@ -213,3 +255,39 @@ def worker_main(wid: int, conn, graph: TaskGraph,
                       serde.payload_nbytes(value), replicated))
         except BaseException as e:       # noqa: BLE001 — shipped to driver
             outq.put(("error", wid, tid, type(e).__name__, repr(e)))
+
+
+def tcp_worker_main(address: str, *,
+                    token: Optional[str] = None,
+                    graph: Optional[TaskGraph] = None,
+                    inputs: Optional[Dict[str, Any]] = None,
+                    timeout: float = 30.0) -> int:
+    """Process entrypoint for TCP-channel workers (local forked dialers and
+    the ``repro-worker`` CLI alike): dial the driver at ``address``,
+    handshake, and run :func:`worker_main` with the negotiated identity and
+    run config.
+
+    A worker launched with ``graph`` already in hand (forked locally, graph
+    inherited) advertises ``has_graph=True`` and the driver skips shipping
+    it; a bare remote worker receives the pickled ``(graph, inputs)`` pair
+    in the welcome frame.  Returns the assigned worker id.
+    """
+    import pickle
+
+    from .channel import dial_driver
+
+    endpoint, wid, config, graph_blob = dial_driver(
+        address, token=token, has_graph=graph is not None, timeout=timeout)
+    if graph is None:
+        if graph_blob is None:
+            raise ChannelClosed(
+                "driver sent no graph to a worker that has none")
+        graph, inputs = pickle.loads(graph_blob)
+    worker_main(wid, endpoint, graph, inputs,
+                transport=config.get("transport", "driver"),
+                shm_threshold=config.get("shm_threshold",
+                                         serde.SHM_THRESHOLD),
+                seg_prefix=config.get("seg_prefix", ""),
+                peer_dir=config.get("peer_dir"),
+                peer_host=config.get("peer_host", "127.0.0.1"))
+    return wid

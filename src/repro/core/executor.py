@@ -221,8 +221,23 @@ class ThreadedExecutor:
 
 
 def make_executor(backend: str, n_workers: int, **kw) -> Executor:
-    """Factory over runtime backends: ``thread`` | ``process``."""
+    """Factory over runtime backends: ``thread`` | ``process``.
+
+    Cluster-only options (``transport``, ``channel``, ``connect``, ...)
+    passed to the thread backend are named errors here, not ``TypeError``
+    shrapnel from ``ThreadedExecutor.__init__``: the thread backend runs
+    in one address space and has no data or control plane to select.
+    """
     if backend == "thread":
+        cluster_only = sorted(
+            k for k in ("transport", "channel", "connect", "workers",
+                        "start_method", "shm_threshold", "token")
+            if k in kw)
+        if cluster_only:
+            raise ValueError(
+                f"option(s) {cluster_only} apply only to the process "
+                f"backend (backend='process'); the thread backend shares "
+                f"one address space")
         return ThreadedExecutor(n_workers, **kw)
     if backend == "process":
         from repro.cluster import ClusterExecutor   # deferred: no cycle

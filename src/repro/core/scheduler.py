@@ -19,7 +19,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import random as _random
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from .graph import TaskGraph
 
@@ -81,6 +81,8 @@ def list_schedule(
     data_sizes: Optional[Dict[int, int]] = None,
     bandwidth: float = float(256 << 20),
     placed: Optional[Dict[int, int]] = None,
+    worker_host: Optional[Sequence[Any]] = None,
+    near_factor: float = 0.25,
 ) -> Schedule:
     """Greedy list scheduling.
 
@@ -95,17 +97,38 @@ def list_schedule(
     that cost apply to edges out of *completed* work too — so a mid-run
     replan keeps consumers next to the worker already holding their input
     bytes instead of treating finished values as free everywhere.
+
+    ``worker_host`` (one machine id per worker index) adds per-host
+    locality grouping to the synthesized cost: an edge between two workers
+    on the same host moves over shared memory / a unix socket and costs
+    ``near_factor`` of the cross-host (TCP) price, so the plan prefers
+    keeping a value's consumers on the machine that holds it while still
+    treating two same-host workers as distinct.  It scales only the
+    synthesized ``data_sizes`` cost; an explicit ``comm_cost`` callable is
+    used verbatim.
     """
     if n_workers <= 0:
         raise ValueError("need at least one worker")
     speeds = list(worker_speed) if worker_speed else [1.0] * n_workers
     if len(speeds) != n_workers:
         raise ValueError("worker_speed length mismatch")
+    hosts = list(worker_host) if worker_host is not None else None
+    if hosts is not None and len(hosts) != n_workers:
+        raise ValueError("worker_host length mismatch")
     done = dict(done or {})
     placed = dict(placed or {})
-    if comm_cost is None and data_sizes:
+    edge_cost: Optional[Callable[[int, int, int, int], float]] = None
+    if comm_cost is not None:
+        cc = comm_cost
+        edge_cost = lambda d, t, pw, w: cc(d, t)            # noqa: E731
+    elif data_sizes:
         sizes = data_sizes
-        comm_cost = lambda d, t: sizes.get(d, 0) / bandwidth  # noqa: E731
+
+        def edge_cost(d: int, t: int, pw: int, w: int) -> float:
+            c = sizes.get(d, 0) / bandwidth
+            if hosts is not None and hosts[pw] == hosts[w]:
+                c *= near_factor            # same-host move: shm-near
+            return c
     rng = _random.Random(seed)
 
     rank = graph.critical_path_rank()
@@ -144,14 +167,14 @@ def list_schedule(
         best = None
         for w in range(n_workers):
             est = max(worker_free[w], deps_done)
-            if comm_cost is not None:
+            if edge_cost is not None:
                 for d in node.deps:
                     if d in placements:
                         pw = placements[d].worker
                     else:           # completed task: known owner, else local
                         pw = placed.get(d, w)
                     if pw != w:
-                        est = max(est, finish[d] + comm_cost(d, tid))
+                        est = max(est, finish[d] + edge_cost(d, tid, pw, w))
             dur = node.cost / speeds[w]
             eft = est + dur
             if best is None or eft < best[0]:

@@ -25,6 +25,22 @@ from repro.core import TaskGraph, make_executor
 from repro.core.executor import Executor
 
 
+#: data-plane transports each runtime backend actually supports.  The
+#: thread backend shares one address space — there is no transport to
+#: pick, so anything but the default is a user error worth naming early
+#: (it used to be silently ignored; an unknown transport died as a deep
+#: KeyError inside the executor instead of at the flag).
+BACKEND_TRANSPORTS: Dict[str, tuple] = {
+    "thread": ("auto",),
+    "process": ("auto", "shm", "sock", "tcp", "driver"),
+}
+
+BACKEND_CHANNELS: Dict[str, tuple] = {
+    "thread": ("auto",),
+    "process": ("auto", "pipe", "spawn", "tcp"),
+}
+
+
 def add_backend_args(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--backend", default="thread",
                     choices=["thread", "process"],
@@ -33,19 +49,49 @@ def add_backend_args(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--graph-workers", type=int, default=2,
                     help="worker count for the traced-driver dry-run")
     ap.add_argument("--transport", default="auto",
-                    choices=["auto", "shm", "sock", "driver"],
+                    choices=["auto", "shm", "sock", "tcp", "driver"],
                     help="process-backend data plane: zero-copy shared "
-                         "memory, direct unix-socket pulls, or the "
+                         "memory, direct unix-socket or TCP pulls, or the "
                          "driver-relayed pipe path (A/B baseline)")
+    ap.add_argument("--channel", default="auto",
+                    choices=["auto", "pipe", "spawn", "tcp"],
+                    help="process-backend control plane: in-host pipes "
+                         "(forked/spawned workers) or the multi-host TCP "
+                         "listener (workers dial in; see repro-worker)")
+
+
+def validate_backend_args(args) -> None:
+    """Fail fast, with the flag's own vocabulary, when ``--transport`` /
+    ``--channel`` name something the chosen ``--backend`` cannot do."""
+    backend = getattr(args, "backend", "thread")
+    transport = getattr(args, "transport", "auto")
+    channel = getattr(args, "channel", "auto")
+    supported = BACKEND_TRANSPORTS.get(backend, ("auto",))
+    if transport not in supported:
+        raise SystemExit(
+            f"--transport {transport} is not supported by --backend "
+            f"{backend}: the thread backend runs in one address space "
+            f"(no data plane to choose); use --backend process for "
+            f"{BACKEND_TRANSPORTS['process'][1:]}")
+    if channel not in BACKEND_CHANNELS.get(backend, ("auto",)):
+        raise SystemExit(
+            f"--channel {channel} is not supported by --backend {backend}: "
+            f"only the process backend has a worker control plane; use "
+            f"--backend process for {BACKEND_CHANNELS['process'][1:]}")
 
 
 def execute_traced(graph: TaskGraph, args,
                    inputs: Optional[Dict[str, Any]] = None) -> Dict[int, Any]:
     """Run a traced driver DAG on the selected backend and report stats
     (including the data-plane counters for the process backend)."""
-    kw = ({"start_method": "spawn", "progress_timeout": 300.0,
-           "transport": getattr(args, "transport", "auto")}
-          if args.backend == "process" else {})
+    validate_backend_args(args)
+    kw: Dict[str, Any] = {}
+    if args.backend == "process":
+        kw = {"start_method": "spawn", "progress_timeout": 300.0,
+              "transport": getattr(args, "transport", "auto")}
+        channel = getattr(args, "channel", "auto")
+        if channel != "auto":
+            kw["channel"] = channel
     ex: Executor = make_executor(args.backend, args.graph_workers, **kw)
     results = ex.run(graph, inputs)
     transport = getattr(ex, "transport_used", None)

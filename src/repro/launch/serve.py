@@ -29,7 +29,8 @@ import numpy as np
 
 from repro.configs import get_config, ARCHS
 from repro.core import task, trace
-from repro.launch.backend import add_backend_args, execute_traced
+from repro.launch.backend import (add_backend_args, execute_traced,
+                                  validate_backend_args)
 from repro.models import transformer as TF
 from repro.parallel.mesh import make_mesh_for, single_device_mesh
 from repro.core.placement import standard_rules
@@ -117,6 +118,9 @@ def main(argv=None) -> Dict[str, Any]:
                          "a task DAG, print it, and execute on --backend")
     add_backend_args(ap)
     args = ap.parse_args(argv)
+    # flag sanity before any model building: --transport/--channel must
+    # name something the chosen --backend can actually do
+    validate_backend_args(args)
 
     cfg = get_config(args.arch)
     if args.reduced:

@@ -38,7 +38,8 @@ from repro.core.placement import standard_rules
 from repro.checkpoint.store import CheckpointManager, latest_step
 from repro.data.pipeline import SyntheticLMDataset, Prefetcher
 from repro.launch import steps as steps_mod
-from repro.launch.backend import add_backend_args, execute_traced
+from repro.launch.backend import (add_backend_args, execute_traced,
+                                  validate_backend_args)
 from repro.models import transformer as TF
 from repro.models import encdec as ED
 from repro.models import frontends
@@ -149,6 +150,9 @@ def main(argv: Optional[list] = None) -> Dict[str, Any]:
                          "print it, and execute it on --backend")
     add_backend_args(ap)
     args = ap.parse_args(argv)
+    # flag sanity before any model building: --transport/--channel must
+    # name something the chosen --backend can actually do
+    validate_backend_args(args)
 
     rt = build_runtime(args)
     cfg = rt["cfg"]

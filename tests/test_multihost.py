@@ -1,0 +1,571 @@
+"""Multi-host control plane: the Channel abstraction, the TCP channel
+(handshake, heartbeat liveness, backpressure), ``repro-worker`` dial-in,
+the ``tcp`` data-plane transport, per-host locality, elastic joins under
+``sock``/TCP, and the transport-validation satellite.
+
+Local TCP workers are *forked dialers* — the graph is inherited by fork
+(closures allowed) while every control message rides real localhost TCP,
+so these differentials exercise the exact multi-host code path: framed
+streams, heartbeats, EOF-not-SIGCHLD death detection, goodbye frames.
+The ``repro-worker`` tests add the full remote contract on top: a fresh
+interpreter dials the driver, receives the pickled graph in the welcome
+frame, and serves tasks — which is why their task functions live at
+module level (`_mh_combine`), exactly like ``start_method="spawn"``.
+"""
+import glob
+import os
+import pickle
+import random
+import signal
+import socket
+import subprocess
+import sys
+import threading
+import time
+from functools import partial
+
+import numpy as np
+import pytest
+
+from repro.core import TaskGraph, TaskKind, execute_sequential
+from repro.core.scheduler import list_schedule
+from repro.core.tracing import RemappedRef as _Ref
+from repro.cluster import ClusterExecutor, serde
+from repro.cluster.channel import (ChannelClosed, TcpChannel, TcpListener,
+                                   _FrameBuffer, _send_frame, dial_driver,
+                                   PROTOCOL_MAGIC, PROTOCOL_VERSION)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+WORKER_ENV = dict(
+    os.environ,
+    PYTHONPATH=os.pathsep.join(
+        [os.path.join(REPO, "src"), os.path.dirname(os.path.abspath(__file__))]
+        + ([os.environ["PYTHONPATH"]] if os.environ.get("PYTHONPATH") else [])))
+
+
+def exec_dag(seed: int, n: int, p: float, sleep: float = 0.0) -> TaskGraph:
+    """Random integer DAG (closures — fine for fork-started dialers)."""
+    rng = random.Random(seed)
+    g = TaskGraph()
+    for i in range(n):
+        deps = [j for j in range(i) if rng.random() < p][-3:]
+
+        def fn(*xs, _i=i, _s=sleep):
+            if _s:
+                time.sleep(_s)
+            return (_i + sum(xs) * 7) % 1_000_003
+
+        g.add_node(f"t{i}", fn, tuple(_Ref(d) for d in deps), {},
+                   TaskKind.PURE, deps=deps, cost=rng.uniform(0.1, 1.0))
+    g.mark_output(n - 1)
+    return g
+
+
+def array_dag(seed: int, n: int, p: float, elems: int) -> TaskGraph:
+    rng = random.Random(seed)
+    g = TaskGraph()
+    for i in range(n):
+        deps = [j for j in range(i) if rng.random() < p][-3:]
+
+        def fn(*xs, _i=i, _e=elems):
+            acc = (np.arange(_e) % 89).astype(np.float32) \
+                * np.float32(_i % 5 + 1)
+            for x in xs:
+                acc = (acc + x).astype(np.float32)
+            return acc
+
+        g.add_node(f"t{i}", fn, tuple(_Ref(d) for d in deps), {},
+                   TaskKind.PURE, deps=deps, cost=rng.uniform(0.1, 1.0))
+    g.mark_output(n - 1)
+    return g
+
+
+def _mh_combine(i, *xs):
+    """Module-level task body: picklable, so remote workers can import it."""
+    return (i + sum(xs) * 7) % 1_000_003
+
+
+def _mh_combine_slow(i, *xs):
+    """Same arithmetic, padded to keep a run alive while a joiner dials."""
+    time.sleep(0.03)
+    return _mh_combine(i, *xs)
+
+
+def picklable_dag(seed: int, n: int, p: float, slow: bool = False
+                  ) -> TaskGraph:
+    """DAG whose node fns survive pickling (remote-worker requirement)."""
+    rng = random.Random(seed)
+    fn = _mh_combine_slow if slow else _mh_combine
+    g = TaskGraph()
+    for i in range(n):
+        deps = [j for j in range(i) if rng.random() < p][-3:]
+        g.add_node(f"t{i}", partial(fn, i),
+                   tuple(_Ref(d) for d in deps), {},
+                   TaskKind.PURE, deps=deps, cost=1.0)
+    g.mark_output(n - 1)
+    return g
+
+
+def results_equal(got, want) -> bool:
+    return set(got) == set(want) and all(
+        np.array_equal(got[t], want[t])
+        if isinstance(want[t], np.ndarray) else got[t] == want[t]
+        for t in want)
+
+
+def start_repro_worker(address: str, *extra: str) -> subprocess.Popen:
+    return subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.remote",
+         "--connect", address, "--timeout", "30", *extra],
+        env=WORKER_ENV, cwd=REPO)
+
+
+# ------------------------------------------------------------ channel units
+
+def test_frame_buffer_reassembles_split_frames():
+    """Length-prefixed framing must survive arbitrary TCP segmentation."""
+    msgs = [("run", 1, {"a": 1}), ("hb",), ("done", 0, 1, 0.5, 64, [2, 3])]
+    blob = b"".join(
+        len(p).to_bytes(8, "little") + p
+        for p in (pickle.dumps(m, protocol=5) for m in msgs))
+    for step in (1, 3, 7, len(blob)):
+        buf = _FrameBuffer()
+        out = []
+        for i in range(0, len(blob), step):
+            out.extend(buf.feed(blob[i:i + step]))
+        assert out == msgs
+
+
+def _handshaken_pair(listener: TcpListener, **chan_kw):
+    """Dial the listener like a worker would; return (driver_chan, sock).
+    The hello is JSON — the driver never unpickles pre-auth bytes."""
+    import json
+
+    sock = socket.create_connection(
+        tuple(listener.address.rsplit(":", 1))[:1]
+        + (int(listener.address.rsplit(":", 1)[1]),))
+    _send_frame(sock, json.dumps(
+        {"magic": PROTOCOL_MAGIC, "version": PROTOCOL_VERSION,
+         "token": None, "host": "far-host", "pid": os.getpid(),
+         "has_graph": True}).encode("utf-8"))
+    server_sock, hello = listener.get_worker(timeout=10.0)
+    assert hello["host"] == "far-host"
+    return TcpChannel(server_sock, **chan_kw), sock
+
+
+def test_tcp_channel_heartbeat_death_and_goodbye():
+    """A silent TCP peer is dead after heartbeat_timeout — but a peer that
+    said an explicit goodbye is a clean exit, never a crash."""
+    listener = TcpListener("127.0.0.1:0")
+    try:
+        chan, sock = _handshaken_pair(listener, heartbeat_timeout=0.3)
+        assert chan.dead() is None
+        time.sleep(0.5)
+        reason = chan.dead()
+        assert reason is not None and "heartbeat" in reason
+        # a goodbye frame absolves the silence
+        _send_frame(sock, pickle.dumps(("bye", 0), protocol=5))
+        time.sleep(0.05)
+        assert chan.recv_available() == [("bye", 0)]
+        time.sleep(0.5)
+        assert chan.dead() is None      # clean shutdown, not a crash
+        chan.close()
+        sock.close()
+    finally:
+        listener.close()
+
+
+def test_tcp_channel_backpressure_bounds_sends():
+    """A peer that stops draining must surface as ChannelClosed from send
+    (bounded outbox), not wedge the caller in a blocking sendall."""
+    listener = TcpListener("127.0.0.1:0")
+    try:
+        chan, sock = _handshaken_pair(
+            listener, outbox_size=1, send_timeout=0.2)
+        payload = ("blob", b"x" * (4 << 20))    # beyond loopback buffers
+        with pytest.raises(ChannelClosed, match="backpressure"):
+            for _ in range(64):
+                chan.send(payload)
+        chan.close()
+        sock.close()
+    finally:
+        listener.close()
+
+
+def test_listener_rejects_bad_token_and_version():
+    listener = TcpListener("127.0.0.1:0", token="s3cret")
+    try:
+        with pytest.raises(ChannelClosed, match="rejected"):
+            dial_driver(listener.address, token="wrong", timeout=5.0,
+                        has_graph=True)
+        # and a good token handshakes (driver side never welcomes here,
+        # so just verify the hello got queued)
+        def good_dial():
+            try:        # no welcome ever comes back in this unit test
+                dial_driver(listener.address, token="s3cret",
+                            timeout=5.0, has_graph=True)
+            except ChannelClosed:
+                pass
+
+        threading.Thread(target=good_dial, daemon=True).start()
+        _, hello = listener.get_worker(timeout=10.0)
+        assert hello["token"] == "s3cret"
+    finally:
+        listener.close()
+
+
+# ----------------------------------------------- localhost-TCP differential
+
+def test_tcp_channel_differential_50_node():
+    """Acceptance: TaskGraph over TcpChannel matches the oracle."""
+    g = exec_dag(42, 50, 0.3)
+    seq = execute_sequential(g)
+    ex = ClusterExecutor(2, channel="tcp")
+    try:
+        assert ex.run(g) == seq
+        assert ex.stats["dispatched"] >= 50
+        assert ex.stats["failures"] == 0
+    finally:
+        ex.close()
+
+
+def test_tcp_channel_arrays_and_tcp_transport_bit_identical():
+    """Control plane AND data plane over TCP: float32 arrays bit-for-bit,
+    bulk bytes moving worker-to-worker over direct TCP pulls."""
+    g = array_dag(7, 18, 0.4, elems=1 << 16)
+    seq = execute_sequential(g)
+    ex = ClusterExecutor(2, channel="tcp", transport="tcp")
+    try:
+        res = ex.run(g)
+        assert results_equal(res, seq)
+        assert ex.transport_used == "tcp"
+        assert ex.stats["transfers_direct"] > 0
+        assert ex.stats["bytes_direct"] > 0
+    finally:
+        ex.close()
+
+
+def test_tcp_transport_on_pipe_channel_matches_oracle():
+    """The tcp data plane is independent of the control plane: forked
+    pipe workers pulling bulk values over TCP peer sockets."""
+    g = array_dag(11, 14, 0.4, elems=1 << 15)
+    seq = execute_sequential(g)
+    ex = ClusterExecutor(2, transport="tcp", shm_threshold=1)
+    assert results_equal(ex.run(g), seq)
+    assert ex.stats["transfers_direct"] > 0
+
+
+def test_tcp_channel_sigkill_heartbeat_recovery():
+    """Acceptance: SIGKILL a TCP worker mid-run.  No SIGCHLD reaches the
+    channel layer's liveness logic — the death is seen by the socket/
+    heartbeat path — and lineage recovery still matches the oracle."""
+    g = array_dag(13, 24, 0.4, elems=1 << 14)
+    seq = execute_sequential(g)
+    ex = ClusterExecutor(3, channel="tcp", fail_worker=(1, 2))
+    try:
+        res = ex.run(g)
+        assert results_equal(res, seq)
+        assert ex.stats["failures"] == 1
+        assert ex.stats["recomputed"] > 0
+        assert len(ex.recovery_events) >= 1
+    finally:
+        ex.close()
+
+
+def test_tcp_channel_outputs_only_gc():
+    g = exec_dag(5, 60, 0.3)
+    seq = execute_sequential(g)
+    want = {t: seq[t] for t in g.outputs}
+    ex = ClusterExecutor(2, channel="tcp", outputs_only=True)
+    try:
+        assert ex.run(g) == want
+        assert ex.stats["dropped"] > 0
+    finally:
+        ex.close()
+
+
+# -------------------------------------------------------------- elasticity
+
+def test_elastic_join_under_sock_transport():
+    """Satellite: add_worker/join_after under transport='sock' — join two
+    workers mid-run, then SIGKILL one of the joiners."""
+    if not hasattr(socket, "AF_UNIX"):
+        pytest.skip("no unix sockets here")
+    g = exec_dag(11, 120, 0.25)
+    seq = execute_sequential(g)
+    # joiners get wids 2 and 3; kill wid 2 after its 2nd completion
+    ex = ClusterExecutor(2, transport="sock", shm_threshold=1,
+                         join_after=(20, 2), fail_worker=(2, 2))
+    assert ex.run(g) == seq
+    assert ex.stats["joins"] == 2
+    assert ex.stats["failures"] == 1
+
+
+def test_elastic_join_tcp_channel_then_kill_joiner():
+    """Satellite: elastic join over the TCP channel, then SIGKILL the
+    joined worker — heartbeat/EOF detection + lineage recovery."""
+    g = exec_dag(17, 120, 0.25)
+    seq = execute_sequential(g)
+    ex = ClusterExecutor(2, channel="tcp", join_after=(15, 1),
+                         fail_worker=(2, 2))
+    try:
+        assert ex.run(g) == seq
+        assert ex.stats["joins"] == 1
+        assert ex.stats["failures"] == 1
+    finally:
+        ex.close()
+
+
+def _mh_exit_now(*a, **kw):
+    os._exit(3)
+
+
+def test_dead_local_dialer_fails_fast(monkeypatch):
+    """A dialer that dies at bootstrap must fail the run immediately with
+    its exit code, not hang out the whole accept_timeout."""
+    import repro.cluster.executor as exmod
+
+    monkeypatch.setattr(exmod, "tcp_worker_main", _mh_exit_now)
+    ex = ClusterExecutor(1, channel="tcp", accept_timeout=60.0)
+    t0 = time.monotonic()
+    try:
+        with pytest.raises(RuntimeError, match="before dialing"):
+            ex.run(exec_dag(1, 5, 0.3))
+        assert time.monotonic() - t0 < 20.0
+    finally:
+        ex.close()
+
+
+def test_add_worker_idle_grows_tcp_pool():
+    ex = ClusterExecutor(1, channel="tcp")
+    try:
+        ex.add_worker()
+        assert ex.n_workers == 2
+        g = exec_dag(23, 40, 0.3)
+        assert ex.run(g) == execute_sequential(g)
+    finally:
+        ex.close()
+
+
+# ----------------------------------------------------------- repro-worker
+
+def test_repro_worker_dialed_pool_differential():
+    """Acceptance: workers started by the repro-worker CLI (fresh
+    interpreters, graph shipped in the welcome frame) match the oracle."""
+    g = picklable_dag(3, 50, 0.3)
+    seq = execute_sequential(g)
+    ex = ClusterExecutor(workers=["remote", "remote"])
+    procs = [start_repro_worker(ex.address) for _ in range(2)]
+    try:
+        assert ex.run(g) == seq
+        assert ex.stats["dispatched"] >= 50
+    finally:
+        for p in procs:
+            assert p.wait(timeout=30) == 0      # explicit goodbye, rc 0
+        ex.close()
+
+
+def test_repro_worker_joins_midrun_then_sigkilled():
+    """Acceptance: a repro-worker that dials a LIVE run joins elastically;
+    SIGKILLing it mid-run is heartbeat/EOF-detected and lineage-recovered
+    (the driver sends remote workers a ``die``, here we also kill the os
+    process directly)."""
+    g = picklable_dag(9, 90, 0.3, slow=True)    # a run long enough to join
+    seq = execute_sequential(picklable_dag(9, 90, 0.3))
+    ex = ClusterExecutor(workers=["local"], channel="tcp", transport="tcp",
+                         fail_worker=(1, 1))
+    proc = start_repro_worker(ex.address)
+    try:
+        res = ex.run(g)
+        assert res == seq
+        assert ex.stats["joins"] == 1       # the dial became a join
+        assert ex.stats["failures"] == 1    # and then we killed it
+        rc = proc.wait(timeout=30)
+        assert rc != 0                      # died by signal, not goodbye
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+        ex.close()
+
+
+def test_remote_rejects_unpicklable_graph_with_clear_error():
+    g = exec_dag(1, 8, 0.4)                 # closures: not picklable
+    ex = ClusterExecutor(workers=["remote"], accept_timeout=30.0)
+    proc = start_repro_worker(ex.address)
+    try:
+        with pytest.raises(ValueError, match="not picklable"):
+            ex.run(g)
+        assert proc.wait(timeout=30) != 0   # worker saw the reject
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+        ex.close()
+
+
+# ------------------------------------------------------ transport matrix
+
+def test_remote_pool_refuses_host_local_transports():
+    with pytest.raises(ValueError, match="host-local"):
+        ClusterExecutor(workers=["remote"], transport="shm")
+    with pytest.raises(ValueError, match="host-local"):
+        serde.resolve_transport("sock", multihost=True)
+    assert serde.resolve_transport("auto", multihost=True) == "tcp"
+    assert serde.resolve_transport("driver", multihost=True) == "driver"
+
+
+def test_launcher_transport_validation():
+    """Satellite: --transport/--channel are validated against what the
+    chosen backend supports, with a named error instead of a deep
+    KeyError."""
+    import argparse
+
+    from repro.launch.backend import add_backend_args, validate_backend_args
+
+    ap = argparse.ArgumentParser()
+    add_backend_args(ap)
+    ok = ap.parse_args(["--backend", "process", "--transport", "tcp",
+                        "--channel", "tcp"])
+    validate_backend_args(ok)               # no error
+    bad = ap.parse_args(["--backend", "thread", "--transport", "shm"])
+    with pytest.raises(SystemExit, match="thread"):
+        validate_backend_args(bad)
+    bad2 = ap.parse_args(["--backend", "thread", "--channel", "tcp"])
+    with pytest.raises(SystemExit, match="channel"):
+        validate_backend_args(bad2)
+    with pytest.raises(SystemExit):         # argparse rejects unknown names
+        ap.parse_args(["--backend", "process", "--transport", "warp"])
+    with pytest.raises(ValueError, match="channel"):
+        ClusterExecutor(2, channel="quantum")
+    with pytest.raises(ValueError, match="remote workers"):
+        ClusterExecutor(workers=["remote"], channel="pipe")
+    from repro.core import make_executor
+    with pytest.raises(ValueError, match="process"):
+        make_executor("thread", 2, transport="shm")
+    with pytest.raises(ValueError, match="process"):
+        make_executor("thread", 2, channel="tcp")
+
+
+# ----------------------------------------------------- peer-socket hygiene
+
+def test_sweep_peer_sockets_removes_stale_files(tmp_path):
+    d = tmp_path / "rrpeerXYZ"
+    d.mkdir()
+    for i in range(3):
+        (d / f"w{i}.sock").write_bytes(b"")
+    (d / "straggler.txt").write_text("x")
+    assert serde.sweep_peer_sockets(str(d)) == 3
+    assert not d.exists()
+    assert serde.sweep_peer_sockets(str(d)) == 0    # idempotent
+
+
+def test_sock_run_leaves_no_peer_dir_even_after_sigkill(monkeypatch):
+    """Satellite: the shutdown sweep takes the peer-socket tmpdir with the
+    same hygiene as /dev/shm — including sockets of SIGKILL'd workers that
+    never ran their own close()."""
+    if not hasattr(socket, "AF_UNIX"):
+        pytest.skip("no unix sockets here")
+    import tempfile as _tf
+
+    made = []
+    real = _tf.mkdtemp
+
+    def spy(*a, **kw):
+        path = real(*a, **kw)
+        made.append(path)
+        return path
+
+    monkeypatch.setattr("repro.cluster.executor.tempfile.mkdtemp", spy)
+    g = exec_dag(31, 60, 0.3)
+    ex = ClusterExecutor(2, transport="sock", shm_threshold=1,
+                         fail_worker=(0, 2))
+    assert ex.run(g) == execute_sequential(g)
+    assert ex.stats["failures"] == 1
+    assert made, "sock transport should have made a peer dir"
+    for path in made:
+        assert not os.path.exists(path), f"peer dir leaked: {path}"
+
+
+def test_peer_server_binds_over_stale_socket_file(tmp_path):
+    stale = tmp_path / "w0.sock"
+    srv = serde.PeerServer(str(stale), {0: 123})
+    srv.close()
+    stale.write_bytes(b"")                   # simulate a leftover file
+    srv2 = serde.PeerServer(str(stale), {0: 456})
+    got = serde.peer_fetch(serde.PeerRef(str(stale), 0, 8, 0))
+    assert got == 456
+    srv2.close()
+
+
+def test_tcp_peer_server_roundtrip():
+    store = {7: np.arange(1000, dtype=np.int64)}
+    srv = serde.PeerServer(None, store, advertise_host="127.0.0.1")
+    assert srv.path.startswith("tcp://")
+    ref = serde.PeerRef(srv.path, 7, 8000, 0, secret=srv.secret)
+    got = serde.peer_fetch(ref)
+    assert np.array_equal(got, store[7])
+    with pytest.raises(serde.TransferLost):
+        serde.peer_fetch(serde.PeerRef(srv.path, 99, 8, 0,
+                                       secret=srv.secret))
+    # the capability gate: no secret / a wrong secret gets nothing
+    with pytest.raises(serde.TransferLost):
+        serde.peer_fetch(serde.PeerRef(srv.path, 7, 8000, 0))
+    with pytest.raises(serde.TransferLost):
+        serde.peer_fetch(serde.PeerRef(srv.path, 7, 8000, 0,
+                                       secret="f" * 32), timeout=3.0)
+    srv.close()
+    # NOTE: "fetch from a closed server" is asserted via the unix family —
+    # some sandboxed-CI loopback stacks fake-accept TCP connects to closed
+    # ports, which peer_fetch maps to TransferLost anyway (corrupt stream)
+    with pytest.raises(serde.TransferLost):
+        serde.peer_fetch(serde.PeerRef("/nonexistent/peer.sock", 7, 8, 0),
+                         timeout=2.0)
+
+
+def test_no_shm_leak_on_tcp_channel(tmp_path):
+    if not serde.shm_available():
+        pytest.skip("no shared memory in this environment")
+    g = exec_dag(41, 60, 0.3)
+    ex = ClusterExecutor(2, channel="tcp", transport="shm", shm_threshold=1,
+                         fail_worker=(1, 3))
+    try:
+        assert ex.run(g) == execute_sequential(g)
+    finally:
+        ex.close()
+    assert not glob.glob(f"/dev/shm/{ex.seg_prefix}*")
+
+
+# -------------------------------------------------- per-host locality
+
+def test_scheduler_worker_host_locality_groups():
+    """Same-host workers are near (shm-priced), cross-host ones far
+    (TCP-priced): the consumer of a big value whose owner is busy should
+    fall to the owner's host-mate, not to the distant idle worker."""
+    g = TaskGraph()
+    g.add_node("big", lambda: 0, (), {}, TaskKind.PURE, deps=(), cost=1.0)
+    g.add_node("use", lambda x: x, (_Ref(0),), {}, TaskKind.PURE,
+               deps=[0], cost=1.0)
+    g.mark_output(1)
+    kw = dict(done={0: 0.0}, placed={0: 1},
+              data_sizes={0: 1 << 23}, bandwidth=float(1 << 20),
+              worker_speed=[1.0, 0.01, 1.0])    # the owner is very slow
+    near = list_schedule(g, 3, worker_host=["A", "B", "B"], **kw)
+    assert near.placements[1].worker == 2       # host-mate of the bytes
+    far = list_schedule(g, 3, worker_host=["A", "B", "C"], **kw)
+    assert far.placements[1].worker == 0        # all moves equally far
+    with pytest.raises(ValueError, match="worker_host"):
+        list_schedule(g, 3, worker_host=["A", "B"], **kw)
+
+
+def test_objectstore_tracks_hosts():
+    from repro.cluster import DriverObjectStore
+
+    g = exec_dag(2, 4, 0.5)
+    store = DriverObjectStore(g)
+    store.add_worker(0, host="A")
+    store.add_worker(1, host="B")
+    store.record(0, 0, nbytes=8)
+    assert store.on_host(0, "A") and not store.on_host(0, "B")
+    store.record_replica(0, 1)
+    assert store.on_host(0, "B")
+    store.drop_worker(0)
+    assert not store.on_host(0, "A") and store.on_host(0, "B")
