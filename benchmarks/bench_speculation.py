@@ -1,0 +1,241 @@
+"""Speculation benchmark: straggler-injected shuffle, speculation on vs off.
+
+The paper's purity argument makes task duplication free: a pure task can
+be re-executed anywhere, any number of times, and the first result wins.
+This benchmark measures what that buys on a *tail-latency* workload — a
+shuffle whose producers include injected stragglers — per control channel
+(``pipe`` and ``tcp``), with ``speculate_after`` off vs on.
+
+**Straggler injection.**  A straggler task's *value* is deterministic (the
+differential against ``execute_sequential`` stays bit-for-bit), but its
+*first* execution sleeps: the task atomically creates a sentinel file
+(``O_EXCL``) and only the creator sleeps.  A speculative twin launched
+after the original is already asleep sees the sentinel and returns
+immediately — exactly the "re-execute elsewhere, first result wins"
+shape.  Every non-straggler task sleeps a small ``work_s`` so the
+runtime's EWMA calibration sees realistic durations (and therefore only
+speculates on genuinely overdue tasks, well after the original created
+its sentinel).
+
+Writes ``BENCH_speculation.json`` at the repo root: wall clock per
+(channel, speculation) cell, the speedup per channel, and the speculation
+counters (``n_speculative`` / ``speculative_wins`` /
+``speculative_wasted_s``) that bound the duplicated work.
+
+``--smoke`` is the CI gate: 2 workers, one injected straggler, assert the
+speculative twin wins and the differential vs the sequential oracle stays
+bit-for-bit, on both the pipe and TCP channels.
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.bench_speculation
+        [--sleep-s 2.0] [--work-s 0.2] [--consumers 12] [--workers 2]
+        [--speculate-after 2.5] [--reps 1] [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import time
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.core import TaskGraph, TaskKind, execute_sequential
+from repro.core.tracing import RemappedRef as _Ref
+from repro.cluster import ClusterExecutor
+
+from .common import print_rows
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_speculation.json")
+
+
+def build_straggler_shuffle(marker_dir: str, *, producers: int = 4,
+                            stragglers: int = 1, consumers: int = 12,
+                            fan_in: int = 2, payload_elems: int = 4096,
+                            sleep_s: float = 2.0,
+                            work_s: float = 0.2) -> TaskGraph:
+    """Producers (the first ``stragglers`` of them injected) -> strided
+    shuffle combine (each sleeping ``work_s`` of simulated compute) ->
+    scalar reduce.  Values are deterministic; only timing varies."""
+    g = TaskGraph()
+    for i in range(producers):
+        if i < stragglers:
+            def produce(_i=i, _d=marker_dir, _s=sleep_s, _n=payload_elems):
+                path = os.path.join(_d, f"straggler{_i}")
+                try:        # O_EXCL: exactly one execution is the creator
+                    fd = os.open(path, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+                except FileExistsError:
+                    fd = -1
+                if fd >= 0:
+                    os.close(fd)
+                    time.sleep(_s)      # ... and only the creator straggles
+                return np.arange(_n, dtype=np.float32) * np.float32(_i + 1)
+        else:
+            def produce(_i=i, _w=work_s, _n=payload_elems):
+                time.sleep(_w)
+                return np.arange(_n, dtype=np.float32) * np.float32(_i + 1)
+        g.add_node(f"produce{i}", produce, (), {}, TaskKind.PURE,
+                   deps=(), cost=1.0)
+    for j in range(consumers):
+        deps = [(j * 3 + k) % producers for k in range(fan_in)]
+
+        def combine(*xs, _j=j, _w=work_s):
+            time.sleep(_w)
+            acc = xs[0] + np.float32(_j)
+            for x in xs[1:]:
+                acc = acc + x
+            return acc
+
+        g.add_node(f"combine{j}", combine, tuple(_Ref(d) for d in deps),
+                   {}, TaskKind.PURE, deps=deps, cost=1.0)
+    rdeps = list(range(producers, producers + consumers))
+
+    def reduce_all(*xs):
+        return float(sum(float(x.sum()) for x in xs))
+
+    g.add_node("reduce", reduce_all, tuple(_Ref(d) for d in rdeps), {},
+               TaskKind.PURE, deps=rdeps, cost=1.0)
+    g.mark_output(producers + consumers)
+    return g
+
+
+def _median(xs: List[float]) -> float:
+    xs = sorted(xs)
+    return xs[len(xs) // 2]
+
+
+def run_cell(channel: str, speculate_after: Optional[float], args,
+             oracle: float) -> Dict[str, Any]:
+    """One (channel, speculation) cell; a fresh sentinel dir per rep so
+    every run injects the same straggler."""
+    walls: List[float] = []
+    stats: Dict[str, Any] = {}
+    for _ in range(args.reps):
+        with tempfile.TemporaryDirectory(prefix="rrspec") as marker:
+            g = build_straggler_shuffle(
+                marker, producers=args.producers,
+                stragglers=args.stragglers, consumers=args.consumers,
+                fan_in=args.fan_in, sleep_s=args.sleep_s,
+                work_s=args.work_s)
+            ex = ClusterExecutor(args.workers, channel=channel,
+                                 speculate_after=speculate_after,
+                                 progress_timeout=180.0)
+            t0 = time.perf_counter()
+            got = ex.run(g)
+            walls.append(time.perf_counter() - t0)
+            stats = dict(ex.stats)
+            ex.close()
+            out = args.producers + args.consumers
+            assert got[out] == oracle, \
+                f"{channel}/speculate={speculate_after}: {got[out]} != " \
+                f"oracle {oracle}"
+    return {"channel": channel,
+            "speculate_after": speculate_after or 0.0,
+            "wall_s": _median(walls),
+            "n_speculative": stats.get("n_speculative", 0),
+            "speculative_wins": stats.get("speculative_wins", 0),
+            "speculative_wasted_s": round(
+                stats.get("speculative_wasted_s", 0.0), 3)}
+
+
+def smoke_twin_wins(args, oracle: float) -> None:
+    """CI gate: on both channels, the injected straggler's speculative
+    twin must win and the result must stay bit-for-bit oracle-equal."""
+    for channel in ("pipe", "tcp"):
+        with tempfile.TemporaryDirectory(prefix="rrspec") as marker:
+            g = build_straggler_shuffle(
+                marker, producers=args.producers,
+                stragglers=args.stragglers, consumers=args.consumers,
+                fan_in=args.fan_in, sleep_s=args.sleep_s,
+                work_s=args.work_s)
+            ex = ClusterExecutor(args.workers, channel=channel,
+                                 speculate_after=args.speculate_after,
+                                 progress_timeout=120.0)
+            got = ex.run(g)
+            out = args.producers + args.consumers
+            assert got[out] == oracle, \
+                f"{channel}: speculative run diverged from the oracle"
+            assert ex.stats["n_speculative"] >= 1, ex.stats
+            assert ex.stats["speculative_wins"] >= 1, \
+                f"{channel}: no speculative twin won: {ex.stats}"
+            ex.close()
+    print(f"smoke: straggler shuffle x{args.workers} workers — twin won "
+          "and stayed bit-identical to the oracle (pipe + tcp)",
+          flush=True)
+
+
+def main(argv: Optional[List[str]] = None) -> Dict[str, Any]:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--producers", type=int, default=4)
+    ap.add_argument("--stragglers", type=int, default=1)
+    ap.add_argument("--consumers", type=int, default=12)
+    ap.add_argument("--fan-in", type=int, default=2)
+    ap.add_argument("--workers", type=int, default=2)
+    ap.add_argument("--sleep-s", type=float, default=2.0,
+                    help="injected straggler's first-execution sleep")
+    ap.add_argument("--work-s", type=float, default=0.2,
+                    help="per-task simulated compute (EWMA calibration)")
+    ap.add_argument("--speculate-after", type=float, default=2.5)
+    ap.add_argument("--reps", type=int, default=1)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI: twin-wins + differential gate, small sleeps")
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args(argv if argv is not None else [])
+    if args.smoke:
+        if args.out == OUT_PATH:    # never clobber the headline artifact
+            args.out = OUT_PATH.replace(".json", "_smoke.json")
+        args.sleep_s = min(args.sleep_s, 1.2)
+        args.work_s = min(args.work_s, 0.1)
+        args.consumers = min(args.consumers, 8)
+        args.reps = 1
+
+    # deterministic oracle: the straggler's sentinel dir is fresh, but the
+    # VALUE is sleep-independent, so one sequential run fixes the answer
+    with tempfile.TemporaryDirectory(prefix="rrspec") as marker:
+        seq = execute_sequential(build_straggler_shuffle(
+            marker, producers=args.producers, stragglers=args.stragglers,
+            consumers=args.consumers, fan_in=args.fan_in,
+            sleep_s=0.0, work_s=0.0))
+    oracle = seq[args.producers + args.consumers]
+
+    if args.smoke:
+        smoke_twin_wins(args, oracle)
+
+    rows: List[Dict[str, Any]] = []
+    speedups: Dict[str, float] = {}
+    for channel in ("pipe", "tcp"):
+        off = run_cell(channel, None, args, oracle)
+        on = run_cell(channel, args.speculate_after, args, oracle)
+        rows += [off, on]
+        speedups[channel] = off["wall_s"] / max(on["wall_s"], 1e-9)
+
+    payload = {
+        "config": {
+            "producers": args.producers, "stragglers": args.stragglers,
+            "consumers": args.consumers, "fan_in": args.fan_in,
+            "workers": args.workers, "sleep_s": args.sleep_s,
+            "work_s": args.work_s,
+            "speculate_after": args.speculate_after,
+            "reps": args.reps, "smoke": args.smoke,
+        },
+        "cells": rows,
+        "speedup": speedups,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print_rows(f"straggler shuffle ({args.stragglers} straggler(s) x "
+               f"{args.sleep_s}s, {args.workers} workers) per channel x "
+               "speculation", rows)
+    print("\nspeculation speedup: "
+          + ", ".join(f"{ch} {s:.2f}x" for ch, s in speedups.items())
+          + f" -> {args.out}", flush=True)
+    return payload
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

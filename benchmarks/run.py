@@ -14,6 +14,9 @@ Suites:
   multihost  — control plane: fork+pipe vs localhost-TCP worker channels
                (per-task dispatch overhead) and the per-transport shuffle
                matrix incl. direct TCP pulls; writes BENCH_multihost.json
+  speculation— tail latency: straggler-injected shuffle with speculative
+               re-execution off vs on, per control channel; writes
+               BENCH_speculation.json
 """
 from __future__ import annotations
 
@@ -22,7 +25,7 @@ import sys
 import time
 
 from . import (matmul_scaling, scheduler_bench, fault_bench, roofline,
-               bench_transfer, bench_multihost)
+               bench_transfer, bench_multihost, bench_speculation)
 
 SUITES = {
     "matmul": matmul_scaling.main,
@@ -31,6 +34,7 @@ SUITES = {
     "roofline": roofline.main,
     "transfer": bench_transfer.main,
     "multihost": bench_multihost.main,
+    "speculation": bench_speculation.main,
 }
 
 

@@ -45,6 +45,11 @@ Worker-side endpoints (:class:`WorkerPipeEndpoint`,
 :class:`WorkerTcpEndpoint`) expose blocking ``recv()`` + ``send()`` with
 the same ``ChannelClosed`` error surface, so
 :func:`repro.cluster.worker.worker_main` runs unchanged over any wire.
+
+Every channel carries the same verb-tuple protocol (the table lives in
+:mod:`repro.cluster.worker`), including the idempotent ``("cancel", tid)``
+/ ``("cancelled", wid, tid)`` pair speculation uses to abort a losing
+duplicate between tasks — pipe and TCP alike, no per-wire special case.
 """
 from __future__ import annotations
 

@@ -51,6 +51,19 @@ mapping-decision framing of Mapple):
   ``stats["recomputed"]`` counts exactly ``len(plan)``.  A SIGKILL
   mid-transfer degrades the same way: consumers that already hold a stale
   handle report ``deplost`` and the task re-queues behind the recovery.
+* **Speculative re-execution of stragglers.**  Purity makes duplication
+  free, so with ``speculate_after=x`` an *idle* worker (no ready work
+  anywhere) duplicates the most-overdue running task — one running more
+  than ``x×`` its expected duration, where *expected* is the static
+  ``list_schedule`` cost-model hint calibrated into seconds by a runtime
+  EWMA of actual-vs-planned durations.  The first completion wins; losers
+  get an idempotent ``cancel`` (honored between tasks — a loser already
+  executing finishes and its late ``done`` is reconciled: recorded as a
+  legitimate extra replica, or swept when the GC already dropped the
+  value).  The *pick* is :func:`repro.core.simulator.pick_speculation`,
+  shared with the simulator so policy and model provably agree.
+  ``stats`` reports ``n_speculative`` / ``speculative_wins`` /
+  ``speculative_wasted_s``; see ``docs/speculation.md``.
 * **Elasticity.**  ``add_worker()`` forks a fresh worker mid-run and
   replans onto the grown pool; on a TCP control plane, any
   ``repro-worker`` that dials the driver's address mid-run joins the same
@@ -86,6 +99,7 @@ from repro.core.executor import MissingInput, TaskFailed
 from repro.core.graph import TaskGraph
 from repro.core.lineage import recovery_plan
 from repro.core.scheduler import list_schedule, replan
+from repro.core.simulator import pick_speculation
 
 from . import serde
 from .channel import (CHANNELS, ChannelClosed, PipeChannel, SpawnChannel,
@@ -145,6 +159,12 @@ class ClusterExecutor:
     and garbage-collects intermediates once their last consumer finishes —
     the memory-bounded production mode, where shm segments are unlinked
     eagerly and lineage recovery recomputes *dropped* ancestors too.
+
+    ``speculate_after=x`` enables speculative re-execution of stragglers:
+    an idle worker duplicates a task running longer than ``x×`` its
+    expected duration, first completion wins, the loser is cancelled
+    between tasks.  Off (``None``) by default — duplication costs work, so
+    it is opt-in for tail-latency-sensitive runs (``docs/speculation.md``).
     """
 
     def __init__(
@@ -170,6 +190,7 @@ class ClusterExecutor:
         accept_timeout: float = 60.0,
         heartbeat_interval: float = 1.0,
         heartbeat_timeout: float = 15.0,
+        speculate_after: Optional[float] = None,
     ) -> None:
         if start_method not in ("fork", "spawn", "forkserver"):
             raise ValueError(f"unknown start_method {start_method!r}")
@@ -225,11 +246,19 @@ class ClusterExecutor:
         self.accept_timeout = accept_timeout
         self.heartbeat_interval = heartbeat_interval
         self.heartbeat_timeout = heartbeat_timeout
+        if speculate_after is not None and speculate_after <= 0:
+            raise ValueError("speculate_after must be a positive "
+                             "×expected-duration multiple (or None to "
+                             "disable speculation)")
+        self.speculate_after = speculate_after
         self.host = host_id()
         self.seg_prefix: Optional[str] = None    # last run's shm name prefix
         self.stats: Dict[str, int] = {}
         self.wall_time = 0.0
         self.recovery_events: List[Dict[str, Any]] = []
+        # one entry per twin launched: {tid, primary, twin, t} — live during
+        # the run (tests/chaos hooks poll it to aim a kill at the primary)
+        self.speculation_events: List[Dict[str, Any]] = []
         self._commands: List[Tuple] = []
         self._cmd_lock = threading.Lock()
         # stats/recovery_events/wall_time are per-run instance attributes,
@@ -327,8 +356,11 @@ class ClusterExecutor:
             "failures": 0, "joins": 0, "dropped": 0,
             "transfers_direct": 0, "transfers_driver": 0,
             "bytes_moved": 0, "bytes_driver": 0, "bytes_direct": 0,
+            "n_speculative": 0, "speculative_wins": 0,
+            "speculative_swept": 0, "speculative_wasted_s": 0.0,
         }
         self.recovery_events = []
+        self.speculation_events = []
         t0 = time.perf_counter()
 
         store = DriverObjectStore(graph)
@@ -539,6 +571,17 @@ class ClusterExecutor:
         # tid -> (wid, still-missing dep tids) for transfer-blocked dispatches
         waiting: Dict[int, Tuple[int, Set[int]]] = {}
         fetching: Dict[int, int] = {}    # dep tid -> wid the fetch went to
+        # -- speculation state: a task may run on SEVERAL workers at once --
+        runners: Dict[int, Set[int]] = {}         # tid -> wids running it now
+        run_started: Dict[int, Dict[int, float]] = {}  # tid -> wid -> t_start
+        spec_twins: Dict[int, Set[int]] = {}      # tid -> speculative wids
+        # expected durations: static plan hint (cost units), calibrated to
+        # seconds by an EWMA of actual/planned — same 0.9/0.1 blend the
+        # launchers' straggler detector uses
+        planned_dur: Dict[int, float] = {
+            t: max(n.cost, 1e-6) for t, n in graph.nodes.items()}
+        ewma_ratio: Optional[float] = None  # seconds per cost unit; None
+        # until the first completion — no speculation before calibration
         error: List[BaseException] = []
         join_after = self.join_after     # consumed per run, not per executor
         last_progress = time.perf_counter()
@@ -595,6 +638,10 @@ class ClusterExecutor:
             plan_worker.clear()
             for tid, p in sched.placements.items():
                 plan_worker[tid] = wids[p.worker]
+            # static cost-model hint for the speculation overdue test
+            # (node.cost is the pre-plan fallback)
+            for tid, dur in sched.expected_durations().items():
+                planned_dur[tid] = max(dur, 1e-6)
 
         # ---------------------------------------------------------- helpers
         def safe_send(w: _Worker, msg: tuple) -> bool:
@@ -726,14 +773,22 @@ class ClusterExecutor:
                 return True
             return launch(tid, w, extra)
 
-        def launch(tid: int, w: _Worker, extra: Dict[int, Any]) -> bool:
+        def launch(tid: int, w: _Worker, extra: Dict[int, Any],
+                   speculative: bool = False) -> bool:
             """Ship the run message; False when the worker died under the
-            send (the death handler has already reset ``tid`` to READY)."""
+            send (the death handler has already reset ``tid`` to READY —
+            or left it INFLIGHT when another runner survives)."""
             state[tid] = INFLIGHT
             w.inflight.add(tid)
+            runners.setdefault(tid, set()).add(w.wid)
+            run_started.setdefault(tid, {})[w.wid] = time.perf_counter()
+            if speculative:
+                spec_twins.setdefault(tid, set()).add(w.wid)
             if not safe_send(w, ("run", tid, extra)):
                 return False
             stats["dispatched"] += 1
+            if speculative:
+                stats["n_speculative"] += 1
             for h in extra.values():
                 account_transfer(h)
             return True
@@ -800,15 +855,62 @@ class ClusterExecutor:
                 if wid in workers and workers[wid].alive:
                     safe_send(workers[wid], ("drop", [tid]))
             store.invalidate({tid})     # also unlinks its shm segments
+            store.mark_dropped(tid)     # late duplicate publishes: sweep
             stats["dropped"] += 1
+
+        def runner_gone(tid: int, wid: int) -> Optional[float]:
+            """Bookkeeping when ``wid`` stops running ``tid`` (done,
+            cancelled, deplost, or death).  Returns its dispatch time."""
+            rs = runners.get(tid)
+            if rs is not None:
+                rs.discard(wid)
+                if not rs:
+                    runners.pop(tid, None)
+            starts = run_started.get(tid)
+            st = starts.pop(wid, None) if starts else None
+            if starts is not None and not starts:
+                run_started.pop(tid, None)
+            return st
+
+        def still_running(tid: int) -> bool:
+            """True while a live worker is (believed to be) executing
+            ``tid`` — dead runners were already discarded by their death
+            handler, but guard against re-entrancy mid-handling."""
+            return any(x in workers and workers[x].alive
+                       for x in runners.get(tid, ()))
 
         def on_done(w: _Worker, tid: int, wall: float, nbytes: int,
                     replicated: Sequence[int]) -> None:
-            nonlocal last_progress
+            nonlocal last_progress, ewma_ratio
             last_progress = time.perf_counter()
             w.inflight.discard(tid)
+            runner_gone(tid, w.wid)
             if state.get(tid) == DONE:
-                return                              # stale duplicate
+                # late duplicate: a speculation loser that kept executing
+                # after the winner, or a replay raced by recovery.  Purity
+                # makes the value identical, so each publish (the result
+                # AND the transfer inputs the loser materialized) either
+                # reconciles as a legitimate extra replica or — when the
+                # GC already swept that value — is swept on this worker
+                # too (it must not hold a value the driver thinks is gone
+                # everywhere)
+                sweep: List[int] = []
+                if store.was_dropped(tid):
+                    sweep.append(tid)
+                    stats["speculative_swept"] += 1
+                else:
+                    store.record_replica(tid, w.wid)
+                for d in replicated:
+                    if state.get(d) != DONE:
+                        continue
+                    if store.was_dropped(d):
+                        sweep.append(d)
+                    else:
+                        store.record_replica(d, w.wid)
+                if sweep and w.alive:
+                    safe_send(w, ("drop", sweep))
+                stats["speculative_wasted_s"] += wall
+                return
             # record transfer replicas first, so GC drops reach them too;
             # skip deps a racing recovery has invalidated (stale-but-pure
             # copies are harmless, but must not resurrect tracking state)
@@ -820,6 +922,22 @@ class ClusterExecutor:
             finish_times[tid] = time.perf_counter() - t0
             store.record(tid, w.wid, nbytes)
             w.n_done += 1
+            # runtime calibration of the static cost model (the launchers'
+            # 0.9/0.1 straggler EWMA): seconds of wall per planned cost unit
+            ratio = wall / planned_dur.get(tid, 1.0)
+            ewma_ratio = (ratio if ewma_ratio is None
+                          else 0.9 * ewma_ratio + 0.1 * ratio)
+            # winner election: this completion wins; every other runner of
+            # tid gets an idempotent cancel (honored between tasks — one
+            # mid-task keeps going and late-dones into the branch above)
+            if tid in spec_twins:
+                if w.wid in spec_twins[tid]:
+                    stats["speculative_wins"] += 1
+                spec_twins.pop(tid, None)
+            for owid in sorted(runners.get(tid, ())):
+                ow = workers.get(owid)
+                if ow is not None and ow.alive:
+                    safe_send(ow, ("cancel", tid))
             for d in graph.nodes[tid].all_deps:
                 store.consumed(d)
                 maybe_gc(d)
@@ -884,6 +1002,9 @@ class ClusterExecutor:
             for t in plan:
                 done.discard(t)
                 finish_times.pop(t, None)
+                # a recomputed incarnation starts fresh: old twin identity
+                # must not misattribute its completion as a speculative win
+                spec_twins.pop(t, None)
             # WAITING tasks elsewhere may block on a lost value: reset them
             for tid in list(waiting):
                 wid, need = waiting[tid]
@@ -916,8 +1037,21 @@ class ClusterExecutor:
             w.chan.close()
             stats["failures"] += 1
 
-            # tasks that never completed there simply go back in the pool
+            # tasks that never completed there simply go back in the pool —
+            # with two speculation exceptions: a SIGKILL of the original
+            # while a twin still runs must NOT re-queue (the survivor owns
+            # the task; re-queueing would be a double recovery), and a
+            # loser that died while running an already-DONE task is just
+            # wasted work, accounted and forgotten
+            death_t = time.perf_counter()
             for tid in list(w.inflight):
+                st = runner_gone(tid, w.wid)
+                if state.get(tid) == DONE:
+                    if st is not None:
+                        stats["speculative_wasted_s"] += death_t - st
+                    continue
+                if still_running(tid):
+                    continue            # a live twin/original has it
                 state[tid] = READY
             w.inflight.clear()
             for tid in list(w.assigned):
@@ -986,7 +1120,14 @@ class ClusterExecutor:
             nonlocal last_progress
             last_progress = time.perf_counter()
             w.inflight.discard(tid)
-            if state.get(tid) == INFLIGHT:
+            runner_gone(tid, w.wid)
+            if state.get(tid) == DONE:
+                # a speculation loser lost the race to the winner AND its
+                # input handles to the winner-triggered GC sweep: nothing
+                # is actually lost (a dep a live consumer still needs
+                # surfaces through that consumer's own fetch/deplost)
+                return
+            if state.get(tid) == INFLIGHT and not still_running(tid):
                 state[tid] = READY
             bad = {d for d in deps
                    if state.get(d) == DONE and not store.durable(d)
@@ -1001,6 +1142,67 @@ class ClusterExecutor:
                     for d in graph.nodes[tid].all_deps):
                 state[tid] = PENDING
 
+        def on_cancelled(w: _Worker, tid: int) -> None:
+            """The worker skipped a queued run of ``tid`` under a cancel
+            mark.  Normally the winner already completed (nothing to do);
+            if the mark was stale — a lineage-recovery re-dispatch raced a
+            cancel from a previous incarnation — the run was still wanted,
+            so the task goes back in the pool."""
+            nonlocal last_progress
+            last_progress = time.perf_counter()
+            w.inflight.discard(tid)
+            runner_gone(tid, w.wid)
+            if state.get(tid) == INFLIGHT and not still_running(tid):
+                state[tid] = READY
+
+        def maybe_speculate() -> None:
+            """Speculative re-execution of stragglers: duplicate the
+            most-overdue running task onto an idle worker.  Runs only when
+            no READY work exists anywhere (twins never displace first
+            executions) and only after the first completion calibrated the
+            cost model into seconds.  The pick itself is
+            :func:`repro.core.simulator.pick_speculation` — the simulator's
+            policy, verbatim."""
+            if self.speculate_after is None or ewma_ratio is None:
+                return
+            if any(s == READY for s in state.values()):
+                return
+            idle = [w for w in workers.values()
+                    if w.alive and w.load() == 0]
+            if not idle:
+                return
+            now = time.perf_counter()
+            overdue_view: Dict[int, Tuple[float, float]] = {}
+            for tid, wids in runners.items():
+                if state.get(tid) != INFLIGHT or len(wids) != 1:
+                    continue                # done, or already twinned
+                (rw,) = tuple(wids)
+                st = run_started.get(tid, {}).get(rw)
+                if st is None:
+                    continue
+                expected = planned_dur.get(tid, 1.0) * ewma_ratio
+                overdue_view[tid] = (now - st, max(expected, 1e-9))
+            for w in idle:
+                while overdue_view:
+                    tid = pick_speculation(overdue_view,
+                                           self.speculate_after)
+                    if tid is None:
+                        return
+                    elapsed, _ = overdue_view.pop(tid)
+                    extra, missing = build_extra(tid, w.wid)
+                    if extra is None:
+                        return              # serialization error surfaced
+                    if missing:
+                        continue            # inputs not shippable now; a
+                        # twin is opportunistic — never fetch-block for one
+                    primary = next(iter(runners.get(tid, {-1})))
+                    self.speculation_events.append(
+                        {"tid": tid, "primary": primary, "twin": w.wid,
+                         "t": now - t0, "elapsed": elapsed})
+                    if not launch(tid, w, extra, speculative=True):
+                        return              # death handler ran underneath
+                    break                   # one twin per idle worker
+
         def handle_msg(w: _Worker, msg: tuple) -> None:
             verb = msg[0]
             if verb == "done":
@@ -1009,14 +1211,28 @@ class ClusterExecutor:
                 on_value(w, msg[2], msg[3], msg[4])
             elif verb == "deplost":
                 on_deplost(w, msg[2], msg[3])
+            elif verb == "cancelled":
+                on_cancelled(w, msg[2])
             elif verb == "error":
+                tid = msg[2]
+                w.inflight.discard(tid)
+                was_runner = w.wid in runners.get(tid, ())
+                runner_gone(tid, w.wid)
                 if msg[3] == "MissingInput":
                     # caller-error contract: never wrapped in TaskFailed
                     error.append(MissingInput(msg[4]))
+                elif state.get(tid) == DONE and was_runner:
+                    # a speculation loser failing AFTER the winner (e.g.
+                    # its inputs were GC-swept under the race) must not
+                    # abort a run whose result already exists.  Only
+                    # *execution* duplicates qualify — a fetch-reply
+                    # serialization error on a DONE task is still fatal
+                    # (the value cannot be collected)
+                    pass
                 else:
-                    node = graph.nodes.get(msg[2])
+                    node = graph.nodes.get(tid)
                     error.append(TaskFailed(
-                        msg[2], node.name if node else f"#{msg[2]}",
+                        tid, node.name if node else f"#{tid}",
                         RuntimeError(f"{msg[3]}: {msg[4]}")))
             elif verb in ("hb", "bye"):
                 pass        # liveness bookkeeping happens in the channel
@@ -1127,6 +1343,7 @@ class ClusterExecutor:
                         break
                 else:
                     dispatch()
+                    maybe_speculate()
                 pump(timeout=0.02)
                 check_deaths()
                 for w in workers.values():
@@ -1146,6 +1363,13 @@ class ClusterExecutor:
                         f"inflight {[sorted(w.inflight) for w in workers.values()]})"))
         finally:
             self._active = False
+            # speculation losers still executing at shutdown burned their
+            # time just the same — charge what the run observed of it
+            end_t = time.perf_counter()
+            for tid, starts in run_started.items():
+                if state.get(tid) == DONE:
+                    for st in starts.values():
+                        stats["speculative_wasted_s"] += end_t - st
             for w in workers.values():
                 if w.alive:
                     try:

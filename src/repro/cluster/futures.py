@@ -7,8 +7,10 @@ pool, and submissions to the SAME executor queue behind its run lock (its
 stats are per-run) — use one executor per job for true concurrency.  The
 future carries completion state across threads plus a snapshot of the
 run's ``stats`` (including the data-plane counters ``bytes_moved`` /
-``transfers_direct`` / ``transfers_driver``) and ``wall_time``, so callers
-of overlapping submissions don't race on the executor's per-run fields.
+``transfers_direct`` / ``transfers_driver`` and the speculation counters
+``n_speculative`` / ``speculative_wins`` / ``speculative_wasted_s``) and
+``wall_time``, so callers of overlapping submissions don't race on the
+executor's per-run fields.
 """
 from __future__ import annotations
 

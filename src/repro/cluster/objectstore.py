@@ -47,6 +47,7 @@ class DriverObjectStore:
         self.sizes: Dict[int, int] = {}          # tid -> payload bytes
         self.known: Dict[int, Set[int]] = {}     # worker id -> {tid} it holds
         self.worker_host: Dict[int, Any] = {}    # worker id -> machine id
+        self.dropped: Set[int] = set()           # tids swept by the GC
         succ = graph.successors()
         self.successors = succ
         self.consumers_left: Dict[int, int] = {
@@ -130,13 +131,28 @@ class DriverObjectStore:
         return lost
 
     def invalidate(self, tids: Set[int]) -> None:
-        """Remove every trace of ``tids`` (they will be recomputed), and
-        unlink any shared-memory segments their handles held."""
+        """Remove every trace of ``tids`` (they will be recomputed or have
+        been GC'd), and unlink any shared-memory segments their handles
+        held.  Clears any GC ``dropped`` mark: a recomputed value is live
+        again (the ``mark_dropped`` caller re-marks after a GC sweep)."""
         for t in tids:
             self.cache.pop(t, None)
+            self.dropped.discard(t)
             serde.release(self.handles.pop(t, None))
             for wid in self.replicas.pop(t, set()):
                 self.known.get(wid, set()).discard(t)
+
+    # -------------------------------------------------- duplicate publishes
+    def mark_dropped(self, tid: int) -> None:
+        """The ``consumers_left`` GC swept ``tid`` everywhere.  A *late*
+        duplicate publish of it (a speculation loser finishing after the
+        winner AND after the sweep) must be swept too, not resurrected as
+        a replica — :meth:`was_dropped` is how the executor tells the two
+        apart when the late ``done`` arrives."""
+        self.dropped.add(tid)
+
+    def was_dropped(self, tid: int) -> bool:
+        return tid in self.dropped
 
     def release_all(self) -> None:
         """End of run: free every outstanding handle's segments."""

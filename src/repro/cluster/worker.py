@@ -24,6 +24,14 @@ Message protocol (tuples; first element is the verb):
                             worker's store
     ("fetch", tid)          publish ``tid`` and reply with its handle
     ("drop",  tids)         free stored values (driver-coordinated GC)
+    ("cancel", tid)         a speculative twin of ``tid`` won elsewhere:
+                            best-effort abort.  Idempotent — a queued run
+                            of ``tid`` is skipped (acked ``cancelled``); a
+                            run already executing completes and reports a
+                            late ``done`` the driver reconciles; a tid
+                            this worker never sees again is a no-op (the
+                            mark is consumed by the next run or by the
+                            task's own completion)
     ("hb",)                 keepalive (TCP channels; refreshes liveness)
     ("die",)                chaos hook: SIGKILL self (the driver cannot
                             signal a remote pid directly)
@@ -41,6 +49,10 @@ Message protocol (tuples; first element is the verb):
     ("deplost", wid, tid, deps)          transfer handles in a ``run`` could
                             not be resolved (owner died mid-transfer);
                             driver re-queues the task and recovers the deps
+    ("cancelled", wid, tid)              a queued run of ``tid`` was skipped
+                            because a ``cancel`` (possibly stale) covered
+                            it; the driver re-queues the task if it was
+                            still wanted
     ("hb",)                              heartbeat (TCP channels)
     ("bye",     wid)                     explicit goodbye: clean shutdown,
                             never to be mistaken for a missed-heartbeat
@@ -112,6 +124,8 @@ def worker_main(wid: int, chan, graph: TaskGraph,
 
     store: Dict[int, Any] = {}
     published: Dict[int, serde.Handle] = {}     # memoized publish per tid
+    cancelled: set = set()      # tids whose next queued run is to be skipped
+    # (set add/discard are GIL-atomic: reader marks, compute loop consumes)
     keeper = serde.SegmentKeeper()      # pins zero-copy decoded mappings
     runq: "queue.SimpleQueue[tuple]" = queue.SimpleQueue()
     outq: "queue.SimpleQueue[Optional[tuple]]" = queue.SimpleQueue()
@@ -197,6 +211,11 @@ def worker_main(wid: int, chan, graph: TaskGraph,
                 for t in msg[1]:
                     store.pop(t, None)
                     published.pop(t, None)
+            elif verb == "cancel":
+                # best-effort, between tasks: mark the tid; the compute
+                # loop skips a queued run of it (a run already executing
+                # finishes and the driver reconciles the late done)
+                cancelled.add(msg[1])
             elif verb == "hb":
                 pass                     # endpoint already refreshed liveness
             elif verb == "die":          # chaos hook for remote workers
@@ -226,6 +245,14 @@ def worker_main(wid: int, chan, graph: TaskGraph,
         if verb != "run":                # pragma: no cover — protocol bug
             raise RuntimeError(f"worker {wid}: unknown message {verb!r}")
         _, tid, extra = msg
+        if tid in cancelled:
+            # the winner already finished elsewhere; the mark is consumed
+            # so a FUTURE legitimate dispatch of the same tid (lineage
+            # recovery after a GC) runs normally — and the ack lets the
+            # driver re-queue if this run was in fact still wanted
+            cancelled.discard(tid)
+            outq.put(("cancelled", wid, tid))
+            continue
         t0 = time.perf_counter()
         try:
             table: Dict[int, Any] = {}
@@ -251,9 +278,13 @@ def worker_main(wid: int, chan, graph: TaskGraph,
             value = run_node(graph, tid, table, inputs)
             store[tid] = value
             published.pop(tid, None)     # recompute invalidates old handle
+            # a cancel that raced the execution is moot now — consume the
+            # mark so it cannot eat a future re-dispatch of this tid
+            cancelled.discard(tid)
             outq.put(("done", wid, tid, time.perf_counter() - t0,
                       serde.payload_nbytes(value), replicated))
         except BaseException as e:       # noqa: BLE001 — shipped to driver
+            cancelled.discard(tid)
             outq.put(("error", wid, tid, type(e).__name__, repr(e)))
 
 

@@ -231,7 +231,8 @@ def make_executor(backend: str, n_workers: int, **kw) -> Executor:
     if backend == "thread":
         cluster_only = sorted(
             k for k in ("transport", "channel", "connect", "workers",
-                        "start_method", "shm_threshold", "token")
+                        "start_method", "shm_threshold", "token",
+                        "speculate_after")
             if k in kw)
         if cluster_only:
             raise ValueError(
@@ -254,7 +255,10 @@ def run_graph(graph: TaskGraph, n_workers: int = 1,
     ``with_report=True`` returns ``(results, report)`` where ``report``
     carries the backend, worker count, wall time, and the backend's stats
     counters — including the data-plane fields ``bytes_moved`` /
-    ``transfers_direct`` / ``transfers_driver`` for the process backend.
+    ``transfers_direct`` / ``transfers_driver`` and, for the process
+    backend, the speculation fields ``n_speculative`` /
+    ``speculative_wins`` / ``speculative_wasted_s`` (populated when
+    ``speculate_after`` is set).
     """
     if n_workers == 1 and backend == "thread":
         t0 = _time.perf_counter()

@@ -50,6 +50,15 @@ class Schedule:
         total = self.makespan * self.n_workers
         return busy / total if total > 0 else 1.0
 
+    def expected_durations(self) -> Dict[int, float]:
+        """Static cost-model hint: the planned execution time of each task
+        (``end - start`` of its placement, i.e. ``cost / worker_speed`` —
+        queue/transfer waits are not included).  The cluster runtime's
+        speculation policy calibrates these cost-unit durations into
+        seconds with a runtime EWMA to decide when a running task is
+        overdue (see ``docs/speculation.md``)."""
+        return {tid: p.end - p.start for tid, p in self.placements.items()}
+
     def validate_against(self, graph: TaskGraph) -> None:
         """Every dep finishes before its consumer starts; no worker overlap."""
         for node in graph.nodes.values():

@@ -23,6 +23,30 @@ from .graph import TaskGraph, TaskKind
 DURABLE = -1   # pseudo-worker id: result survives any failure (checkpointed)
 
 
+def pick_speculation(running: Dict[int, Tuple[float, float]],
+                     speculate_after: float) -> Optional[int]:
+    """The speculation policy, shared by this simulator and the real
+    :class:`repro.cluster.ClusterExecutor` so the two provably agree on
+    *which* task a free worker duplicates (see
+    ``tests/test_speculation.py``).
+
+    ``running`` maps a singly-in-flight task id to ``(elapsed, expected)``
+    durations — elapsed wall time so far vs the expected duration from the
+    cost model (sim: nominal ``node.cost``; runtime: the static
+    ``list_schedule`` duration calibrated by a runtime EWMA).  Returns the
+    most-overdue task whose ``elapsed > speculate_after × expected`` (ties
+    to the lower tid), or ``None`` when nothing is overdue enough.
+    """
+    best: Optional[Tuple[float, int]] = None
+    for tid, (elapsed, expected) in running.items():
+        overdue = elapsed / max(expected, 1e-12)
+        if overdue <= speculate_after:
+            continue
+        if best is None or (overdue, -tid) > (best[0], -best[1]):
+            best = (overdue, tid)
+    return None if best is None else best[1]
+
+
 @dataclasses.dataclass
 class WorkerEvent:
     """Cluster dynamics injected into a run."""
@@ -39,6 +63,7 @@ class SimResult:
     n_recomputed: int = 0
     n_speculative: int = 0
     n_failures: int = 0
+    speculated: Set[int] = dataclasses.field(default_factory=set)
     busy_time: Dict[int, float] = dataclasses.field(default_factory=dict)
     task_worker: Dict[int, int] = dataclasses.field(default_factory=dict)
     timeline: List[Tuple[float, str]] = dataclasses.field(default_factory=list)
@@ -182,17 +207,17 @@ class ClusterSim:
                     return True
                 return try_acquire(w, now)
             # 4. speculation: duplicate the longest-overdue running task
+            # (the pick itself is the shared pick_speculation policy, so
+            # the real ClusterExecutor makes the identical choice)
             if self.speculate_after is not None:
-                cand = None
-                for v, (tid, st, en, _) in running.items():
-                    node = g.nodes[tid]
-                    expect = node.cost  # at nominal speed 1.0
-                    overdue = (now - st) / max(expect, 1e-12)
-                    if overdue > self.speculate_after and len(inflight.get(tid, ())) == 1:
-                        if cand is None or overdue > cand[0]:
-                            cand = (overdue, tid)
+                overdue_view = {
+                    tid: (now - st, g.nodes[tid].cost)  # nominal speed 1.0
+                    for v, (tid, st, en, _) in running.items()
+                    if len(inflight.get(tid, ())) == 1}
+                cand = pick_speculation(overdue_view, self.speculate_after)
                 if cand is not None:
-                    start_task(w, cand[1], now, speculative=True)
+                    start_task(w, cand, now, speculative=True)
+                    res.speculated.add(cand)
                     return True
             return False
 

@@ -58,6 +58,12 @@ def add_backend_args(ap: argparse.ArgumentParser) -> None:
                     help="process-backend control plane: in-host pipes "
                          "(forked/spawned workers) or the multi-host TCP "
                          "listener (workers dial in; see repro-worker)")
+    ap.add_argument("--speculate-after", type=float, default=None,
+                    metavar="X",
+                    help="process backend: speculatively re-execute a task "
+                         "running longer than X times its expected duration "
+                         "on an idle worker (first completion wins; off by "
+                         "default — see docs/speculation.md)")
 
 
 def validate_backend_args(args) -> None:
@@ -78,6 +84,12 @@ def validate_backend_args(args) -> None:
             f"--channel {channel} is not supported by --backend {backend}: "
             f"only the process backend has a worker control plane; use "
             f"--backend process for {BACKEND_CHANNELS['process'][1:]}")
+    speculate = getattr(args, "speculate_after", None)
+    if speculate is not None and backend != "process":
+        raise SystemExit(
+            f"--speculate-after {speculate} is not supported by --backend "
+            f"{backend}: only the process backend duplicates stragglers "
+            f"onto idle workers; use --backend process")
 
 
 def execute_traced(graph: TaskGraph, args,
@@ -92,6 +104,9 @@ def execute_traced(graph: TaskGraph, args,
         channel = getattr(args, "channel", "auto")
         if channel != "auto":
             kw["channel"] = channel
+        speculate = getattr(args, "speculate_after", None)
+        if speculate is not None:
+            kw["speculate_after"] = speculate
     ex: Executor = make_executor(args.backend, args.graph_workers, **kw)
     results = ex.run(graph, inputs)
     transport = getattr(ex, "transport_used", None)

@@ -10,16 +10,33 @@ with a seed derived from the test name — deterministic across runs, different
 across tests.  Only the strategy combinators the suites actually use are
 implemented (``integers``, ``floats``, ``sampled_from``, ``tuples``,
 ``booleans``, ``lists``); extend as tests grow.
+
+``REPRO_PROP_EXAMPLES_SCALE`` multiplies every suite's ``max_examples``
+(both real-hypothesis and fallback paths) — the nightly CI workflow sets
+it to fuzz far past the PR-latency budget without the suites hardcoding
+two budgets.
 """
 from __future__ import annotations
 
 import functools
+import os
 import random
 import zlib
 
+_EXAMPLES_SCALE = float(os.environ.get("REPRO_PROP_EXAMPLES_SCALE", "1") or 1)
+
+
+def _scaled(n: int) -> int:
+    return max(1, int(n * _EXAMPLES_SCALE))
+
+
 try:
-    from hypothesis import given, settings, strategies as st  # noqa: F401
+    from hypothesis import given, strategies as st  # noqa: F401
+    from hypothesis import settings as _hyp_settings
     HAVE_HYPOTHESIS = True
+
+    def settings(max_examples: int = 25, **kw):
+        return _hyp_settings(max_examples=_scaled(max_examples), **kw)
 except ImportError:
     HAVE_HYPOTHESIS = False
 
@@ -67,7 +84,7 @@ except ImportError:
 
     def settings(max_examples: int = 25, deadline=None, **_ignored):
         def deco(fn):
-            fn._max_examples = max_examples
+            fn._max_examples = _scaled(max_examples)
             return fn
         return deco
 

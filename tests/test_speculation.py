@@ -1,0 +1,249 @@
+"""Speculative re-execution of stragglers in ClusterExecutor.
+
+Purity makes duplication free — these tests pin the parts that are NOT
+free: winner election under both orderings, the interaction with SIGKILL
+recovery (a dead original must not double-recover a task its twin still
+owns), duplicate-publish reconciliation under the ``outputs_only`` GC,
+disabled-by-default stats, and the policy itself — the runtime and the
+discrete-event simulator share :func:`repro.core.simulator.pick_speculation`
+and must agree on *which* tasks get speculated.
+
+Straggler injection: the task's value is deterministic, but its *first*
+execution (the ``O_EXCL`` sentinel creator) sleeps — a speculative twin
+launched after the original is asleep sees the sentinel and returns fast.
+Non-straggler tasks sleep a small base duration so the runtime EWMA
+calibration sees realistic expected durations.
+"""
+import os
+import time
+
+import pytest
+
+from repro.core import TaskGraph, TaskKind, execute_sequential
+from repro.core.simulator import ClusterSim, WorkerEvent, pick_speculation
+from repro.core.tracing import RemappedRef as _Ref
+from repro.cluster import ClusterExecutor
+
+
+def add_sleep_task(g: TaskGraph, name: str, deps, sleep_s: float,
+                   salt: int) -> int:
+    def fn(*xs, _s=sleep_s, _salt=salt):
+        if _s:
+            time.sleep(_s)
+        return (_salt + sum(xs) * 7) % 1_000_003
+
+    return g.add_node(name, fn, tuple(_Ref(d) for d in deps), {},
+                      TaskKind.PURE, deps=list(deps), cost=1.0)
+
+
+def add_straggler(g: TaskGraph, name: str, deps, marker_dir: str,
+                  creator_sleep: float, twin_sleep: float,
+                  salt: int) -> int:
+    """First execution (sentinel creator) sleeps ``creator_sleep``; any
+    re-execution sleeps ``twin_sleep``.  The value is identical either
+    way."""
+    path = os.path.join(marker_dir, f"straggler-{name}")
+
+    def fn(*xs, _p=path, _c=creator_sleep, _t=twin_sleep, _salt=salt):
+        try:
+            fd = os.open(_p, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+        except FileExistsError:
+            fd = -1
+        if fd >= 0:
+            os.close(fd)
+            time.sleep(_c)
+        elif _t:
+            time.sleep(_t)
+        return (_salt + sum(xs) * 7) % 1_000_003
+
+    return g.add_node(name, fn, tuple(_Ref(d) for d in deps), {},
+                      TaskKind.PURE, deps=list(deps), cost=1.0)
+
+
+def spec_stats(ex) -> dict:
+    return {k: v for k, v in ex.stats.items() if "spec" in k}
+
+
+# ------------------------------------------------------------------ policy
+
+def test_pick_speculation_fixed_trace():
+    """The shared policy on a hand-written trace: most-overdue wins, ties
+    to the lower tid, nothing under the threshold."""
+    running = {7: (3.0, 1.0),    # 3.0x overdue
+               2: (9.0, 1.0),    # 9.0x — most overdue
+               5: (1.0, 1.0)}    # on time
+    assert pick_speculation(running, 2.0) == 2
+    assert pick_speculation(running, 10.0) is None
+    assert pick_speculation({}, 1.0) is None
+    # equal overdue ratios: deterministic tie to the lower tid
+    assert pick_speculation({4: (6.0, 1.0), 9: (6.0, 1.0)}, 2.0) == 4
+    # at-threshold is NOT overdue (strictly greater, like the simulator)
+    assert pick_speculation({1: (2.0, 1.0)}, 2.0) is None
+
+
+def test_sim_and_runtime_agree_on_speculated_set(tmp_path):
+    """Cross-validation hook: same policy knobs, same graph shape — the
+    simulator and the real executor must speculate on the SAME task."""
+    # simulator: 8 unit-cost sources, worker 0 permanently 50x slow -> its
+    # first task (t0) is the straggler; worker 1 drains everything else,
+    # idles, and the shared policy picks t0
+    gs = TaskGraph()
+    for i in range(8):
+        add_sleep_task(gs, f"t{i}", (), 0.0, i)
+    gs.mark_output(7)
+    sim = ClusterSim(gs, 2, worker_speed=[0.02, 1.0],
+                     speculate_after=3.0, seed=0).run()
+    assert sim.n_speculative >= 1
+    assert sim.speculated == {0}
+
+    # runtime: the same 8 sources with t0 as the injected straggler;
+    # pipeline_depth=1 so nothing queues behind the sleeping original
+    # (head-of-line tasks are legitimately speculatable, but here we pin
+    # the policy pick, not the queueing behaviour)
+    gr = TaskGraph()
+    add_straggler(gr, "t0", (), str(tmp_path), 1.5, 0.0, 0)
+    for i in range(1, 8):
+        add_sleep_task(gr, f"t{i}", (), 0.1, i)
+    gr.mark_output(7)
+    ex = ClusterExecutor(2, speculate_after=3.0, pipeline_depth=1,
+                         progress_timeout=60.0)
+    got = ex.run(gr)
+    ex.close()
+    assert got == execute_sequential(gs)    # same values, sleep-free graph
+    assert {e["tid"] for e in ex.speculation_events} == sim.speculated
+
+
+# -------------------------------------------------------- winner election
+
+def test_twin_wins_and_result_is_oracle(tmp_path):
+    """Ordering 1: the original straggles, the twin (seeing the sentinel)
+    finishes first and wins; the late original is reconciled, not raised."""
+    g = TaskGraph()
+    calib = add_sleep_task(g, "calib", (), 0.1, 1)
+    strag = add_straggler(g, "strag", (), str(tmp_path), 1.2, 0.0, 2)
+    for j in range(4):
+        add_sleep_task(g, f"c{j}", (calib, strag), 0.05, 10 + j)
+    g.mark_output(5)
+    seq = execute_sequential(g)     # consumes tmp_path's sentinel...
+    os.unlink(os.path.join(str(tmp_path), "straggler-strag"))  # ...reset
+
+    ex = ClusterExecutor(2, speculate_after=2.0, progress_timeout=60.0)
+    got = ex.run(g)
+    ex.close()
+    assert got == seq
+    assert ex.stats["n_speculative"] >= 1, spec_stats(ex)
+    assert ex.stats["speculative_wins"] >= 1, spec_stats(ex)
+
+
+def test_original_wins_twin_is_wasted(tmp_path):
+    """Ordering 2: the 'straggler' is merely slow-ish and finishes first;
+    the twin (launched strictly later, same fixed duration) loses and its
+    work is accounted as waste."""
+    g = TaskGraph()
+    calib = add_sleep_task(g, "calib", (), 0.15, 1)
+    slow = add_sleep_task(g, "slow", (), 1.0, 2)    # fixed sleep, no sentinel
+    add_sleep_task(g, "c0", (calib, slow), 0.05, 3)
+    g.mark_output(2)
+    seq = execute_sequential(g)
+
+    ex = ClusterExecutor(2, speculate_after=2.0, progress_timeout=60.0)
+    got = ex.run(g)
+    ex.close()
+    assert got == seq
+    assert ex.stats["n_speculative"] >= 1, spec_stats(ex)
+    assert ex.stats["speculative_wins"] == 0, spec_stats(ex)
+    assert ex.stats["speculative_wasted_s"] > 0.0, spec_stats(ex)
+
+
+# ------------------------------------------------- SIGKILL mid-speculation
+
+def test_sigkill_original_while_twin_runs_no_double_recovery(tmp_path):
+    """SIGKILL the original's worker while the twin runs: the survivor
+    owns the task — no lineage recompute, no re-queue, exactly one
+    effective execution."""
+    g = TaskGraph()
+    calib = add_sleep_task(g, "calib", (), 0.1, 1)
+    strag = add_straggler(g, "strag", (), str(tmp_path), 3.0, 0.5, 2)
+    add_sleep_task(g, "c0", (calib, strag), 0.05, 3)
+    last = add_sleep_task(g, "c1", (calib, strag), 0.05, 4)
+    g.mark_output(last)
+    gs = TaskGraph()                  # sleep-free twin graph: the oracle
+    add_sleep_task(gs, "calib", (), 0.0, 1)
+    add_sleep_task(gs, "strag", (), 0.0, 2)
+    add_sleep_task(gs, "c0", (0, 1), 0.0, 3)
+    add_sleep_task(gs, "c1", (0, 1), 0.0, 4)
+    gs.mark_output(last)
+    seq = execute_sequential(gs)
+
+    ex = ClusterExecutor(2, speculate_after=2.0, progress_timeout=60.0)
+    fut = ex.submit(g)
+    deadline = time.monotonic() + 20.0
+    while not ex.speculation_events:
+        assert time.monotonic() < deadline, "twin never launched"
+        assert not fut.done(), f"run finished without speculating: " \
+                               f"{fut.exception(0)}"
+        time.sleep(0.005)
+    ev = ex.speculation_events[0]
+    assert ev["tid"] == strag
+    ex.kill_worker(ev["primary"])     # original dies mid-sleep
+
+    got = fut.result(timeout=60.0)
+    ex.close()
+    assert got == seq
+    stats = fut.stats
+    assert stats["failures"] == 1, stats
+    assert stats["recomputed"] == 0, stats          # no double recovery
+    assert stats["speculative_wins"] == 1, stats    # the twin's completion
+    # every task ran exactly once, plus the one speculative twin
+    assert stats["dispatched"] == len(g.nodes) + 1, stats
+
+
+# ------------------------------------------------------------ GC + default
+
+def test_speculation_disabled_by_default_stats_zero():
+    g = TaskGraph()
+    prev = add_sleep_task(g, "t0", (), 0.0, 0)
+    for i in range(1, 20):
+        prev = add_sleep_task(g, f"t{i}", (prev,), 0.0, i)
+    g.mark_output(prev)
+    ex = ClusterExecutor(2, progress_timeout=60.0)
+    got = ex.run(g)
+    ex.close()
+    assert got == execute_sequential(g)
+    assert ex.stats["n_speculative"] == 0
+    assert ex.stats["speculative_wins"] == 0
+    assert ex.stats["speculative_swept"] == 0
+    assert ex.stats["speculative_wasted_s"] == 0.0
+
+
+def test_gc_mode_sweeps_loser_publish(tmp_path):
+    """``outputs_only=True``: the straggler's value is consumed and
+    GC-dropped while the loser is still asleep; the loser's late publish
+    must be swept (the worker told to drop it), never resurrected as a
+    replica of a collected value."""
+    g = TaskGraph()
+    calib = add_sleep_task(g, "calib", (), 0.05, 1)
+    strag = add_straggler(g, "strag", (), str(tmp_path), 0.8, 0.0, 2)
+    c = add_sleep_task(g, "consume", (calib, strag), 0.05, 3)
+    prev = c
+    for i in range(6):                # tail keeps the run alive past the
+        prev = add_sleep_task(g, f"tail{i}", (prev,), 0.15, 10 + i)
+    g.mark_output(prev)               # loser's wake-up at 0.8s
+    gs_oracle = execute_sequential(g)     # consumes the sentinel...
+    os.unlink(os.path.join(str(tmp_path), "straggler-strag"))  # ...reset
+
+    ex = ClusterExecutor(2, outputs_only=True, speculate_after=2.0,
+                         progress_timeout=60.0)
+    got = ex.run(g)
+    ex.close()
+    assert got == {prev: gs_oracle[prev]}
+    assert ex.stats["speculative_wins"] >= 1, spec_stats(ex)
+    assert ex.stats["dropped"] >= 1, ex.stats
+    assert ex.stats["speculative_swept"] >= 1, spec_stats(ex)
+
+
+def test_speculate_after_validation():
+    with pytest.raises(ValueError):
+        ClusterExecutor(2, speculate_after=0.0)
+    with pytest.raises(ValueError):
+        ClusterExecutor(2, speculate_after=-1.5)
