@@ -38,7 +38,7 @@ from repro.core.tracing import RemappedRef as _Ref
 from repro.cluster import ClusterExecutor, serde
 
 from .bench_transfer import build_shuffle
-from .common import print_rows
+from .common import median, print_rows
 
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
                         "BENCH_multihost.json")
@@ -60,11 +60,6 @@ def control_dag(n: int, p: float = 0.25, seed: int = 0) -> TaskGraph:
     return g
 
 
-def _median(xs: List[float]) -> float:
-    xs = sorted(xs)
-    return xs[len(xs) // 2]
-
-
 def time_channel(graph: TaskGraph, channel: str, workers: int,
                  reps: int) -> Dict[str, Any]:
     walls = []
@@ -78,7 +73,7 @@ def time_channel(graph: TaskGraph, channel: str, workers: int,
         stats = dict(ex.stats)
         ex.close()
     n = len(graph.nodes)
-    wall = _median(walls)
+    wall = median(walls)
     return {"channel": channel, "wall_s": wall,
             "per_task_ms": 1e3 * wall / n,
             "dispatched": stats.get("dispatched", 0)}
@@ -100,7 +95,7 @@ def time_shuffle(graph: TaskGraph, channel: str, transport: str,
         used = ex.transport_used or transport
         ex.close()
     return {"channel": channel, "transport": used,
-            "wall_s": _median(walls),
+            "wall_s": median(walls),
             "bytes_driver": stats.get("bytes_driver", 0),
             "bytes_direct": stats.get("bytes_direct", 0),
             "transfers_direct": stats.get("transfers_direct", 0)}

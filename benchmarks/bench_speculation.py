@@ -48,7 +48,7 @@ from repro.core import TaskGraph, TaskKind, execute_sequential
 from repro.core.tracing import RemappedRef as _Ref
 from repro.cluster import ClusterExecutor
 
-from .common import print_rows
+from .common import median, print_rows
 
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
                         "BENCH_speculation.json")
@@ -104,11 +104,6 @@ def build_straggler_shuffle(marker_dir: str, *, producers: int = 4,
     return g
 
 
-def _median(xs: List[float]) -> float:
-    xs = sorted(xs)
-    return xs[len(xs) // 2]
-
-
 def run_cell(channel: str, speculate_after: Optional[float], args,
              oracle: float) -> Dict[str, Any]:
     """One (channel, speculation) cell; a fresh sentinel dir per rep so
@@ -136,7 +131,7 @@ def run_cell(channel: str, speculate_after: Optional[float], args,
                 f"oracle {oracle}"
     return {"channel": channel,
             "speculate_after": speculate_after or 0.0,
-            "wall_s": _median(walls),
+            "wall_s": median(walls),
             "n_speculative": stats.get("n_speculative", 0),
             "speculative_wins": stats.get("speculative_wins", 0),
             "speculative_wasted_s": round(

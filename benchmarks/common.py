@@ -23,6 +23,13 @@ def time_call(fn: Callable, *args, reps: int = 3, warmup: int = 1,
     return times[len(times) // 2]
 
 
+def median(xs: Sequence[float]) -> float:
+    """Upper median of wall-clock samples (ties toward the larger value,
+    matching the suites' conservative headline reporting)."""
+    xs = sorted(xs)
+    return xs[len(xs) // 2]
+
+
 def write_csv(name: str, rows: List[Dict[str, Any]]) -> str:
     os.makedirs(RESULTS_DIR, exist_ok=True)
     path = os.path.join(RESULTS_DIR, f"{name}.csv")

@@ -17,6 +17,11 @@ Suites:
   speculation— tail latency: straggler-injected shuffle with speculative
                re-execution off vs on, per control channel; writes
                BENCH_speculation.json
+  fusion     — driver hot path: fine-grained 801-node chain/map graph with
+               the graph-compilation pass (--fuse auto) vs per-task
+               dispatch (--fuse off), per control channel, bit-for-bit
+               oracle + SIGKILL-recovery cross-checks; writes
+               BENCH_fusion.json
 """
 from __future__ import annotations
 
@@ -25,7 +30,8 @@ import sys
 import time
 
 from . import (matmul_scaling, scheduler_bench, fault_bench, roofline,
-               bench_transfer, bench_multihost, bench_speculation)
+               bench_transfer, bench_multihost, bench_speculation,
+               bench_fusion)
 
 SUITES = {
     "matmul": matmul_scaling.main,
@@ -35,6 +41,7 @@ SUITES = {
     "transfer": bench_transfer.main,
     "multihost": bench_multihost.main,
     "speculation": bench_speculation.main,
+    "fusion": bench_fusion.main,
 }
 
 

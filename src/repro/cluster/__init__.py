@@ -27,6 +27,17 @@ driver's stealing loop, so consumers land on the worker already holding
 the largest share of their input bytes — with per-host grouping, so a
 same-host shm move is preferred over a cross-host TCP pull.
 
+The **driver hot path is compiled, not interpreted**: a plan-time fusion
+pass (:mod:`repro.core.fusion`, ``fuse={"off","auto",N}``) clusters the
+task graph into super-tasks — one control message dispatches a whole
+chain/fan-in/sibling group, members execute inside one worker frame, and
+only cluster-boundary values touch the object store — while outgoing
+control messages coalesce into per-worker batch frames
+(``Channel.send_many``), amortizing pickle + syscall cost under load.
+``stats`` exposes the win directly: ``n_clusters`` / ``tasks_fused`` /
+``control_msgs`` / ``control_frames`` / ``dispatch_overhead_s``.  See
+``docs/fusion.md``.
+
 The **control plane** is an explicit channel layer
 (:mod:`repro.cluster.channel`): the driver speaks the same tuple protocol
 over forked duplex pipes (``channel="pipe"``), spawned fresh-interpreter

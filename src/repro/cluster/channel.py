@@ -33,6 +33,11 @@ Driver-side contract (what the executor's event loop needs):
   ``selectable()``       object for ``multiprocessing.connection.wait``
   ``send(msg)``          enqueue/write one message; ``ChannelClosed`` if the
                          peer is gone (the caller turns that into a death)
+  ``send_many(msgs)``    coalesce a burst of messages into one wire write
+                         (a ``("batch", [...])`` frame: one pickle + one
+                         syscall); order preserved, peers unwrap — the
+                         driver flushes its per-worker outbox through this
+                         once per event-loop iteration
   ``recv_available()``   drain every complete message currently readable
                          (never blocks after ``wait`` reported readability);
                          ``ChannelClosed`` on EOF
@@ -63,7 +68,9 @@ import time
 from typing import Any, Dict, List, Optional, Tuple
 
 PROTOCOL_MAGIC = "repro-cluster"
-PROTOCOL_VERSION = 1
+# v2: super-task dispatch (``run``/``done`` carry cluster ids and
+# per-member size maps) + ``("batch", [msgs])`` coalesced frames
+PROTOCOL_VERSION = 2
 
 #: control-plane channels a ClusterExecutor can be built on (the
 #: transport matrix lives in serde.TRANSPORTS / serde.CROSS_HOST_TRANSPORTS)
@@ -76,6 +83,36 @@ _MAX_FRAME = 1 << 34                 # 16 GiB sanity bound on one message
 class ChannelClosed(ConnectionError):
     """The peer is unreachable (EOF, reset, dead process, backpressure
     overflow).  The executor treats this exactly like a worker death."""
+
+
+def wrap_batch(msgs: List[tuple]) -> Optional[tuple]:
+    """The batch envelope, in one place: a single message travels bare, a
+    burst travels as one ``("batch", [...])`` frame (one pickle + one
+    syscall).  Returns ``None`` for an empty burst.  Every sender — both
+    channel families and the worker's reply thread — must wrap through
+    here so the envelope can never diverge from :func:`_flatten_batches`.
+    """
+    if not msgs:
+        return None
+    if len(msgs) == 1:
+        return msgs[0]
+    return ("batch", list(msgs))
+
+
+def _flatten_batches(msgs: List[tuple]) -> List[tuple]:
+    """Unwrap ``("batch", [...])`` frames into their member messages, in
+    order.  Batching is a *wire* optimization (one pickle + one syscall
+    for a burst of control messages); no consumer above the channel layer
+    ever sees a batch frame."""
+    if not any(m and m[0] == "batch" for m in msgs):
+        return msgs
+    flat: List[tuple] = []
+    for m in msgs:
+        if m and m[0] == "batch":
+            flat.extend(m[1])
+        else:
+            flat.append(m)
+    return flat
 
 
 def host_id() -> str:
@@ -149,11 +186,19 @@ class PipeChannel:
         except (BrokenPipeError, OSError) as e:
             raise ChannelClosed(f"pipe send failed: {e!r}") from e
 
+    def send_many(self, msgs: List[tuple]) -> None:
+        """Coalesce a burst of messages into one wire write (one pickle +
+        one syscall) — the driver's per-iteration outbox flush.  Order is
+        preserved; the worker-side reader unwraps the batch frame."""
+        wrapped = wrap_batch(msgs)
+        if wrapped is not None:
+            self.send(wrapped)
+
     def recv_available(self) -> List[tuple]:
         # mp pipes deliver whole messages; one recv per readability event
         # matches the pre-channel driver loop exactly
         try:
-            return [self.conn.recv()]
+            return _flatten_batches([self.conn.recv()])
         except (EOFError, OSError) as e:
             raise ChannelClosed(f"pipe EOF: {e!r}") from e
 
@@ -338,6 +383,14 @@ class TcpChannel:
                 f"queued messages within {self.send_timeout}s")
             raise ChannelClosed(self._send_failed) from None
 
+    def send_many(self, msgs: List[tuple]) -> None:
+        """One frame for a burst of messages: a single pickle + a single
+        outbox slot, amortizing serialization and syscall cost under
+        load (order preserved; the peer unwraps)."""
+        wrapped = wrap_batch(msgs)
+        if wrapped is not None:
+            self.send(wrapped)
+
     def maybe_heartbeat(self) -> None:
         now = time.monotonic()
         if now - self._last_hb < self.heartbeat_interval:
@@ -362,7 +415,7 @@ class TcpChannel:
         if not data:
             raise ChannelClosed("peer closed connection")
         self.last_seen = time.monotonic()
-        msgs = self._frames.feed(data)
+        msgs = _flatten_batches(self._frames.feed(data))
         if any(m and m[0] == "bye" for m in msgs):
             self.said_goodbye = True
         return msgs

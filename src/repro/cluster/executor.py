@@ -12,58 +12,92 @@ cares) what wire its messages ride.
 Design points (mirroring the Haskell#/Cloud-Haskell driver designs and the
 mapping-decision framing of Mapple):
 
+* **Graph compilation before dispatch.**  The purity guarantee lets the
+  runtime rewrite the task graph freely, so a plan-time fusion pass
+  (:mod:`repro.core.fusion`, knob ``fuse={"off","auto",N}``) clusters the
+  DAG into *super-tasks* — linear chains, small same-placement fan-ins,
+  and sibling groups below a cost threshold.  The whole driver state
+  machine below (plan, dispatch, stealing, speculation, recovery) runs at
+  super-task granularity over the plan's cluster-level graph; a
+  super-task costs **one** control message, its members execute inside
+  one worker frame, and only *cluster outputs* ever touch ``serde`` or
+  the object store.  ``fuse="off"`` compiles the identity plan (one
+  cluster per task, cluster id == task id), which is bit-for-bit the
+  pre-fusion runtime — fused and unfused execution share this one code
+  path.  ``stats["n_clusters"]`` / ``stats["tasks_fused"]`` report what
+  the pass did.
+* **Batched control plane.**  Outgoing control messages (``run`` /
+  ``fetch`` / ``drop`` / ``cancel``) are coalesced into a per-worker
+  outbox the driver flushes once per event-loop iteration through
+  ``Channel.send_many`` — one pickle and one syscall per burst — and the
+  worker's sender thread batches its replies the same way.
+  ``stats["control_msgs"]`` (logical messages, both directions) vs
+  ``stats["control_frames"]`` (driver-side wire writes — the flush
+  count) expose the amortization on the dispatch path;
+  ``stats["dispatch_overhead_s"]`` is the driver time spent choosing,
+  serializing, and writing dispatches, so the fusion win is observable
+  directly, not just inferable from wall clock.
 * **Static plan, dynamic execution.**  ``scheduler.list_schedule`` produces
-  a placement hint (critical-path priority, earliest-finish-time worker);
-  the driver follows it opportunistically and *steals* — dispatches a ready
-  task to an idle worker that wasn't its planned home — whenever the plan
-  goes stale.  Both the plan (via ``data_sizes``/``placed``/``worker_host``
-  comm costs in the scheduler) and the stealing choice (via a transfer-cost
-  score over per-value sizes recorded at completion) are **locality-aware**
-  at two radii: same-worker beats same-host beats cross-host, so a
-  consumer lands next to its bytes and cross-host TCP pulls are a last
-  resort.
+  a placement hint over the **fused** graph (critical-path priority,
+  earliest-finish-time worker; its comm-cost term sees only cross-cluster
+  edges); the driver follows it opportunistically and *steals* — dispatches
+  a ready super-task to an idle worker that wasn't its planned home —
+  whenever the plan goes stale.  Both the plan (via
+  ``data_sizes``/``placed``/``worker_host`` comm costs in the scheduler)
+  and the stealing choice (via a transfer-cost score over per-value sizes
+  recorded at completion) are **locality-aware** at two radii: same-worker
+  beats same-host beats cross-host, so a consumer lands next to its bytes
+  and cross-host TCP pulls are a last resort.
 * **Zero-copy data plane.**  Cross-worker values move as *handles*
   (:mod:`repro.cluster.serde`): the owner publishes the payload once into
   a ``multiprocessing.shared_memory`` segment (or serves it over its
-  unix/TCP socket server), and the consumer maps/pulls it directly.  The
-  control channel carries only messages and handles —
-  ``stats["bytes_driver"]`` vs ``stats["bytes_direct"]`` make the split
-  observable; ``transport="driver"`` restores the PR-1 relay for A/B runs.
+  unix/TCP socket server — or BOTH, on a TCP data plane where same-host
+  consumers then pick the shm side by host id), and the consumer
+  maps/pulls it directly.  The control channel carries only messages and
+  handles — ``stats["bytes_driver"]`` vs ``stats["bytes_direct"]`` make
+  the split observable; ``transport="driver"`` restores the PR-1 relay
+  for A/B runs.
 * **Channel-based liveness.**  A forked worker's death is OS truth
   (``proc.is_alive``); a TCP worker's death is **missed heartbeats** or a
   socket EOF — and a clean shutdown says an explicit goodbye so it is
   never misread as a crash.  The driver asks each channel, not the
   process table, so SIGKILL on another machine and SIGKILL on this one
   take the same recovery path.
-* **Pipelined dispatch.**  Up to ``pipeline_depth`` tasks are in a worker's
-  channel at once, so the driver overlaps dispatch/transfer with execution
-  (the futures-style async core of ``submit``/``gather``).
+* **Pipelined dispatch.**  Up to ``pipeline_depth`` super-tasks are in a
+  worker's channel at once, so the driver overlaps dispatch/transfer with
+  execution (the futures-style async core of ``submit``/``gather``).
 * **Replicas, not broadcast.**  Results stay in the producing worker's
   local store; a transfer leaves the consumer holding a replica (tracked
   per-value as a *set* of holders, each tagged with its host), so later
   consumers read locally and a value is only lost when its last holder
   dies without a durable handle.
-* **Lineage fault tolerance.**  On worker death the lost set is exactly
-  the values with no surviving replica, no shm-published handle, and no
-  driver-cached copy; ``lineage.recovery_plan`` gives the minimal
-  recompute set (walking past GC'd ancestors in ``outputs_only`` runs),
+* **Lineage fault tolerance at super-task granularity.**  On worker death
+  the lost set is exactly the values with no surviving replica, no
+  shm-published handle, and no driver-cached copy;
+  ``lineage.recovery_plan_clusters`` gives the minimal recompute set of
+  *clusters* (walking past GC'd ancestors in ``outputs_only`` runs — a
+  SIGKILL mid-super-task recomputes exactly the lost cluster),
   ``scheduler.replan`` re-places the remaining work on the survivors, and
   ``stats["recomputed"]`` counts exactly ``len(plan)``.  A SIGKILL
   mid-transfer degrades the same way: consumers that already hold a stale
-  handle report ``deplost`` and the task re-queues behind the recovery.
+  handle report ``deplost`` and the super-task re-queues behind the
+  recovery.
 * **Speculative re-execution of stragglers.**  Purity makes duplication
   free, so with ``speculate_after=x`` an *idle* worker (no ready work
-  anywhere) duplicates the most-overdue running task — one running more
-  than ``x×`` its expected duration, where *expected* is the static
+  anywhere) duplicates the most-overdue running super-task — one running
+  more than ``x×`` its expected duration, where *expected* is the static
   ``list_schedule`` cost-model hint calibrated into seconds by a runtime
-  EWMA of actual-vs-planned durations.  The first completion wins; losers
-  get an idempotent ``cancel`` (honored between tasks — a loser already
-  executing finishes and its late ``done`` is reconciled: recorded as a
-  legitimate extra replica, or swept when the GC already dropped the
-  value).  The *pick* is :func:`repro.core.simulator.pick_speculation`,
-  shared with the simulator so policy and model provably agree.
-  ``stats`` reports ``n_speculative`` / ``speculative_wins`` /
-  ``speculative_wasted_s``; see ``docs/speculation.md``.
+  EWMA of actual-vs-planned durations.  The twin placement is
+  **locality-aware**: among idle workers the one nearest the task's input
+  bytes (same-host copies count half of cross-host ones) runs it.  The
+  first completion wins; losers get an idempotent ``cancel`` (honored
+  between tasks — a loser already executing finishes and its late
+  ``done`` is reconciled: recorded as a legitimate extra replica, or
+  swept when the GC already dropped the value).  The *pick* is
+  :func:`repro.core.simulator.pick_speculation`, shared with the
+  simulator so policy and model provably agree.  ``stats`` reports
+  ``n_speculative`` / ``speculative_wins`` / ``speculative_wasted_s``;
+  see ``docs/speculation.md``.
 * **Elasticity.**  ``add_worker()`` forks a fresh worker mid-run and
   replans onto the grown pool; on a TCP control plane, any
   ``repro-worker`` that dials the driver's address mid-run joins the same
@@ -76,10 +110,10 @@ mapping-decision framing of Mapple):
   shutdown.
 
 Failure injection for tests/benchmarks: ``fail_worker=(wid, n)`` SIGKILLs
-worker ``wid`` after it completes ``n`` tasks (a remote worker is sent a
-``die`` message instead — the driver cannot signal a remote pid);
-``join_after=(n, k)`` starts ``k`` extra workers once ``n`` tasks have
-completed cluster-wide.
+worker ``wid`` after it completes ``n`` super-tasks (a remote worker is
+sent a ``die`` message instead — the driver cannot signal a remote pid);
+``join_after=(n, k)`` starts ``k`` extra workers once ``n`` super-tasks
+have completed cluster-wide.
 """
 from __future__ import annotations
 
@@ -96,8 +130,9 @@ from multiprocessing.connection import wait as conn_wait
 from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.core.executor import MissingInput, TaskFailed
+from repro.core.fusion import FuseSpec, fuse as fuse_graph, parse_fuse_spec
 from repro.core.graph import TaskGraph
-from repro.core.lineage import recovery_plan
+from repro.core.lineage import recovery_plan_clusters
 from repro.core.scheduler import list_schedule, replan
 from repro.core.simulator import pick_speculation
 
@@ -122,6 +157,7 @@ class _Worker:
     alive: bool = True
     inflight: Set[int] = field(default_factory=set)   # run sent, not done
     assigned: Set[int] = field(default_factory=set)   # waiting on transfers
+    outbox: List[tuple] = field(default_factory=list)  # coalesced sends
     n_done: int = 0
 
     def load(self) -> int:
@@ -134,6 +170,15 @@ class ClusterExecutor:
     Satisfies the :class:`repro.core.executor.Executor` protocol — results
     are bit-identical to :func:`repro.core.executor.execute_sequential`
     because tasks are pure and the value tables are exact.
+
+    **Graph compilation** (``fuse``): ``"off"`` (the default — one
+    dispatch per task, the PR-1..4 behavior), ``"auto"`` (fuse chains /
+    small fan-ins / sibling groups with the default cost model), or an
+    integer ``N`` (auto rules, clusters capped at ``N`` members).  Fusion
+    changes *granularity only*: results, lineage recovery, and the
+    ``{tid: value}`` return contract are unchanged — fine-grained graphs
+    just stop paying one driver round-trip per node.  See
+    ``docs/fusion.md``.
 
     **Control plane** (``channel``): ``"pipe"`` (forked in-host workers,
     the default), ``"spawn"`` (fresh-interpreter in-host workers; implied
@@ -149,8 +194,9 @@ class ClusterExecutor:
 
     **Data plane** (``transport``): ``"shm"`` (zero-copy shared memory),
     ``"sock"`` (direct unix-socket pulls), ``"tcp"`` (direct TCP pulls —
-    the only bulk channel that crosses hosts), ``"driver"`` (relay through
-    the control channel), or ``"auto"`` (best available; ``tcp`` when the
+    the only bulk channel that crosses hosts; same-host pairs still ride
+    shm via dual-published handles), ``"driver"`` (relay through the
+    control channel), or ``"auto"`` (best available; ``tcp`` when the
     pool spans hosts).  ``shm_threshold`` is the payload size at which
     values leave the control channel.  The resolved choice of an ``auto``
     run is exposed as ``transport_used`` after ``run``.
@@ -159,9 +205,11 @@ class ClusterExecutor:
     and garbage-collects intermediates once their last consumer finishes —
     the memory-bounded production mode, where shm segments are unlinked
     eagerly and lineage recovery recomputes *dropped* ancestors too.
+    (Under fusion, intra-cluster intermediates never exist outside the
+    worker's execution frame in the first place.)
 
     ``speculate_after=x`` enables speculative re-execution of stragglers:
-    an idle worker duplicates a task running longer than ``x×`` its
+    an idle worker duplicates a super-task running longer than ``x×`` its
     expected duration, first completion wins, the loser is cancelled
     between tasks.  Off (``None``) by default — duplication costs work, so
     it is opt-in for tail-latency-sensitive runs (``docs/speculation.md``).
@@ -191,6 +239,7 @@ class ClusterExecutor:
         heartbeat_interval: float = 1.0,
         heartbeat_timeout: float = 15.0,
         speculate_after: Optional[float] = None,
+        fuse: FuseSpec = "off",
     ) -> None:
         if start_method not in ("fork", "spawn", "forkserver"):
             raise ValueError(f"unknown start_method {start_method!r}")
@@ -251,9 +300,10 @@ class ClusterExecutor:
                              "×expected-duration multiple (or None to "
                              "disable speculation)")
         self.speculate_after = speculate_after
+        self.fuse = parse_fuse_spec(fuse)   # raises on junk, at the flag
         self.host = host_id()
         self.seg_prefix: Optional[str] = None    # last run's shm name prefix
-        self.stats: Dict[str, int] = {}
+        self.stats: Dict[str, Any] = {}
         self.wall_time = 0.0
         self.recovery_events: List[Dict[str, Any]] = []
         # one entry per twin launched: {tid, primary, twin, t} — live during
@@ -351,6 +401,15 @@ class ClusterExecutor:
         peer_dir = (tempfile.mkdtemp(prefix="rrpeer")
                     if transport == "sock" else None)
         driver_namer = serde.SegmentNamer(f"{seg_prefix}d")
+
+        # -- graph compilation: the driver below runs over the CLUSTER graph
+        # (fuse="off" -> identity plan, cg is graph, cluster id == task id)
+        plan = fuse_graph(graph, self.fuse)
+        cg = plan.cgraph
+        required = (set(graph.outputs) if self.outputs_only
+                    else set(graph.nodes))
+        fusion_view = plan.worker_view(required)
+
         stats = self.stats = {
             "dispatched": 0, "steals": 0, "transfers": 0, "recomputed": 0,
             "failures": 0, "joins": 0, "dropped": 0,
@@ -358,12 +417,15 @@ class ClusterExecutor:
             "bytes_moved": 0, "bytes_driver": 0, "bytes_direct": 0,
             "n_speculative": 0, "speculative_wins": 0,
             "speculative_swept": 0, "speculative_wasted_s": 0.0,
+            "n_clusters": len(cg.nodes), "tasks_fused": plan.n_fused,
+            "control_msgs": 0, "control_frames": 0,
+            "dispatch_overhead_s": 0.0,
         }
         self.recovery_events = []
         self.speculation_events = []
         t0 = time.perf_counter()
 
-        store = DriverObjectStore(graph)
+        store = DriverObjectStore(graph, plan=plan)
         workers: Dict[int, _Worker] = {}
         next_wid = 0
         listener = self.listener
@@ -391,6 +453,7 @@ class ClusterExecutor:
                 "seg_prefix": seg_prefix,
                 "peer_dir": peer_dir,
                 "peer_host": peer_ip,
+                "fusion": fusion_view,
                 "heartbeat_interval": self.heartbeat_interval,
                 # the worker tolerates a longer driver silence than the
                 # driver tolerates of it: the driver's loop always has
@@ -525,7 +588,7 @@ class ClusterExecutor:
             proc = ctx.Process(target=pipe_worker_main,
                                args=(wid, child, graph, inputs, transport,
                                      self.shm_threshold, seg_prefix,
-                                     peer_dir),
+                                     peer_dir, fusion_view),
                                daemon=True, name=f"cluster-worker-{wid}")
             proc.start()
             child.close()
@@ -557,29 +620,27 @@ class ClusterExecutor:
                     continue
                 return adopt(sock, hello, proc=None)
 
-        rank = graph.critical_path_rank()
-        succ = store.successors
-        n_total = len(graph.nodes)
-        required = (set(graph.outputs) if self.outputs_only
-                    else set(graph.nodes))
+        rank = cg.critical_path_rank()
+        csucc = cg.successors()
+        n_total = len(cg.nodes)
 
         state: Dict[int, int] = {}
-        for tid, node in graph.nodes.items():
-            state[tid] = READY if not node.all_deps else PENDING
+        for cid, node in cg.nodes.items():
+            state[cid] = READY if not node.all_deps else PENDING
         done: Set[int] = set()
         finish_times: Dict[int, float] = {}
-        # tid -> (wid, still-missing dep tids) for transfer-blocked dispatches
+        # cid -> (wid, still-missing input value tids) for transfer-blocked
         waiting: Dict[int, Tuple[int, Set[int]]] = {}
-        fetching: Dict[int, int] = {}    # dep tid -> wid the fetch went to
-        # -- speculation state: a task may run on SEVERAL workers at once --
-        runners: Dict[int, Set[int]] = {}         # tid -> wids running it now
-        run_started: Dict[int, Dict[int, float]] = {}  # tid -> wid -> t_start
-        spec_twins: Dict[int, Set[int]] = {}      # tid -> speculative wids
+        fetching: Dict[int, int] = {}    # value tid -> wid the fetch went to
+        # -- speculation state: a super-task may run on SEVERAL workers --
+        runners: Dict[int, Set[int]] = {}         # cid -> wids running it now
+        run_started: Dict[int, Dict[int, float]] = {}  # cid -> wid -> t_start
+        spec_twins: Dict[int, Set[int]] = {}      # cid -> speculative wids
         # expected durations: static plan hint (cost units), calibrated to
         # seconds by an EWMA of actual/planned — same 0.9/0.1 blend the
         # launchers' straggler detector uses
         planned_dur: Dict[int, float] = {
-            t: max(n.cost, 1e-6) for t, n in graph.nodes.items()}
+            c: max(n.cost, 1e-6) for c, n in cg.nodes.items()}
         ewma_ratio: Optional[float] = None  # seconds per cost unit; None
         # until the first completion — no speculation before calibration
         error: List[BaseException] = []
@@ -602,6 +663,16 @@ class ClusterExecutor:
             return next((x for x in store.locations(tid)
                          if x in workers and workers[x].alive), None)
 
+        def cluster_sizes() -> Dict[int, int]:
+            """Per-cluster output bytes for the replan comm-cost term —
+            only values that actually cross cluster edges count."""
+            out: Dict[int, int] = {}
+            for cid, outs in plan.outputs.items():
+                s = sum(store.sizes.get(v, 0) for v in outs)
+                if s:
+                    out[cid] = s
+            return out
+
         # planned placement: schedule slot i -> i-th alive worker id
         plan_worker: Dict[int, int] = {}
 
@@ -612,7 +683,7 @@ class ClusterExecutor:
             try:
                 if initial:
                     sched = list_schedule(
-                        graph, len(wids), policy=self.policy,
+                        cg, len(wids), policy=self.policy,
                         worker_speed=speeds_for(wids), seed=self.seed,
                         worker_host=hosts_for(wids))
                 else:
@@ -621,32 +692,63 @@ class ClusterExecutor:
                     # plan keeps consumers next to the bytes they need —
                     # and, via worker_host, on the right machine
                     placed = {}
-                    for t in finish_times:
-                        ow = alive_owner(t)
-                        if ow is not None:
-                            placed[t] = wids.index(ow)
+                    for c in finish_times:
+                        for v in plan.outputs[c]:
+                            ow = alive_owner(v)
+                            if ow is not None:
+                                placed[c] = wids.index(ow)
+                                break
                     sched = replan(
-                        graph, dict(finish_times), len(wids),
+                        cg, dict(finish_times), len(wids),
                         now=time.perf_counter() - t0, policy=self.policy,
                         worker_speed=speeds_for(wids), seed=self.seed,
-                        data_sizes=dict(store.sizes),
+                        data_sizes=cluster_sizes(),
                         bandwidth=self.bandwidth, placed=placed,
                         worker_host=hosts_for(wids))
             except Exception:            # plan is advisory; never fatal
                 plan_worker.clear()
                 return
             plan_worker.clear()
-            for tid, p in sched.placements.items():
-                plan_worker[tid] = wids[p.worker]
+            for cid, p in sched.placements.items():
+                plan_worker[cid] = wids[p.worker]
             # static cost-model hint for the speculation overdue test
             # (node.cost is the pre-plan fallback)
-            for tid, dur in sched.expected_durations().items():
-                planned_dur[tid] = max(dur, 1e-6)
+            for cid, dur in sched.expected_durations().items():
+                planned_dur[cid] = max(dur, 1e-6)
 
         # ---------------------------------------------------------- helpers
+        def post(w: _Worker, msg: tuple) -> None:
+            """Buffer a control message in the worker's outbox; the pump
+            loop flushes every outbox once per iteration through
+            ``Channel.send_many`` — one pickle + one syscall per burst.
+            A peer that died under the buffer surfaces at flush as a
+            failure-handled event, exactly like a failed direct send."""
+            w.outbox.append(msg)
+
+        def flush(w: _Worker) -> bool:
+            if not w.outbox:
+                return True
+            msgs, w.outbox = w.outbox, []
+            t = time.perf_counter()
+            try:
+                w.chan.send_many(msgs)
+            except ChannelClosed:
+                stats["dispatch_overhead_s"] += time.perf_counter() - t
+                on_worker_death(w)
+                return False
+            stats["control_msgs"] += len(msgs)
+            stats["control_frames"] += 1
+            stats["dispatch_overhead_s"] += time.perf_counter() - t
+            return True
+
+        def flush_all() -> None:
+            for w in list(workers.values()):
+                if w.alive and w.outbox:
+                    flush(w)
+
         def safe_send(w: _Worker, msg: tuple) -> bool:
-            """Send to a worker; an already-dead peer (organic SIGKILL, OOM,
-            segfault, socket reset, backpressure overflow) becomes a
+            """Immediate (unbatched) send for out-of-band messages
+            (``die``/``stop``); an already-dead peer becomes a
             failure-handled event, never an exception out of the driver
             loop."""
             try:
@@ -688,14 +790,15 @@ class ClusterExecutor:
             store.set_handle(d, h)
             return h
 
-        def build_extra(tid: int, wid: int
+        def build_extra(cid: int, wid: int
                         ) -> Tuple[Optional[Dict[int, Any]], Set[int]]:
-            """Transfer handles for every input of ``tid`` not already
-            replicated on ``wid``; the missing set needs fetches first.
-            Returns (None, _) when a value failed to serialize (error set)."""
+            """Transfer handles for every external input of super-task
+            ``cid`` not already replicated on ``wid``; the missing set
+            needs fetches first.  Returns (None, _) when a value failed to
+            serialize (error set)."""
             extra: Dict[int, Any] = {}
             missing: Set[int] = set()
-            for d in graph.nodes[tid].all_deps:
+            for d in plan.ext_deps[cid]:
                 if store.has_replica(d, wid):
                     continue                   # already local
                 h = store.handles.get(d)
@@ -709,16 +812,17 @@ class ClusterExecutor:
                     missing.add(d)
             return extra, missing
 
-        def move_cost(tid: int, wid: int) -> int:
-            """Bytes-weighted cost of running ``tid`` on ``wid``.  A
-            published value costs half (one consumer-side materialization);
-            an unpublished remote value costs its full size (publish +
-            materialize) — and every byte whose nearest copy lives on
-            another *host* counts double, so the stealing loop prefers
-            same-host shm moves over cross-host TCP pulls."""
+        def move_cost(cid: int, wid: int) -> int:
+            """Bytes-weighted cost of running super-task ``cid`` on
+            ``wid``.  A published value costs half (one consumer-side
+            materialization); an unpublished remote value costs its full
+            size (publish + materialize) — and every byte whose nearest
+            copy lives on another *host* counts double, so both the
+            stealing loop and the speculation twin pick prefer same-host
+            shm moves over cross-host TCP pulls."""
             host = workers[wid].host
             cost = 0
-            for d in graph.nodes[tid].all_deps:
+            for d in plan.ext_deps[cid]:
                 if store.has_replica(d, wid):
                     continue
                 size = store.sizes.get(d, 0)
@@ -731,12 +835,12 @@ class ClusterExecutor:
                 cost += c
             return cost
 
-        def try_dispatch(tid: int, w: _Worker) -> bool:
-            """Assign READY task ``tid`` to worker ``w``; ship handles or
-            request publication of whatever remote inputs it needs.
-            Returns False when a recovery ran underneath (caller must
-            re-snapshot the ready set)."""
-            extra, missing = build_extra(tid, w.wid)
+        def try_dispatch(cid: int, w: _Worker) -> bool:
+            """Assign READY super-task ``cid`` to worker ``w``; ship
+            handles or request publication of whatever remote inputs it
+            needs.  Returns False when a recovery ran underneath (caller
+            must re-snapshot the ready set)."""
+            extra, missing = build_extra(cid, w.wid)
             if extra is None:
                 return False                    # serialization task error
             if missing:
@@ -747,84 +851,70 @@ class ClusterExecutor:
                     d for d in missing
                     if d not in fetching and alive_owner(d) is None}
                 if unreachable:
-                    state[tid] = READY
+                    state[cid] = READY
                     recompute_lost(unreachable, unreachable, None)
                     return False
-                state[tid] = WAITING
-                waiting[tid] = (w.wid, missing)
-                w.assigned.add(tid)
+                state[cid] = WAITING
+                waiting[cid] = (w.wid, missing)
+                w.assigned.add(cid)
                 for d in missing:
                     if d not in fetching:
-                        ow = alive_owner(d)
-                        if ow is None or \
-                                not safe_send(workers[ow], ("fetch", d)):
-                            # the owner died under this loop.  If the dep
-                            # survives on a replica the death handler has
-                            # no record of THIS waiter (fetching[d] was
-                            # never set) — unwind to READY so dispatch
-                            # retries against the survivors, instead of
-                            # stranding the task in WAITING forever.
-                            if waiting.pop(tid, None) is not None:
-                                w.assigned.discard(tid)
-                            if state.get(tid) == WAITING:
-                                state[tid] = READY
-                            return False
+                        ow = alive_owner(d)     # non-None: checked above
+                        post(workers[ow], ("fetch", d))
                         fetching[d] = ow
                 return True
-            return launch(tid, w, extra)
-
-        def launch(tid: int, w: _Worker, extra: Dict[int, Any],
-                   speculative: bool = False) -> bool:
-            """Ship the run message; False when the worker died under the
-            send (the death handler has already reset ``tid`` to READY —
-            or left it INFLIGHT when another runner survives)."""
-            state[tid] = INFLIGHT
-            w.inflight.add(tid)
-            runners.setdefault(tid, set()).add(w.wid)
-            run_started.setdefault(tid, {})[w.wid] = time.perf_counter()
-            if speculative:
-                spec_twins.setdefault(tid, set()).add(w.wid)
-            if not safe_send(w, ("run", tid, extra)):
-                return False
-            stats["dispatched"] += 1
-            if speculative:
-                stats["n_speculative"] += 1
-            for h in extra.values():
-                account_transfer(h)
+            launch(cid, w, extra)
             return True
 
-        def finish_waiting(tid: int) -> None:
-            """All transfers for a WAITING task arrived — launch it."""
-            wid, _ = waiting.pop(tid)
+        def launch(cid: int, w: _Worker, extra: Dict[int, Any],
+                   speculative: bool = False) -> None:
+            """Queue the run message (flushed with the iteration's batch).
+            If the worker dies before the flush lands, the death handler
+            re-queues ``cid`` like any other in-flight loss."""
+            state[cid] = INFLIGHT
+            w.inflight.add(cid)
+            runners.setdefault(cid, set()).add(w.wid)
+            run_started.setdefault(cid, {})[w.wid] = time.perf_counter()
+            if speculative:
+                spec_twins.setdefault(cid, set()).add(w.wid)
+                stats["n_speculative"] += 1
+            post(w, ("run", cid, extra))
+            stats["dispatched"] += 1
+            for h in extra.values():
+                account_transfer(h)
+
+        def finish_waiting(cid: int) -> None:
+            """All transfers for a WAITING super-task arrived — launch."""
+            wid, _ = waiting.pop(cid)
             w = workers[wid]
-            w.assigned.discard(tid)
+            w.assigned.discard(cid)
             if not w.alive:
-                state[tid] = READY
+                state[cid] = READY
                 return
-            extra, missing = build_extra(tid, wid)
+            extra, missing = build_extra(cid, wid)
             if extra is None:
                 return                  # serialization task error
             if missing:                 # a handle vanished under us (GC /
-                state[tid] = READY      # racing recovery): re-dispatch
+                state[cid] = READY      # racing recovery): re-dispatch
                 return
-            launch(tid, w, extra)
+            launch(cid, w, extra)
 
-        def stealable(tid: int) -> bool:
-            """A task may run off-plan only when its planned home cannot
-            take it now (dead, or pipeline full) — stealing exists for
-            stragglers, not for letting the first worker vacuum the whole
-            ready set before its peers get a dispatch turn."""
-            ow = plan_worker.get(tid)
+        def stealable(cid: int) -> bool:
+            """A super-task may run off-plan only when its planned home
+            cannot take it now (dead, or pipeline full) — stealing exists
+            for stragglers, not for letting the first worker vacuum the
+            whole ready set before its peers get a dispatch turn."""
+            ow = plan_worker.get(cid)
             if ow is None or ow not in workers:
                 return True
             home = workers[ow]
             return not home.alive or home.load() >= self.pipeline_depth
 
         def dispatch() -> None:
-            ready = [t for t, s in state.items() if s == READY]
+            ready = [c for c, s in state.items() if s == READY]
             if not ready:
                 return
-            ready.sort(key=lambda t: (-rank[t], t))
+            ready.sort(key=lambda c: (-rank[c], c))
             for w in list(workers.values()):
                 if not w.alive:
                     continue
@@ -833,13 +923,13 @@ class ClusterExecutor:
                     # tasks (or, stealing, the stealable ready window) run
                     # the one needing the fewest remote input bytes
                     window = ready[:32]
-                    planned = [t for t in window
-                               if plan_worker.get(t, w.wid) == w.wid]
-                    pool = planned or [t for t in window if stealable(t)]
+                    planned = [c for c in window
+                               if plan_worker.get(c, w.wid) == w.wid]
+                    pool = planned or [c for c in window if stealable(c)]
                     if not pool:
                         break       # everything here belongs to live peers
-                    mine = min(pool, key=lambda t: (move_cost(t, w.wid),
-                                                    -rank[t], t))
+                    mine = min(pool, key=lambda c: (move_cost(c, w.wid),
+                                                    -rank[c], c))
                     if not planned:
                         stats["steals"] += 1   # off-plan work
                     ready.remove(mine)
@@ -853,97 +943,103 @@ class ClusterExecutor:
                 return
             for wid in list(store.locations(tid)):
                 if wid in workers and workers[wid].alive:
-                    safe_send(workers[wid], ("drop", [tid]))
+                    post(workers[wid], ("drop", [tid]))
             store.invalidate({tid})     # also unlinks its shm segments
             store.mark_dropped(tid)     # late duplicate publishes: sweep
             stats["dropped"] += 1
 
-        def runner_gone(tid: int, wid: int) -> Optional[float]:
-            """Bookkeeping when ``wid`` stops running ``tid`` (done,
+        def runner_gone(cid: int, wid: int) -> Optional[float]:
+            """Bookkeeping when ``wid`` stops running ``cid`` (done,
             cancelled, deplost, or death).  Returns its dispatch time."""
-            rs = runners.get(tid)
+            rs = runners.get(cid)
             if rs is not None:
                 rs.discard(wid)
                 if not rs:
-                    runners.pop(tid, None)
-            starts = run_started.get(tid)
+                    runners.pop(cid, None)
+            starts = run_started.get(cid)
             st = starts.pop(wid, None) if starts else None
             if starts is not None and not starts:
-                run_started.pop(tid, None)
+                run_started.pop(cid, None)
             return st
 
-        def still_running(tid: int) -> bool:
+        def still_running(cid: int) -> bool:
             """True while a live worker is (believed to be) executing
-            ``tid`` — dead runners were already discarded by their death
+            ``cid`` — dead runners were already discarded by their death
             handler, but guard against re-entrancy mid-handling."""
             return any(x in workers and workers[x].alive
-                       for x in runners.get(tid, ()))
+                       for x in runners.get(cid, ()))
 
-        def on_done(w: _Worker, tid: int, wall: float, nbytes: int,
+        def on_done(w: _Worker, cid: int, wall: float,
+                    sizes: Dict[int, int],
                     replicated: Sequence[int]) -> None:
             nonlocal last_progress, ewma_ratio
             last_progress = time.perf_counter()
-            w.inflight.discard(tid)
-            runner_gone(tid, w.wid)
-            if state.get(tid) == DONE:
+            w.inflight.discard(cid)
+            runner_gone(cid, w.wid)
+            if state.get(cid) == DONE:
                 # late duplicate: a speculation loser that kept executing
                 # after the winner, or a replay raced by recovery.  Purity
-                # makes the value identical, so each publish (the result
-                # AND the transfer inputs the loser materialized) either
-                # reconciles as a legitimate extra replica or — when the
-                # GC already swept that value — is swept on this worker
-                # too (it must not hold a value the driver thinks is gone
-                # everywhere)
+                # makes the values identical, so each publish (the kept
+                # members AND the transfer inputs the loser materialized)
+                # either reconciles as a legitimate extra replica or —
+                # when the GC already swept that value — is swept on this
+                # worker too (it must not hold a value the driver thinks
+                # is gone everywhere)
                 sweep: List[int] = []
-                if store.was_dropped(tid):
-                    sweep.append(tid)
+                swept_result = False
+                for m in sizes:
+                    if store.was_dropped(m):
+                        sweep.append(m)
+                        swept_result = True
+                    else:
+                        store.record_replica(m, w.wid)
+                if swept_result:
                     stats["speculative_swept"] += 1
-                else:
-                    store.record_replica(tid, w.wid)
                 for d in replicated:
-                    if state.get(d) != DONE:
+                    if state.get(plan.cluster_of[d]) != DONE:
                         continue
                     if store.was_dropped(d):
                         sweep.append(d)
                     else:
                         store.record_replica(d, w.wid)
                 if sweep and w.alive:
-                    safe_send(w, ("drop", sweep))
+                    post(w, ("drop", sweep))
                 stats["speculative_wasted_s"] += wall
                 return
             # record transfer replicas first, so GC drops reach them too;
             # skip deps a racing recovery has invalidated (stale-but-pure
             # copies are harmless, but must not resurrect tracking state)
             for d in replicated:
-                if state.get(d) == DONE:
+                if state.get(plan.cluster_of[d]) == DONE:
                     store.record_replica(d, w.wid)
-            state[tid] = DONE
-            done.add(tid)
-            finish_times[tid] = time.perf_counter() - t0
-            store.record(tid, w.wid, nbytes)
+            state[cid] = DONE
+            done.add(cid)
+            finish_times[cid] = time.perf_counter() - t0
+            for m, nb in sizes.items():
+                store.record(m, w.wid, nb)
             w.n_done += 1
             # runtime calibration of the static cost model (the launchers'
             # 0.9/0.1 straggler EWMA): seconds of wall per planned cost unit
-            ratio = wall / planned_dur.get(tid, 1.0)
+            ratio = wall / planned_dur.get(cid, 1.0)
             ewma_ratio = (ratio if ewma_ratio is None
                           else 0.9 * ewma_ratio + 0.1 * ratio)
             # winner election: this completion wins; every other runner of
-            # tid gets an idempotent cancel (honored between tasks — one
+            # cid gets an idempotent cancel (honored between tasks — one
             # mid-task keeps going and late-dones into the branch above)
-            if tid in spec_twins:
-                if w.wid in spec_twins[tid]:
+            if cid in spec_twins:
+                if w.wid in spec_twins[cid]:
                     stats["speculative_wins"] += 1
-                spec_twins.pop(tid, None)
-            for owid in sorted(runners.get(tid, ())):
+                spec_twins.pop(cid, None)
+            for owid in sorted(runners.get(cid, ())):
                 ow = workers.get(owid)
                 if ow is not None and ow.alive:
-                    safe_send(ow, ("cancel", tid))
-            for d in graph.nodes[tid].all_deps:
+                    post(ow, ("cancel", cid))
+            for d in plan.ext_deps[cid]:
                 store.consumed(d)
                 maybe_gc(d)
-            for s in succ[tid]:
+            for s in csucc[cid]:
                 if state[s] == PENDING and \
-                        all(state[d] == DONE for d in graph.nodes[s].all_deps):
+                        all(state[d] == DONE for d in cg.nodes[s].all_deps):
                     state[s] = READY
             if self.fail_worker and w.wid == self.fail_worker[0] \
                     and w.n_done >= self.fail_worker[1] and w.alive:
@@ -981,46 +1077,44 @@ class ClusterExecutor:
 
         def recompute_lost(needed: Set[int], lost: Set[int],
                            cause: Any) -> None:
-            """Lineage recovery: schedule the minimal recompute set for
-            ``needed`` lost values, then replan onto the live workers."""
+            """Lineage recovery at super-task granularity: re-run the
+            minimal set of *clusters* that rebuilds the ``needed`` lost
+            values, then replan onto the live workers."""
             available = store.available(set(alive_ids()))
-            plan = recovery_plan(graph, needed, available)
-            stats["recomputed"] += len(plan)
+            cplan = recovery_plan_clusters(plan, needed, available)
+            stats["recomputed"] += len(cplan)
             self.recovery_events.append({
                 "worker": cause, "lost": set(lost), "needed": set(needed),
-                "available": set(available), "plan": set(plan),
+                "available": set(available), "plan": set(cplan),
             })
 
-            will_run = plan | {t for t, s in state.items() if s != DONE}
-            store.invalidate(plan)
-            store.reset_consumers(plan, will_run)
-            for t in plan:                  # deps outside the plan get re-read
-                for d in graph.nodes[t].all_deps:
-                    if d not in plan:
-                        store.consumers_left[d] = \
-                            store.consumers_left.get(d, 0) + 1
-            for t in plan:
-                done.discard(t)
-                finish_times.pop(t, None)
+            will_run = cplan | {c for c, s in state.items() if s != DONE}
+            vals = {v for c in cplan for v in plan.members[c]}
+            store.invalidate(vals)
+            store.reset_consumers(cplan, will_run)
+            for c in cplan:
+                done.discard(c)
+                finish_times.pop(c, None)
                 # a recomputed incarnation starts fresh: old twin identity
                 # must not misattribute its completion as a speculative win
-                spec_twins.pop(t, None)
-            # WAITING tasks elsewhere may block on a lost value: reset them
-            for tid in list(waiting):
-                wid, need = waiting[tid]
-                if need & plan:
-                    waiting.pop(tid)
-                    workers[wid].assigned.discard(tid)
-                    state[tid] = READY
-            for t in plan:
-                state[t] = (READY if all(state[d] == DONE
-                                         for d in graph.nodes[t].all_deps)
+                spec_twins.pop(c, None)
+            # WAITING super-tasks elsewhere may block on a lost value:
+            # reset them
+            for cid in list(waiting):
+                wid, need = waiting[cid]
+                if need & vals:
+                    waiting.pop(cid)
+                    workers[wid].assigned.discard(cid)
+                    state[cid] = READY
+            for c in cplan:
+                state[c] = (READY if all(state[d] == DONE
+                                         for d in cg.nodes[c].all_deps)
                             else PENDING)
-            # demote READY tasks whose deps just un-completed
-            for tid, s in list(state.items()):
+            # demote READY super-tasks whose deps just un-completed
+            for cid, s in list(state.items()):
                 if s == READY and any(state[d] != DONE
-                                      for d in graph.nodes[tid].all_deps):
-                    state[tid] = PENDING
+                                      for d in cg.nodes[cid].all_deps):
+                    state[cid] = PENDING
 
             if not alive_ids():
                 error.append(RuntimeError(
@@ -1035,28 +1129,29 @@ class ClusterExecutor:
             last_progress = time.perf_counter()
             w.alive = False
             w.chan.close()
+            w.outbox.clear()
             stats["failures"] += 1
 
-            # tasks that never completed there simply go back in the pool —
-            # with two speculation exceptions: a SIGKILL of the original
-            # while a twin still runs must NOT re-queue (the survivor owns
-            # the task; re-queueing would be a double recovery), and a
-            # loser that died while running an already-DONE task is just
-            # wasted work, accounted and forgotten
+            # super-tasks that never completed there simply go back in the
+            # pool — with two speculation exceptions: a SIGKILL of the
+            # original while a twin still runs must NOT re-queue (the
+            # survivor owns the task; re-queueing would be a double
+            # recovery), and a loser that died while running an
+            # already-DONE task is just wasted work, accounted, forgotten
             death_t = time.perf_counter()
-            for tid in list(w.inflight):
-                st = runner_gone(tid, w.wid)
-                if state.get(tid) == DONE:
+            for cid in list(w.inflight):
+                st = runner_gone(cid, w.wid)
+                if state.get(cid) == DONE:
                     if st is not None:
                         stats["speculative_wasted_s"] += death_t - st
                     continue
-                if still_running(tid):
+                if still_running(cid):
                     continue            # a live twin/original has it
-                state[tid] = READY
+                state[cid] = READY
             w.inflight.clear()
-            for tid in list(w.assigned):
-                waiting.pop(tid, None)
-                state[tid] = READY
+            for cid in list(w.assigned):
+                waiting.pop(cid, None)
+                state[cid] = READY
             w.assigned.clear()
 
             # values whose LAST copy lived in its store are lost -> lineage
@@ -1071,7 +1166,8 @@ class ClusterExecutor:
                 if d in lost:
                     continue               # recovery resets its waiters
                 ow = alive_owner(d)
-                if ow is not None and safe_send(workers[ow], ("fetch", d)):
+                if ow is not None:
+                    post(workers[ow], ("fetch", d))
                     fetching[d] = ow
             if self.outputs_only:
                 needed = {t for t in lost
@@ -1085,84 +1181,90 @@ class ClusterExecutor:
             nonlocal last_progress
             last_progress = time.perf_counter()
             fetching.pop(tid, None)
+            owner_done = state.get(plan.cluster_of[tid]) == DONE
             if not found:
                 # owner dropped/lost it between request and reply; try a
                 # surviving replica, else recover like a partial failure
-                if state.get(tid) == DONE and not store.durable(tid):
+                if owner_done and not store.durable(tid):
                     ow = alive_owner(tid)
                     if ow is not None:
-                        if safe_send(workers[ow], ("fetch", tid)):
-                            fetching[tid] = ow
+                        post(workers[ow], ("fetch", tid))
+                        fetching[tid] = ow
                         return
                     store.invalidate({tid})
                     recompute_lost({tid}, {tid}, None)
                 return
-            if state.get(tid) != DONE:
+            if not owner_done:
                 # a recovery invalidated tid while this reply was in flight:
                 # the recompute supersedes it; free the stale segments
                 serde.release(handle)
                 return
             account_pipe(handle)
             store.set_handle(tid, handle)
-            for t in list(waiting):
-                entry = waiting.get(t)
+            for c in list(waiting):
+                entry = waiting.get(c)
                 if entry is None:     # popped by a recovery mid-loop
                     continue
                 _, need = entry
                 need.discard(tid)
                 if not need:
-                    finish_waiting(t)
+                    finish_waiting(c)
 
-        def on_deplost(w: _Worker, tid: int, deps: Sequence[int]) -> None:
-            """A dispatched task's input handles would not resolve (owner
-            died mid-transfer / GC raced): re-queue the task and recover
-            any input that is genuinely gone."""
+        def on_deplost(w: _Worker, cid: int, deps: Sequence[int]) -> None:
+            """A dispatched super-task's input handles would not resolve
+            (owner died mid-transfer / GC raced): re-queue the super-task
+            and recover any input that is genuinely gone."""
             nonlocal last_progress
             last_progress = time.perf_counter()
-            w.inflight.discard(tid)
-            runner_gone(tid, w.wid)
-            if state.get(tid) == DONE:
+            w.inflight.discard(cid)
+            runner_gone(cid, w.wid)
+            if state.get(cid) == DONE:
                 # a speculation loser lost the race to the winner AND its
                 # input handles to the winner-triggered GC sweep: nothing
                 # is actually lost (a dep a live consumer still needs
                 # surfaces through that consumer's own fetch/deplost)
                 return
-            if state.get(tid) == INFLIGHT and not still_running(tid):
-                state[tid] = READY
+            if state.get(cid) == INFLIGHT and not still_running(cid):
+                state[cid] = READY
             bad = {d for d in deps
-                   if state.get(d) == DONE and not store.durable(d)
+                   if state.get(plan.cluster_of[d]) == DONE
+                   and not store.durable(d)
                    and alive_owner(d) is None}
             if bad:
                 store.invalidate(bad)
                 recompute_lost(bad, bad, None)
             # inputs may themselves be mid-recompute (an earlier recovery):
             # wait for them instead of re-triggering loss detection
-            if state.get(tid) == READY and any(
+            if state.get(cid) == READY and any(
                     state.get(d) != DONE
-                    for d in graph.nodes[tid].all_deps):
-                state[tid] = PENDING
+                    for d in cg.nodes[cid].all_deps):
+                state[cid] = PENDING
 
-        def on_cancelled(w: _Worker, tid: int) -> None:
-            """The worker skipped a queued run of ``tid`` under a cancel
+        def on_cancelled(w: _Worker, cid: int) -> None:
+            """The worker skipped a queued run of ``cid`` under a cancel
             mark.  Normally the winner already completed (nothing to do);
             if the mark was stale — a lineage-recovery re-dispatch raced a
             cancel from a previous incarnation — the run was still wanted,
-            so the task goes back in the pool."""
+            so the super-task goes back in the pool."""
             nonlocal last_progress
             last_progress = time.perf_counter()
-            w.inflight.discard(tid)
-            runner_gone(tid, w.wid)
-            if state.get(tid) == INFLIGHT and not still_running(tid):
-                state[tid] = READY
+            w.inflight.discard(cid)
+            runner_gone(cid, w.wid)
+            if state.get(cid) == INFLIGHT and not still_running(cid):
+                state[cid] = READY
 
         def maybe_speculate() -> None:
             """Speculative re-execution of stragglers: duplicate the
-            most-overdue running task onto an idle worker.  Runs only when
-            no READY work exists anywhere (twins never displace first
-            executions) and only after the first completion calibrated the
-            cost model into seconds.  The pick itself is
-            :func:`repro.core.simulator.pick_speculation` — the simulator's
-            policy, verbatim."""
+            most-overdue running super-task onto an idle worker.  Runs
+            only when no READY work exists anywhere (twins never displace
+            first executions) and only after the first completion
+            calibrated the cost model into seconds.  The *pick* is
+            :func:`repro.core.simulator.pick_speculation` — the
+            simulator's policy, verbatim; the *placement* is
+            locality-aware: among idle workers, the twin runs where its
+            input bytes are cheapest (``move_cost`` doubles bytes whose
+            nearest copy is on another host, so an idle same-host worker
+            beats a cross-host one)."""
             if self.speculate_after is None or ewma_ratio is None:
                 return
             if any(s == READY for s in state.values()):
@@ -1173,35 +1275,34 @@ class ClusterExecutor:
                 return
             now = time.perf_counter()
             overdue_view: Dict[int, Tuple[float, float]] = {}
-            for tid, wids in runners.items():
-                if state.get(tid) != INFLIGHT or len(wids) != 1:
+            for cid, wids in runners.items():
+                if state.get(cid) != INFLIGHT or len(wids) != 1:
                     continue                # done, or already twinned
                 (rw,) = tuple(wids)
-                st = run_started.get(tid, {}).get(rw)
+                st = run_started.get(cid, {}).get(rw)
                 if st is None:
                     continue
-                expected = planned_dur.get(tid, 1.0) * ewma_ratio
-                overdue_view[tid] = (now - st, max(expected, 1e-9))
-            for w in idle:
-                while overdue_view:
-                    tid = pick_speculation(overdue_view,
-                                           self.speculate_after)
-                    if tid is None:
-                        return
-                    elapsed, _ = overdue_view.pop(tid)
-                    extra, missing = build_extra(tid, w.wid)
-                    if extra is None:
-                        return              # serialization error surfaced
-                    if missing:
-                        continue            # inputs not shippable now; a
-                        # twin is opportunistic — never fetch-block for one
-                    primary = next(iter(runners.get(tid, {-1})))
-                    self.speculation_events.append(
-                        {"tid": tid, "primary": primary, "twin": w.wid,
-                         "t": now - t0, "elapsed": elapsed})
-                    if not launch(tid, w, extra, speculative=True):
-                        return              # death handler ran underneath
-                    break                   # one twin per idle worker
+                expected = planned_dur.get(cid, 1.0) * ewma_ratio
+                overdue_view[cid] = (now - st, max(expected, 1e-9))
+            while idle and overdue_view:
+                cid = pick_speculation(overdue_view, self.speculate_after)
+                if cid is None:
+                    return
+                elapsed, _ = overdue_view.pop(cid)
+                w = min(idle, key=lambda iw: (move_cost(cid, iw.wid),
+                                              iw.wid))
+                extra, missing = build_extra(cid, w.wid)
+                if extra is None:
+                    return              # serialization error surfaced
+                if missing:
+                    continue            # inputs not shippable now; a
+                    # twin is opportunistic — never fetch-block for one
+                primary = next(iter(runners.get(cid, {-1})))
+                self.speculation_events.append(
+                    {"tid": cid, "primary": primary, "twin": w.wid,
+                     "t": now - t0, "elapsed": elapsed})
+                launch(cid, w, extra, speculative=True)
+                idle.remove(w)
 
         def handle_msg(w: _Worker, msg: tuple) -> None:
             verb = msg[0]
@@ -1209,35 +1310,51 @@ class ClusterExecutor:
                 on_done(w, msg[2], msg[3], msg[4], msg[5])
             elif verb == "value":
                 on_value(w, msg[2], msg[3], msg[4])
+            elif verb == "value_many":
+                for tid, found, handle in msg[2]:
+                    if not w.alive:
+                        break   # death handler ran under an earlier entry
+                    on_value(w, tid, found, handle)
             elif verb == "deplost":
                 on_deplost(w, msg[2], msg[3])
             elif verb == "cancelled":
                 on_cancelled(w, msg[2])
-            elif verb == "error":
+            elif verb == "fetch_error":
+                # a fetch reply that could not be serialized names a VALUE
+                # tid, not a super-task: the value cannot be collected, so
+                # the run fails — but no cluster bookkeeping may run on an
+                # id from the wrong namespace
                 tid = msg[2]
-                w.inflight.discard(tid)
-                was_runner = w.wid in runners.get(tid, ())
-                runner_gone(tid, w.wid)
+                fetching.pop(tid, None)
+                node = graph.nodes.get(tid)
+                error.append(TaskFailed(
+                    tid, node.name if node else f"#{tid}",
+                    RuntimeError(f"{msg[3]}: {msg[4]}")))
+            elif verb == "error":
+                cid = msg[2]
+                w.inflight.discard(cid)
+                was_runner = w.wid in runners.get(cid, ())
+                runner_gone(cid, w.wid)
                 if msg[3] == "MissingInput":
                     # caller-error contract: never wrapped in TaskFailed
                     error.append(MissingInput(msg[4]))
-                elif state.get(tid) == DONE and was_runner:
+                elif state.get(cid) == DONE and was_runner:
                     # a speculation loser failing AFTER the winner (e.g.
                     # its inputs were GC-swept under the race) must not
                     # abort a run whose result already exists.  Only
-                    # *execution* duplicates qualify — a fetch-reply
-                    # serialization error on a DONE task is still fatal
-                    # (the value cannot be collected)
+                    # *execution* duplicates reach here — fetch-reply
+                    # failures arrive as fetch_error and stay fatal
                     pass
                 else:
-                    node = graph.nodes.get(tid)
+                    node = cg.nodes.get(cid)
                     error.append(TaskFailed(
-                        tid, node.name if node else f"#{tid}",
+                        cid, node.name if node else f"#{cid}",
                         RuntimeError(f"{msg[3]}: {msg[4]}")))
             elif verb in ("hb", "bye"):
                 pass        # liveness bookkeeping happens in the channel
 
         def pump(timeout: float) -> None:
+            flush_all()     # batched sends hit the wire before we sleep
             chans = {w.chan.selectable(): w
                      for w in workers.values() if w.alive}
             if not chans:
@@ -1249,20 +1366,24 @@ class ClusterExecutor:
                 except ChannelClosed:
                     on_worker_death(w)
                     continue
+                stats["control_msgs"] += len(msgs)
                 for msg in msgs:
                     if not w.alive:
                         break       # death handler ran under an earlier msg
                     handle_msg(w, msg)
 
         def collect_finals() -> bool:
-            """All tasks done: materialize ``required`` values into the
-            driver cache — decoding published handles directly (no control
-            traffic), fetching handles for the rest.  Returns True when
-            everything required is cached."""
+            """All super-tasks done: materialize ``required`` values into
+            the driver cache — decoding published handles directly (no
+            control traffic), fetching handles for the rest.  Returns True
+            when everything required is cached."""
             nonlocal last_progress
             missing = [t for t in required if t not in store.cache]
             if not missing:
                 return True
+            # one bulk fetch per owner: the per-value fetch/value ping-pong
+            # collapses into a fetch_many/value_many round-trip per worker
+            by_owner: Dict[int, List[int]] = {}
             for t in missing:
                 h = store.handles.get(t)
                 if h is not None:
@@ -1287,9 +1408,10 @@ class ClusterExecutor:
                     store.invalidate({t})
                     recompute_lost({t}, {t}, None)
                     return False
-                if not safe_send(workers[ow], ("fetch", t)):
-                    return False        # recovery ran; resume main loop
+                by_owner.setdefault(ow, []).append(t)
                 fetching[t] = ow
+            for ow, tids in by_owner.items():
+                post(workers[ow], ("fetch_many", tids))
             return not [t for t in required if t not in store.cache]
 
         def check_commands() -> None:
@@ -1342,8 +1464,11 @@ class ClusterExecutor:
                     if collect_finals():
                         break
                 else:
+                    t_d = time.perf_counter()
                     dispatch()
                     maybe_speculate()
+                    stats["dispatch_overhead_s"] += \
+                        time.perf_counter() - t_d
                 pump(timeout=0.02)
                 check_deaths()
                 for w in workers.values():
@@ -1351,8 +1476,8 @@ class ClusterExecutor:
                         w.chan.maybe_heartbeat()
                 if time.perf_counter() - last_progress > self.progress_timeout:
                     by_state: Dict[int, List[int]] = {}
-                    for t, s in state.items():
-                        by_state.setdefault(s, []).append(t)
+                    for c, s in state.items():
+                        by_state.setdefault(s, []).append(c)
                     error.append(RuntimeError(
                         f"cluster made no progress for "
                         f"{self.progress_timeout}s "
@@ -1366,8 +1491,8 @@ class ClusterExecutor:
             # speculation losers still executing at shutdown burned their
             # time just the same — charge what the run observed of it
             end_t = time.perf_counter()
-            for tid, starts in run_started.items():
-                if state.get(tid) == DONE:
+            for cid, starts in run_started.items():
+                if state.get(cid) == DONE:
                     for st in starts.values():
                         stats["speculative_wasted_s"] += end_t - st
             for w in workers.values():

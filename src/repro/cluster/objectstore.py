@@ -39,8 +39,24 @@ from . import serde
 
 
 class DriverObjectStore:
-    def __init__(self, graph: TaskGraph) -> None:
+    """Value-granular tracking, super-task-aware accounting.
+
+    Since the fusion pass (``repro.core.fusion``) the driver dispatches
+    *clusters* but values keep member-task identity: ``replicas`` /
+    ``handles`` / ``cache`` / ``sizes`` are all keyed by member tid.  What
+    changes with a non-identity ``plan`` is the **refcount universe**:
+    intra-cluster reads happen inside one worker's execution frame and
+    never touch the store, so ``consumers_left`` counts *consuming
+    clusters* of each externally visible value — the identity plan makes
+    that exactly the old per-task successor count.
+    """
+
+    def __init__(self, graph: TaskGraph, plan=None) -> None:
+        if plan is None:
+            from repro.core.fusion import identity_plan
+            plan = identity_plan(graph)
         self.graph = graph
+        self.plan = plan
         self.cache: Dict[int, Any] = {}          # driver-held decoded values
         self.replicas: Dict[int, Set[int]] = {}  # tid -> worker ids holding it
         self.handles: Dict[int, serde.Handle] = {}   # tid -> published handle
@@ -48,10 +64,9 @@ class DriverObjectStore:
         self.known: Dict[int, Set[int]] = {}     # worker id -> {tid} it holds
         self.worker_host: Dict[int, Any] = {}    # worker id -> machine id
         self.dropped: Set[int] = set()           # tids swept by the GC
-        succ = graph.successors()
-        self.successors = succ
+        self.successors = graph.successors()
         self.consumers_left: Dict[int, int] = {
-            tid: len(succ[tid]) for tid in graph.nodes}
+            tid: len(plan.consumers.get(tid, ())) for tid in graph.nodes}
 
     # ------------------------------------------------------------ ownership
     def add_worker(self, wid: int, host: Any = "local") -> None:
@@ -126,6 +141,15 @@ class DriverObjectStore:
             h = self.handles.get(t)
             if isinstance(h, serde.PeerRef) and h.wid == wid:
                 del self.handles[t]          # peer handle died with it
+            elif isinstance(h, serde.DualRef) and h.peer.wid == wid:
+                # the TCP half died with the worker and the shm half is
+                # host-scoped (unreachable from other machines), so the
+                # handle goes.  The release only reaches segments on the
+                # DRIVER's host (a same-host worker's crash); a remote
+                # crash leaves its segments to that host's own hygiene —
+                # the documented repro-worker-sweep open item
+                serde.release(h)
+                del self.handles[t]
             if not self.replicas.get(t) and not self.durable(t):
                 lost.add(t)
         return lost
@@ -170,12 +194,23 @@ class DriverObjectStore:
         return (self.consumers_left.get(tid, 1) <= 0
                 and tid not in self.graph.outputs)
 
-    def reset_consumers(self, plan: Set[int], will_run: Set[int]) -> None:
-        """After scheduling a recovery ``plan``, a recomputed task's value is
-        needed once per consumer that will still execute: plan members being
-        recomputed AND successors that never ran in the first place
-        (``will_run`` = plan ∪ not-yet-done).  Consumers that stayed
-        completed never re-read it."""
-        for t in plan:
-            self.consumers_left[t] = sum(
-                1 for s in self.successors[t] if s in will_run)
+    def reset_consumers(self, recomputed: Set[int],
+                        will_run: Set[int]) -> None:
+        """After scheduling a recovery plan (``recomputed`` cluster ids),
+        a recomputed cluster's externally visible values are needed once
+        per consuming cluster that will still execute (``will_run`` =
+        recovery plan ∪ not-yet-done clusters; consumers that stayed
+        completed never re-read).  External inputs a re-run cluster will
+        read — values that stayed available outside the plan — gain one
+        pending read each, so the GC cannot sweep them out from under the
+        recovery."""
+        plan = self.plan
+        for c in recomputed:
+            for v in plan.outputs[c]:
+                self.consumers_left[v] = sum(
+                    1 for cc in plan.consumers.get(v, ())
+                    if cc in will_run)
+            for v in plan.ext_deps[c]:
+                if plan.cluster_of[v] not in recomputed:
+                    self.consumers_left[v] = \
+                        self.consumers_left.get(v, 0) + 1

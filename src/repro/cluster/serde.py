@@ -123,22 +123,51 @@ class Encoded:
         return refs
 
 
-Handle = Union[Encoded, PeerRef]
+@dataclass(frozen=True)
+class DualRef:
+    """Same-host shm fast path inside a mixed-host ``transport="tcp"``
+    run: the owner publishes the value BOTH ways — a shared-memory
+    :class:`Encoded` (zero-copy for consumers on the owner's machine) and
+    a :class:`PeerRef` (TCP pull for everyone else) — and the *consumer*
+    picks by host id.  Without this, two workers sharing a machine in a
+    multi-host pool would move bytes through the TCP loopback even though
+    tmpfs is a ``mmap`` away (the open item from PR 3).
+
+    NOT durable for loss accounting: the shm half outlives the owner, but
+    only on ``host`` — a cross-host consumer cannot reach it once the
+    peer server is gone, and host-scoped durability would poison the
+    driver's "durable ⇒ recoverable from anywhere" recovery contract.
+    Treating it like a :class:`PeerRef` is conservative (same-host
+    survivors merely recompute a value they could have mapped)."""
+    shm: Encoded
+    peer: PeerRef
+    host: str           # machine id (channel.host_id) holding the segment
+
+
+Handle = Union[Encoded, PeerRef, DualRef]
 
 
 def is_durable(handle: Handle) -> bool:
     """Durable handles survive the owning worker's death (driver memory or
-    tmpfs); a PeerRef is only as alive as its worker."""
+    tmpfs); a PeerRef is only as alive as its worker, and a DualRef's shm
+    half is host-scoped (see :class:`DualRef`)."""
     return isinstance(handle, Encoded)
 
 
 def pipe_nbytes(handle: Handle) -> int:
-    return handle.pipe_nbytes() if isinstance(handle, Encoded) else 64
+    if isinstance(handle, Encoded):
+        return handle.pipe_nbytes()
+    if isinstance(handle, DualRef):
+        return handle.shm.pipe_nbytes() + 64
+    return 64
 
 
 def direct_nbytes(handle: Handle) -> int:
-    return handle.direct_nbytes() if isinstance(handle, Encoded) \
-        else handle.nbytes
+    if isinstance(handle, Encoded):
+        return handle.direct_nbytes()
+    if isinstance(handle, DualRef):
+        return handle.peer.nbytes
+    return handle.nbytes
 
 
 # ------------------------------------------------------------ shm plumbing
@@ -261,6 +290,8 @@ def _unlink_ref(ref: ShmRef) -> None:
 
 def release(handle: Optional[Handle]) -> None:
     """Driver-side: free a handle's shared-memory segments (idempotent)."""
+    if isinstance(handle, DualRef):
+        handle = handle.shm
     if isinstance(handle, Encoded):
         for ref in handle.shm_refs():
             _unlink_ref(ref)
@@ -400,12 +431,35 @@ def decode(enc: Encoded, keeper: Optional[SegmentKeeper] = None) -> Any:
 
 def resolve(handle: Handle,
             keeper: Optional[SegmentKeeper] = None) -> Any:
-    """Materialize any handle: decode shm/inline, or pull from a peer."""
+    """Materialize any handle: decode shm/inline, or pull from a peer.
+
+    A :class:`DualRef` resolves by **host identity**: a consumer on the
+    owner's machine maps the shared-memory half (zero-copy, no sockets),
+    anyone else — or a same-host consumer racing a GC unlink — pulls over
+    the TCP peer server."""
     if isinstance(handle, Encoded):
         return decode(handle, keeper)
+    if isinstance(handle, DualRef):
+        if handle.host == _this_host():
+            try:
+                return decode(handle.shm, keeper)
+            except TransferLost:
+                pass        # segment swept under us: the peer may live on
+        return peer_fetch(handle.peer)
     if isinstance(handle, PeerRef):
         return peer_fetch(handle)
     raise TypeError(f"not a transfer handle: {type(handle).__name__}")
+
+
+_HOST_ID: Optional[str] = None
+
+
+def _this_host() -> str:
+    global _HOST_ID
+    if _HOST_ID is None:
+        from .channel import host_id
+        _HOST_ID = host_id()
+    return _HOST_ID
 
 
 # ------------------------------------------------------------- peer channel

@@ -7,52 +7,75 @@ hosts.  The worker body below is channel-agnostic — it sees only blocking
 ``recv()``/``send()`` with :class:`~repro.cluster.channel.ChannelClosed`
 as the "driver gone" signal.
 
-It owns a *local object store* (``{tid: value}``) holding the results of
-every task it has executed — plus, since the zero-copy data plane, a
+Since the fusion pass (:mod:`repro.core.fusion`) the unit of dispatch is a
+**super-task**: one ``run`` message names a cluster id and the worker
+executes every member task locally, in topo order, inside one Python
+frame.  Intermediate member values never touch ``serde`` or the control
+channel — only *kept* values (cluster outputs another cluster or the
+driver will read) land in the local store.  With fusion off every cluster
+is a single task and the behavior is exactly the pre-fusion worker.
+
+It owns a *local object store* (``{tid: value}``) holding the kept results
+of every cluster it has executed — plus, since the zero-copy data plane, a
 replica of every transferred input it has resolved (reported back to the
 driver in the ``done`` message so replica sets stay exact).  Bulk values do
 not cross the control channel: a ``fetch`` is answered with a small
-*handle* (:class:`~repro.cluster.serde.Encoded` shared-memory refs, or a
-``PeerRef`` to this worker's unix/TCP socket server), and the consumer
-maps/pulls the payload directly — worker-to-worker, driver untouched.
+*handle* (:class:`~repro.cluster.serde.Encoded` shared-memory refs, a
+``PeerRef`` to this worker's unix/TCP socket server, or — on a TCP data
+plane with same-host peers — a ``DualRef`` publishing both, letting each
+consumer pick shm or socket by host id), and the consumer maps/pulls the
+payload directly — worker-to-worker, driver untouched.
 
-Message protocol (tuples; first element is the verb):
+Message protocol (tuples; first element is the verb; ``cid`` is a cluster
+id from the run's fusion plan — equal to the task id when fusion is off):
 
   driver -> worker
-    ("run",   tid, extra)   execute task ``tid``; ``extra`` maps dep tid ->
-                            transfer handle for inputs not already in this
-                            worker's store
-    ("fetch", tid)          publish ``tid`` and reply with its handle
+    ("run",   cid, extra)   execute super-task ``cid``; ``extra`` maps
+                            input value tid -> transfer handle for external
+                            inputs not already in this worker's store
+    ("fetch", tid)          publish value ``tid`` and reply with its handle
+    ("fetch_many", tids)    publish a batch (final collection): one
+                            ``value_many`` reply carries every handle
     ("drop",  tids)         free stored values (driver-coordinated GC)
-    ("cancel", tid)         a speculative twin of ``tid`` won elsewhere:
+    ("cancel", cid)         a speculative twin of ``cid`` won elsewhere:
                             best-effort abort.  Idempotent — a queued run
-                            of ``tid`` is skipped (acked ``cancelled``); a
+                            of ``cid`` is skipped (acked ``cancelled``); a
                             run already executing completes and reports a
-                            late ``done`` the driver reconciles; a tid
+                            late ``done`` the driver reconciles; a cid
                             this worker never sees again is a no-op (the
                             mark is consumed by the next run or by the
-                            task's own completion)
+                            super-task's own completion)
+    ("batch", msgs)         a coalesced burst of the above (one frame /
+                            syscall; unwrapped here, order preserved)
     ("hb",)                 keepalive (TCP channels; refreshes liveness)
     ("die",)                chaos hook: SIGKILL self (the driver cannot
                             signal a remote pid directly)
     ("stop",)               drain and exit
 
   worker -> driver
-    ("done",    wid, tid, wall, nbytes, replicated)
-                            task finished; value stays local.  ``nbytes``
-                            feeds locality-aware placement; ``replicated``
-                            lists dep tids this worker now also holds.
-    ("error",   wid, tid, name, repr)    task raised; ``SerializationError``
-                            means the *value* could not be published/moved —
-                            surfaced as a task error, never a worker death
+    ("done",    wid, cid, wall, sizes, replicated)
+                            super-task finished; kept values stay local.
+                            ``sizes`` maps kept member tid -> payload
+                            bytes (locality-aware placement); ``replicated``
+                            lists input value tids this worker now also
+                            holds.
+    ("error",   wid, cid, name, repr)    a member raised — surfaced as a
+                            task error, never a worker death
+    ("fetch_error", wid, tid, name, repr)  a fetch reply's VALUE could not
+                            be serialized; a separate verb because value
+                            tids and super-task ids are different
+                            namespaces under fusion
     ("value",   wid, tid, found, handle) fetch reply (handle, not payload)
-    ("deplost", wid, tid, deps)          transfer handles in a ``run`` could
+    ("value_many", wid, entries)         fetch_many reply: a list of
+                            ``(tid, found, handle)`` triples in one frame
+    ("deplost", wid, cid, deps)          transfer handles in a ``run`` could
                             not be resolved (owner died mid-transfer);
-                            driver re-queues the task and recovers the deps
-    ("cancelled", wid, tid)              a queued run of ``tid`` was skipped
+                            driver re-queues the super-task, recovers deps
+    ("cancelled", wid, cid)              a queued run of ``cid`` was skipped
                             because a ``cancel`` (possibly stale) covered
-                            it; the driver re-queues the task if it was
-                            still wanted
+                            it; the driver re-queues it if still wanted
+    ("batch",   msgs)                    coalesced burst of the above (the
+                            sender thread drains its outbox greedily)
     ("hb",)                              heartbeat (TCP channels)
     ("bye",     wid)                     explicit goodbye: clean shutdown,
                             never to be mistaken for a missed-heartbeat
@@ -62,9 +85,10 @@ Fork-started workers inherit the (closure-bearing, generally unpicklable)
 :class:`~repro.core.graph.TaskGraph` and the run's ``inputs`` dict by
 memory copy; spawn-started and remote TCP workers receive them pickled
 (via process args or the handshake's welcome frame) — the paper's "ship
-the program to every node" step either way, after which per-task messages
-carry only ids and handles (a few hundred bytes, independent of payload
-size).
+the program to every node" step either way.  The run's
+:class:`~repro.core.fusion.WorkerFusionView` (cluster member lists + keep
+sets, a few bytes per task) travels the same way, after which per-cluster
+messages carry only ids and handles, independent of payload size.
 """
 from __future__ import annotations
 
@@ -76,10 +100,15 @@ from repro.core.executor import _run_node as run_node   # noqa: F401 — the
 # worker executes nodes with the EXACT core implementation so both backends
 # share semantics (including the MissingInput contract; the driver re-raises
 # it by name on its side)
+from repro.core.fusion import WorkerFusionView
 from repro.core.graph import TaskGraph
 
 from . import serde
-from .channel import ChannelClosed, WorkerPipeEndpoint
+from .channel import (ChannelClosed, WorkerPipeEndpoint, host_id,
+                      wrap_batch)
+
+#: how many queued replies the sender thread folds into one batch frame
+_SEND_BATCH = 64
 
 
 def pipe_worker_main(wid: int, conn, graph: TaskGraph,
@@ -87,11 +116,12 @@ def pipe_worker_main(wid: int, conn, graph: TaskGraph,
                      transport: str = "driver",
                      shm_threshold: int = serde.SHM_THRESHOLD,
                      seg_prefix: str = "",
-                     peer_dir: Optional[str] = None) -> None:
+                     peer_dir: Optional[str] = None,
+                     fusion: Optional[WorkerFusionView] = None) -> None:
     """Process entrypoint for pipe/spawn channel workers: wrap the raw
     duplex-pipe connection in the channel-agnostic endpoint and run."""
     worker_main(wid, WorkerPipeEndpoint(conn), graph, inputs, transport,
-                shm_threshold, seg_prefix, peer_dir)
+                shm_threshold, seg_prefix, peer_dir, fusion=fusion)
 
 
 def worker_main(wid: int, chan, graph: TaskGraph,
@@ -100,7 +130,8 @@ def worker_main(wid: int, chan, graph: TaskGraph,
                 shm_threshold: int = serde.SHM_THRESHOLD,
                 seg_prefix: str = "",
                 peer_dir: Optional[str] = None,
-                peer_host: str = "127.0.0.1") -> None:
+                peer_host: str = "127.0.0.1",
+                fusion: Optional[WorkerFusionView] = None) -> None:
     """Worker body: reader thread + sender thread + compute loop, over any
     control channel ``chan`` (blocking ``recv``/``send`` endpoint).
 
@@ -124,12 +155,13 @@ def worker_main(wid: int, chan, graph: TaskGraph,
 
     store: Dict[int, Any] = {}
     published: Dict[int, serde.Handle] = {}     # memoized publish per tid
-    cancelled: set = set()      # tids whose next queued run is to be skipped
+    cancelled: set = set()      # cids whose next queued run is to be skipped
     # (set add/discard are GIL-atomic: reader marks, compute loop consumes)
     keeper = serde.SegmentKeeper()      # pins zero-copy decoded mappings
     runq: "queue.SimpleQueue[tuple]" = queue.SimpleQueue()
     outq: "queue.SimpleQueue[Optional[tuple]]" = queue.SimpleQueue()
     namer = serde.SegmentNamer(f"{seg_prefix}w{wid}") if seg_prefix else None
+    my_host = host_id()
 
     peer_server: Optional[serde.PeerServer] = None
     if transport == "sock" and peer_dir:
@@ -145,19 +177,63 @@ def worker_main(wid: int, chan, graph: TaskGraph,
         except OSError:
             peer_server = None
 
+    # A DualRef's shm half lives on THIS machine, which the driver — the
+    # usual unlink authority — cannot reach when this worker is on
+    # another host, so the worker cleans up its own dual-published
+    # segments: a driver-coordinated "drop" unlinks immediately (the
+    # driver released its reference before sending the drop; idempotent
+    # if it already unlinked on a single-host run, and a same-host
+    # consumer caught mid-resolve falls back to the peer half), while a
+    # mid-run re-publish merely *retires* the old handle — the driver may
+    # still be shipping it — for the shutdown sweep.
+    retired: List[serde.Handle] = []
+
+    def unpublish(tid: int, now: bool) -> None:
+        handle = published.pop(tid, None)
+        if isinstance(handle, serde.DualRef):
+            if now:
+                serde.release(handle)
+            else:
+                retired.append(handle)
+
+    def members_of(cid: int):
+        if fusion is None:
+            return (cid,)
+        return fusion.members.get(cid, (cid,))
+
+    def keep_of(cid: int):
+        if fusion is None:
+            return (cid,)
+        return fusion.keep.get(cid, members_of(cid))
+
     def publish(tid: int) -> serde.Handle:
         """Produce (and memoize) the transfer handle for a stored value:
-        shm-backed Encoded, a PeerRef to this worker's socket server, or
-        inline bytes for small values / driver transport."""
+        shm-backed Encoded, a PeerRef to this worker's socket server, a
+        DualRef publishing both (TCP data plane with shm available — the
+        same-host fast path in mixed-host pools), or inline bytes for
+        small values / driver transport."""
         handle = published.get(tid)
         if handle is not None:
             return handle
         value = store[tid]
-        if (peer_server is not None
-                and serde.payload_nbytes(value) >= shm_threshold):
-            handle = serde.PeerRef(peer_server.path, tid,
-                                   serde.payload_nbytes(value), wid,
-                                   secret=peer_server.secret)
+        nbytes = serde.payload_nbytes(value)
+        if peer_server is not None and nbytes >= shm_threshold:
+            peer = serde.PeerRef(peer_server.path, tid, nbytes, wid,
+                                 secret=peer_server.secret)
+            handle = peer
+            if (transport == "tcp" and namer is not None
+                    and serde.shm_available()):
+                # mixed-host tcp run: publish BOTH ways, consumers pick
+                # by host id (same-host -> mmap, cross-host -> TCP pull)
+                try:
+                    handle = serde.DualRef(
+                        serde.encode(value, transport="shm",
+                                     threshold=shm_threshold, namer=namer),
+                        peer, my_host)
+                except Exception:   # shm full / shm_open denied for THIS
+                    pass            # size: the peer half alone is the
+                    # PR-3 behavior and always works — a fast path must
+                    # never turn a publishable value into a run abort
         else:
             handle = serde.encode(
                 value, transport="driver" if transport in ("sock", "tcp")
@@ -166,26 +242,123 @@ def worker_main(wid: int, chan, graph: TaskGraph,
         return handle
 
     def sender() -> None:
+        """Drain the outbox; coalesce bursts into one batch frame (one
+        pickle + one syscall) so a super-task finishing while fetch
+        replies queue behind it costs a single write."""
         while True:
             msg = outq.get()
             if msg is None:
                 return
+            batch: List[tuple] = [msg]
+            while len(batch) < _SEND_BATCH:
+                try:
+                    nxt = outq.get_nowait()
+                except queue.Empty:
+                    break
+                if nxt is None:
+                    _send_batch(batch)
+                    return
+                batch.append(nxt)
+            _send_batch(batch)
+
+    def _send_batch(batch: List[tuple]) -> None:
+        try:
+            wrapped = wrap_batch(batch)
+            if wrapped is not None:
+                chan.send(wrapped)
+            return
+        except ChannelClosed:
+            return
+        except Exception:
+            pass        # fall through: isolate the poisoned message
+        flat: List[tuple] = []  # unpicklable/oversized payload in a reply:
+        for msg in batch:       # report it as a task error instead of
+            # wedging the outbox (which would read as a dead worker).  A
+            # value_many frame decomposes to per-value replies first, so
+            # the fatal report names the exact poisoned value, not the
+            # whole bulk reply
+            if msg[0] == "value_many":
+                flat.extend(("value", msg[1], t, found, handle)
+                            for t, found, handle in msg[2])
+            else:
+                flat.append(msg)
+        for msg in flat:
             try:
                 chan.send(msg)
             except ChannelClosed:
                 return
-            except Exception as e:      # unpicklable/oversized payload in a
-                # reply: report it as a task error instead of wedging the
-                # outbox (which would read as a dead worker to the driver)
+            except Exception as e:
                 tid = msg[2] if len(msg) > 2 and isinstance(msg[2], int) \
                     else -1
+                # a poisoned fetch reply carries a VALUE id; everything
+                # else (done/deplost/...) names its super-task
+                verb = "fetch_error" if msg[0] == "value" else "error"
                 try:
-                    chan.send(("error", wid, tid,
+                    chan.send((verb, wid, tid,
                                "SerializationError", repr(e)))
                 except ChannelClosed:
                     return
                 except Exception:
                     pass
+
+    def handle_ctrl(msg: tuple) -> bool:
+        """Reader-thread dispatch of one control message.  Returns False
+        once the compute loop owns shutdown (``stop`` queued)."""
+        verb = msg[0]
+        if verb == "batch":
+            for m in msg[1]:
+                if not handle_ctrl(m):
+                    return False
+            return True
+        if verb == "fetch":
+            tid = msg[1]
+            if tid not in store:
+                outq.put(("value", wid, tid, False, None))
+            else:
+                try:
+                    outq.put(("value", wid, tid, True, publish(tid)))
+                except Exception as e:  # noqa: BLE001 — a value that
+                    # cannot be serialized must surface on the consumer's
+                    # future as a task error, not kill this worker.
+                    # fetch_error, NOT error: this tid is a VALUE id, and
+                    # under fusion the driver's error handler would read
+                    # it as a cluster id and corrupt an unrelated
+                    # super-task's runner bookkeeping
+                    outq.put(("fetch_error", wid, tid,
+                              "SerializationError", repr(e)))
+        elif verb == "fetch_many":
+            # bulk publication (final collection): one request, one reply
+            # carrying every handle — the driver's per-value fetch loop
+            # collapsed into a single round-trip per worker
+            entries: List[tuple] = []
+            for tid in msg[1]:
+                if tid not in store:
+                    entries.append((tid, False, None))
+                    continue
+                try:
+                    entries.append((tid, True, publish(tid)))
+                except Exception as e:  # noqa: BLE001 — same contract as
+                    outq.put(("fetch_error", wid, tid,      # single fetch
+                              "SerializationError", repr(e)))
+            outq.put(("value_many", wid, entries))
+        elif verb == "drop":
+            for t in msg[1]:
+                store.pop(t, None)
+                unpublish(t, now=True)
+        elif verb == "cancel":
+            # best-effort, between super-tasks: mark the cid; the compute
+            # loop skips a queued run of it (a run already executing
+            # finishes and the driver reconciles the late done)
+            cancelled.add(msg[1])
+        elif verb == "hb":
+            pass                     # endpoint already refreshed liveness
+        elif verb == "die":          # chaos hook for remote workers
+            os.kill(os.getpid(), signal.SIGKILL)
+        else:                        # "run" / "stop"
+            runq.put(msg)
+            if verb == "stop":
+                return False
+        return True
 
     def reader() -> None:
         while True:
@@ -194,36 +367,8 @@ def worker_main(wid: int, chan, graph: TaskGraph,
             except ChannelClosed:
                 runq.put(("stop",))      # driver went away
                 return
-            verb = msg[0]
-            if verb == "fetch":
-                tid = msg[1]
-                if tid not in store:
-                    outq.put(("value", wid, tid, False, None))
-                else:
-                    try:
-                        outq.put(("value", wid, tid, True, publish(tid)))
-                    except Exception as e:  # noqa: BLE001 — a value that
-                        # cannot be serialized must surface on the consumer's
-                        # future as a task error, not kill this worker
-                        outq.put(("error", wid, tid,
-                                  "SerializationError", repr(e)))
-            elif verb == "drop":
-                for t in msg[1]:
-                    store.pop(t, None)
-                    published.pop(t, None)
-            elif verb == "cancel":
-                # best-effort, between tasks: mark the tid; the compute
-                # loop skips a queued run of it (a run already executing
-                # finishes and the driver reconciles the late done)
-                cancelled.add(msg[1])
-            elif verb == "hb":
-                pass                     # endpoint already refreshed liveness
-            elif verb == "die":          # chaos hook for remote workers
-                os.kill(os.getpid(), signal.SIGKILL)
-            else:                        # "run" / "stop"
-                runq.put(msg)
-                if verb == "stop":
-                    return
+            if not handle_ctrl(msg):
+                return
 
     send_thread = threading.Thread(target=sender, daemon=True,
                                    name=f"worker-{wid}-sender")
@@ -236,6 +381,13 @@ def worker_main(wid: int, chan, graph: TaskGraph,
         if verb == "stop":
             if peer_server is not None:
                 peer_server.close()
+            # shutdown sweep for THIS host's dual-published segments: the
+            # driver's run-prefix sweep only reaches its own /dev/shm
+            for handle in retired:
+                serde.release(handle)
+            for handle in published.values():
+                if isinstance(handle, serde.DualRef):
+                    serde.release(handle)
             outq.put(("bye", wid))
             outq.put(None)
             send_thread.join(timeout=5.0)
@@ -244,48 +396,66 @@ def worker_main(wid: int, chan, graph: TaskGraph,
             return
         if verb != "run":                # pragma: no cover — protocol bug
             raise RuntimeError(f"worker {wid}: unknown message {verb!r}")
-        _, tid, extra = msg
-        if tid in cancelled:
+        _, cid, extra = msg
+        if cid in cancelled:
             # the winner already finished elsewhere; the mark is consumed
-            # so a FUTURE legitimate dispatch of the same tid (lineage
+            # so a FUTURE legitimate dispatch of the same cid (lineage
             # recovery after a GC) runs normally — and the ack lets the
             # driver re-queue if this run was in fact still wanted
-            cancelled.discard(tid)
-            outq.put(("cancelled", wid, tid))
+            cancelled.discard(cid)
+            outq.put(("cancelled", wid, cid))
             continue
         t0 = time.perf_counter()
+        cur = None      # member being executed, for the error report —
+        # bound BEFORE the resolve loop: a failure there must still reach
+        # the except arm below, not die on an unbound name
         try:
-            table: Dict[int, Any] = {}
+            frame: Dict[int, Any] = {}   # this super-task's value table
             lost: List[int] = []
             replicated: List[int] = []
             for d, handle in extra.items():
                 try:        # zero-copy: arrays view the mapped segment
-                    table[d] = serde.resolve(handle, keeper)
+                    frame[d] = serde.resolve(handle, keeper)
                 except serde.TransferLost:
                     lost.append(d)
             if lost:
                 # owner died (or GC raced) between dispatch and resolve:
-                # hand the task back; the driver recovers the inputs
-                outq.put(("deplost", wid, tid, lost))
+                # hand the super-task back; the driver recovers the inputs
+                outq.put(("deplost", wid, cid, lost))
                 continue
-            for d, v in table.items():   # keep transferred inputs: replicas
+            for d, v in frame.items():   # keep transferred inputs: replicas
                 store[d] = v
-                published.pop(d, None)
+                unpublish(d, now=False)
                 replicated.append(d)
-            for d in graph.nodes[tid].all_deps:
-                if d not in table:
-                    table[d] = store[d]
-            value = run_node(graph, tid, table, inputs)
-            store[tid] = value
-            published.pop(tid, None)     # recompute invalidates old handle
+            # run every member locally, in topo order, in ONE frame:
+            # intermediates live and die here — no store write, no
+            # publish, no control message (the fusion win)
+            for m in members_of(cid):
+                cur = m
+                for d in graph.nodes[m].all_deps:
+                    if d not in frame:
+                        frame[d] = store[d]
+                frame[m] = run_node(graph, m, frame, inputs)
+            cur = None
+            sizes: Dict[int, int] = {}
+            for m in keep_of(cid):
+                store[m] = frame[m]
+                unpublish(m, now=False)  # recompute invalidates old handle
+                sizes[m] = serde.payload_nbytes(frame[m])
             # a cancel that raced the execution is moot now — consume the
-            # mark so it cannot eat a future re-dispatch of this tid
-            cancelled.discard(tid)
-            outq.put(("done", wid, tid, time.perf_counter() - t0,
-                      serde.payload_nbytes(value), replicated))
+            # mark so it cannot eat a future re-dispatch of this cid
+            cancelled.discard(cid)
+            outq.put(("done", wid, cid, time.perf_counter() - t0,
+                      sizes, replicated))
         except BaseException as e:       # noqa: BLE001 — shipped to driver
-            cancelled.discard(tid)
-            outq.put(("error", wid, tid, type(e).__name__, repr(e)))
+            cancelled.discard(cid)
+            detail = repr(e)
+            if cur is not None and cur != cid:
+                # a fused super-task failed: name the MEMBER that raised,
+                # so the error reads the same as an unfused run's would
+                detail += (f" (in member task "
+                           f"{graph.nodes[cur].name}#{cur})")
+            outq.put(("error", wid, cid, type(e).__name__, detail))
 
 
 def tcp_worker_main(address: str, *,
@@ -301,7 +471,8 @@ def tcp_worker_main(address: str, *,
     A worker launched with ``graph`` already in hand (forked locally, graph
     inherited) advertises ``has_graph=True`` and the driver skips shipping
     it; a bare remote worker receives the pickled ``(graph, inputs)`` pair
-    in the welcome frame.  Returns the assigned worker id.
+    in the welcome frame.  The run's fusion view rides the welcome config
+    either way.  Returns the assigned worker id.
     """
     import pickle
 
@@ -320,5 +491,6 @@ def tcp_worker_main(address: str, *,
                                          serde.SHM_THRESHOLD),
                 seg_prefix=config.get("seg_prefix", ""),
                 peer_dir=config.get("peer_dir"),
-                peer_host=config.get("peer_host", "127.0.0.1"))
+                peer_host=config.get("peer_host", "127.0.0.1"),
+                fusion=config.get("fusion"))
     return wid

@@ -3,6 +3,8 @@
 Public API:
   task, io_task, trace, placeholder, checkpoint_barrier   (build a DAG)
   TaskGraph                                               (the IR)
+  fuse, FusedPlan, parse_fuse_spec                        (graph compilation:
+      cluster the DAG into super-tasks before dispatch — repro.core.fusion)
   list_schedule, replan                                   (static scheduling)
   ClusterSim, simulate, WorkerEvent                       (cluster simulator)
   Executor, execute_sequential, ThreadedExecutor,
@@ -18,6 +20,8 @@ from .tracing import (task, io_task, trace, placeholder, checkpoint_barrier,
                       Trace, TaskRef, fuse_cheap_chains, substitute_refs)
 from .purity import infer_purity, declare, declared_purity
 from .effects import EffectToken, initial_token
+from .fusion import (FusedPlan, WorkerFusionView, fuse, identity_plan,
+                     parse_fuse_spec)
 from .scheduler import (Schedule, Placement, list_schedule, replan,
                         theoretical_speedup)
 from .simulator import ClusterSim, SimResult, WorkerEvent, simulate

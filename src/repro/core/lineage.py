@@ -54,6 +54,38 @@ def recovery_plan(
     return plan
 
 
+def recovery_plan_clusters(
+    fused_plan,
+    needed: Iterable[int],
+    available: Set[int],
+) -> Set[int]:
+    """Super-task-granularity recovery: the minimal set of *clusters* to
+    re-run so every ``needed`` member value (and every external input a
+    re-run cluster will read) exists again.
+
+    ``fused_plan`` is a :class:`repro.core.fusion.FusedPlan`;
+    ``needed``/``available`` are member-value tids, exactly as in
+    :func:`recovery_plan`.  Walks the cluster DAG through each re-run
+    cluster's **external** inputs — intra-cluster values are rebuilt by
+    the cluster's own execution and never enter the walk.  For the
+    identity plan this degenerates to :func:`recovery_plan` (one cluster
+    per task, external inputs == ``all_deps``), which is what keeps
+    ``--fuse off`` recovery bit-compatible.
+    """
+    plan: Set[int] = set()
+    stack = [fused_plan.cluster_of[v] for v in needed if v not in available]
+    while stack:
+        cid = stack.pop()
+        if cid in plan:
+            continue
+        plan.add(cid)
+        for v in fused_plan.ext_deps[cid]:
+            pc = fused_plan.cluster_of[v]
+            if v not in available and pc not in plan:
+                stack.append(pc)
+    return plan
+
+
 def replay(graph: TaskGraph, plan: Set[int], results: Dict[int, object]) -> None:
     """Execute ``plan`` in topo order, writing into ``results`` in place."""
     from .executor import _run_node   # local import to avoid a cycle

@@ -13,6 +13,14 @@ The static schedule produced here is used (a) directly by the mesh executor
 to order SPMD task launches, (b) as the baseline the work-stealing runtime
 (:mod:`repro.core.simulator`, :mod:`repro.core.executor`) is compared
 against, and (c) for elastic re-planning when the worker set changes.
+
+Since the fusion pass (:mod:`repro.core.fusion`) the cluster runtime plans
+over the *fused* cluster-level graph, not the raw task graph: node ids are
+super-task ids, ``cost``/``out_bytes`` are aggregates, and the
+``data_sizes`` comm-cost term therefore prices only **cross-cluster**
+edges — intra-cluster values never move, so they never enter the plan.
+Nothing here special-cases that: a ``FusedPlan.cgraph`` is an ordinary
+:class:`TaskGraph`, which is the point.
 """
 from __future__ import annotations
 

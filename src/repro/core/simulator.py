@@ -5,7 +5,10 @@ workers.  This container has one CPU, so — exactly like the paper "simulated"
 workers with Cloud Haskell processes on one box — we simulate a cluster with
 a discrete-event model: heterogeneous worker speeds, work-stealing deques,
 steal latency, worker failures (→ lineage recovery), stragglers
-(→ speculative re-execution) and elastic joins.
+(→ speculative re-execution), elastic joins, and **fused execution**
+(``fuse=`` runs the sim over the same super-task graph the real driver
+dispatches, with ``dispatch_overhead`` charging the per-dispatch
+control-plane cost fusion amortizes away).
 
 Everything is deterministic given the seed, which makes the scheduler's
 behaviour property-testable (see ``tests/test_scheduler.py``).
@@ -18,6 +21,7 @@ import random as _random
 from collections import deque
 from typing import Dict, List, Optional, Set, Tuple
 
+from .fusion import FusedPlan, FuseSpec, fuse as fuse_graph
 from .graph import TaskGraph, TaskKind
 
 DURABLE = -1   # pseudo-worker id: result survives any failure (checkpointed)
@@ -89,8 +93,19 @@ class ClusterSim:
         speculate_after: Optional[float] = None,  # ×expected-duration threshold
         policy: str = "critical_path",
         seed: int = 0,
+        fuse: FuseSpec = "off",
+        dispatch_overhead: float = 0.0,
     ) -> None:
         graph.validate()
+        # fused execution model: the sim runs over the SAME cluster-level
+        # graph the real driver dispatches (repro.core.fusion), and
+        # ``dispatch_overhead`` charges the per-dispatch control-plane
+        # round-trip (BENCH_multihost: ~0.78 ms/task on TCP) each task
+        # start pays — so policy studies of fusion granularity transfer:
+        # fewer clusters ⇒ fewer overheads, identical total work.
+        self.plan: FusedPlan = fuse_graph(graph, fuse)
+        graph = self.plan.cgraph
+        self.dispatch_overhead = dispatch_overhead
         self.graph = graph
         self.n_workers = n_workers
         self.speed = {w: (worker_speed[w] if worker_speed else 1.0)
@@ -164,7 +179,7 @@ class ClusterSim:
         def start_task(w: int, tid: int, now: float, speculative: bool = False):
             nonlocal epoch
             node = g.nodes[tid]
-            dur = node.cost / self.speed[w]
+            dur = node.cost / self.speed[w] + self.dispatch_overhead
             # input fetch cost: bytes from deps whose results live elsewhere
             if self.comm_per_byte > 0.0:
                 for d in node.deps:

@@ -64,6 +64,13 @@ def add_backend_args(ap: argparse.ArgumentParser) -> None:
                          "running longer than X times its expected duration "
                          "on an idle worker (first completion wins; off by "
                          "default — see docs/speculation.md)")
+    ap.add_argument("--fuse", default="auto", metavar="{auto,off,N}",
+                    help="process backend: compile the task graph into "
+                         "super-tasks before dispatch (fuse chains, small "
+                         "fan-ins, sibling groups) so fine-grained graphs "
+                         "stop paying one driver round-trip per node; N "
+                         "caps members per super-task (default auto; see "
+                         "docs/fusion.md)")
 
 
 def validate_backend_args(args) -> None:
@@ -90,6 +97,17 @@ def validate_backend_args(args) -> None:
             f"--speculate-after {speculate} is not supported by --backend "
             f"{backend}: only the process backend duplicates stragglers "
             f"onto idle workers; use --backend process")
+    fuse = getattr(args, "fuse", "auto")
+    try:
+        from repro.core.fusion import parse_fuse_spec
+        parsed = parse_fuse_spec(fuse)
+    except ValueError as e:
+        raise SystemExit(f"--fuse {fuse}: {e}") from None
+    if parsed not in ("off", "auto") and backend != "process":
+        raise SystemExit(
+            f"--fuse {fuse} is not supported by --backend {backend}: only "
+            f"the process backend pays per-task dispatch round-trips worth "
+            f"fusing away; use --backend process")
 
 
 def execute_traced(graph: TaskGraph, args,
@@ -100,7 +118,8 @@ def execute_traced(graph: TaskGraph, args,
     kw: Dict[str, Any] = {}
     if args.backend == "process":
         kw = {"start_method": "spawn", "progress_timeout": 300.0,
-              "transport": getattr(args, "transport", "auto")}
+              "transport": getattr(args, "transport", "auto"),
+              "fuse": getattr(args, "fuse", "auto")}
         channel = getattr(args, "channel", "auto")
         if channel != "auto":
             kw["channel"] = channel

@@ -1,0 +1,622 @@
+"""Graph compilation (repro.core.fusion) + the fused cluster runtime.
+
+Three layers of pinning:
+
+* the **pass** — clustering rules, determinism, plan invariants, the
+  identity plan's cid==tid contract, cluster-granularity lineage;
+* the **runtime** — fused execution bit-identical to the sequential
+  oracle on every backend×transport×channel, including under SIGKILL
+  mid-super-task, with GC, and combined with speculation;
+* the **control plane** — batch frames roundtrip on both channel
+  families, the new observability stats exist and move the right way,
+  and the same-host DualRef data-plane fast path picks by host id.
+"""
+import pickle
+import random
+
+import numpy as np
+import pytest
+
+from _propcheck import given, settings, st
+
+from repro.core import (TaskGraph, TaskKind, execute_sequential,
+                        make_executor, run_graph)
+from repro.core.fusion import (FUSABLE_KINDS, FusedPlan, fuse, identity_plan,
+                               parse_fuse_spec)
+from repro.core.lineage import recovery_plan, recovery_plan_clusters
+from repro.core.simulator import ClusterSim
+from repro.core.tracing import RemappedRef as _Ref
+from repro.cluster import ClusterExecutor, serde
+from repro.cluster.channel import host_id
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+
+# ------------------------------------------------------------ graph builders
+
+def chain_graph(n: int, arrays: bool = False) -> TaskGraph:
+    g = TaskGraph()
+    prev = None
+    for i in range(n):
+        deps = [prev] if prev is not None else []
+        if arrays:
+            def fn(*xs, _i=i):
+                base = xs[0] if xs else np.arange(256, dtype=np.float32)
+                return base * np.float32(1.001) + np.float32(_i)
+        else:
+            def fn(*xs, _i=i):
+                return (_i + sum(xs) * 7) % 1_000_003
+        g.add_node(f"t{i}", fn, tuple(_Ref(d) for d in deps), {},
+                   TaskKind.PURE, deps=deps)
+        prev = i
+    g.mark_output(n - 1)
+    return g
+
+
+def exec_dag(seed: int, n: int, p: float) -> TaskGraph:
+    rng = random.Random(seed)
+    g = TaskGraph()
+    for i in range(n):
+        deps = [j for j in range(i) if rng.random() < p][-3:]
+
+        def fn(*xs, _i=i):
+            return (_i + sum(xs) * 7) % 1_000_003
+
+        g.add_node(f"t{i}", fn, tuple(_Ref(d) for d in deps), {},
+                   TaskKind.PURE, deps=deps, cost=rng.uniform(0.1, 1.0))
+    g.mark_output(n - 1)
+    return g
+
+
+def wide_map_graph(width: int = 64) -> TaskGraph:
+    """src -> width tiny siblings -> reduce (the map shape sibling packing
+    exists for)."""
+    g = TaskGraph()
+
+    def src():
+        return np.arange(128, dtype=np.float32)
+
+    g.add_node("src", src, (), {}, TaskKind.PURE, deps=())
+    for i in range(width):
+        def m(x, _i=i):
+            return x * np.float32(_i + 1)
+        g.add_node(f"m{i}", m, (_Ref(0),), {}, TaskKind.PURE, deps=(0,))
+
+    def red(*xs):
+        return float(sum(float(x.sum()) for x in xs))
+
+    deps = list(range(1, width + 1))
+    g.add_node("red", red, tuple(_Ref(d) for d in deps), {},
+               TaskKind.PURE, deps=deps)
+    g.mark_output(width + 1)
+    return g
+
+
+def pytree_shuffle_graph(producers: int = 4, consumers: int = 8) -> TaskGraph:
+    """Producers emit pytrees (dict of arrays); consumers combine strided
+    pairs — cross-cluster edges carry structured values."""
+    g = TaskGraph()
+    for i in range(producers):
+        def produce(_i=i):
+            return {"w": np.full((64,), np.float32(_i + 1)),
+                    "b": np.arange(32, dtype=np.float32) * np.float32(_i)}
+        g.add_node(f"p{i}", produce, (), {}, TaskKind.PURE, deps=())
+    outs = []
+    for j in range(consumers):
+        deps = [j % producers, (j * 3 + 1) % producers]
+
+        def combine(a, b, _j=j):
+            return {"w": a["w"] + b["w"] + np.float32(_j), "b": a["b"] - b["b"]}
+
+        outs.append(g.add_node(
+            f"c{j}", combine, tuple(_Ref(d) for d in deps), {},
+            TaskKind.PURE, deps=deps))
+    for o in outs:
+        g.mark_output(o)
+    return g
+
+
+def tree_equal(a, b) -> bool:
+    if isinstance(a, dict) and isinstance(b, dict):
+        return a.keys() == b.keys() and \
+            all(tree_equal(a[k], b[k]) for k in a)
+    if isinstance(a, np.ndarray) or isinstance(b, np.ndarray):
+        return (isinstance(a, np.ndarray) and isinstance(b, np.ndarray)
+                and a.dtype == b.dtype and a.shape == b.shape
+                and np.array_equal(a, b))
+    return a == b
+
+
+def results_equal(got, want) -> bool:
+    return got.keys() == want.keys() and \
+        all(tree_equal(got[k], want[k]) for k in got)
+
+
+# ------------------------------------------------------------------ the pass
+
+def test_parse_fuse_spec_vocabulary():
+    assert parse_fuse_spec("off") == "off"
+    assert parse_fuse_spec(None) == "off"
+    assert parse_fuse_spec(False) == "off"
+    assert parse_fuse_spec(1) == "off"          # 1-member clusters = identity
+    assert parse_fuse_spec("auto") == "auto"
+    assert parse_fuse_spec(True) == "auto"
+    assert parse_fuse_spec("16") == 16
+    assert parse_fuse_spec(8) == 8
+    with pytest.raises(ValueError):
+        parse_fuse_spec("sideways")
+
+
+def test_identity_plan_is_the_graph_itself():
+    g = exec_dag(7, 40, 0.3)
+    p = fuse(g, "off")
+    assert p.identity and p.cgraph is g
+    assert p.members == {t: (t,) for t in g.nodes}
+    assert p.cluster_of == {t: t for t in g.nodes}
+    assert p.ext_deps == {t: n.all_deps for t, n in g.nodes.items()}
+    assert p.n_fused == 0
+    view = p.worker_view(set(g.nodes))
+    assert view.keep == view.members        # identity keeps everything
+
+
+def test_chain_fuses_with_member_cap():
+    g = chain_graph(100)
+    p = fuse(g, "auto")
+    assert p.n_clusters <= 4                    # 100 / 32-member cap
+    assert max(len(m) for m in p.members.values()) <= 32
+    p8 = fuse(g, 8)
+    assert max(len(m) for m in p8.members.values()) <= 8
+    assert p8.n_clusters >= 13
+    # chain contraction loses no ordering: cgraph is a chain of clusters
+    assert all(len(n.all_deps) <= 1 for n in p.cgraph.nodes.values())
+
+
+def test_fusion_is_deterministic():
+    g = exec_dag(11, 150, 0.25)
+    a, b = fuse(g, "auto"), fuse(g, "auto")
+    assert a.members == b.members
+    assert a.ext_deps == b.ext_deps
+    assert a.outputs == b.outputs
+
+
+def test_barrier_and_io_nodes_stay_singletons():
+    g = TaskGraph()
+    g.add_node("a", lambda: 1, (), {}, TaskKind.PURE, deps=())
+    g.add_node("io", lambda x: x, (_Ref(0),), {}, TaskKind.EFFECTFUL,
+               deps=(0,))
+    g.add_node("bar", lambda x: x, (_Ref(1),), {}, TaskKind.BARRIER,
+               deps=(1,))
+    g.add_node("b", lambda x: x + 1, (_Ref(2),), {}, TaskKind.PURE,
+               deps=(2,))
+    g.mark_output(3)
+    p = fuse(g, "auto")
+    for cid, ms in p.members.items():
+        kinds = {g.nodes[m].kind for m in ms}
+        if not kinds <= set(FUSABLE_KINDS):
+            assert len(ms) == 1     # EFFECTFUL/BARRIER never share a cluster
+
+
+def test_sibling_packing_keeps_parallelism():
+    g = wide_map_graph(64)
+    p = fuse(g, "auto")
+    # the 64 siblings pack, but never below the parallelism floor
+    depth1 = [cid for cid, ms in p.members.items()
+              if any(1 <= m <= 64 for m in ms)]
+    assert 8 <= len(depth1) < 64
+    assert results_equal(
+        {k: v for k, v in
+         ClusterExecutor(2, fuse="auto").run(g).items()},
+        execute_sequential(g))
+
+
+@given(st.tuples(st.integers(0, 5000), st.integers(2, 80),
+                 st.floats(0.0, 0.5)))
+@settings(max_examples=20, deadline=None)
+def test_plan_invariants_random(params):
+    seed, n, p = params
+    g = exec_dag(seed, n, p)
+    plan = fuse(g, "auto")
+    plan.cgraph.validate()
+    # members partition the graph, in topo order within each cluster
+    seen = [m for cid in plan.cgraph.topo_order()
+            for m in plan.members[cid]]
+    assert sorted(seen) == sorted(g.nodes)
+    for cid, ms in plan.members.items():
+        assert list(ms) == sorted(ms)
+        for m in ms:
+            assert plan.cluster_of[m] == cid
+    # every external dep is an output of its producer cluster (the
+    # invariant dispatch relies on: boundary values are always kept)
+    for cid, deps in plan.ext_deps.items():
+        for v in deps:
+            pc = plan.cluster_of[v]
+            assert pc != cid
+            assert v in plan.outputs[pc]
+    # cost is conserved and graph outputs stay reachable
+    assert abs(plan.cgraph.total_work() - g.total_work()) < 1e-9
+    assert {plan.cluster_of[o] for o in g.outputs} == set(plan.cgraph.outputs)
+
+
+def test_recovery_plan_clusters_matches_task_level_on_identity():
+    g = exec_dag(3, 60, 0.3)
+    p = identity_plan(g)
+    for needed in ({30}, {10, 45}, {59}):
+        available = set(range(0, 25))
+        assert recovery_plan_clusters(p, needed, available) == \
+            recovery_plan(g, needed, available)
+
+
+def test_recovery_plan_clusters_walks_cluster_boundaries():
+    g = chain_graph(20)
+    p = fuse(g, 5)
+    # lose the last value with nothing else available: every cluster on
+    # the lineage walk re-runs
+    plan = recovery_plan_clusters(p, {19}, set())
+    assert plan == set(p.cgraph.nodes)
+    # with the producer cluster's boundary value available, the walk stops
+    boundary = p.ext_deps[p.cluster_of[19]]
+    plan2 = recovery_plan_clusters(p, {19}, set(boundary))
+    assert plan2 == {p.cluster_of[19]}
+
+
+def test_worker_view_is_picklable_and_minimal():
+    g = chain_graph(40)
+    p = fuse(g, "auto")
+    view = p.worker_view(set(g.outputs))        # outputs_only shape
+    blob = pickle.dumps(view, protocol=5)
+    assert pickle.loads(blob).members == view.members
+    for cid, keep in view.keep.items():
+        assert set(keep) <= set(view.members[cid])
+    # interior chain values are NOT kept; boundary + output values are
+    total_kept = sum(len(k) for k in view.keep.values())
+    assert total_kept < len(g.nodes)
+    assert 39 in {m for ks in view.keep.values() for m in ks}
+
+
+# --------------------------------------------------------------- the runtime
+
+def test_fused_differential_200_node_dag():
+    g = exec_dag(42, 220, 0.25)
+    seq = execute_sequential(g)
+    ex = ClusterExecutor(3, fuse="auto")
+    assert ex.run(g) == seq
+    assert ex.stats["tasks_fused"] > 0
+    assert ex.stats["n_clusters"] < 220
+    assert ex.stats["dispatched"] == ex.stats["n_clusters"]
+    assert ex.stats["recomputed"] == 0
+
+
+@given(st.tuples(st.integers(0, 5000), st.integers(2, 60),
+                 st.floats(0.0, 0.5)), st.integers(2, 4))
+@settings(max_examples=6, deadline=None)
+def test_fused_matches_sequential_random(params, workers):
+    seed, n, p = params
+    g = exec_dag(seed, n, p)
+    assert ClusterExecutor(workers, fuse="auto").run(g) == \
+        execute_sequential(g)
+
+
+@pytest.mark.parametrize("transport", ["shm", "sock", "driver"])
+def test_fused_differential_arrays_per_transport(transport):
+    if transport == "shm" and not serde.shm_available():
+        pytest.skip("no shared memory in this environment")
+    g = pytree_shuffle_graph()
+    seq = execute_sequential(g)
+    ex = ClusterExecutor(2, fuse="auto", transport=transport,
+                         shm_threshold=128)
+    assert results_equal(ex.run(g), seq)
+    ex2 = ClusterExecutor(2, fuse=4, transport=transport,
+                          shm_threshold=128)
+    assert results_equal(ex2.run(g), seq)
+
+
+def test_fused_differential_tcp_channel_and_transport():
+    g = chain_graph(60, arrays=True)
+    seq = execute_sequential(g)
+    ex = ClusterExecutor(2, fuse="auto", channel="tcp", transport="tcp",
+                         shm_threshold=256)
+    try:
+        got = ex.run(g)
+    finally:
+        ex.close()
+    assert results_equal(got, seq)
+
+
+def _spawn_step(*xs, _i=0):
+    return (_i + sum(xs) * 7) % 1_000_003
+
+
+def picklable_dag(seed: int, n: int, p: float) -> TaskGraph:
+    """Like exec_dag but with module-level fns (spawn workers re-import)."""
+    import functools
+    rng = random.Random(seed)
+    g = TaskGraph()
+    for i in range(n):
+        deps = [j for j in range(i) if rng.random() < p][-3:]
+        g.add_node(f"t{i}", functools.partial(_spawn_step, _i=i),
+                   tuple(_Ref(d) for d in deps), {},
+                   TaskKind.PURE, deps=deps)
+    g.mark_output(n - 1)
+    return g
+
+
+def test_fused_spawn_channel_differential():
+    """Spawn workers get the fusion view through pickled process args."""
+    g = picklable_dag(8, 40, 0.3)
+    seq = execute_sequential(g)
+    ex = ClusterExecutor(2, fuse="auto", start_method="spawn",
+                         progress_timeout=120.0)
+    assert ex.run(g) == seq
+
+
+def test_fused_outputs_only_gc():
+    g = exec_dag(5, 150, 0.25)
+    seq = execute_sequential(g)
+    want = {t: seq[t] for t in g.outputs}
+    ex = ClusterExecutor(2, fuse="auto", outputs_only=True)
+    assert ex.run(g) == want
+    assert ex.stats["tasks_fused"] > 0
+
+
+def test_fused_sigkill_recomputes_exactly_lost_clusters():
+    g = exec_dag(123, 200, 0.25)
+    seq = execute_sequential(g)
+    ex = ClusterExecutor(3, fuse="auto", fail_worker=(1, 3))
+    assert ex.run(g) == seq
+    assert ex.stats["failures"] == 1
+    assert len(ex.recovery_events) >= 1
+    plan = fuse(g, "auto")
+    total = 0
+    for ev in ex.recovery_events:
+        # the executor's plan is exactly the cluster-granularity lineage
+        # walk of what died, recomputed independently here
+        assert ev["plan"] == recovery_plan_clusters(
+            plan, ev["needed"], ev["available"])
+        assert ev["plan"] <= set(plan.cgraph.nodes)
+        total += len(ev["plan"])
+    assert ex.stats["recomputed"] == total > 0
+
+
+def test_fused_sigkill_chain_mid_super_task():
+    """Chains fuse hard (few big clusters), so a SIGKILL lands mid-super-
+    task almost surely; the run must still match the oracle."""
+    g = chain_graph(120)
+    seq = execute_sequential(g)
+    ex = ClusterExecutor(2, fuse="auto", fail_worker=(0, 1))
+    assert ex.run(g) == seq
+    assert ex.stats["failures"] == 1
+    assert ex.stats["recomputed"] > 0
+
+
+def test_fused_outputs_only_sigkill():
+    g = exec_dag(17, 150, 0.25)
+    seq = execute_sequential(g)
+    want = {t: seq[t] for t in g.outputs}
+    ex = ClusterExecutor(3, fuse="auto", outputs_only=True,
+                         fail_worker=(0, 4))
+    assert ex.run(g) == want
+    assert ex.stats["failures"] == 1
+
+
+def test_fusion_with_speculation(tmp_path):
+    """A straggling super-task gets a twin; first completion wins and the
+    result stays oracle-equal (fusion × speculation interaction)."""
+    import os as _os
+    import time as _time
+    marker = str(tmp_path)
+
+    g = TaskGraph()
+    for i in range(4):
+        def produce(_i=i, _d=marker):
+            if _i == 0:
+                path = _os.path.join(_d, "straggler")
+                try:
+                    fd = _os.open(path,
+                                  _os.O_CREAT | _os.O_EXCL | _os.O_WRONLY)
+                except FileExistsError:
+                    fd = -1
+                if fd >= 0:
+                    _os.close(fd)
+                    _time.sleep(1.0)
+            else:
+                _time.sleep(0.05)
+            return np.arange(64, dtype=np.float32) * np.float32(_i + 1)
+        g.add_node(f"p{i}", produce, (), {}, TaskKind.PURE, deps=())
+    outs = []
+    for j in range(6):
+        deps = [j % 4, (j + 1) % 4]
+
+        def comb(a, b, _j=j):
+            _time.sleep(0.05)
+            return a + b * np.float32(_j)
+
+        outs.append(g.add_node(f"c{j}", comb,
+                               tuple(_Ref(d) for d in deps), {},
+                               TaskKind.PURE, deps=deps))
+    for o in outs:
+        g.mark_output(o)
+    seq = execute_sequential(g)
+    ex = ClusterExecutor(2, fuse="auto", speculate_after=2.0,
+                         progress_timeout=120.0)
+    got = ex.run(g)
+    assert results_equal(got, seq)
+    # the straggler is a source: it may or may not get twinned depending
+    # on timing, but the interaction must never corrupt results or hang
+    assert ex.stats["n_speculative"] >= 0
+
+
+# --------------------------------------------------- control plane + serde
+
+def test_send_many_batches_on_pipe_channel():
+    import multiprocessing as mp
+    from repro.cluster.channel import PipeChannel, WorkerPipeEndpoint
+    a, b = mp.Pipe(duplex=True)
+    chan = PipeChannel(a, proc=None)
+    end = WorkerPipeEndpoint(b)
+    chan.send_many([("run", 1, {}), ("fetch", 2), ("drop", [3])])
+    batch = end.recv()
+    assert batch[0] == "batch" and len(batch[1]) == 3
+    # worker -> driver batches flatten inside recv_available
+    end.send(("batch", [("done", 0, 1, 0.1, {1: 8}, []),
+                        ("value", 0, 2, False, None)]))
+    msgs = chan.recv_available()
+    assert [m[0] for m in msgs] == ["done", "value"]
+    chan.send_many([("stop",)])         # single message: no batch wrapper
+    assert end.recv() == ("stop",)
+    chan.close()
+    end.close()
+
+
+def test_tcp_frame_buffer_flattens_batches():
+    import pickle as _pickle
+    from repro.cluster.channel import _FrameBuffer, _flatten_batches, _FRAME
+    fb = _FrameBuffer()
+    payload = _pickle.dumps(("batch", [("hb",), ("done", 0, 1, 0.1, {}, [])]),
+                            protocol=5)
+    msgs = _flatten_batches(fb.feed(_FRAME.pack(len(payload)) + payload))
+    assert [m[0] for m in msgs] == ["hb", "done"]
+
+
+def test_control_plane_stats_observability():
+    g = chain_graph(80)
+    seq = execute_sequential(g)
+    _, rep_off = run_graph(g, 2, backend="process", with_report=True,
+                           fuse="off")
+    g2 = chain_graph(80)
+    res, rep_auto = run_graph(g2, 2, backend="process", with_report=True,
+                              fuse="auto")
+    assert res == seq
+    for rep in (rep_off, rep_auto):
+        s = rep["stats"]
+        assert s["control_msgs"] > 0
+        assert s["control_frames"] > 0
+        assert s["dispatch_overhead_s"] >= 0.0
+        assert s["control_frames"] <= s["control_msgs"]
+    assert rep_auto["stats"]["dispatched"] < rep_off["stats"]["dispatched"]
+    assert rep_auto["stats"]["n_clusters"] < rep_off["stats"]["n_clusters"]
+    assert rep_auto["stats"]["tasks_fused"] > 0
+
+
+def test_fused_unpicklable_value_is_task_error_not_hang():
+    """A value that executes fine but cannot be serialized surfaces as a
+    SerializationError TaskFailed — via the fetch_error verb, which names
+    the VALUE tid (a different namespace from super-task ids under
+    fusion) and must neither corrupt cluster bookkeeping nor hang."""
+    from repro.core import TaskFailed
+    g = TaskGraph()
+    prev = None
+    for i in range(6):
+        deps = [prev] if prev is not None else []
+
+        def fn(*xs, _i=i):
+            if _i == 5:
+                return lambda: _i       # unpicklable cluster output
+            return _i + sum(xs)
+
+        g.add_node(f"t{i}", fn, tuple(_Ref(d) for d in deps), {},
+                   TaskKind.PURE, deps=deps)
+        prev = i
+    g.mark_output(5)
+    ex = ClusterExecutor(2, fuse="auto", progress_timeout=30.0)
+    with pytest.raises(TaskFailed, match="SerializationError"):
+        ex.run(g)
+
+
+def test_make_executor_thread_rejects_fuse():
+    with pytest.raises(ValueError, match="fuse"):
+        make_executor("thread", 2, fuse="auto")
+
+
+def test_launcher_validates_fuse_flag():
+    from repro.launch.backend import validate_backend_args
+
+    class A:
+        backend = "thread"
+        transport = "auto"
+        channel = "auto"
+        speculate_after = None
+        fuse = "16"
+
+    with pytest.raises(SystemExit, match="fuse"):
+        validate_backend_args(A())
+    A.fuse = "auto"
+    validate_backend_args(A())          # auto is the no-op default
+    A.backend = "process"
+    A.fuse = "16"
+    validate_backend_args(A())          # process backend takes any spec
+    A.fuse = "sideways"
+    with pytest.raises(SystemExit, match="fuse"):
+        validate_backend_args(A())
+
+
+def test_simulator_models_fused_execution():
+    g = chain_graph(64)
+    for n in g.nodes.values():
+        n.cost = 0.01
+    base = ClusterSim(g, 2, dispatch_overhead=0.005).run()
+    fused = ClusterSim(g, 2, fuse="auto", dispatch_overhead=0.005).run()
+    # same total work, far fewer dispatch overheads on the critical path
+    assert fused.makespan < base.makespan
+    # and with no overhead, fusing a serial chain costs nothing
+    free = ClusterSim(g, 2, fuse="auto").run()
+    base_free = ClusterSim(g, 2).run()
+    assert free.makespan == pytest.approx(base_free.makespan, rel=1e-9)
+
+
+def test_dualref_resolves_by_host_id():
+    if not serde.shm_available():
+        pytest.skip("no shared memory in this environment")
+    value = np.arange(4096, dtype=np.float32)
+    store = {7: value}
+    server = serde.PeerServer(None, store)       # TCP family
+    try:
+        peer = serde.PeerRef(server.path, 7, value.nbytes, 0,
+                             secret=server.secret)
+        shm = serde.encode(value, transport="shm", threshold=1024)
+        # same host: the shm half wins (peer address poisoned to prove it)
+        dead_peer = serde.PeerRef("tcp://127.0.0.1:1", 7, value.nbytes, 0,
+                                  secret="0" * 32)
+        dual = serde.DualRef(shm, dead_peer, host_id())
+        assert np.array_equal(serde.resolve(dual), value)
+        # cross host: the peer half is used (shm of "elsewhere" is not
+        # even attempted — a foreign segment name would not resolve here)
+        dual_far = serde.DualRef(shm, peer, "some-other-host")
+        assert np.array_equal(serde.resolve(dual_far), value)
+        # same host with the segment swept: graceful fallback to the peer
+        swept = serde.DualRef(shm, peer, host_id())
+        serde.release(swept)        # unlink authority: driver
+        assert np.array_equal(serde.resolve(swept), value)
+        assert not serde.is_durable(dual)       # host-scoped, not durable
+        assert serde.direct_nbytes(dual) == value.nbytes
+        assert serde.pipe_nbytes(dual) < 4096
+    finally:
+        server.close()
+
+
+def test_worker_publishes_dualref_on_tcp_transport():
+    """End to end: a tcp-transport run on one host moves bulk values over
+    shared memory (DualRef fast path), not the TCP loopback."""
+    if not serde.shm_available():
+        pytest.skip("no shared memory in this environment")
+    g = TaskGraph()
+
+    def big():
+        return np.arange(65536, dtype=np.float32)       # 256 KiB
+
+    g.add_node("big", big, (), {}, TaskKind.PURE, deps=())
+
+    def use(x):
+        return float(x.sum())
+
+    g.add_node("use", use, (_Ref(0),), {}, TaskKind.PURE, deps=(0,))
+    g.mark_output(1)
+    seq = execute_sequential(g)
+    # force the producer and consumer apart so the value must transfer
+    ex = ClusterExecutor(2, channel="tcp", transport="tcp",
+                         fuse="off", pipeline_depth=1,
+                         worker_speed=[1.0, 1.0])
+    try:
+        got = ex.run(g)
+    finally:
+        ex.close()
+    assert results_equal(got, seq)
