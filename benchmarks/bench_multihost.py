@@ -101,6 +101,94 @@ def time_shuffle(graph: TaskGraph, channel: str, transport: str,
             "transfers_direct": stats.get("transfers_direct", 0)}
 
 
+def checkpoint_sweep(tasks: int, worker_counts: List[int],
+                     reps: int) -> List[Dict[str, Any]]:
+    """Run-log cost vs worker count, same DAG throughout.
+
+    The tentpole claim is that checkpointing the control plane is flat in
+    worker count: the hot-path record is a per-completion delta, so a
+    64-worker run logs the same bytes per cluster as a 2-worker run
+    (modulo the one-off per-worker adoption records).  The ``flatness``
+    ratio in the artifact is max/min bytes-per-cluster across the sweep —
+    ~1.0 is the design working, >2 is a regression."""
+    import shutil
+    import tempfile
+
+    g = control_dag(tasks)
+    rows = []
+    for n in worker_counts:
+        sizes = []
+        for _ in range(reps):
+            d = tempfile.mkdtemp(prefix="rrckpt")
+            try:
+                ex = ClusterExecutor(n, checkpoint_dir=d,
+                                     checkpoint_interval=0.05,
+                                     progress_timeout=180.0)
+                ex.run(g)
+                ex.close()
+                sizes.append(os.path.getsize(
+                    os.path.join(d, f"{ex.run_id}.log")))
+            finally:
+                shutil.rmtree(d, ignore_errors=True)
+        b = median(sizes)
+        rows.append({"workers": n, "log_bytes": int(b),
+                     "bytes_per_cluster": round(b / tasks, 1)})
+    return rows
+
+
+def driver_kill_smoke(workers: int, tasks: int = 600) -> None:
+    """CI gate for the tentpole: a real ``repro-driver`` subprocess is
+    SIGKILL'd mid-run; ``--resume latest`` must re-adopt the surviving
+    workers and finish bit-for-bit vs the sequential oracle."""
+    import pickle
+    import signal
+    import subprocess
+    import tempfile
+
+    from repro.launch.driver import demo_graph
+
+    seq = execute_sequential(demo_graph(tasks))
+    for attempt in range(3):
+        with tempfile.TemporaryDirectory(prefix="rrdk") as ckpt:
+            out = os.path.join(ckpt, "out.pkl")
+            base = [sys.executable, "-m", "repro.launch.driver",
+                    "--graph", "repro.launch.driver:demo_graph",
+                    "--arg", str(tasks), "--workers", str(workers),
+                    "--checkpoint-dir", ckpt,
+                    "--checkpoint-interval", "0.05", "--out", out]
+            p = subprocess.Popen(base, stdout=subprocess.PIPE, text=True)
+            p.stdout.readline()         # run id + address: driver is up
+            killed = False
+            deadline = time.monotonic() + 60
+            while time.monotonic() < deadline and p.poll() is None:
+                logs = [f for f in os.listdir(ckpt) if f.endswith(".log")]
+                if logs and os.path.getsize(
+                        os.path.join(ckpt, logs[0])) > 800:
+                    p.send_signal(signal.SIGKILL)
+                    killed = True
+                    break
+                time.sleep(0.005)
+            p.wait(timeout=60)
+            if not killed:              # run won the race: more work
+                tasks *= 2
+                continue
+            r = subprocess.run(base + ["--resume", "latest"],
+                               capture_output=True, text=True, timeout=180)
+            assert r.returncode == 0, \
+                f"resume failed rc={r.returncode}: {r.stderr[-2000:]}"
+            with open(out, "rb") as f:
+                got = pickle.load(f)
+            assert got == execute_sequential(demo_graph(tasks)), \
+                "resumed run diverged from the oracle"
+            print(f"smoke: {workers}-worker repro-driver SIGKILL'd "
+                  f"mid-run ({tasks}-task DAG), --resume latest "
+                  "re-adopted the pool and matched the oracle "
+                  "bit-for-bit", flush=True)
+            return
+    raise AssertionError("driver finished before the SIGKILL in every "
+                         "attempt — could not exercise the resume path")
+
+
 def smoke_differential(workers: int = 2) -> None:
     """CI gate: localhost-TCP control plane vs the sequential oracle,
     healthy and with a SIGKILL'd worker (heartbeat/EOF detection +
@@ -134,6 +222,9 @@ def main(argv: Optional[List[str]] = None) -> Dict[str, Any]:
     ap.add_argument("--reps", type=int, default=3)
     ap.add_argument("--smoke", action="store_true",
                     help="CI: differential gate + tiny timing pass")
+    ap.add_argument("--driver-kill-smoke", action="store_true",
+                    help="CI: SIGKILL a real repro-driver mid-run and "
+                    "verify --resume latest finishes bit-for-bit")
     ap.add_argument("--out", default=OUT_PATH)
     args = ap.parse_args(argv if argv is not None else [])
     if args.smoke:
@@ -145,6 +236,8 @@ def main(argv: Optional[List[str]] = None) -> Dict[str, Any]:
         args.consumers = min(args.consumers, 4)
         args.reps = 1
         smoke_differential(args.workers)
+    if args.driver_kill_smoke:
+        driver_kill_smoke(args.workers)
 
     # -- 1. control-plane overhead: pipe vs tcp on a cheap DAG ------------
     ctl = control_dag(args.tasks)
@@ -168,6 +261,15 @@ def main(argv: Optional[List[str]] = None) -> Dict[str, Any]:
     rows.append(time_shuffle(shuffle, "tcp", "tcp", args.workers,
                              args.reps))
 
+    # -- 3. run-log checkpoint cost vs worker count -----------------------
+    counts = [2, 8] if args.smoke else [2, 4, 8, 16, 32, 64]
+    ckpt_rows = checkpoint_sweep(args.tasks, counts, args.reps)
+    per = [r["bytes_per_cluster"] for r in ckpt_rows]
+    flatness = max(per) / min(per) if min(per) > 0 else float("inf")
+    if args.smoke:
+        assert flatness <= 2.0, \
+            f"checkpoint bytes/cluster not flat in workers: {ckpt_rows}"
+
     payload = {
         "config": {
             "tasks": args.tasks, "payload_mb": args.payload_mb,
@@ -178,6 +280,8 @@ def main(argv: Optional[List[str]] = None) -> Dict[str, Any]:
         "control_plane": control,
         "control_overhead_ms_per_task": overhead,
         "shuffle": rows,
+        "checkpoint": {"rows": ckpt_rows,
+                       "flatness_max_over_min": round(flatness, 3)},
     }
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
@@ -185,6 +289,8 @@ def main(argv: Optional[List[str]] = None) -> Dict[str, Any]:
                f"{args.workers} workers", list(control.values()))
     print_rows(f"shuffle ({args.payload_mb} MiB payloads) per "
                "channel x transport", rows)
+    print_rows(f"run-log bytes vs worker count ({args.tasks} clusters, "
+               f"flatness {flatness:.2f})", ckpt_rows)
     print(f"\nTCP control-plane overhead: {overhead:+.2f} ms/task "
           f"-> {args.out}", flush=True)
     return payload

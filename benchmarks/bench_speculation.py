@@ -105,9 +105,13 @@ def build_straggler_shuffle(marker_dir: str, *, producers: int = 4,
 
 
 def run_cell(channel: str, speculate_after: Optional[float], args,
-             oracle: float) -> Dict[str, Any]:
-    """One (channel, speculation) cell; a fresh sentinel dir per rep so
-    every run injects the same straggler."""
+             oracle: float, fuse: str = "off") -> Dict[str, Any]:
+    """One (channel, speculation[, fusion]) cell; a fresh sentinel dir per
+    rep so every run injects the same straggler.  The fused cell measures
+    the cooperative mid-task cancel: a losing twin of a fused super-task
+    aborts at the next member boundary instead of running the whole frame,
+    so ``speculative_wasted_s`` stays bounded by the straggler's own
+    sleep, not the full chain."""
     walls: List[float] = []
     stats: Dict[str, Any] = {}
     for _ in range(args.reps):
@@ -119,6 +123,7 @@ def run_cell(channel: str, speculate_after: Optional[float], args,
                 work_s=args.work_s)
             ex = ClusterExecutor(args.workers, channel=channel,
                                  speculate_after=speculate_after,
+                                 fuse=fuse,
                                  progress_timeout=180.0)
             t0 = time.perf_counter()
             got = ex.run(g)
@@ -129,7 +134,7 @@ def run_cell(channel: str, speculate_after: Optional[float], args,
             assert got[out] == oracle, \
                 f"{channel}/speculate={speculate_after}: {got[out]} != " \
                 f"oracle {oracle}"
-    return {"channel": channel,
+    return {"channel": channel, "fuse": fuse,
             "speculate_after": speculate_after or 0.0,
             "wall_s": median(walls),
             "n_speculative": stats.get("n_speculative", 0),
@@ -208,6 +213,10 @@ def main(argv: Optional[List[str]] = None) -> Dict[str, Any]:
         on = run_cell(channel, args.speculate_after, args, oracle)
         rows += [off, on]
         speedups[channel] = off["wall_s"] / max(on["wall_s"], 1e-9)
+    # fused cell: losing twins of fused super-tasks abort at member
+    # boundaries (cooperative cancel), bounding speculative_wasted_s
+    rows.append(run_cell("pipe", args.speculate_after, args, oracle,
+                         fuse="auto"))
 
     payload = {
         "config": {

@@ -1,2 +1,24 @@
-from .store import (save_checkpoint, restore_checkpoint, latest_step,
-                    AsyncCheckpointer, CheckpointManager)
+"""Checkpointing: array-tree store (jax-backed) + control-plane run log.
+
+``repro.checkpoint.store`` imports jax at module scope; the cluster
+driver and its workers only need :mod:`repro.checkpoint.runlog`, so the
+store's names are re-exported lazily (PEP 562) to keep the accelerator
+runtime out of control-plane processes.
+"""
+from .runlog import (RunLog, RunState, load_run, latest_run,  # noqa: F401
+                     graph_fingerprint, plan_fingerprint)
+
+_STORE_NAMES = ("save_checkpoint", "restore_checkpoint", "latest_step",
+                "AsyncCheckpointer", "CheckpointManager")
+
+__all__ = list(_STORE_NAMES) + [
+    "RunLog", "RunState", "load_run", "latest_run",
+    "graph_fingerprint", "plan_fingerprint",
+]
+
+
+def __getattr__(name):
+    if name in _STORE_NAMES:
+        from . import store
+        return getattr(store, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -58,9 +58,9 @@ Public API: :class:`ClusterExecutor`, :class:`ClusterFuture`,
 :mod:`repro.cluster.channel`.
 """
 from . import channel, serde
-from .executor import ClusterExecutor
+from .executor import ClusterExecutor, DriverKilled
 from .futures import ClusterFuture, gather
 from .objectstore import DriverObjectStore
 
-__all__ = ["ClusterExecutor", "ClusterFuture", "gather",
+__all__ = ["ClusterExecutor", "ClusterFuture", "gather", "DriverKilled",
            "DriverObjectStore", "serde", "channel"]

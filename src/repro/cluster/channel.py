@@ -70,7 +70,11 @@ from typing import Any, Dict, List, Optional, Tuple
 PROTOCOL_MAGIC = "repro-cluster"
 # v2: super-task dispatch (``run``/``done`` carry cluster ids and
 # per-member size maps) + ``("batch", [msgs])`` coalesced frames
-PROTOCOL_VERSION = 2
+# v3: driver-restart re-adoption — the hello may carry ``rejoin``/``wid``
+# (a surviving worker re-dialing a resumed run), and a rejoining worker's
+# first post-welcome frame is its ``("inv", wid, [(tid, nbytes), ...])``
+# object-store inventory
+PROTOCOL_VERSION = 3
 
 #: control-plane channels a ClusterExecutor can be built on (the
 #: transport matrix lives in serde.TRANSPORTS / serde.CROSS_HOST_TRANSPORTS)
@@ -466,7 +470,20 @@ class WorkerTcpEndpoint:
     """Worker-side face of the TCP channel: blocking framed recv/send plus
     a background heartbeat thread and a driver-silence watchdog (a worker
     whose driver host vanished must not hang forever on a half-open
-    socket — it exits, exactly as a pipe worker does on EOF)."""
+    socket — it exits, exactly as a pipe worker does on EOF).
+
+    When the driver advertises a resumable run (:meth:`configure_rejoin`),
+    a dead socket is no longer fatal: every send/recv failure funnels into
+    :meth:`_try_rejoin`, which re-dials the driver address with a
+    ``rejoin`` hello for up to ``window`` seconds, ships the worker's
+    object-store inventory as the first frame on the fresh socket, and
+    resumes.  Publishes queued during the outage simply block inside
+    ``send`` until re-adoption — the worker keeps computing and buffers.
+    Only after the window expires does the endpoint raise
+    :class:`ChannelClosed` and let the worker die like an orphan.
+    """
+
+    supports_rejoin = True
 
     def __init__(self, sock: socket.socket, *,
                  heartbeat_interval: float = 2.0,
@@ -477,12 +494,27 @@ class WorkerTcpEndpoint:
         self.last_seen = time.monotonic()
         self._send_lock = threading.Lock()
         self._stop = threading.Event()
+        self._rejoin: Optional[dict] = None
+        self._reconn_lock = threading.Lock()
+        self._gen = 0                   # bumped on every successful rejoin
+        self.rejoined = 0
+        self.inventory_fn = None        # set by worker_main once the store
+        #                                 exists: () -> [(tid, nbytes), ...]
         try:
             sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
         except OSError:
             pass
         threading.Thread(target=self._heartbeat_loop, daemon=True,
                          name="worker-tcp-heartbeat").start()
+
+    def configure_rejoin(self, *, address: str, token: Optional[str],
+                         run_id: str, wid: int,
+                         window: float = 60.0) -> None:
+        """Arm driver-outage survival: on socket death, re-dial ``address``
+        with a ``rejoin`` hello for this ``run_id``/``wid`` for up to
+        ``window`` seconds before giving up."""
+        self._rejoin = {"address": address, "token": token,
+                        "run_id": run_id, "wid": wid, "window": window}
 
     def _heartbeat_loop(self) -> None:
         while not self._stop.wait(self.heartbeat_interval):
@@ -491,27 +523,103 @@ class WorkerTcpEndpoint:
             except ChannelClosed:
                 return
             if time.monotonic() - self.last_seen > self.heartbeat_timeout:
+                if self._rejoin is not None:
+                    # Half-open socket during a resumable run: poke the
+                    # blocked reader by closing the socket — its recv
+                    # fails into _try_rejoin.  Must NOT exit: the rejoin
+                    # window, not the heartbeat timeout, decides death,
+                    # else a worker is counted dead once by the timeout
+                    # and again at resume reconciliation.
+                    try:
+                        self.sock.close()
+                    except OSError:
+                        pass
+                    self.last_seen = time.monotonic()
+                    continue
                 # driver silent past the deadline: orphaned worker.  Hard
                 # exit mirrors the pipe worker's EOF death (daemonized
                 # children of a dead driver must not linger).
                 os._exit(1)
 
+    def _try_rejoin(self, gen: int) -> bool:
+        """Re-dial the driver after a socket failure observed at ``gen``.
+        Returns True when a usable socket is in place (possibly installed
+        by a racing thread), False when rejoin is off or the window
+        expired."""
+        rj = self._rejoin
+        if rj is None or self._stop.is_set():
+            return False
+        with self._reconn_lock:
+            if self._gen != gen:        # another thread already rejoined
+                return True
+            deadline = time.monotonic() + rj["window"]
+            while not self._stop.is_set():
+                left = deadline - time.monotonic()
+                if left <= 0:
+                    return False
+                try:
+                    sock, wid, _cfg, _blob = _dial_and_welcome(
+                        rj["address"], token=rj["token"], has_graph=True,
+                        timeout=min(5.0, max(0.5, left)),
+                        retry_interval=0.2,
+                        extra={"rejoin": rj["run_id"], "wid": rj["wid"]})
+                except ChannelClosed:
+                    time.sleep(0.25)
+                    continue
+                inv = list(self.inventory_fn()) if self.inventory_fn else []
+                try:
+                    sock.setsockopt(socket.IPPROTO_TCP,
+                                    socket.TCP_NODELAY, 1)
+                    # inventory is the FIRST frame on the new socket —
+                    # written before the socket becomes visible to other
+                    # sender threads, so the driver can reconcile before
+                    # any buffered publish arrives
+                    _send_frame(sock, pickle.dumps(
+                        ("inv", rj["wid"], inv), protocol=5))
+                except OSError:
+                    try:
+                        sock.close()
+                    except OSError:
+                        pass
+                    time.sleep(0.25)
+                    continue
+                old, self.sock = self.sock, sock
+                self._gen += 1
+                self.last_seen = time.monotonic()
+                self.rejoined += 1
+                try:
+                    old.close()
+                except OSError:
+                    pass
+                return True
+            return False
+
     def recv(self) -> tuple:
-        try:
-            msg = _recv_frame(self.sock)
-        except (OSError, pickle.UnpicklingError, EOFError) as e:
-            raise ChannelClosed(f"driver gone: {e!r}") from e
-        self.last_seen = time.monotonic()
-        return msg
+        while True:
+            gen = self._gen
+            try:
+                msg = _recv_frame(self.sock)
+            except (OSError, pickle.UnpicklingError, EOFError) as e:
+                if self._try_rejoin(gen):
+                    continue
+                raise ChannelClosed(f"driver gone: {e!r}") from e
+            self.last_seen = time.monotonic()
+            return msg
 
     def send(self, msg: tuple) -> None:
-        try:
-            _send_frame(self.sock, pickle.dumps(msg, protocol=5),
-                        self._send_lock)
-        except OSError as e:
-            raise ChannelClosed(f"driver gone: {e!r}") from e
+        payload = pickle.dumps(msg, protocol=5)
+        while True:
+            gen = self._gen
+            try:
+                _send_frame(self.sock, payload, self._send_lock)
+                return
+            except OSError as e:
+                if self._try_rejoin(gen):
+                    continue
+                raise ChannelClosed(f"driver gone: {e!r}") from e
 
     def close(self) -> None:
+        self._rejoin = None             # a closing worker never re-dials
         self._stop.set()
         try:
             self.sock.close()
@@ -622,8 +730,22 @@ class TcpListener:
         except queue.Empty:
             return None
 
+    def fileno(self) -> int:
+        """The listening socket's fd — fork-started workers close this
+        inherited copy so a dead driver's port frees for a resumed one."""
+        return self._sock.fileno()
+
     def close(self) -> None:
         self._closed = True
+        # shutdown-before-close: the accept thread is blocked in accept(2),
+        # and on Linux close() alone does NOT wake it — the in-flight
+        # syscall keeps the kernel socket (and the PORT) alive until some
+        # stray dial lands.  A driver restarted on the same address would
+        # race that zombie LISTEN and lose with EADDRINUSE.
+        try:
+            self._sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
         try:
             self._sock.close()
         except OSError:
@@ -631,20 +753,15 @@ class TcpListener:
 
 
 # --------------------------------------------------------------- worker dial
-def dial_driver(address: str, *, token: Optional[str] = None,
-                has_graph: bool = False, timeout: float = 30.0,
-                retry_interval: float = 0.2,
-                heartbeat_interval: float = 2.0,
-                heartbeat_timeout: float = 30.0,
-                ) -> Tuple[WorkerTcpEndpoint, int, dict, Optional[bytes]]:
-    """Worker half of the handshake: connect to ``address``, send hello,
-    await the driver's welcome.
-
-    Retries the connect until ``timeout`` (workers routinely start before
-    the driver binds).  Returns ``(endpoint, wid, config, graph_blob)`` —
-    ``graph_blob`` is the pickled ``(graph, inputs)`` pair for workers
-    that did not inherit the graph (``has_graph=False``), else ``None``.
-    """
+def _dial_and_welcome(address: str, *, token: Optional[str],
+                      has_graph: bool, timeout: float,
+                      retry_interval: float,
+                      extra: Optional[dict] = None,
+                      ) -> Tuple[socket.socket, int, dict, Optional[bytes]]:
+    """Connect + hello + welcome, returning the raw authenticated socket.
+    Shared between the first dial (:func:`dial_driver`) and the rejoin
+    path (:meth:`WorkerTcpEndpoint._try_rejoin`), which differ only in
+    the ``extra`` hello fields."""
     host, _, port = address.rpartition(":")
     if not host:
         raise ValueError(f"worker address must be host:port, got {address!r}")
@@ -662,17 +779,18 @@ def dial_driver(address: str, *, token: Optional[str] = None,
                     f"could not reach driver at {address}: {e!r}") from e
             time.sleep(retry_interval)
     import json
-    try:
-        sock.settimeout(timeout)
-        # hello is JSON (see TcpListener._handshake: the driver must not
-        # unpickle pre-auth bytes); everything after it is pickled frames
-        _send_frame(sock, json.dumps(
-            {"magic": PROTOCOL_MAGIC,
+    hello = {"magic": PROTOCOL_MAGIC,
              "version": PROTOCOL_VERSION,
              "token": token,
              "host": host_id(),
              "pid": os.getpid(),
-             "has_graph": has_graph}).encode("utf-8"))
+             "has_graph": has_graph}
+    hello.update(extra or {})
+    try:
+        sock.settimeout(timeout)
+        # hello is JSON (see TcpListener._handshake: the driver must not
+        # unpickle pre-auth bytes); everything after it is pickled frames
+        _send_frame(sock, json.dumps(hello).encode("utf-8"))
         reply = _recv_frame(sock)
     except (OSError, pickle.UnpicklingError, EOFError) as e:
         try:
@@ -689,10 +807,38 @@ def dial_driver(address: str, *, token: Optional[str] = None,
         raise ChannelClosed(f"unexpected handshake reply {reply!r}")
     _, wid, config, graph_blob = reply
     sock.settimeout(None)
+    return sock, wid, config, graph_blob
+
+
+def dial_driver(address: str, *, token: Optional[str] = None,
+                has_graph: bool = False, timeout: float = 30.0,
+                retry_interval: float = 0.2,
+                heartbeat_interval: float = 2.0,
+                heartbeat_timeout: float = 30.0,
+                ) -> Tuple[WorkerTcpEndpoint, int, dict, Optional[bytes]]:
+    """Worker half of the handshake: connect to ``address``, send hello,
+    await the driver's welcome.
+
+    Retries the connect until ``timeout`` (workers routinely start before
+    the driver binds).  Returns ``(endpoint, wid, config, graph_blob)`` —
+    ``graph_blob`` is the pickled ``(graph, inputs)`` pair for workers
+    that did not inherit the graph (``has_graph=False``), else ``None``.
+
+    When the welcome config names a resumable run (``run_id``), the
+    endpoint is armed to survive a driver outage: it re-dials ``address``
+    with a ``rejoin`` hello instead of dying with the socket.
+    """
+    sock, wid, config, graph_blob = _dial_and_welcome(
+        address, token=token, has_graph=has_graph, timeout=timeout,
+        retry_interval=retry_interval)
     endpoint = WorkerTcpEndpoint(
         sock,
         heartbeat_interval=config.get("heartbeat_interval",
                                       heartbeat_interval),
         heartbeat_timeout=config.get("worker_heartbeat_timeout",
                                      heartbeat_timeout))
+    if config.get("run_id"):
+        endpoint.configure_rejoin(
+            address=address, token=token, run_id=config["run_id"], wid=wid,
+            window=config.get("rejoin_window", 60.0))
     return endpoint, wid, config, graph_blob

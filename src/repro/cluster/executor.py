@@ -129,16 +129,19 @@ from dataclasses import dataclass, field
 from multiprocessing.connection import wait as conn_wait
 from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
 
+from repro.checkpoint.runlog import (RunLog, graph_fingerprint,
+                                     plan_fingerprint)
 from repro.core.executor import MissingInput, TaskFailed
 from repro.core.fusion import FuseSpec, fuse as fuse_graph, parse_fuse_spec
-from repro.core.graph import TaskGraph
-from repro.core.lineage import recovery_plan_clusters
+from repro.core.graph import TaskGraph, TaskKind
+from repro.core.lineage import outage_recovery, recovery_plan_clusters
 from repro.core.scheduler import list_schedule, replan
 from repro.core.simulator import pick_speculation
 
 from . import serde
 from .channel import (CHANNELS, ChannelClosed, PipeChannel, SpawnChannel,
-                      TcpChannel, TcpListener, host_id, routable_ip)
+                      TcpChannel, TcpListener, _recv_frame, _send_frame,
+                      host_id, routable_ip)
 from .futures import ClusterFuture
 from .objectstore import DriverObjectStore
 from .worker import pipe_worker_main, tcp_worker_main
@@ -146,6 +149,20 @@ from .worker import pipe_worker_main, tcp_worker_main
 PENDING, READY, WAITING, INFLIGHT, DONE = range(5)
 
 WORKER_SPECS = ("local", "remote")
+
+
+class DriverKilled(RuntimeError):
+    """Emulated driver SIGKILL (the ``fail_driver`` chaos knob): raised
+    mid-run after N cluster completions with every shutdown path skipped —
+    worker sockets and the listener are torn down abruptly, no ``stop`` is
+    sent, no shm sweep runs — exactly the residue a real ``kill -9`` of
+    the driver process leaves.  Carries the run id so a test (or operator)
+    can resume: ``ClusterExecutor(..., checkpoint_dir=d, resume=run_id)``.
+    """
+
+    def __init__(self, run_id: str) -> None:
+        super().__init__(f"driver killed (emulated) during run {run_id}")
+        self.run_id = run_id
 
 
 @dataclass
@@ -240,9 +257,36 @@ class ClusterExecutor:
         heartbeat_timeout: float = 15.0,
         speculate_after: Optional[float] = None,
         fuse: FuseSpec = "off",
+        checkpoint_dir: Optional[str] = None,
+        checkpoint_interval: float = 0.25,
+        resume: Optional[str] = None,
+        rejoin_timeout: float = 10.0,
+        rejoin_window: Optional[float] = None,
+        fail_driver: Optional[int] = None,
     ) -> None:
         if start_method not in ("fork", "spawn", "forkserver"):
             raise ValueError(f"unknown start_method {start_method!r}")
+        if resume is not None:
+            if checkpoint_dir is None:
+                raise ValueError("resume requires checkpoint_dir")
+            from repro.checkpoint.runlog import load_run
+            self._resume_state = load_run(
+                os.path.join(checkpoint_dir, f"{resume}.log"))
+            meta = self._resume_state.meta
+            # plan identity: fusion spec / GC mode / resolved transport come
+            # from the interrupted run, not from this constructor's defaults
+            fuse = meta.get("fuse", fuse)
+            outputs_only = meta.get("outputs_only", outputs_only)
+            if connect is None:
+                connect = meta.get("address")
+            if channel is None:
+                channel = meta.get("channel")
+            transport = meta.get("transport", transport)
+        else:
+            self._resume_state = None
+        if fail_driver is not None and fail_driver < 1:
+            raise ValueError("fail_driver must be a positive completion "
+                             "count (or None to disable crash emulation)")
         if workers is not None:
             workers = list(workers)
             bad = [w for w in workers if w not in WORKER_SPECS]
@@ -301,6 +345,13 @@ class ClusterExecutor:
                              "disable speculation)")
         self.speculate_after = speculate_after
         self.fuse = parse_fuse_spec(fuse)   # raises on junk, at the flag
+        self.checkpoint_dir = checkpoint_dir
+        self.checkpoint_interval = checkpoint_interval
+        self.resume = resume
+        self.rejoin_timeout = rejoin_timeout
+        self.rejoin_window = rejoin_window
+        self.fail_driver = fail_driver
+        self.run_id: Optional[str] = None
         self.host = host_id()
         self.seg_prefix: Optional[str] = None    # last run's shm name prefix
         self.stats: Dict[str, Any] = {}
@@ -419,15 +470,60 @@ class ClusterExecutor:
             "speculative_swept": 0, "speculative_wasted_s": 0.0,
             "n_clusters": len(cg.nodes), "tasks_fused": plan.n_fused,
             "control_msgs": 0, "control_frames": 0,
-            "dispatch_overhead_s": 0.0,
+            "dispatch_overhead_s": 0.0, "resumed_clusters": 0,
         }
         self.recovery_events = []
         self.speculation_events = []
         t0 = time.perf_counter()
 
+        # -- durable control-plane state: one append-only run log per run.
+        # A fresh run writes a `begin` record pinning everything plan
+        # identity depends on; a resumed run validates those fingerprints
+        # (same graph + same fusion => same cluster ids, so the logged
+        # frontier is meaningful) and appends a `resume` marker carrying
+        # the new shm prefix.
+        rs = self._resume_state
+        self._resume_state = None
+        run_id = self.run_id = self.resume or uuid.uuid4().hex[:12]
+        self.resume = None
+        graph_fp = graph_fingerprint(graph)
+        plan_fp = plan_fingerprint(plan)
+        old_prefixes: List[str] = []
+        if rs is not None:
+            if rs.meta.get("graph_fp") != graph_fp:
+                raise ValueError(
+                    f"resume {run_id}: graph does not match the "
+                    "interrupted run (task ids / deps / kinds differ)")
+            if rs.meta.get("plan_fp") != plan_fp:
+                raise ValueError(
+                    f"resume {run_id}: fusion plan does not match the "
+                    "interrupted run (cluster identity differs)")
+            old_prefixes = [p for p in rs.seg_prefixes if p != seg_prefix]
+        runlog: Optional[RunLog] = None
+        if self.checkpoint_dir is not None:
+            os.makedirs(self.checkpoint_dir, exist_ok=True)
+            runlog = RunLog(
+                os.path.join(self.checkpoint_dir, f"{run_id}.log"),
+                interval=self.checkpoint_interval)
+            if rs is None:
+                runlog.append("begin", {
+                    "run_id": run_id, "graph_fp": graph_fp,
+                    "plan_fp": plan_fp, "fuse": self.fuse,
+                    "outputs_only": self.outputs_only,
+                    "address": self.address, "channel": self.channel,
+                    "transport": transport, "seg_prefix": seg_prefix,
+                    "n_clusters": len(cg.nodes),
+                })
+            else:
+                runlog.append("resume", {"seg_prefix": seg_prefix})
+            runlog.flush()
+
         store = DriverObjectStore(graph, plan=plan)
         workers: Dict[int, _Worker] = {}
-        next_wid = 0
+        # resumed runs keep the interrupted run's worker-id space: rejoiners
+        # reclaim their old wid, fresh spawns start above every recorded one
+        next_wid = (max(rs.workers) + 1 if rs is not None and rs.workers
+                    else 0)
         listener = self.listener
         # graph shipped once per run to graph-less (remote) dialers
         graph_blob: List[Optional[bytes]] = [None]
@@ -460,6 +556,15 @@ class ClusterExecutor:
                 # traffic to send, a worker mid-task may not
                 "worker_heartbeat_timeout": max(self.heartbeat_timeout * 3,
                                                 self.progress_timeout),
+                # checkpointed runs arm the worker-side rejoin loop: a
+                # dropped driver socket means "re-dial with this run id for
+                # up to rejoin_window seconds", not "exit".  Uncheckpointed
+                # runs keep the die-on-silence contract — there is nothing
+                # to resume into.
+                "run_id": run_id if runlog is not None else None,
+                "rejoin_window": (self.rejoin_window
+                                  if self.rejoin_window is not None
+                                  else max(60.0, self.progress_timeout)),
             }
 
         def ship_graph() -> bytes:
@@ -527,6 +632,8 @@ class ClusterExecutor:
             w = _Worker(wid, chan, worker_host, proc=proc)
             workers[wid] = w
             store.add_worker(wid, host=worker_host)
+            if runlog is not None:
+                runlog.append("worker", wid, worker_host)
             return w
 
         def heartbeat_all() -> None:
@@ -573,10 +680,27 @@ class ClusterExecutor:
             """Start one local worker on the configured channel family."""
             nonlocal next_wid
             if self.channel == "tcp":
+                # fork children must drop every inherited driver-side fd:
+                # the listener (else a SIGKILL'd driver's port stays bound
+                # by its own workers and the resumed driver can never
+                # re-bind it) AND the accepted sockets of already-adopted
+                # peers (a child holding a dup keeps that connection alive
+                # past the driver's death, so the peer never sees EOF and
+                # never starts its rejoin dial)
+                inherited = ([listener.fileno()]
+                             if listener is not None else [])
+                for ow in workers.values():
+                    s = getattr(ow.chan, "sock", None)
+                    if ow.alive and s is not None:
+                        try:
+                            inherited.append(s.fileno())
+                        except OSError:
+                            pass
                 proc = ctx.Process(
                     target=tcp_worker_main, args=(self.address,),
                     kwargs=({"token": self.token, "graph": graph,
-                             "inputs": inputs}
+                             "inputs": inputs,
+                             "close_fds": tuple(inherited)}
                             if self.start_method == "fork"
                             else {"token": self.token}),
                     daemon=True, name="cluster-worker-dialer")
@@ -596,6 +720,8 @@ class ClusterExecutor:
             w = _Worker(wid, cls(parent, proc), self.host, proc=proc)
             workers[wid] = w
             store.add_worker(wid, host=self.host)
+            if runlog is not None:
+                runlog.append("worker", wid, self.host)
             return w
 
         def adopt_remote() -> _Worker:
@@ -788,6 +914,8 @@ class ClusterExecutor:
                                  f"cannot be shipped to a worker: {e!r}")))
                 return None
             store.set_handle(d, h)
+            if runlog is not None and serde.is_durable(h):
+                runlog.append("hnd", d, pickle.dumps(h, protocol=5))
             return h
 
         def build_extra(cid: int, wid: int
@@ -947,6 +1075,8 @@ class ClusterExecutor:
             store.invalidate({tid})     # also unlinks its shm segments
             store.mark_dropped(tid)     # late duplicate publishes: sweep
             stats["dropped"] += 1
+            if runlog is not None:
+                runlog.append("gc", [tid])
 
         def runner_gone(cid: int, wid: int) -> Optional[float]:
             """Bookkeeping when ``wid`` stops running ``cid`` (done,
@@ -1017,6 +1147,18 @@ class ClusterExecutor:
             finish_times[cid] = time.perf_counter() - t0
             for m, nb in sizes.items():
                 store.record(m, w.wid, nb)
+            if runlog is not None:
+                # one delta record per completion — the incremental
+                # checkpoint: O(cluster outputs), not O(workers) or O(graph)
+                runlog.append("done", cid, w.wid, dict(sizes))
+                # BARRIER values are the paper's lineage cut: pull them to
+                # the driver so the log holds a durable copy even if every
+                # replica dies with the outage
+                for m in sizes:
+                    if graph.nodes[m].kind is TaskKind.BARRIER \
+                            and m not in fetching and not store.durable(m):
+                        post(w, ("fetch", m))
+                        fetching[m] = w.wid
             w.n_done += 1
             # runtime calibration of the static cost model (the launchers'
             # 0.9/0.1 straggler EWMA): seconds of wall per planned cost unit
@@ -1087,6 +1229,12 @@ class ClusterExecutor:
                 "worker": cause, "lost": set(lost), "needed": set(needed),
                 "available": set(available), "plan": set(cplan),
             })
+            if runlog is not None and cplan:
+                # retract the frontier claims (and any GC marks) the
+                # re-runs invalidate, so a later resume sees them as open
+                runlog.append("redo", sorted(cplan))
+                runlog.append("live", sorted(
+                    v for c in cplan for v in plan.members[c]))
 
             will_run = cplan | {c for c, s in state.items() if s != DONE}
             vals = {v for c in cplan for v in plan.members[c]}
@@ -1131,6 +1279,8 @@ class ClusterExecutor:
             w.chan.close()
             w.outbox.clear()
             stats["failures"] += 1
+            if runlog is not None:
+                runlog.append("dead", w.wid)
 
             # super-tasks that never completed there simply go back in the
             # pool — with two speculation exceptions: a SIGKILL of the
@@ -1201,6 +1351,21 @@ class ClusterExecutor:
                 return
             account_pipe(handle)
             store.set_handle(tid, handle)
+            if runlog is not None:
+                if serde.is_durable(handle):
+                    # tmpfs/inline handles survive a driver death in place:
+                    # the log only needs the pointer
+                    runlog.append("hnd", tid,
+                                  pickle.dumps(handle, protocol=5))
+                elif graph.nodes[tid].kind is TaskKind.BARRIER:
+                    # barrier value behind a worker-lifetime handle: spill
+                    # the bytes themselves — the lineage cut must hold even
+                    # if the whole pool dies with the driver
+                    try:
+                        runlog.append("val", tid, pickle.dumps(
+                            serde.resolve(handle), protocol=5))
+                    except Exception:       # noqa: BLE001 — best-effort
+                        pass
             for c in list(waiting):
                 entry = waiting.get(c)
                 if entry is None:     # popped by a recovery mid-loop
@@ -1240,16 +1405,40 @@ class ClusterExecutor:
                     for d in cg.nodes[cid].all_deps):
                 state[cid] = PENDING
 
-        def on_cancelled(w: _Worker, cid: int) -> None:
-            """The worker skipped a queued run of ``cid`` under a cancel
-            mark.  Normally the winner already completed (nothing to do);
-            if the mark was stale — a lineage-recovery re-dispatch raced a
-            cancel from a previous incarnation — the run was still wanted,
-            so the super-task goes back in the pool."""
+        def on_cancelled(w: _Worker, cid: int,
+                         replicated: Sequence[int] = (),
+                         wall: float = 0.0) -> None:
+            """The worker honored a cancel mark on ``cid`` — either before
+            starting (3-tuple ack) or cooperatively at a member boundary
+            mid-super-task (extended ack, carrying the transfer inputs it
+            had already materialized and the partial wall it burned).
+            Normally the winner already completed (nothing to do); if the
+            mark was stale — a lineage-recovery re-dispatch raced a cancel
+            from a previous incarnation — the run was still wanted, so the
+            super-task goes back in the pool."""
             nonlocal last_progress
             last_progress = time.perf_counter()
             w.inflight.discard(cid)
             runner_gone(cid, w.wid)
+            # inputs an aborted run stored are real replicas (or, already
+            # GC-swept, residue to sweep on this worker too) — same
+            # reconciliation as a late duplicate done
+            sweep: List[int] = []
+            for d in replicated:
+                if state.get(plan.cluster_of[d]) != DONE:
+                    continue
+                if store.was_dropped(d):
+                    sweep.append(d)
+                else:
+                    store.record_replica(d, w.wid)
+            if sweep and w.alive:
+                post(w, ("drop", sweep))
+            if state.get(cid) == DONE:
+                # a mid-task abort of a speculation loser: the partial wall
+                # is the true waste (the pre-abort fix charged the FULL
+                # super-task duration, because the loser ran to completion)
+                stats["speculative_wasted_s"] += wall
+                return
             if state.get(cid) == INFLIGHT and not still_running(cid):
                 state[cid] = READY
 
@@ -1318,7 +1507,9 @@ class ClusterExecutor:
             elif verb == "deplost":
                 on_deplost(w, msg[2], msg[3])
             elif verb == "cancelled":
-                on_cancelled(w, msg[2])
+                # 3-tuple: skipped while queued; 5-tuple: aborted at a
+                # member boundary mid-run (replicated inputs + partial wall)
+                on_cancelled(w, msg[2], *(msg[3:5] if len(msg) > 3 else ()))
             elif verb == "fetch_error":
                 # a fetch reply that could not be serialized names a VALUE
                 # tid, not a super-task: the value cannot be collected, so
@@ -1433,6 +1624,13 @@ class ClusterExecutor:
                         else listener.poll_worker()
                     if pair is None:
                         break
+                    if pair[1].get("rejoin") is not None:
+                        # a surviving worker re-dialing after a driver
+                        # socket drop (outage, partition heal): re-adopt
+                        # in place, never as a fresh join
+                        if adopt_rejoin(pair[0], pair[1]) is not None:
+                            make_plan(initial=False)
+                        continue
                     try:
                         join_one(adopt(pair[0], pair[1], proc=None))
                     except (ValueError, TimeoutError):
@@ -1449,15 +1647,204 @@ class ClusterExecutor:
                 if w.alive and w.chan.dead() is not None:
                     on_worker_death(w)
 
+        # ------------------------------------------------------ driver resume
+        # worker inventories reported at rejoin, parked until the frontier
+        # is seeded (a rejoiner can't be reconciled against state that
+        # doesn't exist yet); late rejoiners record directly
+        inventories: Dict[int, List[Tuple[int, int]]] = {}
+        resume_seeded = [rs is None]
+
+        def adopt_rejoin(sock, hello: dict) -> Optional[_Worker]:
+            """Re-adopt a surviving worker of THIS run: it keeps its old
+            worker id and its object store; its inventory (first frame
+            after the welcome) tells the driver what actually survived."""
+            nonlocal next_wid
+            wid = hello.get("wid")
+
+            def refuse(reason: str) -> None:
+                try:
+                    _send_frame(sock, pickle.dumps(("reject", reason),
+                                                   protocol=5))
+                except OSError:
+                    pass
+                try:
+                    sock.close()
+                except OSError:
+                    pass
+
+            if hello.get("rejoin") != run_id:
+                refuse(f"unknown run {hello.get('rejoin')!r}")
+                return None
+            if not isinstance(wid, int) or wid < 0:
+                refuse(f"malformed rejoin wid {wid!r}")
+                return None
+            worker_host = hello.get("host", "?")
+            try:
+                _send_frame(sock, pickle.dumps(
+                    ("welcome", wid, run_config(hello), None), protocol=5))
+                sock.settimeout(10.0)
+                first = _recv_frame(sock)
+                sock.settimeout(None)
+            except (OSError, EOFError, pickle.UnpicklingError,
+                    ChannelClosed):
+                try:
+                    sock.close()
+                except OSError:
+                    pass
+                return None
+            if not (isinstance(first, tuple) and len(first) == 3
+                    and first[0] == "inv"):
+                try:
+                    sock.close()
+                except OSError:
+                    pass
+                return None
+            inv = [(t, nb) for t, nb in first[2] if t in graph.nodes]
+            chan = TcpChannel(sock,
+                              heartbeat_interval=self.heartbeat_interval,
+                              heartbeat_timeout=self.heartbeat_timeout)
+            old = workers.get(wid)
+            if old is not None and old.alive:
+                # same worker process re-dialed under a live driver (socket
+                # bounce / healed partition): swap the transport, keep the
+                # in-flight bookkeeping — its queued work continues there.
+                # NOT a death: close must not trip the death handler
+                old.chan.close()
+                old.chan = chan
+                w = old
+            else:
+                # driver-restart rejoin (or a worker whose heartbeat loss
+                # was already recovered — its values are extra replicas
+                # now, never a second recovery plan)
+                w = _Worker(wid, chan, worker_host, proc=None)
+                workers[wid] = w
+                store.add_worker(wid, host=worker_host)
+                next_wid = max(next_wid, wid + 1)
+            if runlog is not None:
+                runlog.append("worker", wid, worker_host)
+            if not resume_seeded[0]:
+                inventories[wid] = inv
+            else:
+                for t, nb in inv:
+                    if state.get(plan.cluster_of[t]) == DONE \
+                            and not store.was_dropped(t):
+                        store.record(t, w.wid, nb)
+            return w
+
+        def rejoin_barrier() -> None:
+            """Bounded wait for the interrupted run's surviving workers to
+            re-dial the freshly rebound listener.  Workers that never show
+            are simply absent — their values count as outage losses and
+            lineage recovers them; nothing blocks on a corpse."""
+            expected = set(rs.live_workers) - set(workers)
+            deadline = time.monotonic() + self.rejoin_timeout
+            while expected:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    break
+                heartbeat_all()
+                try:
+                    sock, hello = listener.get_worker(min(0.5, remaining))
+                except TimeoutError:
+                    continue
+                if hello.get("rejoin") is not None:
+                    w = adopt_rejoin(sock, hello)
+                    if w is not None:
+                        expected.discard(w.wid)
+                else:
+                    dial_stash.append((sock, hello))    # fresh dial: joins
+                    # elastically once the run is seeded and live
+
+        def seed_from_checkpoint() -> None:
+            """Rebuild the execution frontier from the run log plus what
+            rejoined workers actually report holding, then reconcile: every
+            claimed-done value that truly survived stays done; everything
+            else becomes ONE recovery plan (bounded recomputation)."""
+            # durable copies the log recorded, existence-verified — a
+            # checkpoint never outranks the filesystem
+            live_handles: Dict[int, Any] = {}
+            for tid, hb in rs.handles.items():
+                if tid not in graph.nodes:
+                    continue
+                try:
+                    h = pickle.loads(hb)
+                except Exception:       # noqa: BLE001 — stale/foreign blob
+                    continue
+                if not serde.is_durable(h):
+                    continue
+                refs = getattr(h, "shm_refs", lambda: ())()
+                if all(os.path.exists(os.path.join(serde._SHM_DIR, r.name))
+                       for r in refs):
+                    live_handles[tid] = h
+            values: Dict[int, Any] = {}
+            for tid, vb in rs.values.items():
+                if tid not in graph.nodes:
+                    continue
+                try:
+                    values[tid] = pickle.loads(vb)
+                except Exception:       # noqa: BLE001
+                    continue
+            inv_tids = {t for inv in inventories.values() for t, _ in inv}
+            survived = inv_tids | set(live_handles) | set(values)
+            # the frontier: checkpoint claims, plus promotion of clusters
+            # that finished during the outage window (claim lost with the
+            # unflushed tail) but whose entire externally-visible keep set
+            # demonstrably survived
+            done0 = {cid for cid in rs.done if cid in cg.nodes}
+            for cid in cg.nodes:
+                if cid in done0:
+                    continue
+                ks = fusion_view.keep.get(cid) or plan.members[cid]
+                if all(t in survived for t in ks):
+                    done0.add(cid)
+            store.seed_after_outage(done0, inventories, live_handles,
+                                    values, rs.dropped)
+            for cid, (_, sizes_) in rs.done.items():
+                if cid in done0:
+                    for t, nb in sizes_.items():
+                        if nb:
+                            store.sizes.setdefault(t, nb)
+            for cid in done0:
+                state[cid] = DONE
+                done.add(cid)
+                finish_times[cid] = 0.0     # completed in a past life
+            for cid in cg.nodes:
+                if cid in done0:
+                    continue
+                state[cid] = (READY if all(state.get(d) == DONE
+                                           for d in cg.nodes[cid].all_deps)
+                              else PENDING)
+            resume_seeded[0] = True
+            stats["resumed_clusters"] = len(done0)
+            # reconcile claims against reality: all outage losses fold into
+            # exactly ONE recovery plan — a worker whose heartbeat died
+            # with the driver is part of this plan, never a second one
+            available = store.available(set(alive_ids()))
+            lost, needed, _ = outage_recovery(plan, graph, done0, available,
+                                              self.outputs_only)
+            if lost or needed:
+                recompute_lost(needed, lost, "driver-outage")
+
         # ------------------------------------------------------- main loop
         self._active = True
+        crashed = False
         try:
-            for spec in self.worker_specs:
-                if spec == "remote":
-                    adopt_remote()
-                else:
+            if rs is not None:
+                if listener is not None:
+                    rejoin_barrier()
+                n_live = len([w for w in workers.values() if w.alive])
+                for _ in range(max(0, len(self.worker_specs) - n_live)):
                     spawn()
-            make_plan(initial=True)
+                seed_from_checkpoint()
+                if not error:
+                    make_plan(initial=False)
+            else:
+                for spec in self.worker_specs:
+                    if spec == "remote":
+                        adopt_remote()
+                    else:
+                        spawn()
+                make_plan(initial=True)
             while not error:
                 check_commands()
                 if len(done) >= n_total:
@@ -1470,6 +1857,29 @@ class ClusterExecutor:
                     stats["dispatch_overhead_s"] += \
                         time.perf_counter() - t_d
                 pump(timeout=0.02)
+                if runlog is not None:
+                    runlog.maybe_flush()
+                if self.fail_driver is not None and not crashed \
+                        and len(done) >= self.fail_driver:
+                    # emulated kill -9: sockets and listener torn down raw,
+                    # every shutdown nicety (stop/join/flush/sweep) skipped.
+                    # Buffered log records since the last timed flush are
+                    # LOST — exactly what a real SIGKILL loses
+                    crashed = True
+                    for w in workers.values():
+                        if not w.alive:
+                            continue
+                        raw = getattr(w.chan, "sock", None) \
+                            or getattr(w.chan, "conn", None)
+                        try:
+                            raw.close() if raw is not None \
+                                else w.chan.close()
+                        except OSError:
+                            pass
+                    if listener is not None:
+                        listener.close()
+                        self.listener = None
+                    raise DriverKilled(run_id)
                 check_deaths()
                 for w in workers.values():
                     if w.alive:
@@ -1488,37 +1898,52 @@ class ClusterExecutor:
                         f"inflight {[sorted(w.inflight) for w in workers.values()]})"))
         finally:
             self._active = False
-            # speculation losers still executing at shutdown burned their
-            # time just the same — charge what the run observed of it
-            end_t = time.perf_counter()
-            for cid, starts in run_started.items():
-                if state.get(cid) == DONE:
-                    for st in starts.values():
-                        stats["speculative_wasted_s"] += end_t - st
-            for w in workers.values():
-                if w.alive:
-                    try:
-                        w.chan.send(("stop",))
-                    except ChannelClosed:
-                        pass
-            for w in workers.values():
-                if w.proc is not None:
-                    w.proc.join(timeout=5.0)
-                    if w.proc.is_alive():
-                        w.proc.terminate()
+            if crashed:
+                # emulated SIGKILL: leave everything exactly as a dead
+                # driver would — workers alive (rejoin loops armed), shm
+                # segments in place, run log unflushed past its last timed
+                # fsync.  The resumed incarnation (and the repro-worker
+                # startup sweep) own the cleanup.
+                pass
+            else:
+                # speculation losers still executing at shutdown burned
+                # their time just the same — charge what the run observed
+                end_t = time.perf_counter()
+                for cid, starts in run_started.items():
+                    if state.get(cid) == DONE:
+                        for st in starts.values():
+                            stats["speculative_wasted_s"] += end_t - st
+                for w in workers.values():
+                    if w.alive:
+                        try:
+                            w.chan.send(("stop",))
+                        except ChannelClosed:
+                            pass
+                for w in workers.values():
+                    if w.proc is not None:
                         w.proc.join(timeout=5.0)
-                w.chan.close()
-            for sock, _ in dial_stash:      # dials we never adopted
-                try:
-                    sock.close()
-                except OSError:
-                    pass
-            # hygiene sweep: free tracked handles, then clear the run's
-            # /dev/shm prefix AND its peer-socket tmpdir — orphans from
-            # workers killed mid-publish never cleaned up after themselves
-            store.release_all()
-            serde.sweep_segments(seg_prefix)
-            serde.sweep_peer_sockets(peer_dir)
+                        if w.proc.is_alive():
+                            w.proc.terminate()
+                            w.proc.join(timeout=5.0)
+                    w.chan.close()
+                for sock, _ in dial_stash:      # dials we never adopted
+                    try:
+                        sock.close()
+                    except OSError:
+                        pass
+                # hygiene sweep: free tracked handles, then clear the run's
+                # /dev/shm prefix AND its peer-socket tmpdir — orphans from
+                # workers killed mid-publish never cleaned up after
+                # themselves.  A resumed run also sweeps every PRIOR
+                # incarnation's prefix: their surviving segments were the
+                # recovery inputs and are dead weight now the run is over
+                if runlog is not None:
+                    runlog.close()
+                store.release_all()
+                serde.sweep_segments(seg_prefix)
+                for p in old_prefixes:
+                    serde.sweep_segments(p)
+                serde.sweep_peer_sockets(peer_dir)
             self.wall_time = time.perf_counter() - t0
 
         if error:

@@ -122,6 +122,40 @@ class DriverObjectStore:
             out |= self.known.get(wid, set())
         return out
 
+    # --------------------------------------------------------------- resume
+    def seed_after_outage(self, done_clusters: Set[int],
+                          inventories: Dict[int, Any],
+                          handles: Dict[int, serde.Handle],
+                          values: Dict[int, Any],
+                          dropped: Set[int]) -> None:
+        """Rebuild a fresh store from a checkpoint plus rejoined-worker
+        inventory after a driver outage.  ``inventories`` maps worker id
+        (already registered via :meth:`add_worker`) to ``(tid, nbytes)``
+        pairs the worker still holds; ``handles``/``values`` are the
+        durable copies the run log recorded (existence-verified by the
+        caller); ``dropped`` is the GC frontier the log claims.  Inventory
+        wins over a ``dropped`` claim — a worker that still holds a value
+        makes it live again (worst case the refcount GC re-sweeps it).
+        Handles are assigned directly, never through :meth:`set_handle`:
+        there is no prior handle to release in a store this young, and a
+        release here would unlink the very tmpfs segment that survived
+        the outage."""
+        inv_tids: Set[int] = set()
+        for wid, inv in inventories.items():
+            for tid, nbytes in inv:
+                inv_tids.add(tid)
+                if self.plan.cluster_of.get(tid) in done_clusters:
+                    self.record(tid, wid, nbytes)
+        self.handles.update(handles)
+        self.cache.update(values)
+        self.dropped = set(dropped) - inv_tids - set(self.cache) \
+            - set(self.handles)
+        # refcount universe: consumers that already completed never re-read
+        self.consumers_left = {
+            tid: sum(1 for c in self.plan.consumers.get(tid, ())
+                     if c not in done_clusters)
+            for tid in self.graph.nodes}
+
     # -------------------------------------------------------------- failure
     def drop_worker(self, wid: int) -> Set[int]:
         """Worker died: forget its store.  Returns the tids whose values are

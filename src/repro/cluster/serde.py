@@ -313,6 +313,71 @@ def sweep_segments(prefix: str) -> int:
     return n
 
 
+def _segment_owner_pid(name: str) -> Optional[int]:
+    """Parse the *driver* pid embedded in a run-scoped segment name.
+
+    Run prefixes are ``rr{driver_pid:x}{8 uuid hex}`` (see the executor's
+    ``seg_prefix``); namers append ``d``/``w<wid>`` and a ``_<n>``
+    counter, bare :func:`encode` calls append nothing.  The pid and uuid
+    halves are both hex, so the split anchors on structure: ``w`` is not
+    a hex digit, ``d``-suffixed names always carry a ``_<n>`` counter,
+    and the uuid half is exactly 8 chars.  Unparseable names return
+    ``None`` — the sweep must never guess.
+    """
+    if not name.startswith("rr"):
+        return None
+    rest = name[2:]
+    if "w" in rest:                     # rr<pid><uuid8>w<wid>_<n>
+        head = rest.split("w", 1)[0]
+    elif "_" in rest:                   # rr<pid><uuid8>d_<n>
+        head = rest.split("_", 1)[0]
+        if not head.endswith("d"):
+            return None
+        head = head[:-1]
+    else:                               # rr<pid><uuid8>  (bare encode)
+        head = rest
+    if len(head) <= 8:
+        return None
+    try:
+        return int(head[:-8], 16)
+    except ValueError:
+        return None
+
+
+def sweep_stale_segments(shm_dir: Optional[str] = None) -> int:
+    """Startup sweep of ``rr*`` segments whose owning run is dead.
+
+    A SIGKILL'd worker (or an emulated-crash driver) never runs its
+    shutdown sweep, so its run's segments leak in ``/dev/shm`` until the
+    *next* ``repro-worker`` on the host starts and calls this.  Scoped
+    strictly to dead runs: a segment is removed only when its name parses
+    to a run prefix whose embedded driver pid no longer exists — an
+    unparseable name or a live (even recycled) pid keeps the segment.
+    Returns the number of segments unlinked.
+    """
+    shm_dir = _SHM_DIR if shm_dir is None else shm_dir
+    if not os.path.isdir(shm_dir):
+        return 0
+    n = 0
+    for path in glob.glob(os.path.join(shm_dir, "rr*")):
+        pid = _segment_owner_pid(os.path.basename(path))
+        if pid is None or pid <= 0:
+            continue
+        try:
+            os.kill(pid, 0)
+            continue                    # owner alive: not ours to touch
+        except ProcessLookupError:
+            pass                        # owner dead: stale residue
+        except OSError:
+            continue                    # EPERM etc: owner exists, skip
+        try:
+            os.unlink(path)
+            n += 1
+        except OSError:
+            pass
+    return n
+
+
 def sweep_peer_sockets(peer_dir: Optional[str]) -> int:
     """Remove a run's :class:`PeerServer` unix-socket files and their
     tmpdir.  Part of the same shutdown sweep as :func:`sweep_segments`: a

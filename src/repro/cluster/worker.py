@@ -94,7 +94,7 @@ from __future__ import annotations
 
 import os
 import signal
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Sequence
 
 from repro.core.executor import _run_node as run_node   # noqa: F401 — the
 # worker executes nodes with the EXACT core implementation so both backends
@@ -162,6 +162,23 @@ def worker_main(wid: int, chan, graph: TaskGraph,
     outq: "queue.SimpleQueue[Optional[tuple]]" = queue.SimpleQueue()
     namer = serde.SegmentNamer(f"{seg_prefix}w{wid}") if seg_prefix else None
     my_host = host_id()
+
+    if getattr(chan, "supports_rejoin", False):
+        # Driver-restart re-adoption: the first frame on a rejoined socket
+        # is this worker's object-store inventory, which the resumed
+        # driver reconciles against its checkpoint.  The compute loop may
+        # mutate the store mid-snapshot, hence the retry.
+        def _inventory():
+            snap: List[tuple] = []
+            for _ in range(8):
+                try:
+                    snap = list(store.items())
+                    break
+                except RuntimeError:
+                    continue
+            return [(tid, serde.payload_nbytes(v)) for tid, v in snap]
+
+        chan.inventory_fn = _inventory
 
     peer_server: Optional[serde.PeerServer] = None
     if transport == "sock" and peer_dir:
@@ -430,13 +447,27 @@ def worker_main(wid: int, chan, graph: TaskGraph,
             # run every member locally, in topo order, in ONE frame:
             # intermediates live and die here — no store write, no
             # publish, no control message (the fusion win)
+            aborted = False
             for m in members_of(cid):
+                if cid in cancelled:
+                    # cooperative mid-task cancel: a speculation loser
+                    # stops at the next member boundary instead of running
+                    # the whole frame to completion.  Nothing from the
+                    # aborted frame reaches the store; the ack carries the
+                    # partial wall so the driver can account true waste.
+                    aborted = True
+                    break
                 cur = m
                 for d in graph.nodes[m].all_deps:
                     if d not in frame:
                         frame[d] = store[d]
                 frame[m] = run_node(graph, m, frame, inputs)
             cur = None
+            if aborted:
+                cancelled.discard(cid)
+                outq.put(("cancelled", wid, cid, replicated,
+                          time.perf_counter() - t0))
+                continue
             sizes: Dict[int, int] = {}
             for m in keep_of(cid):
                 store[m] = frame[m]
@@ -462,7 +493,8 @@ def tcp_worker_main(address: str, *,
                     token: Optional[str] = None,
                     graph: Optional[TaskGraph] = None,
                     inputs: Optional[Dict[str, Any]] = None,
-                    timeout: float = 30.0) -> int:
+                    timeout: float = 30.0,
+                    close_fds: Sequence[int] = ()) -> int:
     """Process entrypoint for TCP-channel workers (local forked dialers and
     the ``repro-worker`` CLI alike): dial the driver at ``address``,
     handshake, and run :func:`worker_main` with the negotiated identity and
@@ -478,6 +510,15 @@ def tcp_worker_main(address: str, *,
 
     from .channel import dial_driver
 
+    # a fork-started dialer inherits the DRIVER's open fds — most fatally
+    # its listening socket, which would keep the port bound after a driver
+    # SIGKILL and block the restarted driver's re-bind.  The driver names
+    # the fds the child must not hold; close them before anything else.
+    for fd in close_fds:
+        try:
+            os.close(fd)
+        except OSError:
+            pass
     endpoint, wid, config, graph_blob = dial_driver(
         address, token=token, has_graph=graph is not None, timeout=timeout)
     if graph is None:

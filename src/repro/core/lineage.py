@@ -86,6 +86,52 @@ def recovery_plan_clusters(
     return plan
 
 
+def outage_recovery(
+    fused_plan,
+    graph: TaskGraph,
+    claimed_done: Set[int],
+    available: Set[int],
+    outputs_only: bool = False,
+) -> Tuple[Set[int], Set[int], Set[int]]:
+    """Recovery after a *driver* outage: reconcile checkpoint claims
+    against surviving inventory.
+
+    ``claimed_done`` is the set of clusters the run log says completed;
+    ``available`` is every member value actually reachable right now
+    (rejoined workers' inventories + reattached durable handles +
+    checkpoint-spilled values).  Claims are monotone-but-stale — a value
+    may have been produced, consumed, GC'd, and its producer legitimately
+    never needs to re-run; or it may have died with a worker during the
+    outage and must be replayed.
+
+    Returns ``(lost, needed, plan)``: the claimed values that are gone,
+    the subset a resumed run still has to rebuild (all of them in
+    full-results mode; in ``outputs_only`` mode only graph outputs and
+    values with unconsumed downstream clusters), and the cluster replay
+    plan from :func:`recovery_plan_clusters` — exactly one plan per
+    outage, however many workers died with it.
+    """
+    lost: Set[int] = set()
+    for cid in claimed_done:
+        for v in fused_plan.members[cid]:
+            if v not in available:
+                lost.add(v)
+    if not outputs_only:
+        needed = set(lost)
+    else:
+        needed = set()
+        for v in lost:
+            if v in graph.outputs:
+                needed.add(v)
+                continue
+            for consumer in fused_plan.consumers.get(v, ()):
+                if consumer not in claimed_done:
+                    needed.add(v)
+                    break
+    plan = recovery_plan_clusters(fused_plan, needed, available)
+    return lost, needed, plan
+
+
 def replay(graph: TaskGraph, plan: Set[int], results: Dict[int, object]) -> None:
     """Execute ``plan`` in topo order, writing into ``results`` in place."""
     from .executor import _run_node   # local import to avoid a cycle

@@ -95,6 +95,9 @@ class ClusterSim:
         seed: int = 0,
         fuse: FuseSpec = "off",
         dispatch_overhead: float = 0.0,
+        driver_kill: Optional[float] = None,
+        driver_dead_workers: Optional[List[int]] = None,
+        driver_resume_latency: float = 1.0,
     ) -> None:
         graph.validate()
         # fused execution model: the sim runs over the SAME cluster-level
@@ -121,6 +124,15 @@ class ClusterSim:
             raise ValueError(policy)
         self.policy = policy
         self._jitter = {tid: self.rng.random() for tid in graph.nodes}
+        # driver-outage model (mirrors ClusterExecutor checkpoint/resume):
+        # at ``driver_kill`` the driver stops dispatching; workers in
+        # ``driver_dead_workers`` die with it; everyone else keeps running
+        # what they hold and buffers completions.  ``driver_resume_latency``
+        # later the restarted driver re-adopts survivors, reconciles the
+        # buffered work, and recovers every confirmed loss in ONE pass.
+        self.driver_kill = driver_kill
+        self.driver_dead_workers = list(driver_dead_workers or [])
+        self.driver_resume_latency = driver_resume_latency
 
     # priority of a ready task (lower = sooner)
     def _prio(self, tid: int) -> Tuple:
@@ -157,6 +169,11 @@ class ClusterSim:
 
         for e in self.events:
             push(e.time, e.kind, (e.worker, e.factor))
+        driver_down = False
+        if self.driver_kill is not None:
+            push(self.driver_kill, "driver_kill", ())
+            push(self.driver_kill + self.driver_resume_latency,
+                 "driver_resume", ())
 
         def ready_p(tid: int) -> bool:
             # NB: inflight values are sets that may be empty after a
@@ -194,6 +211,9 @@ class ClusterSim:
             push(now + dur, "finish", (w, tid, epoch))
 
         def try_acquire(w: int, now: float) -> bool:
+            if driver_down:
+                return False    # no driver, no dispatch: survivors finish
+                # what they hold and idle until re-adoption
             if w in running or w not in alive:
                 return False
             # 1. own deque (LIFO — classic work-stealing owner end)
@@ -347,6 +367,23 @@ class ClusterSim:
                 if w in self.speed:
                     self.speed[w] *= factor
                     res.timeline.append((now, f"slow w{w} ×{factor}"))
+            elif kind == "driver_kill":
+                driver_down = True
+                res.timeline.append((now, "driver killed"))
+                # workers that die WITH the driver are confirmed losses at
+                # resume — one handle_failure each folds into the single
+                # reconciliation pass (their requeued work sits in the
+                # central queue until dispatch unblocks)
+                for w in self.driver_dead_workers:
+                    if w in alive:
+                        handle_failure(w, now)
+                        res.timeline.append((now, f"fail w{w} (outage)"))
+            elif kind == "driver_resume":
+                driver_down = False
+                res.timeline.append((now, "driver resumed"))
+                for v in list(alive):
+                    if v not in running:
+                        try_acquire(v, now)
 
         if pending:
             n_ready = sum(1 for t in pending if ready_p(t))

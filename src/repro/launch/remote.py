@@ -33,6 +33,7 @@ import multiprocessing as mp
 import sys
 from typing import List, Optional
 
+from repro.cluster import serde
 from repro.cluster.channel import ChannelClosed
 from repro.cluster.worker import tcp_worker_main
 
@@ -71,6 +72,13 @@ def main(argv: Optional[List[str]] = None) -> int:
         ap.error(f"--connect must be HOST:PORT, got {args.connect!r}")
     if args.n < 1:
         ap.error("--n must be >= 1")
+    # Startup residue sweep: a worker SIGKILL'd on this host never ran its
+    # shutdown sweep, so its dead run's rr* segments leak in /dev/shm.
+    # Scoped to runs whose driver pid is gone — never a live run's.
+    swept = serde.sweep_stale_segments()
+    if swept:
+        print(f"repro-worker: swept {swept} stale shm segment(s) from "
+              "dead runs", flush=True)
     if args.n == 1:
         return _serve_one(args.connect, args.token, args.timeout)
     # one OS process per worker: each dials, handshakes, and serves its own

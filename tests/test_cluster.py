@@ -238,3 +238,119 @@ def test_future_carries_error():
     assert isinstance(f.exception(timeout=60), TaskFailed)
     with pytest.raises(TaskFailed):
         f.result(1)
+
+
+# ------------------------------------------------------- driver restart
+
+def _ckpt_run(tmp_path, g, kill_after, workers=3, **kw):
+    """Run until the emulated driver SIGKILL fires; return the run id."""
+    from repro.cluster import DriverKilled
+    ex = ClusterExecutor(workers, checkpoint_dir=str(tmp_path),
+                         checkpoint_interval=0.0, fail_driver=kill_after,
+                         **kw)
+    with pytest.raises(DriverKilled):
+        ex.run(g)
+    assert ex.run_id
+    return ex.run_id
+
+
+def test_driver_kill_then_resume_matches_oracle(tmp_path):
+    """Tentpole acceptance (pipe channel): kill the driver mid-run, resume
+    a NEW executor from the run log, results bit-identical to the oracle
+    with bounded recomputation — at most one driver-outage recovery pass,
+    and its plan is exactly what lineage says the checkpoint was missing."""
+    g = exec_dag(77, 200, 0.25)
+    seq = execute_sequential(g)
+    run_id = _ckpt_run(tmp_path, g, kill_after=25)
+
+    ex2 = ClusterExecutor(3, checkpoint_dir=str(tmp_path), resume=run_id)
+    assert ex2.run(g) == seq
+    assert ex2.stats["resumed_clusters"] > 0
+    outage = [e for e in ex2.recovery_events if e["worker"] == "driver-outage"]
+    assert len(outage) <= 1
+    for ev in outage:
+        assert ev["plan"] == recovery_plan(g, ev["needed"], ev["available"])
+
+
+def test_driver_kill_resume_with_fusion_and_gc(tmp_path):
+    """Same drill with fused clusters + outputs_only GC: the log's redo /
+    gc / live records must reconcile (a resumed run may have to recompute
+    THROUGH values the first incarnation legitimately dropped)."""
+    g = exec_dag(88, 180, 0.25)
+    seq = execute_sequential(g)
+    run_id = _ckpt_run(tmp_path, g, kill_after=12, fuse="auto",
+                       outputs_only=True)
+    ex2 = ClusterExecutor(3, checkpoint_dir=str(tmp_path), resume=run_id,
+                          fuse="auto", outputs_only=True)
+    got = ex2.run(g)
+    assert got == {t: seq[t] for t in got}
+    assert set(g.outputs) <= set(got)
+
+
+def test_resume_validates_graph_fingerprint(tmp_path):
+    g = exec_dag(5, 60, 0.3)
+    run_id = _ckpt_run(tmp_path, g, kill_after=5)
+    other = exec_dag(6, 61, 0.3)            # different shape, same fuse
+    ex2 = ClusterExecutor(3, checkpoint_dir=str(tmp_path), resume=run_id)
+    with pytest.raises(ValueError, match="does not match the interrupted"):
+        ex2.run(other)
+
+
+def test_resume_requires_checkpoint_dir_and_fail_driver_validates():
+    with pytest.raises(ValueError):
+        ClusterExecutor(2, resume="abc123")
+    with pytest.raises(ValueError):
+        ClusterExecutor(2, checkpoint_dir="/tmp", fail_driver=0)
+
+
+def test_fresh_run_with_checkpointing_is_bit_identical(tmp_path):
+    """Checkpointing on, no crash: the log must be write-only overhead —
+    same results, no recomputation, and the log replays to a complete
+    claim set (every cluster claimed done, nothing left dropped)."""
+    from repro.checkpoint.runlog import load_run
+    import os
+    g = exec_dag(9, 120, 0.3)
+    ex = ClusterExecutor(3, checkpoint_dir=str(tmp_path),
+                         checkpoint_interval=0.0)
+    assert ex.run(g) == execute_sequential(g)
+    assert ex.stats["recomputed"] == 0
+    st_ = load_run(os.path.join(str(tmp_path), f"{ex.run_id}.log"))
+    claimed = {t for _, sizes in st_.done.values() for t in sizes}
+    assert claimed | st_.dropped >= set(g.nodes)
+
+
+def test_sim_driver_kill_deterministic_and_counts_outage_deaths():
+    """64-worker what-if: a driver outage that also takes 2 workers down.
+    The model must be deterministic (same seed, same makespan/recompute)
+    and charge exactly the outage deaths as failures."""
+    from repro.core.simulator import ClusterSim
+    from test_scheduler import random_dag
+    g = random_dag(11, 400, 0.2)
+    kw = dict(driver_kill=g.total_work() / 200, driver_dead_workers=[1, 2],
+              driver_resume_latency=2.0, seed=7)
+    a = ClusterSim(g, 64, **kw).run()
+    b = ClusterSim(g, 64, **kw).run()
+    assert a.makespan == b.makespan and a.n_recomputed == b.n_recomputed
+    assert a.n_failures == 2
+    marks = [m for _, m in a.timeline]
+    assert "driver killed" in marks and "driver resumed" in marks
+    assert sum("(outage)" in m for m in marks) == 2
+    # the outage must cost wall-clock: no-kill baseline is strictly faster
+    base = ClusterSim(g, 64, seed=7).run()
+    assert a.makespan > base.makespan
+
+
+def test_resume_with_torn_checkpoint_tail_replays_via_lineage(tmp_path):
+    """A SIGKILL mid-fsync leaves a torn final record: the resume loader
+    truncates it and the claims it lost are simply recomputed — a
+    performance cost, never a correctness one."""
+    import os
+    g = exec_dag(44, 160, 0.25)
+    seq = execute_sequential(g)
+    run_id = _ckpt_run(tmp_path, g, kill_after=30)
+    path = os.path.join(str(tmp_path), f"{run_id}.log")
+    with open(path, "ab") as f:         # torn tail: short length prefix
+        f.write(b"\x00\x00\x01")
+    ex2 = ClusterExecutor(3, checkpoint_dir=str(tmp_path), resume=run_id)
+    assert ex2.run(g) == seq
+    assert ex2.stats["resumed_clusters"] > 0

@@ -569,3 +569,145 @@ def test_objectstore_tracks_hosts():
     assert store.on_host(0, "B")
     store.drop_worker(0)
     assert not store.on_host(0, "A") and store.on_host(0, "B")
+
+
+# ------------------------------------------------ driver restart (tentpole)
+
+def test_tcp_driver_kill_workers_rejoin_and_resume(tmp_path):
+    """Tentpole acceptance over TCP: emulate a driver SIGKILL (raw socket
+    teardown, no shutdown niceties), start a NEW executor resuming the
+    run — every forked worker survives the outage, re-dials the rebound
+    address, and is re-adopted with its object store intact, so the resume
+    needs no fresh spawns, no deaths, and no recomputation."""
+    from repro.cluster import DriverKilled
+    g = exec_dag(31, 150, 0.25, sleep=0.002)
+    seq = execute_sequential(exec_dag(31, 150, 0.25))
+    ex = ClusterExecutor(3, channel="tcp", checkpoint_dir=str(tmp_path),
+                         checkpoint_interval=0.0, fail_driver=40)
+    with pytest.raises(DriverKilled):
+        ex.run(g)
+    assert ex.run_id
+
+    t0 = time.monotonic()
+    ex2 = ClusterExecutor(3, channel="tcp", checkpoint_dir=str(tmp_path),
+                          resume=ex.run_id, rejoin_timeout=8.0)
+    try:
+        assert ex2.run(g) == seq
+        wall = time.monotonic() - t0
+        assert ex2.stats["joins"] == 0 and ex2.stats["failures"] == 0
+        assert ex2.stats["resumed_clusters"] > 0
+        assert ex2.stats["recomputed"] == 0     # worker stores survived
+        # regression: every survivor must rejoin PROMPTLY.  Fork children
+        # used to inherit the driver-side accepted sockets of earlier
+        # workers, keeping those connections alive past the driver's death
+        # — the peers never saw EOF and sat out the whole rejoin window
+        assert wall < 6.0, f"rejoin barrier stalled: {wall:.1f}s"
+    finally:
+        ex2.close()
+
+
+def test_tcp_resume_worker_lost_in_outage_single_recovery_plan(tmp_path):
+    """A worker SIGKILL'd DURING the driver outage: the resumed driver
+    reconciles checkpoint claims against rejoin inventories and issues
+    exactly ONE recovery plan for the loss (never a second when the
+    heartbeat also notices), then backfills the pool to spec."""
+    from repro.cluster import DriverKilled
+    g = picklable_dag(13, 100, 0.3)
+    seq = execute_sequential(g)
+    ex = ClusterExecutor(workers=["remote", "remote"],
+                         checkpoint_dir=str(tmp_path),
+                         checkpoint_interval=0.0, fail_driver=30,
+                         accept_timeout=30.0)
+    procs = [start_repro_worker(ex.address) for _ in range(2)]
+    try:
+        with pytest.raises(DriverKilled):
+            ex.run(g)
+        procs[0].kill()                 # dies while no driver is watching
+        procs[0].wait(timeout=10)
+
+        ex2 = ClusterExecutor(workers=["remote", "remote"],
+                              checkpoint_dir=str(tmp_path),
+                              resume=ex.run_id, rejoin_timeout=4.0)
+        try:
+            assert ex2.run(g) == seq
+            outage = [e for e in ex2.recovery_events
+                      if e["worker"] == "driver-outage"]
+            assert len(ex2.recovery_events) == len(outage) <= 1
+        finally:
+            ex2.close()
+    finally:
+        for p in procs:
+            if p.poll() is None:
+                p.kill()
+                p.wait(timeout=10)
+
+
+def test_repro_driver_real_sigkill_then_resume_latest(tmp_path):
+    """The real thing, end to end: a ``repro-driver`` subprocess is
+    SIGKILL'd mid-run (no emulation — the OS reaps it), its fork-started
+    workers keep running, and a second ``repro-driver --resume latest``
+    rebinds the address, re-adopts them, and finishes bit-for-bit."""
+    ckpt = str(tmp_path)
+    base = [sys.executable, "-m", "repro.launch.driver",
+            "--graph", "test_multihost:_dk_slow_graph",
+            "--workers", "2", "--checkpoint-dir", ckpt,
+            "--checkpoint-interval", "0.05",
+            "--out", os.path.join(ckpt, "out.pkl")]
+    p = subprocess.Popen(base, env=WORKER_ENV, cwd=REPO,
+                         stdout=subprocess.PIPE, text=True)
+    try:
+        assert "listening" in p.stdout.readline()
+        deadline = time.monotonic() + 60
+        while time.monotonic() < deadline:
+            logs = glob.glob(os.path.join(ckpt, "*.log"))
+            if logs and os.path.getsize(logs[0]) > 600:
+                break
+            time.sleep(0.01)
+            assert p.poll() is None, "driver finished before the kill"
+        p.send_signal(signal.SIGKILL)
+        assert p.wait(timeout=30) != 0
+    finally:
+        if p.poll() is None:
+            p.kill()
+
+    r = subprocess.run(base + ["--resume", "latest"], env=WORKER_ENV,
+                       cwd=REPO, capture_output=True, text=True,
+                       timeout=120)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "resuming" in r.stdout
+    with open(os.path.join(ckpt, "out.pkl"), "rb") as f:
+        got = pickle.load(f)
+    assert results_equal(got, execute_sequential(picklable_dag(9, 80, 0.3)))
+
+
+def _dk_slow_graph():
+    """Graph builder the driver-kill drill passes to ``repro-driver``:
+    slow enough that the SIGKILL reliably lands mid-run."""
+    return picklable_dag(9, 80, 0.3, slow=True)
+
+
+# ----------------------------------------------------- stale-segment sweep
+
+def test_sweep_stale_segments_scoped_to_dead_owners(tmp_path):
+    """``repro-worker`` startup sweep: removes ``rr*`` segments whose
+    embedded driver pid is dead, keeps live-owner segments and anything
+    it cannot attribute."""
+    d = str(tmp_path)
+    dead = subprocess.Popen([sys.executable, "-c", "pass"])
+    dead.wait()
+    live_pid, dead_pid = os.getpid(), dead.pid
+    names = {
+        "stale_worker": f"rr{dead_pid:x}0123abcdw3_7",
+        "stale_driver": f"rr{dead_pid:x}0123abcdd_0",
+        "stale_bare": f"rr{dead_pid:x}0123abcd",
+        "live": f"rr{live_pid:x}0123abcdw0_1",
+        "unparseable": "rrnothexatallw0_1",
+        "foreign": "somethingelse.bin",
+    }
+    for n in names.values():
+        with open(os.path.join(d, n), "wb") as f:
+            f.write(b"x")
+    assert serde.sweep_stale_segments(d) == 3
+    left = set(os.listdir(d))
+    assert left == {names["live"], names["unparseable"], names["foreign"]}
+    assert serde.sweep_stale_segments(d) == 0       # idempotent

@@ -247,3 +247,49 @@ def test_speculate_after_validation():
         ClusterExecutor(2, speculate_after=0.0)
     with pytest.raises(ValueError):
         ClusterExecutor(2, speculate_after=-1.5)
+
+
+# -------------------------------------------- cooperative mid-task cancel
+
+def _append_marker(x, _p=None):
+    with open(_p, "ab") as f:       # one byte per execution
+        f.write(b"x")
+    return (x * 7 + 5) % 1_000_003
+
+
+def test_cancel_aborts_fused_loser_at_member_boundary(tmp_path):
+    """A speculation loser running a FUSED chain honors the cancel between
+    members: the original straggles inside the first member, the twin wins
+    the whole chain, and the loser aborts at the boundary — the tail
+    member never executes a second time (counted via an append-only
+    side-channel) and the abandoned partial wall is charged to
+    ``speculative_wasted_s``."""
+    from functools import partial
+    marker = os.path.join(str(tmp_path), "tail-runs")
+
+    g = TaskGraph()
+    calib = add_sleep_task(g, "calib", (), 0.1, 1)
+    strag = add_straggler(g, "strag", (), str(tmp_path), 2.5, 0.05, 2)
+    from repro.core.tracing import RemappedRef
+    tail = g.add_node("tail", partial(_append_marker, _p=marker),
+                      (RemappedRef(strag),), {}, TaskKind.PURE,
+                      deps=[strag], cost=1.0)
+    for j in range(4):              # fan-out: keeps strag+tail a pair
+        add_sleep_task(g, f"c{j}", (calib, tail), 0.05, 10 + j)
+    g.mark_output(6)
+    seq = execute_sequential(g)     # consumes the sentinel + marker...
+    os.unlink(os.path.join(str(tmp_path), "straggler-strag"))  # ...reset
+    os.unlink(marker)
+
+    ex = ClusterExecutor(2, fuse="auto", speculate_after=2.0,
+                         progress_timeout=60.0)
+    got = ex.run(g)
+    ex.close()
+    assert got == seq
+    assert ex.stats["tasks_fused"] >= 1         # the chain really fused
+    assert ex.stats["n_speculative"] >= 1, spec_stats(ex)
+    assert ex.stats["speculative_wins"] >= 1, spec_stats(ex)
+    # the loser aborted before its tail member: exactly one execution
+    # (the winner's) wrote the marker
+    assert os.path.getsize(marker) == 1
+    assert ex.stats["speculative_wasted_s"] > 0.0, spec_stats(ex)
