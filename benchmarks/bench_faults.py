@@ -1,0 +1,219 @@
+"""Chaos benchmark: the loss/delay/partition matrix under fault injection.
+
+Every cell runs the same shuffle workload through a seeded
+:class:`repro.faults.FaultPlan` — frame loss (keepalives), frame delay,
+duplication + reordering, a timed partition (sever), and a flaky data
+plane (injected ``TransferLost`` on peer fetches) — per control channel
+(``pipe`` and ``tcp``), and asserts the result stays **bit-for-bit equal
+to** ``execute_sequential``.  The interesting number per cell is not the
+wall clock but what the policy layer did: suspicion episodes healed
+without recompute, driver-relay fallbacks that saved a lineage replay,
+and the retry counts the :class:`repro.faults.RetryPolicy` absorbed.
+
+Writes ``BENCH_faults.json`` at the repo root.
+
+``--smoke`` is the CI chaos gate: a fixed-seed plan combining every fault
+class against a 50-node graph on the TCP channel, asserted bit-for-bit.
+
+``--soak`` is the nightly randomized gate: same matrix, but the plan seed
+comes from the clock (or ``--seed``) and is **printed first** — a chaos
+failure is reproduced by re-running with the logged seed.
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.bench_faults
+        [--nodes 120] [--workers 3] [--reps 1] [--seed 7]
+        [--smoke | --soak]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import random
+import sys
+import time
+from typing import Any, Dict, List, Optional
+
+from repro.core import TaskGraph, TaskKind, execute_sequential
+from repro.core.tracing import RemappedRef as _Ref
+from repro.cluster import ClusterExecutor
+from repro.faults import FaultPlan, RetryPolicy
+
+from .common import median
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_faults.json")
+
+#: policy counters worth reporting per cell
+POLICY_STATS = ("suspected", "healed", "quarantined", "readmitted",
+                "relay_fallbacks", "deplosts", "recomputed", "failures")
+
+
+def build_graph(nodes: int, seed: int, payload: int = 512) -> TaskGraph:
+    """Arithmetic shuffle with byte payloads large enough to ride the
+    data plane (the bench runs with a small ``shm_threshold``), so fetch
+    faults have transfers to hit."""
+    rng = random.Random(seed)
+    g = TaskGraph()
+    producers = max(3, nodes // 8)
+    for i in range(producers):
+        def produce(_i=i, _n=payload):
+            return bytes((_i * 37 + k) % 251 for k in range(_n))
+        g.add_node(f"p{i}", produce, (), {}, TaskKind.PURE,
+                   deps=(), cost=1.0)
+    for i in range(producers, nodes - 1):
+        lo = max(0, i - 2 * producers)
+        deps = sorted(rng.sample(range(lo, i), k=min(2, i - lo)))
+
+        def mix(*xs, _i=i):
+            acc = 0
+            for x in xs:
+                acc = (acc * 31 + (sum(x) if isinstance(x, bytes) else x)) \
+                    % 1_000_003
+            return (acc + _i) % 1_000_003
+
+        g.add_node(f"t{i}", mix, tuple(_Ref(d) for d in deps), {},
+                   TaskKind.PURE, deps=deps, cost=rng.uniform(0.1, 1.0))
+    rdeps = list(range(max(0, nodes - 9), nodes - 1))
+
+    def reduce_all(*xs):
+        return sum(int(x) if not isinstance(x, bytes) else sum(x)
+                   for x in xs)
+
+    g.add_node("reduce", reduce_all, tuple(_Ref(d) for d in rdeps), {},
+               TaskKind.PURE, deps=rdeps, cost=1.0)
+    g.mark_output(nodes - 1)
+    return g
+
+
+def matrix_plans(seed: int) -> Dict[str, Optional[FaultPlan]]:
+    """The loss/delay/partition matrix, one fresh plan per call (plans
+    carry firing counters, so cells never share an instance).  ``drop``
+    is scoped to keepalives: control verbs ride TCP's reliable-or-dead
+    contract, and dropping them would model a fault TCP cannot produce."""
+    return {
+        "clean": None,
+        "loss": FaultPlan(seed=seed).drop(verb="hb", prob=0.5),
+        "delay": FaultPlan(seed=seed + 1).delay(0.02, prob=0.3),
+        "dup_reorder": (FaultPlan(seed=seed + 2)
+                        .duplicate(prob=0.25).reorder(prob=0.25)),
+        "partition": (FaultPlan(seed=seed + 3)
+                      .sever(window=0.8, src=1, verb="done", nth=2)),
+        "fetch_flake": FaultPlan(seed=seed + 4).fail_fetch(prob=0.6),
+        "everything": (FaultPlan(seed=seed + 5)
+                       .drop(verb="hb", prob=0.4)
+                       .delay(0.01, prob=0.2)
+                       .duplicate(prob=0.2)
+                       .reorder(prob=0.2)
+                       .sever(window=0.5, src=1, verb="done", nth=3)
+                       .fail_fetch(prob=0.4)),
+    }
+
+
+def run_cell(channel: str, fault: str, plan: Optional[FaultPlan],
+             args) -> Dict[str, Any]:
+    g = build_graph(args.nodes, args.seed)
+    seq = execute_sequential(g)
+    walls: List[float] = []
+    stats: Dict[str, Any] = {}
+    for _ in range(args.reps):
+        kw: Dict[str, Any] = dict(
+            fault_plan=plan, transport="sock", shm_threshold=128,
+            fetch_retry=RetryPolicy(attempts=3, base_delay=0.01,
+                                    jitter=0.5),
+            progress_timeout=120.0)
+        if channel == "tcp":
+            kw.update(channel="tcp", heartbeat_interval=0.1,
+                      heartbeat_timeout=1.0, suspect_grace=5.0)
+        ex = ClusterExecutor(args.workers, **kw)
+        t0 = time.perf_counter()
+        got = ex.run(g)
+        walls.append(time.perf_counter() - t0)
+        assert got == seq, \
+            f"{channel}/{fault}: diverged from the sequential oracle"
+        stats = {k: ex.stats.get(k, 0) for k in POLICY_STATS}
+        ex.close()
+    row = {"channel": channel, "fault": fault,
+           "wall_s": round(median(walls), 4), **stats,
+           "injected": plan.stats() if plan is not None else {}}
+    print(f"  {channel:4s} {fault:12s} wall={row['wall_s']:7.3f}s "
+          + " ".join(f"{k}={stats[k]}" for k in POLICY_STATS
+                     if stats.get(k)), flush=True)
+    return row
+
+
+def smoke(args) -> None:
+    """CI chaos gate: fixed-seed everything-plan, 50-node graph, TCP
+    channel, bit-for-bit differential."""
+    g = build_graph(50, args.seed)
+    seq = execute_sequential(g)
+    plan = matrix_plans(args.seed)["everything"]
+    ex = ClusterExecutor(args.workers, channel="tcp", fault_plan=plan,
+                         transport="sock", shm_threshold=128,
+                         heartbeat_interval=0.1, heartbeat_timeout=1.0,
+                         suspect_grace=5.0,
+                         fetch_retry=RetryPolicy(attempts=3,
+                                                 base_delay=0.01),
+                         progress_timeout=120.0)
+    got = ex.run(g)
+    assert got == seq, "chaos smoke diverged from the sequential oracle"
+    injected = plan.stats()
+    assert injected, "chaos smoke injected nothing — plan mis-addressed?"
+    ex.close()
+    print(f"smoke: 50-node TCP chaos differential bit-for-bit "
+          f"(seed={args.seed}, injected={injected}, "
+          f"policy={{suspected: {ex.stats['suspected']}, healed: "
+          f"{ex.stats['healed']}, relay_fallbacks: "
+          f"{ex.stats['relay_fallbacks']}, recomputed: "
+          f"{ex.stats['recomputed']}}})", flush=True)
+
+
+def main(argv: Optional[List[str]] = None) -> Dict[str, Any]:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--nodes", type=int, default=120)
+    ap.add_argument("--workers", type=int, default=3)
+    ap.add_argument("--reps", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=None,
+                    help="fault-plan seed (default 7; --soak draws one "
+                         "from the clock and logs it)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI: fixed-seed 50-node TCP chaos differential")
+    ap.add_argument("--soak", action="store_true",
+                    help="nightly: randomized seed, logged for replay")
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args(argv if argv is not None else [])
+    if args.seed is None:
+        args.seed = int(time.time()) % 1_000_000 if args.soak else 7
+    # the replay contract: the seed is the first thing on stdout, so a
+    # failed nightly soak is reproduced with --seed <logged>
+    print(f"chaos {'soak' if args.soak else 'matrix'} seed={args.seed}",
+          flush=True)
+
+    if args.smoke:
+        if args.out == OUT_PATH:    # never clobber the headline artifact
+            args.out = OUT_PATH.replace(".json", "_smoke.json")
+        smoke(args)
+        return {}
+
+    rows: List[Dict[str, Any]] = []
+    for channel in ("pipe", "tcp"):
+        for fault, plan in matrix_plans(args.seed).items():
+            rows.append(run_cell(channel, fault, plan, args))
+
+    payload = {
+        "config": {"nodes": args.nodes, "workers": args.workers,
+                   "reps": args.reps, "seed": args.seed,
+                   "soak": args.soak},
+        "cells": rows,
+        "differential": "all cells bit-for-bit vs execute_sequential",
+    }
+    out = os.path.abspath(args.out)
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"wrote {out}", flush=True)
+    return payload
+
+
+if __name__ == "__main__":
+    sys.exit(0 if main(sys.argv[1:]) is not None else 1)

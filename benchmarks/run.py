@@ -22,6 +22,10 @@ Suites:
                dispatch (--fuse off), per control channel, bit-for-bit
                oracle + SIGKILL-recovery cross-checks; writes
                BENCH_fusion.json
+  faults     — chaos: the loss/delay/partition matrix under seeded fault
+               injection (FaultPlan), per control channel, every cell
+               bit-for-bit vs the sequential oracle; writes
+               BENCH_faults.json
 """
 from __future__ import annotations
 
@@ -31,7 +35,7 @@ import time
 
 from . import (matmul_scaling, scheduler_bench, fault_bench, roofline,
                bench_transfer, bench_multihost, bench_speculation,
-               bench_fusion)
+               bench_fusion, bench_faults)
 
 SUITES = {
     "matmul": matmul_scaling.main,
@@ -42,6 +46,7 @@ SUITES = {
     "multihost": bench_multihost.main,
     "speculation": bench_speculation.main,
     "fusion": bench_fusion.main,
+    "faults": bench_faults.main,
 }
 
 

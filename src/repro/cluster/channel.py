@@ -61,6 +61,7 @@ from __future__ import annotations
 import os
 import pickle
 import queue
+import random
 import socket
 import struct
 import threading
@@ -87,6 +88,23 @@ _MAX_FRAME = 1 << 34                 # 16 GiB sanity bound on one message
 class ChannelClosed(ConnectionError):
     """The peer is unreachable (EOF, reset, dead process, backpressure
     overflow).  The executor treats this exactly like a worker death."""
+
+
+class DialRejected(ChannelClosed):
+    """The driver answered the dial and said no (bad token, wrong
+    protocol, unshippable graph).  A *definitive* refusal — retrying the
+    same dial cannot succeed, so retry policies must let it propagate."""
+
+
+_SILENCE_PREFIX = "no heartbeat"
+
+
+def is_silence(reason: Optional[str]) -> bool:
+    """Classify a ``Channel.dead()`` verdict: silence-based verdicts
+    (missed heartbeats — the peer may be partitioned-but-alive) are
+    *suspicions* the executor grants a grace window; everything else
+    (process exit, EOF, send failure) is definitive death."""
+    return bool(reason) and reason.startswith(_SILENCE_PREFIX)
 
 
 def wrap_batch(msgs: List[tuple]) -> Optional[tuple]:
@@ -337,6 +355,7 @@ class TcpChannel:
     def __init__(self, sock: socket.socket, *,
                  heartbeat_interval: float = 2.0,
                  heartbeat_timeout: float = 10.0,
+                 heartbeat_jitter: float = 0.25,
                  outbox_size: int = 256,
                  send_timeout: float = 30.0,
                  proc=None) -> None:
@@ -345,6 +364,13 @@ class TcpChannel:
         # hooks use it; liveness does NOT — multi-host has no proc to ask)
         self.heartbeat_interval = heartbeat_interval
         self.heartbeat_timeout = heartbeat_timeout
+        # per-channel jittered beat: each peer's keepalives land at
+        # interval*(1-jitter)..interval, so a large pool's heartbeats
+        # de-phase instead of arriving as one synchronized burst (always
+        # early, never late — timeout margins are unchanged)
+        self.heartbeat_jitter = max(0.0, min(0.9, heartbeat_jitter))
+        self._hb_rng = random.Random()
+        self._hb_gap = self._jittered_gap()
         self.send_timeout = send_timeout
         self.last_seen = time.monotonic()
         self.said_goodbye = False
@@ -395,11 +421,16 @@ class TcpChannel:
         if wrapped is not None:
             self.send(wrapped)
 
+    def _jittered_gap(self) -> float:
+        return self.heartbeat_interval * \
+            (1.0 - self.heartbeat_jitter * self._hb_rng.random())
+
     def maybe_heartbeat(self) -> None:
         now = time.monotonic()
-        if now - self._last_hb < self.heartbeat_interval:
+        if now - self._last_hb < self._hb_gap:
             return
         self._last_hb = now
+        self._hb_gap = self._jittered_gap()
         try:
             self.send(("hb",))
         except ChannelClosed:
@@ -487,10 +518,12 @@ class WorkerTcpEndpoint:
 
     def __init__(self, sock: socket.socket, *,
                  heartbeat_interval: float = 2.0,
-                 heartbeat_timeout: float = 30.0) -> None:
+                 heartbeat_timeout: float = 30.0,
+                 heartbeat_jitter: float = 0.25) -> None:
         self.sock = sock
         self.heartbeat_interval = heartbeat_interval
         self.heartbeat_timeout = heartbeat_timeout
+        self.heartbeat_jitter = max(0.0, min(0.9, heartbeat_jitter))
         self.last_seen = time.monotonic()
         self._send_lock = threading.Lock()
         self._stop = threading.Event()
@@ -517,7 +550,17 @@ class WorkerTcpEndpoint:
                         "run_id": run_id, "wid": wid, "window": window}
 
     def _heartbeat_loop(self) -> None:
-        while not self._stop.wait(self.heartbeat_interval):
+        # random initial phase + per-beat jitter: N workers started by one
+        # launcher would otherwise beat in lockstep and hit the driver as
+        # one synchronized burst every interval.  Jitter only shortens the
+        # gap (interval*(1-j)..interval), so timeout margins are unchanged.
+        rng = random.Random()
+        if self.heartbeat_jitter > 0 \
+                and self._stop.wait(rng.random() * self.heartbeat_interval):
+            return
+        while not self._stop.wait(
+                self.heartbeat_interval *
+                (1.0 - self.heartbeat_jitter * rng.random())):
             try:
                 self.send(("hb",))
             except ChannelClosed:
@@ -692,8 +735,15 @@ class TcpListener:
                 raise ChannelClosed(
                     f"protocol version {info.get('version')} != "
                     f"{PROTOCOL_VERSION}")
-            if self.token is not None and info.get("token") != self.token:
-                raise ChannelClosed("bad token")
+            if self.token is not None:
+                # constant-time comparison, matching the peer data plane's
+                # capability check (serde.PeerServer): a plain `!=` leaks
+                # the shared token byte-by-byte through response timing
+                import hmac
+                tok = info.get("token")
+                if not (isinstance(tok, str) and hmac.compare_digest(
+                        tok.encode("utf-8"), self.token.encode("utf-8"))):
+                    raise ChannelClosed("bad token")
             try:
                 info["peer_ip"] = sock.getpeername()[0]
             except OSError:
@@ -801,7 +851,7 @@ def _dial_and_welcome(address: str, *, token: Optional[str],
             f"handshake with {address} failed: {e!r}") from (last_err or e)
     if reply and reply[0] == "reject":
         sock.close()
-        raise ChannelClosed(f"driver rejected worker: {reply[1]}")
+        raise DialRejected(f"driver rejected worker: {reply[1]}")
     if not (reply and reply[0] == "welcome" and len(reply) == 4):
         sock.close()
         raise ChannelClosed(f"unexpected handshake reply {reply!r}")
@@ -815,28 +865,47 @@ def dial_driver(address: str, *, token: Optional[str] = None,
                 retry_interval: float = 0.2,
                 heartbeat_interval: float = 2.0,
                 heartbeat_timeout: float = 30.0,
+                retry=None,
                 ) -> Tuple[WorkerTcpEndpoint, int, dict, Optional[bytes]]:
     """Worker half of the handshake: connect to ``address``, send hello,
     await the driver's welcome.
 
     Retries the connect until ``timeout`` (workers routinely start before
-    the driver binds).  Returns ``(endpoint, wid, config, graph_blob)`` —
-    ``graph_blob`` is the pickled ``(graph, inputs)`` pair for workers
-    that did not inherit the graph (``has_graph=False``), else ``None``.
+    the driver binds), and retries *handshake* failures — a dial the
+    driver accepted but whose welcome died mid-flight (restarting driver,
+    flaky link, injected accept fault) — under ``retry``
+    (a :class:`repro.faults.RetryPolicy`; default: 4 attempts with
+    exponential backoff inside ``timeout``).  A :class:`DialRejected`
+    (bad token, version skew) is definitive and never retried.  Returns
+    ``(endpoint, wid, config, graph_blob)`` — ``graph_blob`` is the
+    pickled ``(graph, inputs)`` pair for workers that did not inherit the
+    graph (``has_graph=False``), else ``None``.
 
     When the welcome config names a resumable run (``run_id``), the
     endpoint is armed to survive a driver outage: it re-dials ``address``
     with a ``rejoin`` hello instead of dying with the socket.
     """
-    sock, wid, config, graph_blob = _dial_and_welcome(
-        address, token=token, has_graph=has_graph, timeout=timeout,
-        retry_interval=retry_interval)
+    if retry is None:
+        from repro.faults.retry import RetryPolicy
+        retry = RetryPolicy(attempts=4, base_delay=0.2, factor=2.0,
+                            max_delay=2.0, deadline=timeout)
+
+    def attempt(_i: int):
+        return _dial_and_welcome(
+            address, token=token, has_graph=has_graph, timeout=timeout,
+            retry_interval=retry_interval)
+
+    sock, wid, config, graph_blob = retry.run(
+        attempt,
+        retryable=lambda e: isinstance(e, ChannelClosed)
+        and not isinstance(e, DialRejected))
     endpoint = WorkerTcpEndpoint(
         sock,
         heartbeat_interval=config.get("heartbeat_interval",
                                       heartbeat_interval),
         heartbeat_timeout=config.get("worker_heartbeat_timeout",
-                                     heartbeat_timeout))
+                                     heartbeat_timeout),
+        heartbeat_jitter=config.get("heartbeat_jitter", 0.25))
     if config.get("run_id"):
         endpoint.configure_rejoin(
             address=address, token=token, run_id=config["run_id"], wid=wid,

@@ -138,10 +138,12 @@ from repro.core.lineage import outage_recovery, recovery_plan_clusters
 from repro.core.scheduler import list_schedule, replan
 from repro.core.simulator import pick_speculation
 
+from repro.faults import FaultPlan, FaultyChannel, FaultyListener
+
 from . import serde
 from .channel import (CHANNELS, ChannelClosed, PipeChannel, SpawnChannel,
                       TcpChannel, TcpListener, _recv_frame, _send_frame,
-                      host_id, routable_ip)
+                      host_id, is_silence, routable_ip)
 from .futures import ClusterFuture
 from .objectstore import DriverObjectStore
 from .worker import pipe_worker_main, tcp_worker_main
@@ -263,6 +265,12 @@ class ClusterExecutor:
         rejoin_timeout: float = 10.0,
         rejoin_window: Optional[float] = None,
         fail_driver: Optional[int] = None,
+        fault_plan: Optional[FaultPlan] = None,
+        suspect_grace: float = 5.0,
+        quarantine_after: int = 3,
+        probe_interval: float = 2.0,
+        heartbeat_jitter: float = 0.25,
+        fetch_retry: Optional[Any] = None,
     ) -> None:
         if start_method not in ("fork", "spawn", "forkserver"):
             raise ValueError(f"unknown start_method {start_method!r}")
@@ -351,6 +359,26 @@ class ClusterExecutor:
         self.rejoin_timeout = rejoin_timeout
         self.rejoin_window = rejoin_window
         self.fail_driver = fail_driver
+        # -- failure-handling policy (see docs/faults.md) ---------------
+        # fault_plan: seeded injection plan; wraps every channel (and the
+        # listener) in Faulty* decorators and ships the plan to workers so
+        # their peer fetches are injectable too
+        self.fault_plan = fault_plan
+        # suspect_grace: seconds a silence-based (heartbeat) death verdict
+        # is held as a *suspicion* before lineage recovery runs — a
+        # partitioned-but-alive worker whose frames resume inside the
+        # window heals with zero recomputation.  0 restores kill-on-silence.
+        self.suspect_grace = max(0.0, suspect_grace)
+        # flakiness scoring: a worker that goes suspect-then-heals
+        # quarantine_after times is quarantined (no new dispatches, existing
+        # work drains) and probed: after probe_interval of verified-healthy
+        # channel it is re-admitted with its score halved
+        self.quarantine_after = max(1, quarantine_after)
+        self.probe_interval = max(0.0, probe_interval)
+        self.heartbeat_jitter = heartbeat_jitter
+        # fetch_retry: RetryPolicy workers apply to peer fetches (None =
+        # serde's built-in default)
+        self.fetch_retry = fetch_retry
         self.run_id: Optional[str] = None
         self.host = host_id()
         self.seg_prefix: Optional[str] = None    # last run's shm name prefix
@@ -374,6 +402,8 @@ class ClusterExecutor:
         if channel == "tcp":
             self.listener = TcpListener(connect or "127.0.0.1:0",
                                         token=token)
+            if fault_plan is not None:
+                self.listener = FaultyListener(self.listener, fault_plan)
             self.address = self.listener.address
 
     # ------------------------------------------------------------- frontend
@@ -471,6 +501,12 @@ class ClusterExecutor:
             "n_clusters": len(cg.nodes), "tasks_fused": plan.n_fused,
             "control_msgs": 0, "control_frames": 0,
             "dispatch_overhead_s": 0.0, "resumed_clusters": 0,
+            # failure-policy observability: suspicion episodes and their
+            # outcomes (healed vs escalated to death), driver-relay
+            # degradations that saved a recompute, and the quarantine
+            # round-trip counters
+            "suspected": 0, "healed": 0, "relay_fallbacks": 0,
+            "quarantined": 0, "readmitted": 0, "deplosts": 0,
         }
         self.recovery_events = []
         self.speculation_events = []
@@ -517,6 +553,19 @@ class ClusterExecutor:
             else:
                 runlog.append("resume", {"seg_prefix": seg_prefix})
             runlog.flush()
+            # resume lease: tells a repro-worker's startup sweep that this
+            # run's shm segments are (or may soon be) owned by a live or
+            # resumable driver — even when the recorded driver pid is dead
+            # (a SIGKILL'd driver inside its rejoin window).  The lease is
+            # refreshed from the main loop and cleared on clean shutdown;
+            # old incarnations' prefixes are re-leased because their
+            # surviving segments are this run's recovery inputs.
+            lease_window = (self.rejoin_window
+                            if self.rejoin_window is not None
+                            else max(60.0, self.progress_timeout))
+            for p in [seg_prefix] + old_prefixes:
+                serde.write_resume_lease(p, run_id, lease_window)
+            last_lease = time.monotonic()
 
         store = DriverObjectStore(graph, plan=plan)
         workers: Dict[int, _Worker] = {}
@@ -565,7 +614,22 @@ class ClusterExecutor:
                 "rejoin_window": (self.rejoin_window
                                   if self.rejoin_window is not None
                                   else max(60.0, self.progress_timeout)),
+                "heartbeat_jitter": self.heartbeat_jitter,
+                # data-plane fault injection + retry policy travel in the
+                # welcome so every worker (forked, spawned, remote) applies
+                # the same seeded plan to its peer fetches
+                "fault_plan": self.fault_plan,
+                "fetch_retry": self.fetch_retry,
             }
+
+        def wrap_chan(chan: Any, wid: int) -> Any:
+            """Decorate a driver-side channel with the run's fault plan
+            (identity when no plan is armed).  The handshake itself stays
+            raw — injection begins once the worker is adopted."""
+            if self.fault_plan is None:
+                return chan
+            return FaultyChannel(chan, self.fault_plan, wid,
+                                 silence_timeout=self.heartbeat_timeout)
 
         def ship_graph() -> bytes:
             if graph_blob[0] is None:
@@ -620,6 +684,7 @@ class ClusterExecutor:
             chan = TcpChannel(sock,
                               heartbeat_interval=self.heartbeat_interval,
                               heartbeat_timeout=self.heartbeat_timeout,
+                              heartbeat_jitter=self.heartbeat_jitter,
                               proc=proc)
             wid = next_wid
             next_wid += 1
@@ -629,7 +694,7 @@ class ClusterExecutor:
                 chan.close()
                 raise TimeoutError(f"worker dial died during welcome: "
                                    f"{e}") from e
-            w = _Worker(wid, chan, worker_host, proc=proc)
+            w = _Worker(wid, wrap_chan(chan, wid), worker_host, proc=proc)
             workers[wid] = w
             store.add_worker(wid, host=worker_host)
             if runlog is not None:
@@ -712,12 +777,14 @@ class ClusterExecutor:
             proc = ctx.Process(target=pipe_worker_main,
                                args=(wid, child, graph, inputs, transport,
                                      self.shm_threshold, seg_prefix,
-                                     peer_dir, fusion_view),
+                                     peer_dir, fusion_view,
+                                     self.fault_plan, self.fetch_retry),
                                daemon=True, name=f"cluster-worker-{wid}")
             proc.start()
             child.close()
             cls = PipeChannel if self.channel == "pipe" else SpawnChannel
-            w = _Worker(wid, cls(parent, proc), self.host, proc=proc)
+            w = _Worker(wid, wrap_chan(cls(parent, proc), wid),
+                        self.host, proc=proc)
             workers[wid] = w
             store.add_worker(wid, host=self.host)
             if runlog is not None:
@@ -758,6 +825,15 @@ class ClusterExecutor:
         # cid -> (wid, still-missing input value tids) for transfer-blocked
         waiting: Dict[int, Tuple[int, Set[int]]] = {}
         fetching: Dict[int, int] = {}    # value tid -> wid the fetch went to
+        # -- partition-aware liveness (docs/faults.md): a silence verdict
+        # is a SUSPICION first, a death only after suspect_grace ---------
+        suspects: Dict[int, float] = {}     # wid -> first-suspected time
+        flake_score: Dict[int, float] = {}  # wid -> suspect-then-heal count
+        quarantined: Dict[int, float] = {}  # wid -> healthy-since (probe t0)
+        # value tid -> inline handle: the driver-relay degradation for
+        # deps whose direct transfer exhausted its retries with the owner
+        # still alive (relayed, never recomputed)
+        relay_handles: Dict[int, serde.Handle] = {}
         # -- speculation state: a super-task may run on SEVERAL workers --
         runners: Dict[int, Set[int]] = {}         # cid -> wids running it now
         run_started: Dict[int, Dict[int, float]] = {}  # cid -> wid -> t_start
@@ -929,7 +1005,9 @@ class ClusterExecutor:
             for d in plan.ext_deps[cid]:
                 if store.has_replica(d, wid):
                     continue                   # already local
-                h = store.handles.get(d)
+                # a relayed value ships inline (driver transport): its
+                # direct handle already failed a consumer's full retry run
+                h = relay_handles.get(d) or store.handles.get(d)
                 if h is None and d in store.cache:
                     h = publish_cached(d)
                     if h is None:
@@ -1036,7 +1114,15 @@ class ClusterExecutor:
             if ow is None or ow not in workers:
                 return True
             home = workers[ow]
-            return not home.alive or home.load() >= self.pipeline_depth
+            return not dispatchable(home) \
+                or home.load() >= self.pipeline_depth
+
+        def dispatchable(w: _Worker) -> bool:
+            """No NEW work for a worker under suspicion (its channel is
+            silent — a dispatch would just park behind the partition) or in
+            quarantine (it drains existing work while being probed)."""
+            return (w.alive and w.wid not in suspects
+                    and w.wid not in quarantined)
 
         def dispatch() -> None:
             ready = [c for c, s in state.items() if s == READY]
@@ -1044,7 +1130,7 @@ class ClusterExecutor:
                 return
             ready.sort(key=lambda c: (-rank[c], c))
             for w in list(workers.values()):
-                if not w.alive:
+                if not dispatchable(w):
                     continue
                 while w.load() < self.pipeline_depth and ready:
                     # locality-aware choice: among this worker's planned
@@ -1074,6 +1160,7 @@ class ClusterExecutor:
                     post(workers[wid], ("drop", [tid]))
             store.invalidate({tid})     # also unlinks its shm segments
             store.mark_dropped(tid)     # late duplicate publishes: sweep
+            relay_handles.pop(tid, None)
             stats["dropped"] += 1
             if runlog is not None:
                 runlog.append("gc", [tid])
@@ -1239,6 +1326,8 @@ class ClusterExecutor:
             will_run = cplan | {c for c, s in state.items() if s != DONE}
             vals = {v for c in cplan for v in plan.members[c]}
             store.invalidate(vals)
+            for v in vals:      # a recomputed value gets a fresh handle
+                relay_handles.pop(v, None)
             store.reset_consumers(cplan, will_run)
             for c in cplan:
                 done.discard(c)
@@ -1278,6 +1367,9 @@ class ClusterExecutor:
             w.alive = False
             w.chan.close()
             w.outbox.clear()
+            suspects.pop(w.wid, None)
+            flake_score.pop(w.wid, None)
+            quarantined.pop(w.wid, None)
             stats["failures"] += 1
             if runlog is not None:
                 runlog.append("dead", w.wid)
@@ -1381,6 +1473,7 @@ class ClusterExecutor:
             and recover any input that is genuinely gone."""
             nonlocal last_progress
             last_progress = time.perf_counter()
+            stats["deplosts"] += 1
             w.inflight.discard(cid)
             runner_gone(cid, w.wid)
             if state.get(cid) == DONE:
@@ -1395,6 +1488,35 @@ class ClusterExecutor:
                    if state.get(plan.cluster_of[d]) == DONE
                    and not store.durable(d)
                    and alive_owner(d) is None}
+            # graceful degradation (docs/faults.md): a dep whose owner is
+            # STILL ALIVE reached us because the worker's peer-fetch retries
+            # exhausted (flaky data plane), not because the value is gone.
+            # The driver resolves the handle itself and relays it inline on
+            # the next dispatch — recompute stays reserved for real losses.
+            for d in deps:
+                if d in bad or d in relay_handles \
+                        or state.get(plan.cluster_of[d]) != DONE:
+                    continue
+                if d in store.cache:
+                    val = store.cache[d]
+                else:
+                    h = store.handles.get(d)
+                    if h is None:
+                        continue    # unpublished: re-dispatch re-fetches
+                    try:
+                        val = serde.resolve(h)
+                    except serde.TransferLost:
+                        if not store.durable(d) and alive_owner(d) is None:
+                            bad.add(d)      # driver can't reach it either
+                        continue
+                    store.cache_value(d, val)
+                try:
+                    relay_handles[d] = serde.encode(
+                        val, transport="driver",
+                        threshold=self.shm_threshold)
+                except Exception:   # noqa: BLE001 — unshippable inline:
+                    continue        # leave the direct path in place
+                stats["relay_fallbacks"] += 1
             if bad:
                 store.invalidate(bad)
                 recompute_lost(bad, bad, None)
@@ -1459,7 +1581,7 @@ class ClusterExecutor:
             if any(s == READY for s in state.values()):
                 return
             idle = [w for w in workers.values()
-                    if w.alive and w.load() == 0]
+                    if dispatchable(w) and w.load() == 0]
             if not idle:
                 return
             now = time.perf_counter()
@@ -1550,8 +1672,10 @@ class ClusterExecutor:
                      for w in workers.values() if w.alive}
             if not chans:
                 return
+            drained: Set[int] = set()
             for sel in conn_wait(list(chans), timeout=timeout):
                 w = chans[sel]
+                drained.add(w.wid)
                 try:
                     msgs = w.chan.recv_available()
                 except ChannelClosed:
@@ -1561,6 +1685,20 @@ class ClusterExecutor:
                 for msg in msgs:
                     if not w.alive:
                         break       # death handler ran under an earlier msg
+                    handle_msg(w, msg)
+            # a fault wrapper may hold parked frames whose release time
+            # passed with NO new wire bytes — conn_wait never reports those
+            # channels readable, so drain them explicitly
+            for w in list(workers.values()):
+                if not w.alive or w.wid in drained:
+                    continue
+                if not getattr(w.chan, "has_ready", lambda: False)():
+                    continue
+                msgs = w.chan.drain_ready()
+                stats["control_msgs"] += len(msgs)
+                for msg in msgs:
+                    if not w.alive:
+                        break
                     handle_msg(w, msg)
 
         def collect_finals() -> bool:
@@ -1639,13 +1777,56 @@ class ClusterExecutor:
                         # a bad joiner must never take down the run
 
         def check_deaths() -> None:
-            """Channel-based liveness: the OS truth for pipe workers
-            (``proc.is_alive``), missed heartbeats for TCP workers —
-            socket death delivers no SIGCHLD, so the *channel* is the
-            only witness."""
+            """Channel-based liveness, partition-aware (docs/faults.md).
+
+            A *definitive* verdict (process exit, EOF, send failure) is a
+            death, immediately.  A *silence* verdict (missed heartbeats)
+            is first a SUSPICION: the worker is taken out of the dispatch
+            rotation for up to ``suspect_grace`` seconds; if its frames
+            return inside the window it heals — its in-flight bookkeeping
+            was never torn down, so reconciliation is free and
+            ``recomputed`` stays 0.  Only an expired grace escalates to
+            the lineage-recovery death path.
+
+            Healing is scored: ``quarantine_after`` suspect-then-heal
+            episodes quarantine the worker (drain, no new dispatches), and
+            ``probe_interval`` of verified-healthy channel re-admits it
+            with its flakiness score halved."""
+            now = time.perf_counter()
             for w in list(workers.values()):
-                if w.alive and w.chan.dead() is not None:
-                    on_worker_death(w)
+                if not w.alive:
+                    continue
+                wid = w.wid
+                verdict = w.chan.dead()
+                if verdict is None:
+                    if wid in suspects:
+                        suspects.pop(wid)
+                        stats["healed"] += 1
+                        flake_score[wid] = flake_score.get(wid, 0.0) + 1.0
+                        if wid in quarantined:
+                            quarantined[wid] = now  # probe restarts
+                        elif flake_score[wid] >= self.quarantine_after \
+                                and any(x.alive and x.wid != wid
+                                        and x.wid not in quarantined
+                                        for x in workers.values()):
+                            # never quarantine the last usable worker
+                            quarantined[wid] = now
+                            stats["quarantined"] += 1
+                    elif wid in quarantined and \
+                            now - quarantined[wid] >= self.probe_interval:
+                        quarantined.pop(wid)
+                        flake_score[wid] = flake_score.get(wid, 0.0) / 2.0
+                        stats["readmitted"] += 1
+                    continue
+                if is_silence(verdict) and self.suspect_grace > 0:
+                    first = suspects.get(wid)
+                    if first is None:
+                        suspects[wid] = now
+                        stats["suspected"] += 1
+                        continue
+                    if now - first < self.suspect_grace:
+                        continue        # still inside the grace window
+                on_worker_death(w)
 
         # ------------------------------------------------------ driver resume
         # worker inventories reported at rejoin, parked until the frontier
@@ -1700,9 +1881,12 @@ class ClusterExecutor:
                     pass
                 return None
             inv = [(t, nb) for t, nb in first[2] if t in graph.nodes]
-            chan = TcpChannel(sock,
-                              heartbeat_interval=self.heartbeat_interval,
-                              heartbeat_timeout=self.heartbeat_timeout)
+            chan = wrap_chan(
+                TcpChannel(sock,
+                           heartbeat_interval=self.heartbeat_interval,
+                           heartbeat_timeout=self.heartbeat_timeout,
+                           heartbeat_jitter=self.heartbeat_jitter),
+                wid)
             old = workers.get(wid)
             if old is not None and old.alive:
                 # same worker process re-dialed under a live driver (socket
@@ -1712,6 +1896,10 @@ class ClusterExecutor:
                 old.chan.close()
                 old.chan = chan
                 w = old
+                if wid in suspects:     # the re-dial IS the heal signal
+                    suspects.pop(wid)
+                    stats["healed"] += 1
+                    flake_score[wid] = flake_score.get(wid, 0.0) + 1.0
             else:
                 # driver-restart rejoin (or a worker whose heartbeat loss
                 # was already recovered — its values are extra replicas
@@ -1859,6 +2047,10 @@ class ClusterExecutor:
                 pump(timeout=0.02)
                 if runlog is not None:
                     runlog.maybe_flush()
+                    if time.monotonic() - last_lease > 5.0:
+                        for p in [seg_prefix] + old_prefixes:
+                            serde.refresh_resume_lease(p)
+                        last_lease = time.monotonic()
                 if self.fail_driver is not None and not crashed \
                         and len(done) >= self.fail_driver:
                     # emulated kill -9: sockets and listener torn down raw,
@@ -1939,6 +2131,8 @@ class ClusterExecutor:
                 # recovery inputs and are dead weight now the run is over
                 if runlog is not None:
                     runlog.close()
+                    for p in [seg_prefix] + old_prefixes:
+                        serde.clear_resume_lease(p)
                 store.release_all()
                 serde.sweep_segments(seg_prefix)
                 for p in old_prefixes:

@@ -42,6 +42,7 @@ import socket
 import struct
 import sys
 import threading
+import time
 import uuid
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Union
@@ -62,7 +63,14 @@ class TransferLost(RuntimeError):
 
     This is a *recoverable* data-plane failure: the caller treats the value
     as lost and falls back to lineage recovery, exactly like a worker death.
+
+    ``retryable`` distinguishes transient failures (connect refused,
+    timeout, truncated stream — the owner may just be busy or the network
+    flaky) from definitive ones (the owner answered and said it no longer
+    holds the value): :func:`peer_fetch` retries only the former.
     """
+
+    retryable = True
 
 
 # --------------------------------------------------------------------- refs
@@ -339,9 +347,94 @@ def _segment_owner_pid(name: str) -> Optional[int]:
     if len(head) <= 8:
         return None
     try:
-        return int(head[:-8], 16)
+        pid = int(head[:-8], 16)
     except ValueError:
         return None
+    # kernel pid_max tops out at 2**22; anything bigger is a foreign file
+    # whose name happens to be hex, and os.kill(huge, 0) would raise
+    # OverflowError instead of answering the liveness question
+    return pid if 0 < pid < (1 << 22) else None
+
+
+# ------------------------------------------------------------ resume leases
+# A checkpointed run's segments must survive the driver's death for the
+# rejoin window — they are the resume's recovery inputs.  A dead driver
+# pid alone is therefore NOT license to sweep: the driver leaves a lease
+# file next to the segments (refreshed while it runs) and the startup
+# sweep honors any lease still inside its window.  Lease names start with
+# a dot so the run-prefix globs (``rr*``) never see them.
+_LEASE_PREFIX = ".rrlease-"
+#: slack added to a lease's window: covers the gap between the driver's
+#: last refresh and its death, plus resume/rejoin handshake time
+LEASE_MARGIN = 30.0
+
+
+def _lease_path(seg_prefix: str, shm_dir: Optional[str] = None) -> str:
+    return os.path.join(_SHM_DIR if shm_dir is None else shm_dir,
+                        _LEASE_PREFIX + seg_prefix)
+
+
+def write_resume_lease(seg_prefix: str, run_id: str, window: float,
+                       shm_dir: Optional[str] = None) -> Optional[str]:
+    """Declare ``seg_prefix`` resumable: segments under it stay protected
+    from the startup sweep until ``window + LEASE_MARGIN`` seconds after
+    the lease's last refresh.  Returns the lease path (None if the shm
+    dir does not exist — nothing to protect there)."""
+    path = _lease_path(seg_prefix, shm_dir)
+    try:
+        with open(path, "w") as f:
+            f.write(f"{run_id} {window:.1f}\n")
+        return path
+    except OSError:
+        return None
+
+
+def refresh_resume_lease(seg_prefix: str,
+                         shm_dir: Optional[str] = None) -> None:
+    """Bump the lease's clock (its mtime): the rejoin window counts from
+    the driver's *death*, which is unknowable in advance, so the live
+    driver keeps the lease fresh and the window effectively measures
+    silence since the last refresh."""
+    try:
+        os.utime(_lease_path(seg_prefix, shm_dir))
+    except OSError:
+        pass
+
+
+def clear_resume_lease(seg_prefix: str,
+                       shm_dir: Optional[str] = None) -> None:
+    """Clean shutdown: the run is over, its segments are swept, the lease
+    goes with them (idempotent)."""
+    try:
+        os.unlink(_lease_path(seg_prefix, shm_dir))
+    except OSError:
+        pass
+
+
+def _live_leases(shm_dir: str) -> List[str]:
+    """Prefixes under an unexpired lease; expired lease files are reaped
+    in passing."""
+    now = time.time()
+    live: List[str] = []
+    for path in glob.glob(os.path.join(shm_dir, _LEASE_PREFIX + "*")):
+        prefix = os.path.basename(path)[len(_LEASE_PREFIX):]
+        window = 60.0
+        try:
+            with open(path) as f:
+                parts = f.read().split()
+            if len(parts) >= 2:
+                window = float(parts[1])
+            mtime = os.stat(path).st_mtime
+        except (OSError, ValueError):
+            continue                    # unreadable: keep it, protect it
+        if now - mtime <= window + LEASE_MARGIN:
+            live.append(prefix)
+        else:
+            try:
+                os.unlink(path)         # expired: the run is not coming back
+            except OSError:
+                pass
+    return live
 
 
 def sweep_stale_segments(shm_dir: Optional[str] = None) -> int:
@@ -350,19 +443,32 @@ def sweep_stale_segments(shm_dir: Optional[str] = None) -> int:
     A SIGKILL'd worker (or an emulated-crash driver) never runs its
     shutdown sweep, so its run's segments leak in ``/dev/shm`` until the
     *next* ``repro-worker`` on the host starts and calls this.  Scoped
-    strictly to dead runs: a segment is removed only when its name parses
-    to a run prefix whose embedded driver pid no longer exists — an
-    unparseable name or a live (even recycled) pid keeps the segment.
+    strictly to dead, non-resumable runs, on two independent tests:
+
+    * **pid** — a segment is removed only when its name parses to a run
+      prefix whose embedded driver pid no longer exists (an unparseable
+      name or a live, even recycled, pid keeps the segment);
+    * **lease** — a dead pid whose run left an unexpired resume lease
+      (:func:`write_resume_lease`) is a *resumable* run inside its rejoin
+      window: its segments are the resume's recovery inputs and are kept.
+      This closes the race where a ``repro-worker`` starting on the
+      driver's host swept a just-killed checkpointed run's segments
+      moments before the resumed driver re-adopted them.
+
     Returns the number of segments unlinked.
     """
     shm_dir = _SHM_DIR if shm_dir is None else shm_dir
     if not os.path.isdir(shm_dir):
         return 0
+    leased = _live_leases(shm_dir)
     n = 0
     for path in glob.glob(os.path.join(shm_dir, "rr*")):
-        pid = _segment_owner_pid(os.path.basename(path))
+        name = os.path.basename(path)
+        pid = _segment_owner_pid(name)
         if pid is None or pid <= 0:
             continue
+        if any(name.startswith(p) for p in leased):
+            continue                    # resumable run inside its window
         try:
             os.kill(pid, 0)
             continue                    # owner alive: not ours to touch
@@ -634,10 +740,40 @@ def _peer_connect(addr: str, timeout: float) -> socket.socket:
     return sock
 
 
-def peer_fetch(ref: PeerRef, timeout: float = 30.0) -> Any:
-    """Pull ``ref.tid`` from the owning worker's socket (unix or TCP).  Any
-    failure is a :class:`TransferLost` — the owner died or dropped the
-    value."""
+# Process-local fault/retry configuration for the data plane.  Workers
+# install these from their run config (every worker process sets them at
+# startup — fork children must not inherit a stale hook from a previous
+# in-process run); the driver keeps the defaults unless a caller passes
+# an explicit policy.
+_FETCH_FAULT_HOOK: Optional[Callable[[PeerRef, int], None]] = None
+_DEFAULT_RETRY: Optional[Any] = None
+
+
+def set_fetch_fault(hook: Optional[Callable[[PeerRef, int], None]]) -> None:
+    """Install (or clear, with ``None``) the per-process fault-injection
+    hook: called as ``hook(ref, attempt)`` at the top of every peer-fetch
+    attempt.  May sleep (delay faults) or raise :class:`TransferLost`
+    (transfer failures) — see :meth:`repro.faults.FaultPlan.fetch_hook`."""
+    global _FETCH_FAULT_HOOK
+    _FETCH_FAULT_HOOK = hook
+
+
+def set_default_retry(policy: Optional[Any]) -> None:
+    """Set this process's default :class:`repro.faults.RetryPolicy` for
+    peer fetches (``None`` restores the built-in default)."""
+    global _DEFAULT_RETRY
+    _DEFAULT_RETRY = policy
+
+
+def default_retry() -> Any:
+    if _DEFAULT_RETRY is not None:
+        return _DEFAULT_RETRY
+    from repro.faults.retry import RetryPolicy
+    return RetryPolicy(attempts=3, base_delay=0.05, factor=2.0,
+                       max_delay=1.0)
+
+
+def _peer_fetch_once(ref: PeerRef, timeout: float) -> Any:
     try:
         with _peer_connect(ref.addr, timeout) as sock:
             sock.settimeout(timeout)
@@ -645,15 +781,19 @@ def peer_fetch(ref: PeerRef, timeout: float = 30.0) -> Any:
             if ref.addr.startswith("tcp://"):
                 secret = ref.secret.encode()
                 if len(secret) != _SECRET_LEN:
-                    raise TransferLost(
+                    e = TransferLost(
                         f"peer ref for task {ref.tid} carries no valid "
                         f"capability secret")
+                    e.retryable = False     # malformed ref: retry is futile
+                    raise e
                 request += secret
             sock.sendall(request)
             (n,) = _LEN.unpack(_recv_exact(sock, _LEN.size))
             if n < 0:
-                raise TransferLost(
+                e = TransferLost(
                     f"peer {ref.addr} no longer holds task {ref.tid}")
+                e.retryable = False     # a definitive answer, not a flake
+                raise e
             blob = _recv_exact(sock, n)
     except TransferLost:
         raise
@@ -669,6 +809,30 @@ def peer_fetch(ref: PeerRef, timeout: float = 30.0) -> Any:
         raise TransferLost(
             f"peer {ref.addr} sent a corrupt stream for task "
             f"{ref.tid}: {e!r}") from e
+
+
+def peer_fetch(ref: PeerRef, timeout: float = 30.0,
+               retry: Optional[Any] = None) -> Any:
+    """Pull ``ref.tid`` from the owning worker's socket (unix or TCP).
+
+    Transient failures (unreachable peer, timeout, truncated stream) are
+    retried under ``retry`` — default: this process's
+    :func:`set_default_retry` policy, else a small bounded backoff.
+    Definitive failures (the owner answered that it no longer holds the
+    value) surface immediately.  When retries exhaust, the failure is
+    still a :class:`TransferLost` — the caller degrades from there
+    (driver-relay fallback, then lineage recovery)."""
+    policy = retry if retry is not None else default_retry()
+
+    def attempt(i: int) -> Any:
+        if _FETCH_FAULT_HOOK is not None:
+            _FETCH_FAULT_HOOK(ref, i)
+        return _peer_fetch_once(ref, timeout)
+
+    return policy.run(
+        attempt,
+        retryable=lambda e: isinstance(e, TransferLost)
+        and getattr(e, "retryable", True))
 
 
 # ------------------------------------------------------------------- sizing

@@ -117,11 +117,14 @@ def pipe_worker_main(wid: int, conn, graph: TaskGraph,
                      shm_threshold: int = serde.SHM_THRESHOLD,
                      seg_prefix: str = "",
                      peer_dir: Optional[str] = None,
-                     fusion: Optional[WorkerFusionView] = None) -> None:
+                     fusion: Optional[WorkerFusionView] = None,
+                     fault_plan: Any = None,
+                     fetch_retry: Any = None) -> None:
     """Process entrypoint for pipe/spawn channel workers: wrap the raw
     duplex-pipe connection in the channel-agnostic endpoint and run."""
     worker_main(wid, WorkerPipeEndpoint(conn), graph, inputs, transport,
-                shm_threshold, seg_prefix, peer_dir, fusion=fusion)
+                shm_threshold, seg_prefix, peer_dir, fusion=fusion,
+                fault_plan=fault_plan, fetch_retry=fetch_retry)
 
 
 def worker_main(wid: int, chan, graph: TaskGraph,
@@ -131,7 +134,9 @@ def worker_main(wid: int, chan, graph: TaskGraph,
                 seg_prefix: str = "",
                 peer_dir: Optional[str] = None,
                 peer_host: str = "127.0.0.1",
-                fusion: Optional[WorkerFusionView] = None) -> None:
+                fusion: Optional[WorkerFusionView] = None,
+                fault_plan: Any = None,
+                fetch_retry: Any = None) -> None:
     """Worker body: reader thread + sender thread + compute loop, over any
     control channel ``chan`` (blocking ``recv``/``send`` endpoint).
 
@@ -152,6 +157,14 @@ def worker_main(wid: int, chan, graph: TaskGraph,
     import queue
     import threading
     import time
+
+    # data-plane fault injection + retry policy for THIS process's peer
+    # fetches (docs/faults.md).  Installed unconditionally: a forked worker
+    # inherits the parent's process-global serde state, so a run without a
+    # plan must actively clear whatever an earlier run installed.
+    serde.set_fetch_fault(fault_plan.fetch_hook(wid)
+                          if fault_plan is not None else None)
+    serde.set_default_retry(fetch_retry)
 
     store: Dict[int, Any] = {}
     published: Dict[int, serde.Handle] = {}     # memoized publish per tid
@@ -533,5 +546,7 @@ def tcp_worker_main(address: str, *,
                 seg_prefix=config.get("seg_prefix", ""),
                 peer_dir=config.get("peer_dir"),
                 peer_host=config.get("peer_host", "127.0.0.1"),
-                fusion=config.get("fusion"))
+                fusion=config.get("fusion"),
+                fault_plan=config.get("fault_plan"),
+                fetch_retry=config.get("fetch_retry"))
     return wid

@@ -86,6 +86,26 @@ def recovery_plan_clusters(
     return plan
 
 
+def phantom_recovery_cost(
+    fused_plan,
+    suspect_values: Iterable[int],
+    available: Set[int],
+) -> Set[int]:
+    """Clusters a *premature* death verdict would needlessly re-run.
+
+    A partitioned-but-alive worker's values are all still there — just
+    unreachable until the partition heals.  Declaring it dead anyway
+    treats ``suspect_values`` (everything whose only copy it holds) as
+    lost and replays their lineage.  This is the waste term the
+    executor's ``suspect_grace`` window exists to avoid, and the cost a
+    grace policy search (:func:`repro.core.simulator.search_suspect_grace`)
+    weighs against the idle time of waiting out a worker that really is
+    dead."""
+    suspect = set(suspect_values)
+    return recovery_plan_clusters(fused_plan, suspect,
+                                  set(available) - suspect)
+
+
 def outage_recovery(
     fused_plan,
     graph: TaskGraph,

@@ -55,9 +55,10 @@ def pick_speculation(running: Dict[int, Tuple[float, float]],
 class WorkerEvent:
     """Cluster dynamics injected into a run."""
     time: float
-    kind: str           # "fail" | "join" | "slow"
+    kind: str           # "fail" | "join" | "slow" | "partition"
     worker: int
-    factor: float = 1.0  # for "slow": multiply speed by this
+    factor: float = 1.0  # "slow": multiply speed by this;
+    #                      "partition": seconds the worker is unreachable
 
 
 @dataclasses.dataclass
@@ -67,6 +68,10 @@ class SimResult:
     n_recomputed: int = 0
     n_speculative: int = 0
     n_failures: int = 0
+    # partition / suspect-grace accounting ("partition" events):
+    n_suspected: int = 0     # partitions that opened on a live worker
+    n_healed: int = 0        # partitions outwaited inside suspect_grace
+    n_false_deaths: int = 0  # live workers declared dead by an expired grace
     speculated: Set[int] = dataclasses.field(default_factory=set)
     busy_time: Dict[int, float] = dataclasses.field(default_factory=dict)
     task_worker: Dict[int, int] = dataclasses.field(default_factory=dict)
@@ -98,6 +103,7 @@ class ClusterSim:
         driver_kill: Optional[float] = None,
         driver_dead_workers: Optional[List[int]] = None,
         driver_resume_latency: float = 1.0,
+        suspect_grace: float = 5.0,
     ) -> None:
         graph.validate()
         # fused execution model: the sim runs over the SAME cluster-level
@@ -133,6 +139,15 @@ class ClusterSim:
         self.driver_kill = driver_kill
         self.driver_dead_workers = list(driver_dead_workers or [])
         self.driver_resume_latency = driver_resume_latency
+        # partition model (mirrors the executor's suspect-vs-dead policy,
+        # docs/faults.md): a "partition" event makes a worker unreachable
+        # for ``factor`` seconds — no new dispatches, its completions
+        # buffer until the heal.  A partition longer than ``suspect_grace``
+        # is indistinguishable from death at the driver, so the worker is
+        # declared dead at grace expiry (its sole-copy values replay via
+        # lineage — the *phantom* recovery cost) and rejoins empty at heal
+        # time.  Sweeping this knob offline is the grace policy search.
+        self.suspect_grace = max(0.0, suspect_grace)
 
     # priority of a ready task (lower = sooner)
     def _prio(self, tid: int) -> Tuple:
@@ -155,6 +170,7 @@ class ClusterSim:
         done: Set[int] = set()
         # running[w] = (tid, start, end, epoch); epoch invalidates stale events
         running: Dict[int, Tuple[int, float, float, int]] = {}
+        partitioned: Dict[int, float] = {}   # w -> heal time (unreachable)
         busy: Dict[int, float] = {w: 0.0 for w in alive}
         inflight: Dict[int, Set[int]] = {}   # tid -> workers currently running it
         epoch = 0
@@ -214,7 +230,7 @@ class ClusterSim:
             if driver_down:
                 return False    # no driver, no dispatch: survivors finish
                 # what they hold and idle until re-adoption
-            if w in running or w not in alive:
+            if w in running or w not in alive or w in partitioned:
                 return False
             # 1. own deque (LIFO — classic work-stealing owner end)
             if deques[w]:
@@ -232,7 +248,8 @@ class ClusterSim:
                     return True
             # 3. steal from the most-loaded victim (FIFO end)
             victim = None if not self.allow_steal else \
-                max((v for v in alive if v != w and deques[v]),
+                max((v for v in alive
+                     if v != w and v not in partitioned and deques[v]),
                     key=lambda v: len(deques[v]), default=None)
             if victim is not None:
                 tid = deques[victim].pop()
@@ -322,6 +339,12 @@ class ClusterSim:
                 cur = running.get(w)
                 if cur is None or cur[3] != ep:
                     continue   # stale (worker failed / task re-assigned)
+                if w in partitioned:
+                    # the worker finished, but the driver can't see it:
+                    # the completion buffers until the partition heals
+                    # (or is discarded by a grace-expiry death)
+                    push(partitioned[w], "finish", (w, tid, ep))
+                    continue
                 del running[w]
                 inflight.get(tid, set()).discard(w)
                 busy[w] = busy.get(w, 0.0) + (now - cur[1])
@@ -367,6 +390,47 @@ class ClusterSim:
                 if w in self.speed:
                     self.speed[w] *= factor
                     res.timeline.append((now, f"slow w{w} ×{factor}"))
+            elif kind == "partition":
+                w, dur = data
+                if w in alive and w not in partitioned:
+                    heal_t = now + dur
+                    partitioned[w] = heal_t
+                    res.n_suspected += 1
+                    res.timeline.append((now, f"partition w{w} {dur:g}s"))
+                    if dur > self.suspect_grace:
+                        # the driver will give up first: a false death at
+                        # grace expiry, then an empty-handed rejoin at heal
+                        push(now + self.suspect_grace,
+                             "partition_expire", (w, heal_t))
+                    else:
+                        push(heal_t, "partition_heal", (w,))
+            elif kind == "partition_heal":
+                (w,) = data
+                if w in partitioned:
+                    partitioned.pop(w)
+                    res.n_healed += 1
+                    res.timeline.append((now, f"heal w{w}"))
+                    # buffered finishes for w fire at this same timestamp
+                    # (pushed behind this event); idle peers may also have
+                    # work for it now
+                    try_acquire(w, now)
+            elif kind == "partition_expire":
+                w, heal_t = data
+                if w in partitioned:
+                    # suspect_grace ran out mid-partition: the driver
+                    # declares a LIVE worker dead — sole-copy values replay
+                    # through lineage (the phantom recovery cost a longer
+                    # grace would have avoided), and the worker rejoins
+                    # empty when the partition actually heals
+                    partitioned.pop(w)
+                    res.n_false_deaths += 1
+                    if w in alive:
+                        handle_failure(w, now)
+                        res.timeline.append((now, f"false death w{w}"))
+                    push(heal_t, "join", (w, 1.0))
+                    for v in list(alive):
+                        if v not in running:
+                            try_acquire(v, now)
             elif kind == "driver_kill":
                 driver_down = True
                 res.timeline.append((now, "driver killed"))
@@ -406,3 +470,35 @@ class ClusterSim:
 
 def simulate(graph: TaskGraph, n_workers: int, **kw) -> SimResult:
     return ClusterSim(graph, n_workers, **kw).run()
+
+
+def search_suspect_grace(
+    graph: TaskGraph,
+    n_workers: int,
+    candidates: List[float],
+    *,
+    events: List[WorkerEvent],
+    **kw,
+) -> Tuple[float, Dict[float, SimResult]]:
+    """Offline policy search for the executor's ``suspect_grace`` knob.
+
+    Replays the same partition scenario (``events`` with ``"partition"``
+    entries; ``factor`` = outage seconds) under each candidate grace and
+    returns ``(best, results)``.  Too short a grace converts transient
+    partitions into false deaths and phantom recomputation
+    (:func:`repro.core.lineage.phantom_recovery_cost` is the per-event
+    analytic form); too long a grace leaves the pool waiting on a worker
+    that really is dead.  ``best`` minimizes makespan, ties broken toward
+    fewer recomputes, then the *smaller* grace (detect true deaths
+    sooner).  Feed the winner straight to
+    ``ClusterExecutor(suspect_grace=...)``.
+    """
+    if not candidates:
+        raise ValueError("need at least one candidate grace")
+    results: Dict[float, SimResult] = {}
+    for grace in candidates:
+        results[grace] = simulate(graph, n_workers, events=list(events),
+                                  suspect_grace=grace, **kw)
+    best = min(results, key=lambda s: (results[s].makespan,
+                                       results[s].n_recomputed, s))
+    return best, results

@@ -74,7 +74,11 @@ def main(argv: Optional[List[str]] = None) -> int:
         ap.error("--n must be >= 1")
     # Startup residue sweep: a worker SIGKILL'd on this host never ran its
     # shutdown sweep, so its dead run's rr* segments leak in /dev/shm.
-    # Scoped to runs whose driver pid is gone — never a live run's.
+    # Scoped to runs whose driver pid is gone AND whose resume lease (if
+    # any) has expired — a checkpointed run inside its rejoin window keeps
+    # its segments even though its driver pid is dead, so this worker can
+    # no longer race a same-host driver resume out of its recovery inputs
+    # (docs/driver_recovery.md §3).
     swept = serde.sweep_stale_segments()
     if swept:
         print(f"repro-worker: swept {swept} stale shm segment(s) from "

@@ -1,0 +1,460 @@
+"""Deterministic fault injection: the FaultPlan/RetryPolicy layer and the
+partition-aware degradation it exercises.
+
+Every cluster test here is a differential against ``execute_sequential`` —
+the injection layer may reorder, duplicate, stall, or sever, but results
+must stay bit-for-bit and (where the owner stays alive) ``recomputed``
+must stay 0.  See ``docs/faults.md`` for the fault model.
+"""
+import pickle
+import random
+import time
+
+import pytest
+
+from repro.core import TaskGraph, TaskKind, execute_sequential
+from repro.core.tracing import RemappedRef as _Ref
+from repro.cluster import ClusterExecutor
+from repro.faults import FaultPlan, FaultRule, RetryPolicy, scaled
+
+
+# --------------------------------------------------------------- graphs
+
+def exec_dag(seed: int, n: int, p: float) -> TaskGraph:
+    rng = random.Random(seed)
+    g = TaskGraph()
+    for i in range(n):
+        deps = [j for j in range(i) if rng.random() < p][-3:]
+
+        def fn(*xs, _i=i):
+            return (_i + sum(xs) * 7) % 1_000_003
+
+        g.add_node(f"t{i}", fn, tuple(_Ref(d) for d in deps), {},
+                   TaskKind.PURE, deps=deps, cost=rng.uniform(0.1, 1.0))
+    g.mark_output(n - 1)
+    return g
+
+
+def shuffle_graph(producers: int = 4, consumers: int = 8,
+                  payload: int = 256) -> TaskGraph:
+    """Producers emit byte payloads big enough to ride the data plane
+    (``shm_threshold`` in the tests is set below ``payload``), a strided
+    shuffle forces cross-worker fetches, a reduce checks every byte."""
+    g = TaskGraph()
+    for i in range(producers):
+        def produce(_i=i, _n=payload):
+            return bytes((_i * 31 + k) % 251 for k in range(_n))
+        g.add_node(f"p{i}", produce, (), {}, TaskKind.PURE,
+                   deps=(), cost=1.0)
+    for j in range(consumers):
+        deps = [j % producers, (j + 1) % producers]
+
+        def combine(a, b, _j=j):
+            return bytes((x + y + _j) % 251 for x, y in zip(a, b))
+
+        g.add_node(f"c{j}", combine, tuple(_Ref(d) for d in deps), {},
+                   TaskKind.PURE, deps=deps, cost=1.0)
+    rdeps = list(range(producers, producers + consumers))
+
+    def reduce_all(*xs):
+        return sum(sum(x) for x in xs)
+
+    g.add_node("reduce", reduce_all, tuple(_Ref(d) for d in rdeps), {},
+               TaskKind.PURE, deps=rdeps, cost=1.0)
+    g.mark_output(producers + consumers)
+    return g
+
+
+def two_chains(length: int = 6, sleep: float = 0.05) -> TaskGraph:
+    """Two independent chains so both workers hold sole copies of live
+    values — the partition tests need the severed worker to matter."""
+    g = TaskGraph()
+    tid = 0
+    tails = []
+    for c in range(2):
+        prev = None
+        for i in range(length):
+            deps = [prev] if prev is not None else []
+
+            def fn(*xs, _c=c, _i=i, _s=sleep):
+                time.sleep(_s)
+                return (_c * 1000 + _i + sum(xs) * 3) % 1_000_003
+
+            g.add_node(f"c{c}t{i}", fn, tuple(_Ref(d) for d in deps), {},
+                       TaskKind.PURE, deps=deps, cost=1.0)
+            prev = tid
+            tid += 1
+        tails.append(prev)
+
+    def join(a, b):
+        return a * 7 + b
+
+    g.add_node("join", join, (_Ref(tails[0]), _Ref(tails[1])), {},
+               TaskKind.PURE, deps=tails, cost=1.0)
+    g.mark_output(tid)
+    return g
+
+
+# ----------------------------------------------------------- unit: plan
+
+def test_fault_rule_validation():
+    with pytest.raises(ValueError):
+        FaultRule("teleport")
+    with pytest.raises(ValueError):
+        FaultRule("drop", nth=0)
+    with pytest.raises(ValueError):
+        FaultRule("drop", prob=1.5)
+
+
+def test_fault_plan_nth_addressing_is_deterministic():
+    plan = FaultPlan(seed=1).drop(src=1, dst="driver", verb="done", nth=2)
+    fired = [bool(plan.frame_actions(1, "driver", "done"))
+             for _ in range(4)]
+    assert fired == [False, True, False, False]   # nth=2 fires exactly once
+    # a different link keeps its own counter
+    assert not plan.frame_actions(2, "driver", "done")
+
+
+def test_fault_plan_prob_stream_is_seeded():
+    def firing_pattern(seed):
+        plan = FaultPlan(seed=seed).drop(verb="hb", prob=0.5)
+        return [bool(plan.frame_actions(1, "driver", "hb"))
+                for _ in range(32)]
+
+    assert firing_pattern(7) == firing_pattern(7)
+    assert firing_pattern(7) != firing_pattern(8)
+
+
+def test_fault_plan_pickles_description_not_counters():
+    plan = FaultPlan(seed=3).drop(verb="done", nth=1)
+    assert plan.frame_actions(1, 2, "done")       # consume the firing
+    clone = pickle.loads(pickle.dumps(plan))
+    assert clone.rules == plan.rules
+    assert clone.frame_actions(1, 2, "done")      # counters restarted
+    assert not plan.frame_actions(1, 2, "done")   # original stays spent
+
+
+def test_fault_plan_sever_window_is_symmetric():
+    plan = FaultPlan(seed=0).sever(window=0.2, src=1, verb="done", nth=1)
+    assert plan.frame_actions(1, "driver", "done")
+    assert plan.severed(1, "driver") is not None
+    assert plan.severed("driver", 1) is not None   # both directions
+    time.sleep(0.25)
+    assert plan.severed(1, "driver") is None       # window expired
+
+
+def test_scaled_plan_clamps_and_preserves_nth():
+    plan = FaultPlan(seed=5).drop(verb="hb", prob=0.4).delay(
+        0.01, nth=3, verb="done")
+    hot = scaled(plan, 10.0)
+    assert hot.rules[0].prob == 1.0               # clamped
+    assert hot.rules[1].nth == 3                  # exact rules untouched
+
+
+# ---------------------------------------------------------- unit: retry
+
+def test_retry_policy_backoff_is_bounded_and_seeded():
+    pol = RetryPolicy(attempts=5, base_delay=0.1, factor=2.0,
+                      max_delay=0.3, jitter=0.0)
+    delays = [pol.backoff(i) for i in range(4)]   # 0-based attempts
+    assert delays == [0.1, 0.2, 0.3, 0.3]         # capped at max_delay
+    jit = RetryPolicy(attempts=5, base_delay=0.1, jitter=0.5)
+    rng = random.Random(9)
+    assert all(0.1 <= jit.backoff(0, rng=rng) <= 0.15 for _ in range(20))
+
+
+def test_retry_policy_run_retries_then_raises():
+    calls = []
+
+    def flaky(attempt):
+        calls.append(attempt)
+        raise OSError("nope")
+
+    pol = RetryPolicy(attempts=3, base_delay=0.001, jitter=0.0)
+    with pytest.raises(OSError):
+        pol.run(flaky, retryable=lambda e: isinstance(e, OSError))
+    assert calls == [0, 1, 2]
+
+    calls.clear()
+    with pytest.raises(OSError):     # non-retryable: no second attempt
+        pol.run(flaky, retryable=lambda e: False)
+    assert calls == [0]
+
+
+def test_retry_policy_deadline_cuts_attempts_short():
+    pol = RetryPolicy(attempts=50, base_delay=0.05, factor=1.0,
+                      jitter=0.0, deadline=0.12)
+    calls = []
+
+    def flaky(attempt):
+        calls.append(attempt)
+        raise OSError("nope")
+
+    t0 = time.perf_counter()
+    with pytest.raises(OSError):
+        pol.run(flaky, retryable=lambda e: True)
+    assert time.perf_counter() - t0 < 1.0
+    assert 1 <= len(calls) < 50
+
+
+# ----------------------------------------- differential: fault matrix
+
+def _plan_for(fault: str) -> FaultPlan:
+    if fault == "drop":
+        # keepalives only: control verbs assume TCP's reliable-or-dead
+        # contract, so dropping them would model a fault TCP can't produce
+        return FaultPlan(seed=11).drop(verb="hb", prob=0.5)
+    if fault == "delay":
+        return FaultPlan(seed=12).delay(0.02, prob=0.3)
+    if fault == "dup":
+        return FaultPlan(seed=13).duplicate(prob=0.3)
+    if fault == "reorder":
+        return FaultPlan(seed=14).reorder(prob=0.3)
+    if fault == "sever":
+        return FaultPlan(seed=15).sever(window=0.3, src=1, verb="done",
+                                        nth=1)
+    if fault == "fail_fetch":
+        return FaultPlan(seed=16).fail_fetch(nth=1)
+    raise AssertionError(fault)
+
+
+@pytest.mark.parametrize("channel", ["pipe", "tcp"])
+@pytest.mark.parametrize("fault", ["drop", "delay", "dup", "reorder",
+                                   "sever", "fail_fetch"])
+def test_fault_matrix_differential(channel, fault):
+    """Every fault class, both control channels, bit-for-bit vs the
+    sequential oracle — the in-tree version of the chaos smoke."""
+    g = shuffle_graph()
+    seq = execute_sequential(g)
+    kw = dict(fault_plan=_plan_for(fault), transport="sock",
+              shm_threshold=64,
+              fetch_retry=RetryPolicy(attempts=3, base_delay=0.01,
+                                      jitter=0.0))
+    if channel == "tcp":
+        kw.update(channel="tcp", heartbeat_interval=0.1,
+                  heartbeat_timeout=1.0, suspect_grace=5.0)
+    ex = ClusterExecutor(2, **kw)
+    assert ex.run(g) == seq
+    assert ex.stats["failures"] == 0
+
+
+def test_combined_plan_differential_pipe_and_tcp():
+    """All fault classes at once — the worst single plan still converges."""
+    g = exec_dag(21, 60, 0.3)
+    seq = execute_sequential(g)
+    for channel in ("pipe", "tcp"):
+        plan = (FaultPlan(seed=99)
+                .drop(verb="hb", prob=0.4)
+                .delay(0.01, prob=0.2)
+                .duplicate(prob=0.2)
+                .reorder(prob=0.2)
+                .sever(window=0.3, src=1, verb="done", nth=2))
+        kw = dict(fault_plan=plan)
+        if channel == "tcp":
+            kw.update(channel="tcp", heartbeat_interval=0.1,
+                      heartbeat_timeout=1.0, suspect_grace=5.0)
+        ex = ClusterExecutor(2, **kw)
+        assert ex.run(g) == seq
+
+
+# ------------------------------------------- degradation: flaky fetches
+
+def test_persistent_fetch_faults_fall_back_to_relay():
+    """Owner alive + retries exhausted => driver-relay fallback, NOT
+    lineage recompute: ``deplost`` re-queues must prefer the relay."""
+    g = shuffle_graph(producers=4, consumers=8)
+    seq = execute_sequential(g)
+    plan = FaultPlan(seed=31).fail_fetch()        # every attempt fails
+    ex = ClusterExecutor(2, fault_plan=plan, transport="sock",
+                         shm_threshold=64,
+                         fetch_retry=RetryPolicy(attempts=2,
+                                                 base_delay=0.01,
+                                                 jitter=0.0))
+    assert ex.run(g) == seq
+    assert ex.stats["relay_fallbacks"] >= 1
+    assert ex.stats["recomputed"] == 0            # owner never died
+    assert ex.stats["deplosts"] >= 1
+    # the driver-side plan object never fires fetch rules itself: the
+    # hook runs on each worker's own (forked/pickled) copy
+    assert plan.stats() == {}
+
+
+def test_same_value_lost_twice_in_a_row():
+    """The same value hitting ``TransferLost`` twice (several consumers
+    racing on a dead data plane) must stay idempotent in the driver:
+    one relay handle, no double recovery, bit-for-bit result."""
+    g = shuffle_graph(producers=2, consumers=12)
+    seq = execute_sequential(g)
+    plan = FaultPlan(seed=32).fail_fetch()
+    ex = ClusterExecutor(3, fault_plan=plan, transport="sock",
+                         shm_threshold=64,
+                         fetch_retry=RetryPolicy(attempts=2,
+                                                 base_delay=0.01,
+                                                 jitter=0.0))
+    assert ex.run(g) == seq
+    assert ex.stats["recomputed"] == 0
+    # with 12 consumers over 2 producers on a 3-worker pool, several
+    # in-flight super-tasks lose the same producer value back to back;
+    # the second deplost must find the relay handle already in place
+    assert ex.stats["deplosts"] >= 2
+    assert ex.stats["failures"] == 0
+
+
+# --------------------------------------- degradation: timed partitions
+
+def test_timed_partition_heals_without_recompute():
+    """Acceptance: a live worker partitioned past the heartbeat timeout
+    but inside ``suspect_grace`` is suspected, drained, healed, and its
+    in-flight work reconciled — ``recomputed == 0``."""
+    g = two_chains(length=6, sleep=0.05)
+    seq = execute_sequential(g)
+    plan = FaultPlan(seed=41).sever(window=1.2, src=1, verb="done", nth=2)
+    ex = ClusterExecutor(2, channel="tcp", fault_plan=plan,
+                         heartbeat_interval=0.1, heartbeat_timeout=0.4,
+                         suspect_grace=5.0)
+    assert ex.run(g) == seq
+    assert ex.stats["recomputed"] == 0
+    assert ex.stats["suspected"] >= 1
+    assert ex.stats["healed"] >= 1
+    assert ex.stats["failures"] == 0
+
+
+def test_partition_past_grace_escalates_to_recovery():
+    """The other side of the policy: a partition longer than the grace is
+    a death — lineage recovery still finishes the run bit-for-bit."""
+    g = two_chains(length=6, sleep=0.05)
+    seq = execute_sequential(g)
+    plan = FaultPlan(seed=42).sever(window=8.0, src=1, verb="done", nth=2)
+    ex = ClusterExecutor(2, channel="tcp", fault_plan=plan,
+                         heartbeat_interval=0.1, heartbeat_timeout=0.3,
+                         suspect_grace=0.5, progress_timeout=60.0)
+    assert ex.run(g) == seq
+    assert ex.stats["failures"] >= 1              # escalated to death
+    assert ex.stats["recomputed"] >= 1            # lineage replayed
+
+
+def test_quarantine_probe_readmit_round_trip():
+    """Repeated suspect-then-heal episodes quarantine a flaky worker;
+    ``probe_interval`` of healthy channel re-admits it."""
+    g = two_chains(length=26, sleep=0.1)
+    seq = execute_sequential(g)
+    plan = (FaultPlan(seed=43)
+            .sever(window=0.5, src=1, dst="driver", verb="hb", nth=1)
+            .sever(window=0.5, src=1, dst="driver", verb="hb", nth=25))
+    ex = ClusterExecutor(3, channel="tcp", fault_plan=plan,
+                         heartbeat_interval=0.05, heartbeat_timeout=0.2,
+                         suspect_grace=10.0, quarantine_after=2,
+                         probe_interval=0.3)
+    assert ex.run(g) == seq
+    assert ex.stats["recomputed"] == 0
+    assert ex.stats["healed"] >= 2
+    assert ex.stats["quarantined"] >= 1
+    assert ex.stats["readmitted"] >= 1
+    assert ex.stats["failures"] == 0
+
+
+# ------------------------------------------------- simulator modeling
+
+def wide_graph(n: int = 24) -> TaskGraph:
+    """Independent unit tasks, ALL outputs — so a false death's lost
+    values are values somebody still needs (the phantom-recovery term)."""
+    g = TaskGraph()
+    for i in range(n):
+        def fn(_i=i):
+            return _i + 1
+        g.add_node(f"t{i}", fn, (), {}, TaskKind.PURE, deps=(), cost=1.0)
+        g.mark_output(i)
+    return g
+
+
+def test_sim_partition_heals_inside_grace():
+    from repro.core.simulator import WorkerEvent, simulate
+    g = wide_graph()              # wide: every worker holds sole copies
+    res = simulate(g, 3, events=[WorkerEvent(2.0, "partition", 1, 3.0)],
+                   suspect_grace=5.0, seed=7)
+    assert res.n_suspected == 1 and res.n_healed == 1
+    assert res.n_false_deaths == 0 and res.n_recomputed == 0
+
+
+def test_sim_partition_past_grace_is_false_death():
+    from repro.core.simulator import WorkerEvent, simulate
+    g = wide_graph()
+    res = simulate(g, 3, events=[WorkerEvent(2.0, "partition", 1, 20.0)],
+                   suspect_grace=5.0, seed=7)
+    assert res.n_false_deaths == 1
+    assert res.n_recomputed >= 1   # phantom recovery: the waste term
+    res2 = simulate(g, 3, events=[WorkerEvent(2.0, "partition", 1, 20.0)],
+                    suspect_grace=5.0, seed=7)
+    assert res.makespan == res2.makespan and res.timeline == res2.timeline
+
+
+def test_sim_search_suspect_grace():
+    from repro.core.simulator import WorkerEvent, search_suspect_grace
+    g = exec_dag(9, 30, 0.3)
+    ev = [WorkerEvent(3.0, "partition", 0, 4.0)]
+    best, results = search_suspect_grace(g, 2, [0.5, 2.0, 8.0], events=ev,
+                                         seed=3)
+    assert set(results) == {0.5, 2.0, 8.0}
+    assert best in results
+    assert results[8.0].n_healed == 1             # grace > outage: heals
+    assert results[0.5].n_false_deaths == 1       # grace < outage: phantom
+    with pytest.raises(ValueError):
+        search_suspect_grace(g, 2, [], events=ev)
+
+
+def test_phantom_recovery_cost_matches_cluster_plan():
+    from repro.core.fusion import fuse
+    from repro.core.lineage import (phantom_recovery_cost,
+                                    recovery_plan_clusters)
+    g = exec_dag(17, 40, 0.3)
+    plan = fuse(g, "off")
+    values = set(g.nodes)
+    suspect = {5, 11, 23}
+    cost = phantom_recovery_cost(plan, suspect, values)
+    assert cost == recovery_plan_clusters(plan, suspect, values - suspect)
+    assert cost   # losing live values is never free on this DAG
+
+
+# ------------------------------------------------- shm lease (PR-7 fix)
+
+# a pid in the kernel's valid range (< 2**22) that cannot exist: pids
+# this high require pid_max raised to its ceiling AND full saturation
+_GHOST_PID_HEX = f"{(1 << 22) - 1:x}"
+
+
+def _seg(tmp_path, uuid8):
+    """A bare run segment name as the executor mints them:
+    ``rr<driver-pid:x><uuid8>``."""
+    p = tmp_path / f"rr{_GHOST_PID_HEX}{uuid8}"
+    p.write_bytes(b"x")
+    return p, f"rr{_GHOST_PID_HEX}{uuid8}"
+
+
+def test_sweep_respects_resume_lease(tmp_path):
+    from repro.cluster import serde
+    d = str(tmp_path)
+    dead, _ = _seg(tmp_path, "aaaaaaaa")
+    leased, leased_prefix = _seg(tmp_path, "bbbbbbbb")
+    serde.write_resume_lease(leased_prefix, "run1", window=30.0,
+                             shm_dir=d)
+    expired, expired_prefix = _seg(tmp_path, "cccccccc")
+    serde.write_resume_lease(expired_prefix, "run2", window=-120.0,
+                             shm_dir=d)
+
+    serde.sweep_stale_segments(d)
+    assert not dead.exists()          # dead pid, no lease: swept
+    assert leased.exists()            # live lease: protected
+    assert not expired.exists()       # expired lease: reaped + swept
+    assert not (tmp_path / f".rrlease-{expired_prefix}").exists()
+    serde.clear_resume_lease(leased_prefix, shm_dir=d)
+    assert not (tmp_path / f".rrlease-{leased_prefix}").exists()
+
+
+def test_sweep_ignores_foreign_hex_names(tmp_path):
+    """A foreign all-hex file name used to parse to a pid above the OS
+    maximum and blow up ``os.kill`` with OverflowError."""
+    from repro.cluster import serde
+    foreign = tmp_path / ("rr" + "f" * 24)
+    foreign.write_bytes(b"x")
+    serde.sweep_stale_segments(str(tmp_path))      # must not raise
+    assert foreign.exists()           # unparseable owner: left alone
