@@ -1,0 +1,336 @@
+"""Collectives benchmark: staged tree reduction/broadcast vs point-to-point
+fan-in, per control channel and consumer count.
+
+The workload is the shape wide training/serving graphs are made of: ``N``
+producers each emit a float32 payload, **every** one of ``M`` consumers
+needs the sum of all of them, and a final scalar reduce collapses the
+consumer outputs.  Written point-to-point — each consumer lists all N
+producers and folds them itself — that is N×M payload transfers and
+M×(N-1) array additions.  Written with first-class collective nodes
+(``all_reduce`` + ``broadcast``, lowered by
+``repro.core.collectives.lower_collectives``), the reduction happens once
+along a worker tree and the result fans out through a replication tree:
+~(N + M) transfers and N-1 additions, log-depth critical path.
+
+Both graphs compute the same values with the **same bracketing**
+(``tree_fold`` with the same arity), so every cell is cross-checked
+bit-for-bit against ``execute_sequential`` and the two modes must agree
+with each other exactly.  A SIGKILL cell kills a worker mid-tree and pins
+that subtree-bounded lineage recovery still reproduces the oracle.
+
+Writes ``BENCH_collectives.json`` at the repo root: wall clock per
+channel × consumers × mode, bytes moved, transfer counts, and the
+collective-vs-p2p speedup per cell (the acceptance headline is the
+highest consumer count on each channel).
+
+``--smoke`` is the CI gate: tiny payloads, both channels, asserting the
+oracle differential in every cell (healthy + SIGKILL), that lowering
+actually produced staged hops, a data-plane byte reduction, and a
+must-not-regress bound on collective wall clock.
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.bench_collectives
+        [--producers 16] [--consumers 4 32] [--payload-mb 4.0]
+        [--workers 4] [--arity 4] [--reps 3] [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.core import TaskGraph, TaskKind, execute_sequential
+from repro.core.collectives import (DEFAULT_ARITY, add_all_reduce,
+                                    add_broadcast, resolve_op, tree_fold)
+from repro.core.tracing import RemappedRef as _Ref
+from repro.cluster import ClusterExecutor
+
+from .common import median, print_rows
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_collectives.json")
+
+
+class _Produce:
+    """Deterministic float32 payload; module-level class so spawn/TCP
+    workers can unpickle it."""
+    __slots__ = ("i", "n")
+
+    def __init__(self, i: int, n: int):
+        self.i, self.n = i, n
+
+    def __call__(self):
+        return np.arange(self.n, dtype=np.float32) * np.float32(self.i + 1)
+
+
+class _Consume:
+    """Reads the (already reduced) array: one weighted sum per consumer."""
+    __slots__ = ("j",)
+
+    def __init__(self, j: int):
+        self.j = j
+
+    def __call__(self, r):
+        return float((r * np.float32(self.j + 1)).sum())
+
+
+class _FoldConsume:
+    """Point-to-point baseline consumer: pull ALL producer payloads and
+    fold them locally with the collective's own bracketing
+    (:func:`tree_fold`, same arity), then apply the consumer transform —
+    so baseline and collective cells are bit-comparable."""
+    __slots__ = ("j", "arity")
+
+    def __init__(self, j: int, arity: int):
+        self.j, self.arity = j, arity
+
+    def __call__(self, *xs):
+        _, combine = resolve_op("sum")
+        r = tree_fold(list(xs), combine, self.arity)
+        return float((r * np.float32(self.j + 1)).sum())
+
+
+def _sum_floats(*xs):
+    return float(sum(xs))
+
+
+def edge_payload_bytes(g: TaskGraph) -> int:
+    """Static data-plane demand of the *lowered* graph: every argument
+    edge priced at its producer's ``out_bytes`` — what a cluster pays when
+    consumers land on different workers/hosts (per-worker caching can hide
+    some of it on a 2-worker box, which is why the smoke gate is static)."""
+    from repro.core.collectives import lower_collectives
+    lowered, _ = lower_collectives(g, "auto")
+    total = 0
+    for node in lowered.nodes.values():
+        for r in node.args:
+            tid = getattr(r, "tid", None)
+            if tid is not None:
+                total += lowered.nodes[tid].out_bytes
+    return total
+
+
+def _add_producers(g: TaskGraph, producers: int,
+                   payload_elems: int) -> List[int]:
+    return [g.add_node(f"produce{i}", _Produce(i, payload_elems), (), {},
+                       TaskKind.PURE, deps=(), cost=1.0,
+                       out_bytes=payload_elems * 4)
+            for i in range(producers)]
+
+
+def _add_reduce_out(g: TaskGraph, cons: List[int]) -> None:
+    out = g.add_node("final", _sum_floats, tuple(_Ref(c) for c in cons),
+                     {}, TaskKind.PURE, deps=tuple(cons))
+    g.mark_output(out)
+
+
+def build_p2p(producers: int, consumers: int, payload_elems: int,
+              arity: int) -> TaskGraph:
+    """Every consumer lists every producer: N×M edges, M local folds."""
+    g = TaskGraph()
+    prods = _add_producers(g, producers, payload_elems)
+    cons = [g.add_node(f"consume{j}", _FoldConsume(j, arity),
+                       tuple(_Ref(p) for p in prods), {}, TaskKind.PURE,
+                       deps=tuple(prods), cost=1.0)
+            for j in range(consumers)]
+    _add_reduce_out(g, cons)
+    return g
+
+
+def build_collective(producers: int, consumers: int, payload_elems: int,
+                     arity: int) -> TaskGraph:
+    """One ``all_reduce`` + one ``broadcast`` carry the group traffic."""
+    g = TaskGraph()
+    prods = _add_producers(g, producers, payload_elems)
+    ar = add_all_reduce(g, prods, "sum", arity=arity,
+                        out_bytes=payload_elems * 4)
+    bc = add_broadcast(g, ar, arity=arity, out_bytes=payload_elems * 4)
+    cons = [g.add_node(f"consume{j}", _Consume(j), (_Ref(bc),), {},
+                       TaskKind.PURE, deps=(bc,), cost=1.0)
+            for j in range(consumers)]
+    _add_reduce_out(g, cons)
+    return g
+
+
+_STAT_KEYS = ("dispatched", "bytes_moved", "transfers_direct",
+              "transfers_driver", "collective_roots", "collective_stages")
+
+
+def run_cell(channel: str, mode: str, consumers: int, args,
+             want_out: float) -> Dict[str, Any]:
+    """Median-of-reps wall clock for one (channel, mode, M) cell; every
+    rep's output is pinned to the sequential oracle's scalar."""
+    build = build_p2p if mode == "p2p" else build_collective
+    walls: List[float] = []
+    stats: Dict[str, Any] = {}
+    for _ in range(args.reps):
+        g = build(args.producers, consumers, args.payload_elems, args.arity)
+        ex = ClusterExecutor(args.workers, channel=channel,
+                             collectives="auto", outputs_only=True,
+                             progress_timeout=180.0)
+        t0 = time.perf_counter()
+        got = ex.run(g)
+        walls.append(time.perf_counter() - t0)
+        stats = dict(ex.stats)
+        ex.close()
+        out = got[g.outputs[0]]
+        assert out == want_out, \
+            (f"{channel}/{mode}/M={consumers}: output {out!r} diverged "
+             f"from the sequential oracle {want_out!r}")
+    row = {"channel": channel, "mode": mode, "consumers": consumers,
+           "wall_s": median(walls), "wall_best_s": min(walls),
+           "wall_samples_s": [round(w, 4) for w in sorted(walls)]}
+    for k in _STAT_KEYS:
+        row[k] = stats.get(k, 0)
+    return row
+
+
+def recovery_cell(channel: str, consumers: int, args,
+                  want_out: float) -> Dict[str, Any]:
+    """SIGKILL a worker mid-tree: subtree-bounded recovery must still
+    reproduce the oracle bit-for-bit."""
+    g = build_collective(args.producers, consumers, args.payload_elems,
+                         args.arity)
+    ex = ClusterExecutor(args.workers, channel=channel, collectives="auto",
+                         outputs_only=True, fail_worker=(0, 3),
+                         progress_timeout=180.0)
+    got = ex.run(g)
+    ex.close()
+    assert got[g.outputs[0]] == want_out, \
+        f"{channel}: collective SIGKILL recovery diverged from the oracle"
+    assert ex.stats["failures"] == 1, ex.stats
+    assert ex.stats["recomputed"] > 0, ex.stats
+    return {"channel": channel, "consumers": consumers,
+            "failures": ex.stats["failures"],
+            "recomputed": ex.stats["recomputed"],
+            "collective_stages": ex.stats.get("collective_stages", 0)}
+
+
+def main(argv: Optional[List[str]] = None) -> Dict[str, Any]:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--producers", type=int, default=16)
+    ap.add_argument("--consumers", type=int, nargs="+", default=[4, 32],
+                    help="consumer-count sweep; the last (highest) cell "
+                         "is the acceptance headline")
+    ap.add_argument("--payload-mb", type=float, default=4.0)
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--arity", type=int, default=DEFAULT_ARITY)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI: differential + must-not-regress gate, tiny "
+                         "payloads")
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args(argv if argv is not None else [])
+    if args.smoke:
+        if args.out == OUT_PATH:    # never clobber the headline artifact
+            args.out = OUT_PATH.replace(".json", "_smoke.json")
+        args.producers = min(args.producers, 4)
+        args.consumers = [min(m, 8) for m in args.consumers][-2:]
+        args.payload_mb = min(args.payload_mb, 0.5)
+        args.workers = min(args.workers, 2)
+        args.arity = min(args.arity, 2)     # tiny N must still grow a tree
+        args.reps = 2       # median: a loaded CI box jitters single runs
+    args.consumers = sorted(set(args.consumers))
+    args.payload_elems = max(1, int(args.payload_mb * (1 << 20) / 4))
+
+    # one sequential oracle per consumer count; p2p and collective builds
+    # share the bracketing, so a single scalar pins both modes
+    want: Dict[int, float] = {}
+    for m in args.consumers:
+        gc = build_collective(args.producers, m, args.payload_elems,
+                              args.arity)
+        gp = build_p2p(args.producers, m, args.payload_elems, args.arity)
+        oc = execute_sequential(gc)[gc.outputs[0]]
+        op = execute_sequential(gp)[gp.outputs[0]]
+        assert oc == op, ("builders disagree", m, oc, op)
+        want[m] = oc
+
+    # static data-plane demand per consumer count (channel-independent):
+    # the scheduler-visible edge bytes the tree shape removes
+    edge_cut: Dict[str, float] = {}
+    for m in args.consumers:
+        p2p_bytes = edge_payload_bytes(
+            build_p2p(args.producers, m, args.payload_elems, args.arity))
+        coll_bytes = edge_payload_bytes(
+            build_collective(args.producers, m, args.payload_elems,
+                             args.arity))
+        edge_cut[str(m)] = p2p_bytes / max(coll_bytes, 1)
+
+    rows: List[Dict[str, Any]] = []
+    speedups: Dict[str, Dict[str, float]] = {}
+    for channel in ("pipe", "tcp"):
+        speedups[channel] = {}
+        for m in args.consumers:
+            p2p = run_cell(channel, "p2p", m, args, want[m])
+            coll = run_cell(channel, "collective", m, args, want[m])
+            rows += [p2p, coll]
+            speedups[channel][str(m)] = (p2p["wall_s"] /
+                                         max(coll["wall_s"], 1e-9))
+            if max(args.producers, m) > args.arity:
+                assert coll["collective_stages"] > 0, \
+                    (f"{channel}/M={m}: lowering emitted no staged hops: "
+                     f"{coll}")
+
+    m_hi = args.consumers[-1]
+    recovery = [recovery_cell(ch, m_hi, args, want[m_hi])
+                for ch in ("pipe", "tcp")]
+
+    if args.smoke:
+        # deterministic gate: the lowered tree must remove scheduler-visible
+        # edge bytes vs N×M point-to-point (static graph property, immune
+        # to CI scheduling jitter)
+        assert edge_cut[str(m_hi)] >= 1.3, \
+            (f"M={m_hi}: collective lowering cut edge bytes only "
+             f"{edge_cut[str(m_hi)]:.2f}x (expected >=1.3x)")
+        for ch in ("pipe", "tcp"):
+            # collective wall may never exceed p2p beyond CI jitter
+            p2p_w = next(r["wall_s"] for r in rows
+                         if r["channel"] == ch and r["mode"] == "p2p"
+                         and r["consumers"] == m_hi)
+            coll_w = next(r["wall_s"] for r in rows
+                          if r["channel"] == ch
+                          and r["mode"] == "collective"
+                          and r["consumers"] == m_hi)
+            assert coll_w <= p2p_w * 1.5, \
+                (f"{ch}/M={m_hi}: collective wall {coll_w:.3f}s regressed "
+                 f"vs p2p {p2p_w:.3f}s")
+        print(f"smoke: {args.producers} producers x {args.consumers} "
+              f"consumers, {args.payload_mb} MiB payloads — every cell "
+              "bit-identical to the oracle (healthy + SIGKILL); "
+              f"edge bytes cut {edge_cut[str(m_hi)]:.1f}x at M={m_hi}",
+              flush=True)
+
+    payload = {
+        "config": {"producers": args.producers,
+                   "consumers": args.consumers,
+                   "payload_mb": args.payload_mb, "arity": args.arity,
+                   "workers": args.workers, "reps": args.reps,
+                   "smoke": args.smoke},
+        "cells": rows,
+        "recovery": recovery,
+        "speedup": speedups,
+        "edge_byte_reduction": edge_cut,
+        "headline": {ch: speedups[ch][str(m_hi)] for ch in speedups},
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print_rows(f"collectives: tree all_reduce+broadcast vs point-to-point "
+               f"fan-in ({args.producers} producers, "
+               f"{args.payload_mb} MiB payloads, {args.workers} workers)",
+               rows)
+    print("\ncollective speedup at highest cell (M="
+          f"{m_hi}): "
+          + ", ".join(f"{ch} {s:.2f}x"
+                      for ch, s in payload["headline"].items())
+          + f" -> {args.out}", flush=True)
+    return payload
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

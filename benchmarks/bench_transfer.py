@@ -109,6 +109,12 @@ def main(argv: Optional[List[str]] = None) -> Dict[str, Any]:
     ap.add_argument("--producers", type=int, default=6)
     ap.add_argument("--consumers", type=int, default=8)
     ap.add_argument("--fan-in", type=int, default=4)
+    ap.add_argument("--wide-consumers", type=int, default=16,
+                    help="consumer count for the wide-shuffle cell: every "
+                         "consumer reads every producer (fan_in = "
+                         "producers), the point-to-point baseline shape "
+                         "bench_collectives compares its tree lowering "
+                         "against")
     ap.add_argument("--pipeline-depth", type=int, default=4)
     ap.add_argument("--workers", type=int, default=4)
     ap.add_argument("--reps", type=int, default=3)
@@ -125,7 +131,12 @@ def main(argv: Optional[List[str]] = None) -> Dict[str, Any]:
         args.producers = min(args.producers, 4)
         args.consumers = min(args.consumers, 4)
         args.workers = min(args.workers, 2)
+        # the narrow cell keeps its cheap capped fan-in, but the wide cell
+        # must stay *wide* (fan_in == producers) even in CI — it is the
+        # recorded point-to-point baseline for the collectives A/B, and a
+        # capped fan-in would silently measure a different shape
         args.fan_in = min(args.fan_in, 3)
+        args.wide_consumers = min(args.wide_consumers, 6)
         args.reps = 1
 
     payload_elems = max(1, int(args.payload_mb * (1 << 20) / 4))
@@ -155,24 +166,55 @@ def main(argv: Optional[List[str]] = None) -> Dict[str, Any]:
     speedup = drv["wall_s"] / zc["wall_s"] if zc["wall_s"] > 0 else 0.0
     pipe_reduction = (drv["bytes_driver_pipe"] /
                       max(1, zc["bytes_driver_pipe"]))
+
+    # wide-shuffle cell: every consumer reads every producer — the N×M
+    # point-to-point fan-in that bench_collectives' tree lowering is
+    # measured against; recorded here so the baseline lives in the same
+    # JSON trajectory
+    wide_graph = build_shuffle(args.producers, args.wide_consumers,
+                               args.producers, payload_elems)
+    if args.check or args.smoke:
+        seq = execute_sequential(wide_graph)
+        want = float(seq[wide_graph.outputs[0]])
+        for transport in ("driver", zero_copy):
+            ex = ClusterExecutor(args.workers, transport=transport,
+                                 outputs_only=True, progress_timeout=180.0,
+                                 pipeline_depth=args.pipeline_depth)
+            got = float(ex.run(wide_graph)[wide_graph.outputs[0]])
+            assert got == want, ("wide", transport, got, want)
+        print("oracle check: wide-shuffle cell bit-identical on both "
+              "transports", flush=True)
+    wide = {t: run_once(wide_graph, t, args.workers, args.reps,
+                        args.pipeline_depth)
+            for t in ("driver", zero_copy)}
+    wide_drv, wide_zc = wide["driver"], wide[zero_copy]
+    wide_speedup = (wide_drv["wall_s"] / wide_zc["wall_s"]
+                    if wide_zc["wall_s"] > 0 else 0.0)
+
     payload = {
         "config": {
             "payload_mb": args.payload_mb, "producers": args.producers,
             "consumers": args.consumers, "fan_in": args.fan_in,
+            "wide_consumers": args.wide_consumers,
             "workers": args.workers, "reps": args.reps,
             "smoke": args.smoke, "tasks": len(graph.nodes),
+            "wide_tasks": len(wide_graph.nodes),
         },
         "driver": drv,
         "zero_copy": zc,
         "speedup": speedup,
         "driver_pipe_byte_reduction": pipe_reduction,
+        "wide": {"driver": wide_drv, "zero_copy": wide_zc,
+                 "speedup": wide_speedup},
     }
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
     print_rows("transfer: driver-relay vs zero-copy "
                f"({args.payload_mb} MiB payloads)",
-               [{"path": k, **v} for k, v in results.items()])
-    print(f"\nspeedup {speedup:.2f}x, driver-pipe bytes reduced "
+               [{"path": k, **v} for k, v in results.items()]
+               + [{"path": f"wide/{k}", **v} for k, v in wide.items()])
+    print(f"\nspeedup {speedup:.2f}x (wide {wide_speedup:.2f}x), "
+          f"driver-pipe bytes reduced "
           f"{pipe_reduction:.0f}x -> {args.out}", flush=True)
     return payload
 

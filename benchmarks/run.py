@@ -26,6 +26,10 @@ Suites:
                injection (FaultPlan), per control channel, every cell
                bit-for-bit vs the sequential oracle; writes
                BENCH_faults.json
+  collectives— group communication: tree-lowered all_reduce + broadcast
+               vs the N×M point-to-point fan-in baseline, per control
+               channel × consumer count, bit-for-bit oracle + SIGKILL
+               cross-checks; writes BENCH_collectives.json
 """
 from __future__ import annotations
 
@@ -35,7 +39,7 @@ import time
 
 from . import (matmul_scaling, scheduler_bench, fault_bench, roofline,
                bench_transfer, bench_multihost, bench_speculation,
-               bench_fusion, bench_faults)
+               bench_fusion, bench_faults, bench_collectives)
 
 SUITES = {
     "matmul": matmul_scaling.main,
@@ -47,6 +51,7 @@ SUITES = {
     "speculation": bench_speculation.main,
     "fusion": bench_fusion.main,
     "faults": bench_faults.main,
+    "collectives": bench_collectives.main,
 }
 
 

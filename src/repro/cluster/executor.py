@@ -131,6 +131,8 @@ from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.checkpoint.runlog import (RunLog, graph_fingerprint,
                                      plan_fingerprint)
+from repro.core.collectives import (CollectivesSpec, lower_collectives,
+                                    parse_collectives_spec)
 from repro.core.executor import MissingInput, TaskFailed
 from repro.core.fusion import FuseSpec, fuse as fuse_graph, parse_fuse_spec
 from repro.core.graph import TaskGraph, TaskKind
@@ -259,6 +261,7 @@ class ClusterExecutor:
         heartbeat_timeout: float = 15.0,
         speculate_after: Optional[float] = None,
         fuse: FuseSpec = "off",
+        collectives: CollectivesSpec = "auto",
         checkpoint_dir: Optional[str] = None,
         checkpoint_interval: float = 0.25,
         resume: Optional[str] = None,
@@ -284,6 +287,7 @@ class ClusterExecutor:
             # plan identity: fusion spec / GC mode / resolved transport come
             # from the interrupted run, not from this constructor's defaults
             fuse = meta.get("fuse", fuse)
+            collectives = meta.get("collectives", collectives)
             outputs_only = meta.get("outputs_only", outputs_only)
             if connect is None:
                 connect = meta.get("address")
@@ -353,6 +357,9 @@ class ClusterExecutor:
                              "disable speculation)")
         self.speculate_after = speculate_after
         self.fuse = parse_fuse_spec(fuse)   # raises on junk, at the flag
+        # collective lowering spec ("auto" | "off" | arity int): identity
+        # for collective-free graphs, so the default costs nothing
+        self.collectives = parse_collectives_spec(collectives)
         self.checkpoint_dir = checkpoint_dir
         self.checkpoint_interval = checkpoint_interval
         self.resume = resume
@@ -483,12 +490,24 @@ class ClusterExecutor:
                     if transport == "sock" else None)
         driver_namer = serde.SegmentNamer(f"{seg_prefix}d")
 
+        # -- collective lowering: COLLECTIVE nodes become staged tree hops
+        # BEFORE fusion/scheduling, so the whole driver below (and every
+        # worker, which receives this graph) runs over the lowered DAG.
+        # coll_map is None for the identity (no collectives / spec off) —
+        # the common case, which stays byte-identical to the old runtime.
+        # The run's external contract stays in USER tids: ``required`` is
+        # mapped through coll_map and mapped back in the return dict.
+        user_graph = graph
+        graph, coll_map = lower_collectives(graph, self.collectives)
+        user_required = (set(user_graph.outputs) if self.outputs_only
+                         else set(user_graph.nodes))
+
         # -- graph compilation: the driver below runs over the CLUSTER graph
         # (fuse="off" -> identity plan, cg is graph, cluster id == task id)
         plan = fuse_graph(graph, self.fuse)
         cg = plan.cgraph
-        required = (set(graph.outputs) if self.outputs_only
-                    else set(graph.nodes))
+        required = (user_required if coll_map is None
+                    else {coll_map[t] for t in user_required})
         fusion_view = plan.worker_view(required)
 
         stats = self.stats = {
@@ -499,6 +518,14 @@ class ClusterExecutor:
             "n_speculative": 0, "speculative_wins": 0,
             "speculative_swept": 0, "speculative_wasted_s": 0.0,
             "n_clusters": len(cg.nodes), "tasks_fused": plan.n_fused,
+            # collective-lowering observability: how many user collective
+            # roots the run had, and how many staged hop nodes they became
+            "collective_roots": sum(
+                1 for n in user_graph.nodes.values()
+                if n.kind is TaskKind.COLLECTIVE and "collective" in n.meta),
+            "collective_stages": (0 if coll_map is None
+                                  else len(graph.nodes)
+                                  - len(user_graph.nodes)),
             "control_msgs": 0, "control_frames": 0,
             "dispatch_overhead_s": 0.0, "resumed_clusters": 0,
             # failure-policy observability: suspicion episodes and their
@@ -545,6 +572,7 @@ class ClusterExecutor:
                 runlog.append("begin", {
                     "run_id": run_id, "graph_fp": graph_fp,
                     "plan_fp": plan_fp, "fuse": self.fuse,
+                    "collectives": self.collectives,
                     "outputs_only": self.outputs_only,
                     "address": self.address, "channel": self.channel,
                     "transport": transport, "seg_prefix": seg_prefix,
@@ -2142,4 +2170,8 @@ class ClusterExecutor:
 
         if error:
             raise error[0]
-        return {t: store.cache[t] for t in required}
+        if coll_map is None:
+            return {t: store.cache[t] for t in required}
+        # map lowered values back to the user's tid space (stage nodes are
+        # runtime detail; the contract is the traced graph's ids)
+        return {t: store.cache[coll_map[t]] for t in user_required}

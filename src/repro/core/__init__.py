@@ -2,9 +2,13 @@
 
 Public API:
   task, io_task, trace, placeholder, checkpoint_barrier   (build a DAG)
+  broadcast, scatter, gather, all_reduce                  (collective nodes:
+      group-communication shapes traced like pure tasks and compiled to
+      staged trees — repro.core.collectives, docs/collectives.md)
   TaskGraph                                               (the IR)
   fuse, FusedPlan, parse_fuse_spec                        (graph compilation:
       cluster the DAG into super-tasks before dispatch — repro.core.fusion)
+  lower_collectives, parse_collectives_spec               (collective lowering)
   list_schedule, replan                                   (static scheduling)
   ClusterSim, simulate, WorkerEvent                       (cluster simulator)
   Executor, execute_sequential, ThreadedExecutor,
@@ -17,13 +21,18 @@ Public API:
 """
 from .graph import TaskGraph, TaskNode, TaskKind, GraphError
 from .tracing import (task, io_task, trace, placeholder, checkpoint_barrier,
+                      broadcast, scatter, gather, all_reduce,
                       Trace, TaskRef, fuse_cheap_chains, substitute_refs)
+from .collectives import (lower_collectives, parse_collectives_spec,
+                          tree_fold, collective_stages,
+                          add_all_reduce, add_gather, add_broadcast,
+                          add_scatter)
 from .purity import infer_purity, declare, declared_purity
 from .effects import EffectToken, initial_token
 from .fusion import (FusedPlan, WorkerFusionView, fuse, identity_plan,
                      parse_fuse_spec)
 from .scheduler import (Schedule, Placement, list_schedule, replan,
-                        theoretical_speedup)
+                        theoretical_speedup, collective_comm_cost)
 from .simulator import ClusterSim, SimResult, WorkerEvent, simulate
 from .executor import (execute_sequential, ThreadedExecutor, run_graph,
                        make_executor, output_values, Executor, TaskFailed)

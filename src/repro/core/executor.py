@@ -232,7 +232,8 @@ def make_executor(backend: str, n_workers: int, **kw) -> Executor:
         cluster_only = sorted(
             k for k in ("transport", "channel", "connect", "workers",
                         "start_method", "shm_threshold", "token",
-                        "speculate_after", "fuse", "checkpoint_dir",
+                        "speculate_after", "fuse", "collectives",
+                        "checkpoint_dir",
                         "checkpoint_interval", "resume", "rejoin_timeout",
                         "rejoin_window", "fail_driver")
             if k in kw)

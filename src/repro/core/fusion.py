@@ -42,7 +42,16 @@ plan from the same graph and spec agrees):
 
 ``BARRIER`` and ``EFFECTFUL`` nodes never fuse (a barrier is a lineage
 cut, and replaying half-fused IO at recovery would duplicate effects);
-``PURE`` and ``PROJECTION`` nodes do.
+``PURE`` and ``PROJECTION`` nodes do.  ``COLLECTIVE`` nodes — the staged
+tree hops :func:`repro.core.collectives.lower_collectives` emits — are
+**cluster boundaries** too: each hop must stay its own dispatch unit so
+sibling stages of one tree level run on different workers in parallel,
+and a SIGKILL'd mid-tree aggregator replays as exactly one cluster
+(its subtree), never as part of an absorbed producer chain.  Their
+fan-in costing is shape-aware by construction: lowering prices each
+stage at ``root_cost × width / n`` (width <= the tree arity), so the
+cost gates here and the scheduler's EFT term see per-hop work, never
+the original N-wide fan-in (docs/collectives.md).
 
 This is the runtime sibling of :func:`repro.core.tracing.fuse_cheap_chains`
 (a trace-time rewrite that composes Python callables and *erases* member
@@ -59,7 +68,9 @@ from typing import Any, Dict, Iterable, List, Optional, Set, Tuple, Union
 
 from .graph import GraphError, TaskGraph, TaskKind
 
-#: kinds that may share a cluster with other members
+#: kinds that may share a cluster with other members.  COLLECTIVE is
+#: deliberately absent: a lowered collective stage is a cluster boundary
+#: (parallel tree levels + subtree-bounded recovery — module docstring)
 FUSABLE_KINDS = (TaskKind.PURE, TaskKind.PROJECTION)
 
 DEFAULT_MAX_MEMBERS = 32        # member cap per super-task

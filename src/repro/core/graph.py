@@ -19,6 +19,12 @@ class TaskKind(enum.Enum):
     EFFECTFUL = "io"       # ordered via token edges (Haskell: ``IO b``)
     PROJECTION = "proj"    # zero-cost tuple-element projection
     BARRIER = "barrier"    # checkpoint/materialization barrier (lineage cut)
+    COLLECTIVE = "coll"    # group-communication node (broadcast / scatter /
+    #                        gather / all_reduce): semantically a pure
+    #                        function of its inputs, but carrying a
+    #                        communication *shape* in ``meta["collective"]``
+    #                        that repro.core.collectives compiles into
+    #                        tree-structured staged hops before dispatch
 
 
 @dataclasses.dataclass
@@ -175,11 +181,26 @@ class TaskGraph:
     # ------------------------------------------------------------ rendering
     def to_dot(self) -> str:
         lines = ["digraph tasks {", "  rankdir=TB;"]
+        shapes = {"pure": "ellipse", "io": "box", "proj": "point",
+                  "barrier": "octagon", "coll": "doubleoctagon"}
         for node in self.nodes.values():
-            shape = {"pure": "ellipse", "io": "box",
-                     "proj": "point", "barrier": "octagon"}[node.kind.value]
+            shape = shapes.get(node.kind.value, "ellipse")
+            label = f"{node.name}#{node.tid}"
+            if node.kind is TaskKind.COLLECTIVE:
+                # a collective root carries its shape; a lowered stage node
+                # carries which root it is a hop of (see core/collectives.py)
+                info = node.meta.get("collective")
+                stage = node.meta.get("collective_stage")
+                if info:
+                    label += (f"\\n{info.get('op', '?')}"
+                              f"(n={info.get('n', '?')}, "
+                              f"arity={info.get('arity', '?')})")
+                elif stage:
+                    label += (f"\\n{stage.get('op', '?')} stage "
+                              f"L{stage.get('level', '?')} "
+                              f"of #{stage.get('root', '?')}")
             lines.append(
-                f'  t{node.tid} [label="{node.name}#{node.tid}" shape={shape}];')
+                f'  t{node.tid} [label="{label}" shape={shape}];')
         for node in self.nodes.values():
             for d in node.deps:
                 lines.append(f"  t{d} -> t{node.tid};")
@@ -190,8 +211,13 @@ class TaskGraph:
 
     def summary(self) -> str:
         kinds: Dict[str, int] = {}
+        colls: Dict[str, int] = {}
         for n in self.nodes.values():
             kinds[n.kind.value] = kinds.get(n.kind.value, 0) + 1
-        return (f"TaskGraph(n={len(self.nodes)}, kinds={kinds}, "
+            if n.kind is TaskKind.COLLECTIVE and "collective" in n.meta:
+                op = n.meta["collective"].get("op", "?")
+                colls[op] = colls.get(op, 0) + 1
+        coll = f", collectives={colls}" if colls else ""
+        return (f"TaskGraph(n={len(self.nodes)}, kinds={kinds}{coll}, "
                 f"work={self.total_work():.3g}, span={self.critical_path_length():.3g}, "
                 f"max_parallelism={self.max_parallelism():.2f})")

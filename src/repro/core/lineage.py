@@ -71,6 +71,14 @@ def recovery_plan_clusters(
     identity plan this degenerates to :func:`recovery_plan` (one cluster
     per task, external inputs == ``all_deps``), which is what keeps
     ``--fuse off`` recovery bit-compatible.
+
+    Collective trees get subtree-bounded recovery for free: a lowered
+    stage node (:func:`repro.core.collectives.lower_collectives`) is
+    always its own singleton cluster, so losing a mid-tree aggregator
+    replays that stage plus whichever of its inputs also died — never
+    the sibling subtrees, whose partials are alive on other workers
+    (``repro.core.collectives.collective_stages`` enumerates a root's
+    stage set; tests assert the plan stays inside it).
     """
     plan: Set[int] = set()
     stack = [fused_plan.cluster_of[v] for v in needed if v not in available]

@@ -21,6 +21,18 @@ super-task ids, ``cost``/``out_bytes`` are aggregates, and the
 edges — intra-cluster values never move, so they never enter the plan.
 Nothing here special-cases that: a ``FusedPlan.cgraph`` is an ordinary
 :class:`TaskGraph`, which is the point.
+
+Collectives get the same treatment, one pass earlier: a traced
+``all_reduce``/``gather``/``broadcast`` node would price as N×M
+point-to-point edges here, but
+:func:`repro.core.collectives.lower_collectives` rewrites it into an
+arity-bounded stage tree *before* planning, so the graph this module
+sees already has log-depth structure — every node's fan-in is at most
+the tree arity, the comm term prices one hop per value per level, and
+EFT spreads sibling stages across workers for free.
+:func:`collective_comm_cost` is the closed-form of that price, used by
+the offline arity search (``simulator.search_collective_arity``) and
+``docs/collectives.md``'s costing model.
 """
 from __future__ import annotations
 
@@ -228,3 +240,38 @@ def theoretical_speedup(graph: TaskGraph, n_workers: int) -> float:
     tinf = graph.critical_path_length()
     tp = max(t1 / n_workers, tinf)
     return t1 / tp if tp > 0 else 1.0
+
+
+def collective_comm_cost(n: int, consumers: int, value_bytes: int,
+                         bandwidth: float, *, arity: int = 4,
+                         n_hosts: int = 1,
+                         cross_host_penalty: float = 2.0) -> float:
+    """Closed-form structured-shape price of a lowered reduction/gather
+    feeding ``consumers`` readers — the model behind the collective
+    lowering's win over N×M point-to-point edges.
+
+    Point-to-point moves ``n × consumers`` values; the tree moves one
+    value per input up a ``ceil(log_arity n)``-depth combine tree (at
+    most ``n - 1`` hop transfers in total, levels overlapping across
+    workers) and one result per consumer down — ``~(n + consumers)``
+    transfers instead of ``n × consumers``.  With ``n_hosts > 1`` each
+    host's members reduce locally first (intra-host hops on the shm
+    fast path) and exactly one partial per host crosses the boundary —
+    priced at ``cross_host_penalty``×, mirroring
+    ``ClusterExecutor.move_cost`` doubling cross-host bytes.  Compare
+    against ``n * consumers * value_bytes / bandwidth`` to decide when
+    point-to-point still wins (tiny n, or one consumer —
+    docs/collectives.md)."""
+    if bandwidth <= 0:
+        return 0.0
+    per_value = value_bytes / bandwidth
+    arity = max(2, arity)
+    up_hops = max(0, n - 1)             # combine-tree edges, all levels
+    if n_hosts > 1:
+        intra = max(0, n - n_hosts)     # local partial reductions
+        cross = n_hosts - 1             # one partial per host crosses
+        up = intra * per_value + cross * per_value * cross_host_penalty
+    else:
+        up = up_hops * per_value
+    down = consumers * per_value        # result fan-out (broadcast tree)
+    return up + down

@@ -21,6 +21,8 @@ import random as _random
 from collections import deque
 from typing import Dict, List, Optional, Set, Tuple
 
+from .collectives import (CollectivesSpec, lower_collectives,
+                          parse_collectives_spec)
 from .fusion import FusedPlan, FuseSpec, fuse as fuse_graph
 from .graph import TaskGraph, TaskKind
 
@@ -99,6 +101,7 @@ class ClusterSim:
         policy: str = "critical_path",
         seed: int = 0,
         fuse: FuseSpec = "off",
+        collectives: CollectivesSpec = "auto",
         dispatch_overhead: float = 0.0,
         driver_kill: Optional[float] = None,
         driver_dead_workers: Optional[List[int]] = None,
@@ -106,6 +109,15 @@ class ClusterSim:
         suspect_grace: float = 5.0,
     ) -> None:
         graph.validate()
+        # collective lowering first, exactly as ClusterExecutor does: the
+        # sim prices the SAME staged tree hops the real driver dispatches,
+        # which is what makes the offline arity search
+        # (search_collective_arity) transfer to the runtime.  Unlike the
+        # executor, the sim reshapes reduce trees under an integer spec —
+        # it prices shapes and never touches values, so candidate arities
+        # can be modeled without the bit-equality constraint
+        graph, _ = lower_collectives(graph, parse_collectives_spec(
+            collectives), reshape_reductions=True)
         # fused execution model: the sim runs over the SAME cluster-level
         # graph the real driver dispatches (repro.core.fusion), and
         # ``dispatch_overhead`` charges the per-dispatch control-plane
@@ -501,4 +513,36 @@ def search_suspect_grace(
                                   suspect_grace=grace, **kw)
     best = min(results, key=lambda s: (results[s].makespan,
                                        results[s].n_recomputed, s))
+    return best, results
+
+
+def search_collective_arity(
+    graph: TaskGraph,
+    n_workers: int,
+    candidates: List[int],
+    **kw,
+) -> Tuple[int, Dict[int, SimResult]]:
+    """Offline policy search for the collective tree arity
+    (``ClusterExecutor(collectives=<arity>)`` / ``--collectives N``).
+
+    Re-lowers the SAME traced graph under each candidate arity (the
+    ``collectives`` integer spec overrides every node's traced arity) and
+    simulates it: a small arity makes the tree deep (more staged hops,
+    more dispatch overheads on the critical path), a large arity makes
+    each stage wide (one stage serializes many combines and a single
+    slow input stalls more of the tree).  The sweet spot depends on
+    ``n_workers``, ``dispatch_overhead``, and ``comm_per_byte`` — i.e.
+    on the machine, which is why this is a searched knob and not a
+    constant (the ``hillclimb``/``search_suspect_grace`` pattern;
+    ROADMAP item 4).  ``best`` minimizes makespan, ties toward the
+    larger arity (shallower tree ⇒ fewer dispatches at equal makespan).
+    """
+    if not candidates:
+        raise ValueError("need at least one candidate arity")
+    results: Dict[int, SimResult] = {}
+    for arity in candidates:
+        if parse_collectives_spec(arity) == "off":
+            raise ValueError(f"candidate arity {arity} is not a tree")
+        results[arity] = simulate(graph, n_workers, collectives=arity, **kw)
+    best = min(results, key=lambda a: (results[a].makespan, -a))
     return best, results

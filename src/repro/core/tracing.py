@@ -210,6 +210,74 @@ def placeholder(name: str, *, out_bytes: int = 0) -> TaskRef:
 
 
 # --------------------------------------------------------------------------
+# collective primitives (repro.core.collectives holds the machinery; the
+# imports are lazy because collectives.py imports helpers from this module)
+# --------------------------------------------------------------------------
+
+def _collective_trace() -> "Trace":
+    tr = _current_trace()
+    if tr is None:
+        raise RuntimeError("collectives only make sense inside trace(); "
+                           "outside a trace there is no graph to shape")
+    return tr
+
+
+def all_reduce(refs: Sequence[TaskRef], op="sum", *, arity: int = None,
+               cost: float = 1.0, out_bytes: int = 0,
+               name: str = None) -> TaskRef:
+    """Reduce ``refs`` to one value with ``op`` (``"sum"``/``"max"``/
+    ``"min"``/``"concat"`` or a picklable binary callable) along a
+    deterministic combine tree.  The tree's bracketing is part of the
+    value (float combines are not associative), so every backend —
+    sequential oracle included — computes the identical bits.  Lowered to
+    staged tree hops by :func:`repro.core.collectives.lower_collectives`."""
+    from .collectives import DEFAULT_ARITY, add_all_reduce
+    tr = _collective_trace()
+    tid = add_all_reduce(tr.graph, [r.tid for r in refs], op,
+                         arity=arity or DEFAULT_ARITY, name=name,
+                         cost=cost, out_bytes=out_bytes)
+    return TaskRef(tr, tid)
+
+
+def gather(refs: Sequence[TaskRef], *, arity: int = None, cost: float = 1.0,
+           out_bytes: int = 0, name: str = None) -> TaskRef:
+    """Collect ``refs`` into one tuple (in order) via a concatenation
+    tree — the many-to-one shape a wide fan-in consumer pays N
+    point-to-point edges for today.  Unpackable: ``a, b, c = gather(...)``."""
+    from .collectives import DEFAULT_ARITY, add_gather
+    tr = _collective_trace()
+    tid = add_gather(tr.graph, [r.tid for r in refs],
+                     arity=arity or DEFAULT_ARITY, name=name,
+                     cost=cost, out_bytes=out_bytes)
+    return TaskRef(tr, tid, length=len(refs))
+
+
+def broadcast(ref: TaskRef, *, arity: int = None, cost: float = 0.0,
+              out_bytes: int = 0, name: str = None) -> TaskRef:
+    """One-to-many replication: consumers of the returned ref are fanned
+    out across a copy tree at lowering time (<= ``arity`` readers per
+    copy), so no single worker serves every consumer of a hot value."""
+    from .collectives import DEFAULT_ARITY, add_broadcast
+    tr = _collective_trace()
+    tid = add_broadcast(tr.graph, ref.tid, arity=arity or DEFAULT_ARITY,
+                        name=name, cost=cost, out_bytes=out_bytes)
+    return TaskRef(tr, tid)
+
+
+def scatter(ref: TaskRef, n: int, *, arity: int = None, cost: float = 0.0,
+            out_bytes: int = 0, name: str = None) -> TaskRef:
+    """Split ``ref`` into ``n`` contiguous leading-axis chunks:
+    ``parts = scatter(x, 4)`` then ``parts[i]`` (or unpack).  Lowering
+    rewrites each projection into a direct chunk read off the source, so
+    consumers pull their slice, never the whole value."""
+    from .collectives import DEFAULT_ARITY, add_scatter
+    tr = _collective_trace()
+    tid = add_scatter(tr.graph, ref.tid, n, arity=arity or DEFAULT_ARITY,
+                      name=name, cost=cost, out_bytes=out_bytes)
+    return TaskRef(tr, tid, length=n)
+
+
+# --------------------------------------------------------------------------
 # ref substitution (shared by every executor)
 # --------------------------------------------------------------------------
 

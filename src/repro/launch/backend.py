@@ -71,6 +71,13 @@ def add_backend_args(ap: argparse.ArgumentParser) -> None:
                          "stop paying one driver round-trip per node; N "
                          "caps members per super-task (default auto; see "
                          "docs/fusion.md)")
+    ap.add_argument("--collectives", default="auto", metavar="{auto,off,N}",
+                    help="process backend: lower broadcast/scatter/gather/"
+                         "all_reduce nodes into staged tree hops over the "
+                         "peer data plane instead of N×M point-to-point "
+                         "edges; off executes each collective's dense "
+                         "fallback on one worker, N overrides the tree "
+                         "arity (default auto; see docs/collectives.md)")
 
 
 def validate_backend_args(args) -> None:
@@ -108,6 +115,18 @@ def validate_backend_args(args) -> None:
             f"--fuse {fuse} is not supported by --backend {backend}: only "
             f"the process backend pays per-task dispatch round-trips worth "
             f"fusing away; use --backend process")
+    coll = getattr(args, "collectives", "auto")
+    try:
+        from repro.core.collectives import parse_collectives_spec
+        cparsed = parse_collectives_spec(coll)
+    except ValueError as e:
+        raise SystemExit(f"--collectives {coll}: {e}") from None
+    if cparsed not in ("off", "auto") and backend != "process":
+        raise SystemExit(
+            f"--collectives {coll} is not supported by --backend {backend}: "
+            f"the thread backend shares one address space, so there is no "
+            f"data plane to shape a tree over (collective nodes run their "
+            f"dense fallback); use --backend process")
 
 
 def execute_traced(graph: TaskGraph, args,
@@ -119,7 +138,8 @@ def execute_traced(graph: TaskGraph, args,
     if args.backend == "process":
         kw = {"start_method": "spawn", "progress_timeout": 300.0,
               "transport": getattr(args, "transport", "auto"),
-              "fuse": getattr(args, "fuse", "auto")}
+              "fuse": getattr(args, "fuse", "auto"),
+              "collectives": getattr(args, "collectives", "auto")}
         channel = getattr(args, "channel", "auto")
         if channel != "auto":
             kw["channel"] = channel

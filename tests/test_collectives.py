@@ -1,0 +1,568 @@
+"""Graph-level collectives: tracing, tree lowering, scheduling price,
+cluster execution, and failure recovery.
+
+The contract under test everywhere: a collective node is its own dense
+point-to-point fallback (``execute_sequential`` and ``collectives="off"``
+run the node's fn), and :func:`lower_collectives` replaces it with staged
+tree hops that compute the **same bits** — ``tree_fold``'s bracketing is
+part of the value, so float non-associativity cannot tell the two apart.
+"""
+import argparse
+
+import numpy as np
+import pytest
+
+from repro.core import (TaskGraph, TaskKind, execute_sequential,
+                        ThreadedExecutor, task, trace,
+                        all_reduce, gather, broadcast, scatter)
+from repro.core.collectives import (DEFAULT_ARITY, add_all_reduce,
+                                    add_broadcast, add_gather, add_scatter,
+                                    collective_stages, lower_collectives,
+                                    parse_collectives_spec, resolve_op,
+                                    tree_depth, tree_fold, _chunk_bounds)
+from repro.core.fusion import fuse as fuse_graph
+from repro.core.lineage import recovery_plan_clusters
+from repro.core.scheduler import collective_comm_cost
+from repro.core.tracing import RemappedRef as _Ref
+from repro.cluster import ClusterExecutor
+
+
+# ----------------------------------------------------------------- helpers
+
+def same(got, want):
+    """Bit-for-bit dict equality that understands arrays and tuples."""
+    assert got.keys() == want.keys()
+    for k in want:
+        a, b = got[k], want[k]
+        if isinstance(a, tuple) and isinstance(b, tuple):
+            assert len(a) == len(b), k
+            for x, y in zip(a, b):
+                _same_value(x, y, k)
+        else:
+            _same_value(a, b, k)
+
+
+def _same_value(a, b, k):
+    if isinstance(a, np.ndarray) or isinstance(b, np.ndarray):
+        assert (isinstance(a, np.ndarray) and isinstance(b, np.ndarray)
+                and a.dtype == b.dtype and np.array_equal(a, b)), k
+    else:
+        assert a == b, k
+
+
+def producers_graph(n, elems=64):
+    """n float32 producers whose sums are order-sensitive in float32."""
+    g = TaskGraph()
+    tids = []
+    for i in range(n):
+        def p(_i=i, _n=elems):
+            # irrational-ish scale: float32 addition order changes bits
+            return (np.arange(1, _n + 1, dtype=np.float32)
+                    * np.float32(0.1 + 0.7 * _i))
+        tids.append(g.add_node(f"p{i}", p, (), {}, TaskKind.PURE,
+                               deps=(), out_bytes=elems * 4))
+    return g, tids
+
+
+def lowered_results(g, spec="auto"):
+    """Sequential results of the lowered graph, keyed by ORIGINAL tid."""
+    low, o2n = lower_collectives(g, spec)
+    res = execute_sequential(low)
+    if o2n is None:
+        return res
+    return {old: res[new] for old, new in o2n.items()}
+
+
+# ------------------------------------------------------------- unit: spec
+
+def test_parse_collectives_spec():
+    assert parse_collectives_spec(None) == "off"
+    assert parse_collectives_spec(False) == "off"
+    assert parse_collectives_spec("off") == "off"
+    assert parse_collectives_spec("none") == "off"
+    assert parse_collectives_spec(True) == "auto"
+    assert parse_collectives_spec("auto") == "auto"
+    assert parse_collectives_spec(3) == 3
+    assert parse_collectives_spec(" 8 ") == 8
+    for bad in (1, 0, -2, "1", "junk", 2.5):
+        with pytest.raises(ValueError):
+            parse_collectives_spec(bad)
+
+
+def test_resolve_op():
+    for name in ("sum", "max", "min", "concat"):
+        got_name, fn = resolve_op(name)
+        assert got_name == name and callable(fn)
+    name, fn = resolve_op(lambda a, b: a * b)
+    assert callable(fn)
+    with pytest.raises(ValueError):
+        resolve_op("median")
+
+
+def test_tree_fold_and_depth():
+    for n in (1, 2, 3, 5, 9, 17):
+        vals = list(range(1, n + 1))
+        for arity in (2, 3, 4):
+            assert tree_fold(vals, lambda a, b: a + b, arity) == sum(vals)
+            d = tree_depth(n, arity)
+            assert d >= 0
+            # depth is the number of non-root levels the lowering emits
+            m, want = n, 0
+            while m > arity:
+                m = -(-m // arity)
+                want += 1
+            assert d == want
+    with pytest.raises(ValueError):
+        tree_fold([], lambda a, b: a + b, 2)
+
+
+def test_tree_fold_bracketing_is_its_own_semantics():
+    """float32 sums depend on bracketing: the tree fold and the naive
+    left fold genuinely differ on this data, which is exactly why the
+    lowered stages must reproduce tree_fold and not 'a sum'."""
+    rng = np.random.RandomState(7)
+    vals = [rng.randn(257).astype(np.float32) * (10.0 ** (i % 7 - 3))
+            for i in range(17)]
+    _, add = resolve_op("sum")
+    tree = tree_fold(vals, add, 2)
+    flat = vals[0]
+    for v in vals[1:]:
+        flat = flat + v
+    assert not np.array_equal(tree, flat)   # non-associativity is real
+    again = tree_fold(list(vals), add, 2)
+    assert np.array_equal(tree, again)      # but the tree is deterministic
+
+
+def test_chunk_bounds_match_array_split():
+    for length in (0, 1, 7, 12, 13):
+        for n in (1, 2, 3, 5):
+            x = np.arange(length)
+            want = [a.tolist() for a in np.array_split(x, n)]
+            got = [x[a:b].tolist() for a, b in _chunk_bounds(length, n)]
+            assert got == want, (length, n)
+
+
+# ------------------------------------------- lowering: bit-equality sweep
+
+@pytest.mark.parametrize("arity", [2, 3, 4])
+@pytest.mark.parametrize("n", [1, 2, 3, 5, 9, 17])
+def test_all_reduce_lowering_bit_equal(n, arity):
+    g, tids = producers_graph(n)
+    ar = add_all_reduce(g, tids, "sum", arity=arity, out_bytes=64 * 4)
+    g.mark_output(ar)
+    dense = execute_sequential(g)
+    low = lowered_results(g)
+    _same_value(low[ar], dense[ar], ("all_reduce", n, arity))
+    # an integer spec must NOT reshape a reduction in executor mode —
+    # the traced bracketing IS the value, so the override stays bit-equal
+    low3 = lowered_results(g, spec=3)
+    _same_value(low3[ar], dense[ar], ("override", n, arity))
+
+
+def test_sim_mode_reshapes_reduce_trees_executor_mode_does_not():
+    g, tids = producers_graph(17)
+    ar = add_all_reduce(g, tids, "sum", arity=2, out_bytes=64 * 4)
+    g.mark_output(ar)
+    exec_low, _ = lower_collectives(g, 8)
+    sim_low, _ = lower_collectives(g, 8, reshape_reductions=True)
+    arity2, _ = lower_collectives(g, "auto")
+    # executor mode keeps the traced arity-2 tree under a spec of 8 ...
+    assert len(exec_low.nodes) == len(arity2.nodes)
+    # ... while the simulator's reshape really is an arity-8 tree
+    assert len(sim_low.nodes) < len(exec_low.nodes)
+
+
+def test_gather_lowering_preserves_order():
+    for n in (1, 2, 5, 9):
+        g, tids = producers_graph(n)
+        gt = add_gather(g, tids, arity=2, out_bytes=64 * 4 * n)
+        g.mark_output(gt)
+        dense = execute_sequential(g)
+        low = lowered_results(g)
+        assert isinstance(low[gt], tuple) and len(low[gt]) == n
+        for a, b in zip(low[gt], dense[gt]):
+            assert np.array_equal(a, b)
+
+
+def test_broadcast_copy_tree_rewires_consumers():
+    g, tids = producers_graph(3)
+    ar = add_all_reduce(g, tids, "sum", arity=2, out_bytes=64 * 4)
+    bc = add_broadcast(g, ar, arity=2, out_bytes=64 * 4)
+    cons = []
+    for j in range(10):
+        def c(x, _j=j):
+            return float((x * np.float32(_j + 1)).sum())
+        cons.append(g.add_node(f"c{j}", c, (_Ref(bc),), {}, TaskKind.PURE,
+                               deps=(bc,)))
+    for t in cons:
+        g.mark_output(t)
+    dense = execute_sequential(g)
+    low, o2n = lower_collectives(g, "auto")
+    copies = collective_stages(low, bc)
+    assert copies, "10 consumers over arity 2 must grow a copy tree"
+    # each consumer reads a copy node, never the root; <= arity consumers
+    # per copy
+    root_new = o2n[bc]
+    fanout = {}
+    for t in cons:
+        (dep,) = low.nodes[o2n[t]].deps
+        assert dep != root_new
+        assert dep in copies
+        fanout[dep] = fanout.get(dep, 0) + 1
+    assert all(k <= 2 for k in fanout.values())
+    res = execute_sequential(low)
+    for t in cons:
+        assert res[o2n[t]] == dense[t]
+
+
+def test_scatter_projections_become_direct_chunk_reads():
+    @task(cost=1.0)
+    def seed():
+        return np.arange(13, dtype=np.float32) * np.float32(1.7)
+
+    @task(cost=1.0)
+    def consume(part, j):
+        return float(part.sum()) + j
+
+    def driver():
+        x = seed()
+        parts = scatter(x, 4, arity=4)
+        return [consume(parts[i], i) for i in range(4)]
+
+    g, _ = trace(driver)
+    dense = execute_sequential(g)
+    low, o2n = lower_collectives(g, "auto")
+    # the lowered graph reads chunks straight off the source: no node
+    # depends on the dense scatter tuple any more
+    scatter_new = [o2n[t] for t, n in g.nodes.items()
+                   if n.meta.get("collective", {}).get("op") == "scatter"]
+    (sc,) = scatter_new
+    assert all(sc not in n.deps for n in low.nodes.values())
+    res = execute_sequential(low)
+    for old, new in o2n.items():
+        if old in g.outputs:
+            assert res[new] == dense[old]
+    # uneven split: chunk sizes follow np.array_split (4+3+3+3)
+    chunks = [res[o2n[t]] for t, n in g.nodes.items()
+              if n.kind is TaskKind.PROJECTION]
+    assert sorted(len(c) for c in chunks) == [3, 3, 3, 4]
+
+
+def test_lowering_identity_when_off_or_collective_free():
+    g, tids = producers_graph(3)
+    ar = add_all_reduce(g, tids, "sum", arity=2)
+    g.mark_output(ar)
+    same_g, o2n = lower_collectives(g, "off")
+    assert same_g is g and o2n is None
+    g2, _ = producers_graph(3)
+    same_g2, o2n2 = lower_collectives(g2, "auto")
+    assert same_g2 is g2 and o2n2 is None
+
+
+def test_lowering_is_deterministic():
+    def build():
+        g, tids = producers_graph(9)
+        ar = add_all_reduce(g, tids, "sum", arity=2, out_bytes=64 * 4)
+        bc = add_broadcast(g, ar, arity=2, out_bytes=64 * 4)
+        for j in range(6):
+            def c(x, _j=j):
+                return float(x.sum()) * (_j + 1)
+            g.add_node(f"c{j}", c, (_Ref(bc),), {}, TaskKind.PURE,
+                       deps=(bc,))
+        g.mark_output(ar)
+        return g
+
+    a, _ = lower_collectives(build(), "auto")
+    b, _ = lower_collectives(build(), "auto")
+    assert [(t, n.name, n.kind.value, n.deps, n.cost)
+            for t, n in sorted(a.nodes.items())] == \
+           [(t, n.name, n.kind.value, n.deps, n.cost)
+            for t, n in sorted(b.nodes.items())]
+
+
+def test_duplicate_ref_participates_twice():
+    g, tids = producers_graph(2)
+    # a + a + b: the same ref twice must fold twice, like the dense fn
+    ar = add_all_reduce(g, [tids[0], tids[0], tids[1]], "sum", arity=2)
+    g.mark_output(ar)
+    dense = execute_sequential(g)
+    low = lowered_results(g)
+    _same_value(low[ar], dense[ar], "dup-ref")
+
+
+def test_collective_stages_are_singleton_fusion_clusters():
+    g, tids = producers_graph(9)
+    ar = add_all_reduce(g, tids, "sum", arity=2, out_bytes=64 * 4)
+    g.mark_output(ar)
+    low, o2n = lower_collectives(g, "auto")
+    plan = fuse_graph(low, "auto")
+    for t in collective_stages(low, ar) + [o2n[ar]]:
+        assert plan.members[plan.cluster_of[t]] == (t,), \
+            "collective hops must stay their own super-task"
+
+
+# ----------------------------------------------------- tracing-level API
+
+def test_traced_collectives_end_to_end():
+    @task(cost=1.0)
+    def seed(i):
+        return np.arange(32, dtype=np.float32) * np.float32(0.3 * (i + 1))
+
+    @task(cost=1.0)
+    def use(x, j):
+        return float(x.sum()) * (j + 1)
+
+    def driver():
+        xs = [seed(i) for i in range(5)]
+        total = all_reduce(xs, "sum", arity=2)
+        copy = broadcast(total, arity=2)
+        parts = gather(xs, arity=2)
+        return [use(copy, j) for j in range(5)], parts
+
+    g, _ = trace(driver)
+    dense = execute_sequential(g)
+    low = lowered_results(g)
+    same({t: low[t] for t in g.outputs}, {t: dense[t] for t in g.outputs})
+    # threaded executor runs the dense collective nodes unchanged
+    thr = ThreadedExecutor(2).run(g)
+    same({t: thr[t] for t in g.outputs}, {t: dense[t] for t in g.outputs})
+
+
+def test_collectives_outside_trace_raise():
+    with pytest.raises(RuntimeError):
+        all_reduce([])
+    with pytest.raises(RuntimeError):
+        broadcast(None)
+
+
+# ------------------------------------------------------------- rendering
+
+def test_to_dot_and_summary_render_collectives():
+    g, tids = producers_graph(9)
+    ar = add_all_reduce(g, tids, "sum", arity=2, out_bytes=64 * 4)
+    g.mark_output(ar)
+    dot = g.to_dot()
+    assert "doubleoctagon" in dot
+    assert "all_reduce(n=9, arity=2)" in dot
+    assert "collectives={'all_reduce': 1}" in g.summary()
+    low, _ = lower_collectives(g, "auto")
+    ldot = low.to_dot()
+    assert f"stage L0 of #{ar}" in ldot
+    assert "collectives={'all_reduce': 1}" in low.summary()
+
+
+# ------------------------------------------------------ scheduling price
+
+def test_collective_comm_cost_beats_point_to_point_when_wide():
+    p2p = 16 * 32 * 1024 / 1e6
+    tree = collective_comm_cost(16, 32, 1024, 1e6, arity=4)
+    assert 0 < tree < p2p / 2
+    # single consumer, tiny n: point-to-point is not worse (the doc's
+    # "when point-to-point still wins" case)
+    assert collective_comm_cost(2, 1, 1024, 1e6) >= 2 * 1 * 1024 / 1e6
+    # host boundaries are priced: crossing hosts costs more than one host
+    one = collective_comm_cost(16, 8, 1024, 1e6, n_hosts=1)
+    four = collective_comm_cost(16, 8, 1024, 1e6, n_hosts=4,
+                                cross_host_penalty=4.0)
+    assert four > one
+    assert collective_comm_cost(8, 4, 1024, 0.0) == 0.0
+
+
+# ---------------------------------------------------- simulator modeling
+
+def test_sim_models_collective_lowering():
+    from repro.core.simulator import simulate
+    g, tids = producers_graph(16)
+    ar = add_all_reduce(g, tids, "sum", arity=4, out_bytes=64 * 4)
+    g.mark_output(ar)
+    off = simulate(g, 4, collectives="off", seed=3)
+    auto = simulate(g, 4, collectives="auto", seed=3)
+    assert off.makespan > 0 and auto.makespan > 0
+    # lowering adds schedulable stages: the sim must see more tasks
+    assert len(auto.task_worker) > len(off.task_worker)
+
+
+def test_sim_search_collective_arity():
+    from repro.core.simulator import search_collective_arity
+    g, tids = producers_graph(16)
+    ar = add_all_reduce(g, tids, "sum", arity=4, out_bytes=64 * 4)
+    bc = add_broadcast(g, ar, arity=4, out_bytes=64 * 4)
+    for j in range(8):
+        def c(x, _j=j):
+            return float(x.sum()) * (_j + 1)
+        g.add_node(f"c{j}", c, (_Ref(bc),), {}, TaskKind.PURE, deps=(bc,))
+    g.mark_output(ar)
+    best, results = search_collective_arity(g, 4, [2, 4, 8], seed=5)
+    assert set(results) == {2, 4, 8}
+    assert best in results
+    # deterministic: same search, same verdict
+    best2, _ = search_collective_arity(g, 4, [2, 4, 8], seed=5)
+    assert best == best2
+    with pytest.raises(ValueError):
+        search_collective_arity(g, 4, [], seed=5)
+
+
+# ------------------------------------------------- lineage: subtree replan
+
+def _deep_reduce_graph(n=8, arity=2):
+    g, tids = producers_graph(n)
+    ar = add_all_reduce(g, tids, "sum", arity=arity, out_bytes=64 * 4)
+    g.mark_output(ar)
+    return g, ar
+
+
+def test_mid_tree_loss_replans_only_the_subtree():
+    g, ar = _deep_reduce_graph(8, 2)
+    low, o2n = lower_collectives(g, "auto")
+    plan = fuse_graph(low, "auto")
+    stages = collective_stages(low, ar)
+    by_level = {}
+    for t in stages:
+        by_level.setdefault(
+            low.nodes[t].meta["collective_stage"]["level"], []).append(t)
+    root_new = o2n[ar]
+    all_vals = set(low.nodes)
+
+    # one dead level-0 aggregator, leaves alive: replay exactly that stage
+    mid = sorted(by_level[0])[0]
+    rec = recovery_plan_clusters(plan, {mid}, all_vals - {mid})
+    members = {v for cid in rec for v in plan.members[cid]}
+    assert members == {mid}
+
+    # a dead chain up one side of the tree: replay that path only — the
+    # sibling subtrees' partials are alive and must NOT be recomputed
+    path = {mid, sorted(by_level[1])[0], root_new}
+    rec = recovery_plan_clusters(plan, {root_new}, all_vals - path)
+    members = {v for cid in rec for v in plan.members[cid]}
+    assert members == path
+    assert sorted(by_level[0])[1] not in members
+    assert sorted(by_level[1])[1] not in members
+    # the whole blast radius is bounded by the root's own stage set
+    assert members <= set(stages) | {root_new}
+
+
+# ------------------------------------------- cluster: differential + kill
+
+def wide_collective_graph(n=9, m=6, elems=4096, arity=2):
+    g, tids = producers_graph(n, elems)
+    ar = add_all_reduce(g, tids, "sum", arity=arity, out_bytes=elems * 4)
+    bc = add_broadcast(g, ar, arity=arity, out_bytes=elems * 4)
+    cons = []
+    for j in range(m):
+        def c(x, _j=j):
+            return float((x * np.float32(_j + 1)).sum())
+        cons.append(g.add_node(f"c{j}", c, (_Ref(bc),), {}, TaskKind.PURE,
+                               deps=(bc,)))
+    def red(*xs):
+        return float(sum(xs))
+    out = g.add_node("out", red, tuple(_Ref(d) for d in cons), {},
+                     TaskKind.PURE, deps=tuple(cons))
+    g.mark_output(out)
+    return g
+
+
+@pytest.mark.parametrize("spec", ["off", "auto", 3])
+def test_cluster_differential_vs_oracle(spec):
+    g = wide_collective_graph()
+    seq = execute_sequential(g)
+    ex = ClusterExecutor(2, collectives=spec, progress_timeout=120.0)
+    got = ex.run(g)
+    ex.close()
+    same(got, seq)
+    assert ex.stats["collective_roots"] == 2
+    if spec == "off":
+        assert ex.stats["collective_stages"] == 0
+    else:
+        assert ex.stats["collective_stages"] > 0
+
+
+def test_cluster_tcp_channel_differential():
+    g = wide_collective_graph()
+    seq = execute_sequential(g)
+    ex = ClusterExecutor(2, channel="tcp", collectives="auto",
+                         progress_timeout=120.0)
+    got = ex.run(g)
+    ex.close()
+    same(got, seq)
+
+
+def test_cluster_sigkill_mid_tree_recovers_bounded():
+    g = wide_collective_graph(n=9, m=6, elems=4096, arity=2)
+    seq = execute_sequential(g)
+    ex = ClusterExecutor(3, collectives="auto", fuse="auto",
+                         fail_worker=(1, 3), progress_timeout=120.0)
+    got = ex.run(g)
+    ex.close()
+    same(got, seq)
+    assert ex.stats["failures"] == 1
+    assert ex.stats["recomputed"] >= 1
+    # bounded: a one-worker loss must never cascade into a full replay
+    low, _ = lower_collectives(g, "auto")
+    assert ex.stats["recomputed"] < len(low.nodes)
+
+
+def test_cluster_faultplan_on_collective_hops_no_double_reduce():
+    """Drop/delay/dup on the data and control planes while a lowered
+    reduction is in flight: RetryPolicy-driven retries must not apply a
+    combine twice — bit-equality against the oracle is the proof."""
+    from repro.faults import FaultPlan, RetryPolicy
+    g = wide_collective_graph(n=9, m=6, elems=4096, arity=2)
+    seq = execute_sequential(g)
+    plan = (FaultPlan(seed=23)
+            .fail_fetch(nth=1)
+            .delay(0.01, prob=0.3)
+            .duplicate(prob=0.3))
+    ex = ClusterExecutor(2, collectives="auto", fault_plan=plan,
+                         transport="sock", shm_threshold=64,
+                         fetch_retry=RetryPolicy(attempts=3,
+                                                 base_delay=0.01,
+                                                 jitter=0.0),
+                         progress_timeout=120.0)
+    got = ex.run(g)
+    ex.close()
+    same(got, seq)
+    assert ex.stats["failures"] == 0      # owner stayed alive
+    assert ex.stats["recomputed"] == 0    # retried, not replayed
+
+
+def test_cluster_resume_meta_records_collectives(tmp_path):
+    g = wide_collective_graph(n=5, m=3, elems=512, arity=2)
+    seq = execute_sequential(g)
+    ex = ClusterExecutor(2, collectives=3,
+                         checkpoint_dir=str(tmp_path / "ck"),
+                         progress_timeout=120.0)
+    got = ex.run(g)
+    ex.close()
+    same(got, seq)
+    assert ex.collectives == 3
+
+
+# ----------------------------------------------------- launcher plumbing
+
+def _args(**over):
+    from repro.launch.backend import add_backend_args
+    ap = argparse.ArgumentParser()
+    add_backend_args(ap)
+    args = ap.parse_args([])
+    for k, v in over.items():
+        setattr(args, k, v)
+    return args
+
+
+def test_launcher_collectives_flag_validation():
+    from repro.launch.backend import validate_backend_args
+    validate_backend_args(_args())                              # defaults
+    validate_backend_args(_args(collectives="off"))
+    validate_backend_args(_args(backend="process", collectives="4"))
+    with pytest.raises(SystemExit):
+        validate_backend_args(_args(collectives="sideways"))
+    with pytest.raises(SystemExit):
+        validate_backend_args(_args(collectives="1"))
+    with pytest.raises(SystemExit):     # arity override needs a cluster
+        validate_backend_args(_args(collectives="4"))
+
+
+def test_make_executor_rejects_collectives_on_thread_backend():
+    from repro.core import make_executor
+    with pytest.raises(ValueError, match="collectives"):
+        make_executor("thread", 2, collectives="auto")

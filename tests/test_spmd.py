@@ -138,6 +138,67 @@ print("dp sync OK", err)
 """)
 
 
+def test_mesh_collective_helpers_match_dense_references():
+    # satellite to the graph-level collectives: the in-mesh shard_map
+    # helpers are pinned against dense jnp references so BOTH collective
+    # layers (mesh-level and graph-level) have differential coverage
+    run_script("""
+import functools
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+from repro.parallel.collectives import (ring_permute, all_gather_seq,
+                                        reduce_scatter, dp_gradient_sync)
+
+mesh = Mesh(np.array(jax.devices()).reshape(8), ("dp",))
+sm = functools.partial(shard_map, mesh=mesh)
+
+x = jnp.arange(8 * 4, dtype=jnp.float32).reshape(8, 4)
+xs = jax.device_put(x, NamedSharding(mesh, P("dp", None)))
+
+# ring_permute: device i ships its row block to (i+shift)%8, so the
+# assembled result is the row blocks rolled forward by `shift`
+for shift in (1, 3):
+    f = sm(lambda s, k=shift: ring_permute(s, "dp", k),
+           in_specs=P("dp", None), out_specs=P("dp", None))
+    got = np.asarray(f(xs))
+    want = np.asarray(jnp.roll(x, shift, axis=0))
+    assert np.array_equal(got, want), (shift, got, want)
+
+# all_gather_seq (tiled, dim=1): every device ends up holding the full
+# concatenation of the row blocks along columns
+f = sm(lambda s: all_gather_seq(s, "dp", dim=1),
+       in_specs=P("dp", None), out_specs=P("dp", None))
+got = np.asarray(f(xs))          # (8, 32): row j = device j's gathered copy
+flat = np.asarray(x).reshape(-1)
+for j in range(8):
+    assert np.array_equal(got[j], flat), j
+
+# reduce_scatter (tiled, dim=1) over row shards: the total column sum,
+# scattered so device j keeps column block j
+w = jnp.arange(8 * 16, dtype=jnp.float32).reshape(8, 16)
+ws = jax.device_put(w, NamedSharding(mesh, P("dp", None)))
+f = sm(lambda s: reduce_scatter(s, "dp", dim=1),
+       in_specs=P("dp", None), out_specs=P(None, "dp"))
+got = np.asarray(f(ws))
+want = np.asarray(w.sum(axis=0, keepdims=True))
+assert np.allclose(got, want), (got, want)
+
+# reduce_scatter default dim=0 on a replicated operand: psum of the 8
+# identical copies, scattered back over rows -> 8 * w
+f = sm(lambda s: reduce_scatter(s, "dp"),
+       in_specs=P(None, None), out_specs=P("dp", None))
+wr = jax.device_put(w, NamedSharding(mesh, P(None, None)))
+got = np.asarray(f(wr))
+assert np.allclose(got, 8.0 * np.asarray(w)), got
+
+# dp_gradient_sync is the identity when no mesh axis matches
+g = {"w": x}
+assert dp_gradient_sync(g, mesh, ("tensor",)) is g
+
+print("mesh collective helpers OK")
+""")
+
+
 def test_fit_sharding_drops_nondivisible_axes():
     run_script("""
 from repro.launch.steps import _fit_sharding
