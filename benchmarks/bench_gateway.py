@@ -1,0 +1,265 @@
+"""Multi-tenant gateway benchmark: latency SLOs and fair-share under
+contention (``BENCH_gateway.json``).
+
+Three questions, one artifact:
+
+1. **Per-tenant latency under contention** — T identical tenants each
+   push a stream of jobs into one shared resident pool; the artifact
+   records each tenant's p50/p99 submit-to-gather latency (client-side,
+   cross-checked against the gateway's server-side SLO window).
+
+2. **Fairness** — with equal weights, identical tenants must see
+   comparable service: the max/min ratio of mean per-tenant latency is
+   the headline fairness number.  A weighted pass (weight 2 vs 1) shows
+   the dial works.
+
+3. **Amortization** — the same total job count submitted one-at-a-time
+   by a single tenant (no concurrency) vs the concurrent multi-tenant
+   wall clock on the same pool: the throughput the shared resident
+   service buys.
+
+``--smoke`` is the CI gate: tiny sizes, every result bit-for-bit vs the
+sequential oracle, and a hard fairness assertion (equal-weight tenants
+within 3x mean latency of each other).
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.bench_gateway [--tenants 2]
+        [--jobs 30] [--nodes 40] [--workers 2] [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import json
+import os
+import random
+import sys
+import threading
+import time
+from functools import partial
+from typing import Any, Dict, List
+
+from repro.config import ClusterConfig
+from repro.core import TaskGraph, TaskKind, execute_sequential
+from repro.core.tracing import RemappedRef as _Ref
+from repro.gateway import GatewayService, connect
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_gateway.json")
+TOKEN = "bench-gateway"
+
+
+def _combine(i, *xs):
+    return (i + sum(xs) * 7) % 1_000_003
+
+
+def bench_dag(seed: int, n: int, p: float = 0.3) -> TaskGraph:
+    """Cheap integer DAG whose node fns pickle into the gateway pool.
+
+    Run via ``python -m``, this module is ``__main__`` and its functions
+    would pickle unresolvably — so reference them through the canonical
+    import instead (same objects when imported normally)."""
+    canon = importlib.import_module("benchmarks.bench_gateway")
+    rng = random.Random(seed)
+    g = TaskGraph()
+    for i in range(n):
+        deps = [j for j in range(i) if rng.random() < p][-3:]
+        g.add_node(f"t{i}", partial(canon._combine, seed * 1000 + i),
+                   tuple(_Ref(d) for d in deps), {}, TaskKind.PURE,
+                   deps=deps, cost=0.5 + rng.random())
+    g.mark_output(n - 1)
+    return g
+
+
+def _pctl(xs: List[float], q: float) -> float:
+    xs = sorted(xs)
+    return xs[min(len(xs) - 1, max(0, int(round(q * (len(xs) - 1)))))]
+
+
+def _lat_summary(lats: List[float]) -> Dict[str, float]:
+    return {
+        "p50_ms": round(_pctl(lats, 0.50) * 1e3, 3),
+        "p99_ms": round(_pctl(lats, 0.99) * 1e3, 3),
+        "mean_ms": round(sum(lats) / len(lats) * 1e3, 3),
+        "jobs": len(lats),
+    }
+
+
+def run_tenants(address: str, spec: List[Dict[str, Any]], jobs: int,
+                graph: TaskGraph, oracle: Dict[str, Any]
+                ) -> Dict[str, Any]:
+    """Each tenant in ``spec`` submits ``jobs`` copies of ``graph``
+    concurrently; returns per-tenant latency summaries + total wall."""
+    out: Dict[str, Any] = {}
+    errs: List[BaseException] = []
+
+    def tenant(name: str, priority: float) -> None:
+        try:
+            with connect(address, token=TOKEN, tenant=name,
+                         priority=priority) as c:
+                futs = [c.submit(graph, label=f"{name}-{i}")
+                        for i in range(jobs)]
+                lats = []
+                for f in futs:
+                    res = f.result(600)
+                    assert res == oracle, f"tenant {name} diverged"
+                    lats.append(f.stats["submit_to_gather_s"])
+                out[name] = _lat_summary(lats)
+                # server-side SLO window must agree it saw this tenant
+                slo = c.stats()[name]["slo"]["submit_to_gather_s"]
+                assert slo["p50"] is not None
+        except BaseException as e:
+            errs.append(e)
+
+    t0 = time.perf_counter()
+    threads = [threading.Thread(target=tenant,
+                                args=(s["name"], s["priority"]))
+               for s in spec]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    if errs:
+        raise errs[0]
+    return {"tenants": out, "wall_s": round(wall, 3)}
+
+
+def cli_smoke(workers: int, jobs: int, nodes: int) -> None:
+    """CI gate for the service *binary*: start a real ``repro-gateway``
+    subprocess, have two tenants submit concurrently over localhost TCP,
+    and check oracle equality + per-tenant stats before a clean SIGINT
+    drain.  (The unpickle side needs ``benchmarks.bench_gateway``
+    importable in the service process: repo root cwd, ``python -m``.)"""
+    import re
+    import signal
+    import subprocess
+
+    graph = bench_dag(2, nodes)
+    oracle = execute_sequential(graph)
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.gateway",
+         "--n-workers", str(workers), "--token", TOKEN,
+         "--quota", "micro=1"],
+        stdout=subprocess.PIPE, text=True)
+    try:
+        first = proc.stdout.readline()
+        m = re.search(r"serving clients on (\S+)", first)
+        assert m, f"gateway never announced its address: {first!r}"
+        addr = m.group(1)
+        spec = [{"name": "serve", "priority": 2.0},
+                {"name": "batch", "priority": 1.0}]
+        got = run_tenants(addr, spec, jobs, graph, oracle)
+        assert all(got["tenants"][s["name"]]["jobs"] == jobs
+                   for s in spec), got
+        with connect(addr, token=TOKEN, tenant="serve") as c:
+            st = c.stats()
+            assert st["serve"]["completed"] >= jobs and "pool" in st, st
+            # a quota'd tenant is rejected as the typed error, cross-process
+            from repro.gateway import QuotaExceeded
+            with connect(addr, token=TOKEN, tenant="micro") as cm:
+                err = cm.submit(graph).exception(60)
+                assert isinstance(err, QuotaExceeded), err
+        proc.send_signal(signal.SIGINT)
+        out, _ = proc.communicate(timeout=60)
+        assert "stopped" in out, out
+        print(f"smoke: repro-gateway CLI served 2 tenants x {jobs} jobs "
+              f"over {addr}, typed quota rejection, clean drain",
+              flush=True)
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+
+
+def main(argv=None) -> Dict[str, Any]:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--tenants", type=int, default=2)
+    ap.add_argument("--jobs", type=int, default=30,
+                    help="jobs per tenant in the contention pass")
+    ap.add_argument("--nodes", type=int, default=40)
+    ap.add_argument("--workers", type=int, default=2)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI: tiny sizes + oracle/fairness assertions")
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args(argv if argv is not None else [])
+    if args.smoke:
+        if args.out == OUT_PATH:    # never clobber the headline artifact
+            args.out = OUT_PATH.replace(".json", "_smoke.json")
+        args.jobs = min(args.jobs, 8)
+        args.nodes = min(args.nodes, 25)
+        cli_smoke(args.workers, args.jobs, args.nodes)
+
+    graph = bench_dag(1, args.nodes)
+    oracle = execute_sequential(graph)
+    cfg = ClusterConfig(n_workers=args.workers, token=TOKEN, fuse="auto",
+                        progress_timeout=120.0)
+
+    with GatewayService(cfg) as gw:
+        addr = gw.address
+
+        # warmup: the first job pays worker fork + first-dispatch costs;
+        # keep that out of every timed pass below
+        with connect(addr, token=TOKEN, tenant="warmup") as c:
+            assert c.submit(graph).result(600) == oracle
+
+        # -- 1+2. equal-weight contention: latency SLOs + fairness ------
+        spec = [{"name": f"tenant{i}", "priority": 1.0}
+                for i in range(args.tenants)]
+        fair = run_tenants(addr, spec, args.jobs, graph, oracle)
+        means = [fair["tenants"][s["name"]]["mean_ms"] for s in spec]
+        fairness_ratio = max(means) / min(means)
+        print(f"equal-weight: {args.tenants} tenants x {args.jobs} jobs "
+              f"in {fair['wall_s']}s, mean-latency ratio "
+              f"{fairness_ratio:.2f}", flush=True)
+        if args.smoke:
+            assert all(fair["tenants"][s["name"]]["jobs"] == args.jobs
+                       for s in spec), fair
+            assert fairness_ratio <= 3.0, \
+                f"equal-weight tenants served unfairly: {fair}"
+
+        # -- 2b. the weight dial: weighted tenant vs best-effort --------
+        gw.executor.set_tenant_weight("gold", 2.0)
+        weighted = run_tenants(
+            addr, [{"name": "gold", "priority": 2.0},
+                   {"name": "bronze", "priority": 1.0}],
+            args.jobs, graph, oracle)
+        print(f"weighted 2:1 -> gold p50 "
+              f"{weighted['tenants']['gold']['p50_ms']}ms, bronze p50 "
+              f"{weighted['tenants']['bronze']['p50_ms']}ms", flush=True)
+
+        # -- 3. amortization: one tenant, strictly sequential -----------
+        t0 = time.perf_counter()
+        with connect(addr, token=TOKEN, tenant="solo") as c:
+            total = args.tenants * args.jobs
+            for i in range(total):
+                res = c.submit(graph).result(600)
+                assert res == oracle
+        seq_wall = time.perf_counter() - t0
+        speedup = seq_wall / fair["wall_s"]
+        print(f"sequential {total} jobs: {seq_wall:.3f}s -> concurrent "
+              f"speedup {speedup:.2f}x", flush=True)
+
+        pool = gw.stats()["pool"]
+
+    payload = {
+        "config": {"tenants": args.tenants, "jobs": args.jobs,
+                   "nodes": args.nodes, "workers": args.workers,
+                   "smoke": args.smoke},
+        "equal_weight": fair,
+        "fairness_mean_latency_ratio": round(fairness_ratio, 3),
+        "weighted_2_to_1": weighted,
+        "sequential_baseline": {"wall_s": round(seq_wall, 3),
+                                "concurrent_speedup": round(speedup, 3)},
+        "pool": {"n_workers": pool["n_workers"]},
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"fairness ratio {fairness_ratio:.2f} (equal weights), "
+          f"speedup {speedup:.2f}x vs sequential -> {args.out}",
+          flush=True)
+    return payload
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

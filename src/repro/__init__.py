@@ -1,0 +1,56 @@
+"""repro — an auto-parallelizing distributed runtime for pure task graphs.
+
+Top-level convenience surface::
+
+    import repro
+
+    g = repro.TaskGraph(); ...            # or trace with @repro.task
+    repro.run_graph(g, n_workers=4, backend="process")
+
+    cfg = repro.ClusterConfig(n_workers=4, fuse="auto")
+    repro.run_graph(g, config=cfg, backend="process")
+
+    with repro.connect("gw-host:7777", token=tok) as client:
+        fut = client.submit(g)            # multi-tenant gateway session
+        print(fut.result())
+
+Everything is imported lazily: ``import repro`` must stay cheap (no jax,
+no multiprocessing side effects) because workers, clients and launchers
+all pay it on startup.
+"""
+from typing import Any
+
+__all__ = [
+    "ClusterConfig", "TaskGraph", "task", "run_graph", "make_executor",
+    "execute_sequential", "connect", "Client", "GatewayError",
+    "QuotaExceeded",
+]
+
+_LAZY = {
+    "ClusterConfig": ("repro.config", "ClusterConfig"),
+    "TaskGraph": ("repro.core.graph", "TaskGraph"),
+    "task": ("repro.core.tracing", "task"),
+    "run_graph": ("repro.core.executor", "run_graph"),
+    "make_executor": ("repro.core.executor", "make_executor"),
+    "execute_sequential": ("repro.core.executor", "execute_sequential"),
+    "connect": ("repro.gateway.client", "connect"),
+    "Client": ("repro.gateway.client", "Client"),
+    "GatewayError": ("repro.gateway.errors", "GatewayError"),
+    "QuotaExceeded": ("repro.gateway.errors", "QuotaExceeded"),
+}
+
+
+def __getattr__(name: str) -> Any:
+    try:
+        mod_name, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(f"module 'repro' has no attribute {name!r}") \
+            from None
+    import importlib
+    value = getattr(importlib.import_module(mod_name), attr)
+    globals()[name] = value      # cache: __getattr__ runs once per name
+    return value
+
+
+def __dir__() -> list:
+    return sorted(set(globals()) | set(_LAZY))

@@ -46,7 +46,19 @@ Record kinds (a tuple per record, first element the kind tag):
            an shm segment that outlives the driver) for ``tid``.
 ``val``    ``(tid, value_bytes)`` — a driver-cached value (barrier
            results, collected finals) spilled into the log itself.
+``session``  ``(tenant, info)`` — a gateway tenant session opened (or its
+           quotas changed); ``info`` carries the quota/config dict.  A
+           resumed gateway re-creates these sessions so clients reconnect
+           into their old identity.
+``sessionend``  ``(tenant,)`` — the session was closed by the client.
+``job``    ``(job_id, info)`` — a tenant job was admitted into the
+           resident run; ``info`` records tenant, id base and size.
+``jobdone``  ``(job_id,)`` — the job finished (collected or failed) and
+           its id range was retired.
 =========  ===============================================================
+
+Loaders skip unknown kinds (forward compatibility), so logs carrying the
+gateway records stay readable by older tooling.
 """
 from __future__ import annotations
 
@@ -162,6 +174,8 @@ class RunState:
         self.dropped: Set[int] = set()
         self.handles: Dict[int, bytes] = {}        # tid -> pickled handle
         self.values: Dict[int, bytes] = {}         # tid -> pickled value
+        self.sessions: Dict[str, Dict[str, Any]] = {}   # tenant -> quotas
+        self.jobs: Dict[int, Dict[str, Any]] = {}  # in-flight admitted jobs
         self.truncated = False                     # torn tail was cut
         self.n_records = 0
 
@@ -196,6 +210,14 @@ class RunState:
             self.handles[record[1]] = record[2]
         elif kind == "val":
             self.values[record[1]] = record[2]
+        elif kind == "session":
+            self.sessions[record[1]] = dict(record[2])
+        elif kind == "sessionend":
+            self.sessions.pop(record[1], None)
+        elif kind == "job":
+            self.jobs[record[1]] = dict(record[2])
+        elif kind == "jobdone":
+            self.jobs.pop(record[1], None)
         # unknown kinds are skipped: forward compatibility
         self.n_records += 1
 

@@ -117,6 +117,7 @@ have completed cluster-wide.
 """
 from __future__ import annotations
 
+import bisect
 import multiprocessing as mp
 import os
 import pickle
@@ -131,13 +132,16 @@ from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.checkpoint.runlog import (RunLog, graph_fingerprint,
                                      plan_fingerprint)
+from repro.config import ClusterConfig, resolve_config
 from repro.core.collectives import (CollectivesSpec, lower_collectives,
                                     parse_collectives_spec)
 from repro.core.executor import MissingInput, TaskFailed
-from repro.core.fusion import FuseSpec, fuse as fuse_graph, parse_fuse_spec
+from repro.core.fusion import (FusedPlan, FuseSpec, fuse as fuse_graph,
+                               offset_plan, parse_fuse_spec)
 from repro.core.graph import TaskGraph, TaskKind
 from repro.core.lineage import outage_recovery, recovery_plan_clusters
-from repro.core.scheduler import list_schedule, replan
+from repro.core.scheduler import fair_interleave, list_schedule, replan
+from repro.core.tracing import offset_graph
 from repro.core.simulator import pick_speculation
 
 from repro.faults import FaultPlan, FaultyChannel, FaultyListener
@@ -151,6 +155,9 @@ from .objectstore import DriverObjectStore
 from .worker import pipe_worker_main, tcp_worker_main
 
 PENDING, READY, WAITING, INFLIGHT, DONE = range(5)
+# terminal state for clusters of a failed/cancelled resident-mode job:
+# never dispatched, never resurrected by recovery, never counted done
+CANCELLED = 5
 
 WORKER_SPECS = ("local", "remote")
 
@@ -169,6 +176,12 @@ class DriverKilled(RuntimeError):
         self.run_id = run_id
 
 
+class JobCancelled(RuntimeError):
+    """A resident-mode job was cancelled (client disconnect, quota
+    enforcement, or an explicit :meth:`ClusterExecutor.cancel_job`)
+    before it completed."""
+
+
 @dataclass
 class _Worker:
     wid: int
@@ -183,6 +196,28 @@ class _Worker:
 
     def load(self) -> int:
         return len(self.inflight) + len(self.assigned)
+
+
+@dataclass
+class _Job:
+    """A tenant submission admitted into the resident run: an offset
+    (collision-free) slice of the union graph plus everything needed to
+    resolve its future back in the submitter's own id space."""
+    job_id: int
+    tenant: str
+    base: int                       # id range [base, end) in the union
+    end: int
+    graph: TaskGraph                # offset lowered graph
+    plan: FusedPlan                 # offset job-local plan
+    required: Set[int]              # offset value tids to collect
+    user_required: List[int]        # result keys, submitter id space
+    coll_map: Optional[Dict[int, int]]  # user tid -> offset lowered tid
+    inputs: Dict[str, Any]          # namespaced ("j<id>/<name>") inputs
+    future: ClusterFuture
+    cids: frozenset                 # offset cluster ids
+    submitted: float = 0.0          # perf_counter at submit_job()
+    first_dispatch: Optional[float] = None
+    terminal: bool = False          # finished, failed, or cancelled
 
 
 class ClusterExecutor:
@@ -238,43 +273,41 @@ class ClusterExecutor:
 
     def __init__(
         self,
-        n_workers: int = 2,
+        n_workers: Optional[int] = None,
         *,
-        policy: str = "critical_path",
-        worker_speed: Optional[Sequence[float]] = None,
-        pipeline_depth: int = 2,
-        outputs_only: bool = False,
-        fail_worker: Optional[Tuple[int, int]] = None,
-        join_after: Optional[Tuple[int, int]] = None,
-        progress_timeout: float = 60.0,
-        start_method: str = "fork",
-        seed: int = 0,
-        transport: str = "auto",
-        shm_threshold: int = serde.SHM_THRESHOLD,
-        bandwidth: float = float(256 << 20),
-        channel: Optional[str] = None,
-        connect: Optional[str] = None,
-        workers: Optional[Sequence[str]] = None,
-        token: Optional[str] = None,
-        accept_timeout: float = 60.0,
-        heartbeat_interval: float = 1.0,
-        heartbeat_timeout: float = 15.0,
-        speculate_after: Optional[float] = None,
-        fuse: FuseSpec = "off",
-        collectives: CollectivesSpec = "auto",
-        checkpoint_dir: Optional[str] = None,
-        checkpoint_interval: float = 0.25,
-        resume: Optional[str] = None,
-        rejoin_timeout: float = 10.0,
-        rejoin_window: Optional[float] = None,
-        fail_driver: Optional[int] = None,
-        fault_plan: Optional[FaultPlan] = None,
-        suspect_grace: float = 5.0,
-        quarantine_after: int = 3,
-        probe_interval: float = 2.0,
-        heartbeat_jitter: float = 0.25,
-        fetch_retry: Optional[Any] = None,
+        config: Optional[ClusterConfig] = None,
+        **legacy: Any,
     ) -> None:
+        # All runtime knobs live on one frozen repro.ClusterConfig; the
+        # historical keyword arguments keep working for one release via
+        # the shim (DeprecationWarning, once per name — repro/config.py).
+        cfg = resolve_config(config, legacy)
+        if n_workers is not None:
+            cfg = cfg.replace(n_workers=n_workers)
+        self.config = cfg
+        (policy, worker_speed, pipeline_depth, outputs_only, fail_worker,
+         join_after, progress_timeout, start_method, seed, transport,
+         shm_threshold, bandwidth, channel, connect, workers, token,
+         accept_timeout, heartbeat_interval, heartbeat_timeout,
+         speculate_after, fuse, collectives, checkpoint_dir,
+         checkpoint_interval, resume, rejoin_timeout, rejoin_window,
+         fail_driver, fault_plan, suspect_grace, quarantine_after,
+         probe_interval, heartbeat_jitter, fetch_retry) = (
+            cfg.policy, cfg.worker_speed, cfg.pipeline_depth,
+            cfg.outputs_only, cfg.fail_worker, cfg.join_after,
+            cfg.progress_timeout, cfg.start_method, cfg.seed,
+            cfg.transport,
+            cfg.shm_threshold if cfg.shm_threshold is not None
+            else serde.SHM_THRESHOLD,
+            cfg.bandwidth, cfg.channel, cfg.connect,
+            cfg.workers, cfg.token, cfg.accept_timeout,
+            cfg.heartbeat_interval, cfg.heartbeat_timeout,
+            cfg.speculate_after, cfg.fuse, cfg.collectives,
+            cfg.checkpoint_dir, cfg.checkpoint_interval, cfg.resume,
+            cfg.rejoin_timeout, cfg.rejoin_window, cfg.fail_driver,
+            cfg.fault_plan, cfg.suspect_grace, cfg.quarantine_after,
+            cfg.probe_interval, cfg.heartbeat_jitter, cfg.fetch_retry)
+        n_workers = cfg.n_workers
         if start_method not in ("fork", "spawn", "forkserver"):
             raise ValueError(f"unknown start_method {start_method!r}")
         if resume is not None:
@@ -397,6 +430,13 @@ class ClusterExecutor:
         self.speculation_events: List[Dict[str, Any]] = []
         self._commands: List[Tuple] = []
         self._cmd_lock = threading.Lock()
+        # -- resident (gateway) mode: one long-lived run admitting jobs --
+        self._next_base = 0              # next free id-range base
+        self._job_seq = 0
+        self._resident: Optional[threading.Thread] = None
+        self._resident_error: Optional[BaseException] = None
+        self._shutdown = threading.Event()
+        self._tenant_weights: Dict[str, float] = {}
         # stats/recovery_events/wall_time are per-run instance attributes,
         # so one executor runs ONE graph at a time; concurrent submissions
         # queue on this lock (use separate executors for parallel jobs)
@@ -452,6 +492,148 @@ class ClusterExecutor:
         with self._cmd_lock:
             self._commands.append(("kill", wid))
 
+    # --------------------------------------------------- resident (gateway)
+    def start_resident(self) -> None:
+        """Start the long-lived resident driver: bring up the worker pool
+        on a background thread and keep the run open indefinitely,
+        admitting graphs submitted via :meth:`submit_job` into one shared
+        union run.  Multiple tenants' jobs execute concurrently on the
+        SAME pool (contrast :meth:`submit`, which serializes whole runs on
+        the run lock).  The gateway service (:mod:`repro.gateway`) is the
+        intended caller; stop with :meth:`shutdown_resident`."""
+        if self._resident is not None and self._resident.is_alive():
+            return
+        self._shutdown.clear()
+        self._resident_error = None
+
+        def drive() -> None:
+            try:
+                with self._run_lock:
+                    self._execute_locked(TaskGraph(), {}, resident=True)
+            except BaseException as e:  # noqa: BLE001 — surfaced on jobs
+                self._resident_error = e
+            # jobs queued after the loop died would hang forever: fail
+            # them with the cause (admitted jobs were failed in the run)
+            exc = self._resident_error or RuntimeError(
+                "resident executor shut down")
+            with self._cmd_lock:
+                cmds, self._commands = self._commands, []
+            for cmd in cmds:
+                if cmd[0] == "job":
+                    cmd[1].future._set_error(exc)
+
+        self._resident = threading.Thread(
+            target=drive, daemon=True, name="cluster-resident-driver")
+        self._resident.start()
+
+    def submit_job(self, graph: TaskGraph,
+                   inputs: Optional[Dict[str, Any]] = None, *,
+                   tenant: str = "default",
+                   outputs_only: Optional[bool] = None,
+                   label: str = "",
+                   admission=None) -> ClusterFuture:
+        """Admit ``graph`` into the resident run and return its future.
+
+        ``admission`` is an optional gate called with the job's cluster
+        count after fusion but before any id space is consumed or the job
+        is queued; raising from it (the gateway raises
+        :class:`repro.gateway.QuotaExceeded`) aborts the submission with
+        no residue.  The graph is lowered and fused in its own pristine
+        id space (the
+        deterministic passes every backend shares, so results stay
+        bit-identical to ``execute_sequential``), then transplanted into
+        a private ``[base, base+n)`` range of the union run — task ids,
+        cluster ids, object-store keys, lineage and run-log records are
+        all namespaced per job, and placeholder inputs become
+        ``"j<id>/<name>"`` so two tenants' ``"x"`` never collide.  The
+        future's result dict is keyed by the SUBMITTED graph's own ids.
+        """
+        if self._resident is None or not self._resident.is_alive():
+            if self._resident_error is not None:
+                raise RuntimeError("resident executor died") \
+                    from self._resident_error
+            raise RuntimeError(
+                "submit_job requires a resident executor "
+                "(call start_resident() first)")
+        graph.validate()
+        oo = self.outputs_only if outputs_only is None else outputs_only
+        user_graph = graph
+        lowered, coll_map = lower_collectives(graph, self.collectives)
+        jplan = fuse_graph(lowered, self.fuse)
+        user_required = (sorted(user_graph.outputs) if oo
+                         else sorted(user_graph.nodes))
+        if admission is not None:
+            admission(len(jplan.cgraph.nodes))
+        width = (max(lowered.nodes) + 1) if lowered.nodes else 0
+        with self._cmd_lock:
+            base = self._next_base
+            self._next_base += width
+            job_id = self._job_seq
+            self._job_seq += 1
+        ns = f"j{job_id}/"
+        off_graph = offset_graph(lowered, base, input_ns=ns)
+        off_plan = offset_plan(jplan, base, off_graph)
+        if coll_map is None:
+            cmap = None
+            req = {t + base for t in user_required}
+        else:
+            cmap = {t: coll_map[t] + base for t in user_graph.nodes}
+            req = {cmap[t] for t in user_required}
+        fut = ClusterFuture(label or f"{tenant}/j{job_id}")
+        # admission-control hints for the gateway: cluster count and job
+        # id are known the moment the job is fused, long before the
+        # resident loop admits it (cancel_job takes the job id)
+        fut.n_clusters = len(off_plan.cgraph.nodes)
+        fut.job_id = job_id
+        job = _Job(job_id=job_id, tenant=tenant, base=base,
+                   end=base + width, graph=off_graph, plan=off_plan,
+                   required=req, user_required=list(user_required),
+                   coll_map=cmap,
+                   inputs={ns + k: v for k, v in (inputs or {}).items()},
+                   future=fut, cids=frozenset(off_plan.cgraph.nodes),
+                   submitted=time.perf_counter())
+        with self._cmd_lock:
+            self._commands.append(("job", job))
+        return fut
+
+    def cancel_job(self, job_id: int, reason: str = "cancelled") -> None:
+        """Cancel an admitted job (client disconnect, quota enforcement):
+        its future fails with :class:`JobCancelled`, its unfinished
+        clusters are withdrawn and its values collected — other tenants'
+        jobs are untouched."""
+        with self._cmd_lock:
+            self._commands.append(
+                ("canceljob", job_id, JobCancelled(reason)))
+
+    def log_record(self, *record) -> None:
+        """Journal an out-of-band record into the resident run's log (a
+        no-op when checkpointing is off).  The gateway uses this for its
+        ``session``/``sessionend`` records so a resumed gateway can
+        re-create tenant sessions; the append happens on the driver
+        thread, keeping the run log single-writer."""
+        with self._cmd_lock:
+            self._commands.append(("logrec", record))
+
+    def set_tenant_weight(self, tenant: str, weight: float) -> None:
+        """Fair-share weight for ``tenant`` in the resident dispatch tier
+        (default 1.0; higher means more dispatch slots under contention,
+        fractions accumulate as deficits)."""
+        self._tenant_weights[tenant] = float(weight)
+
+    def shutdown_resident(self, timeout: float = 30.0) -> None:
+        """Stop the resident driver and tear down the pool.  Jobs still
+        in flight fail with ``"resident executor shut down"`` — the
+        gateway drains its sessions before calling this.  Re-raises the
+        resident loop's error, if it died of one."""
+        if self._resident is None:
+            return
+        self._shutdown.set()
+        self._resident.join(timeout=timeout)
+        self._resident = None
+        if self._resident_error is not None:
+            err, self._resident_error = self._resident_error, None
+            raise err
+
     def close(self) -> None:
         """Release the executor's listening socket (TCP channel only)."""
         if self.listener is not None:
@@ -480,7 +662,13 @@ class ClusterExecutor:
             return result, dict(self.stats), self.wall_time
 
     def _execute_locked(self, graph: TaskGraph,
-                        inputs: Optional[Dict[str, Any]]) -> Dict[int, Any]:
+                        inputs: Optional[Dict[str, Any]],
+                        resident: bool = False) -> Dict[int, Any]:
+        if resident:
+            # the union run admits jobs mid-flight: its graph/inputs are
+            # live mutable objects, growing at admission, shrinking at
+            # retirement
+            inputs = dict(inputs) if inputs else {}
         ctx = mp.get_context(self.start_method)
         transport = self.transport_used = serde.resolve_transport(
             self.transport, multihost=self.multihost)
@@ -503,8 +691,17 @@ class ClusterExecutor:
                          else set(user_graph.nodes))
 
         # -- graph compilation: the driver below runs over the CLUSTER graph
-        # (fuse="off" -> identity plan, cg is graph, cluster id == task id)
-        plan = fuse_graph(graph, self.fuse)
+        # (fuse="off" -> identity plan, cg is graph, cluster id == task id).
+        # A resident run starts from an explicitly EMPTY non-identity plan:
+        # jobs are fused in their own id space at submit time and spliced
+        # in at admission — the union must never be the identity plan, or
+        # the first fused job would collide the cid and tid namespaces.
+        if resident:
+            plan = FusedPlan(graph=graph, cgraph=TaskGraph(), members={},
+                             cluster_of={}, outputs={}, ext_deps={},
+                             consumers={}, spec=self.fuse)
+        else:
+            plan = fuse_graph(graph, self.fuse)
         cg = plan.cgraph
         required = (user_required if coll_map is None
                     else {coll_map[t] for t in user_required})
@@ -535,6 +732,9 @@ class ClusterExecutor:
             "suspected": 0, "healed": 0, "relay_fallbacks": 0,
             "quarantined": 0, "readmitted": 0, "deplosts": 0,
         }
+        if resident:
+            stats.update({"jobs_admitted": 0, "jobs_completed": 0,
+                          "jobs_failed": 0})
         self.recovery_events = []
         self.speculation_events = []
         t0 = time.perf_counter()
@@ -576,7 +776,7 @@ class ClusterExecutor:
                     "outputs_only": self.outputs_only,
                     "address": self.address, "channel": self.channel,
                     "transport": transport, "seg_prefix": seg_prefix,
-                    "n_clusters": len(cg.nodes),
+                    "n_clusters": len(cg.nodes), "resident": resident,
                 })
             else:
                 runlog.append("resume", {"seg_prefix": seg_prefix})
@@ -877,6 +1077,22 @@ class ClusterExecutor:
         join_after = self.join_after     # consumed per run, not per executor
         last_progress = time.perf_counter()
 
+        # -- resident-mode job state: admitted jobs by id, plus a sorted
+        # span index mapping ANY task/cluster id to its owning job (ids of
+        # a job live in [base, end), cluster ids included; empty and inert
+        # for ordinary single-graph runs) -------------------------------
+        jobs: Dict[int, _Job] = {}
+        job_spans: List[Tuple[int, int, _Job]] = []
+        span_starts: List[int] = []
+
+        def job_of(x: int) -> Optional[_Job]:
+            i = bisect.bisect_right(span_starts, x) - 1
+            if i >= 0:
+                b, e, j = job_spans[i]
+                if b <= x < e:
+                    return j
+            return None
+
         def alive_ids() -> List[int]:
             return [w.wid for w in workers.values() if w.alive]
 
@@ -1004,6 +1220,18 @@ class ClusterExecutor:
                 stats["transfers_driver"] += 1
             stats["transfers"] += 1
 
+        def task_error(tid: int, exc: BaseException) -> None:
+            """Route a task-level failure: in a resident run a failure
+            belonging to some tenant's job fails ONLY that job's future
+            (isolation); everything else — and every single-graph run —
+            keeps the fail-the-run contract.  ``error`` stays reserved
+            for infrastructure-fatal conditions."""
+            j = job_of(tid)
+            if j is not None:
+                fail_job(j, exc)
+            else:
+                error.append(exc)
+
         def publish_cached(d: int) -> Optional[serde.Handle]:
             """Encode a driver-cached value for shipping; a value that
             cannot be serialized is a task error, not a worker death."""
@@ -1012,8 +1240,9 @@ class ClusterExecutor:
                                  threshold=self.shm_threshold,
                                  namer=driver_namer)
             except Exception as e:      # noqa: BLE001 — surfaced on future
-                error.append(TaskFailed(
-                    d, graph.nodes[d].name,
+                node = graph.nodes.get(d)
+                task_error(d, TaskFailed(
+                    d, node.name if node else f"#{d}",
                     RuntimeError(f"SerializationError: result of task {d} "
                                  f"cannot be shipped to a worker: {e!r}")))
                 return None
@@ -1106,6 +1335,10 @@ class ClusterExecutor:
             If the worker dies before the flush lands, the death handler
             re-queues ``cid`` like any other in-flight loss."""
             state[cid] = INFLIGHT
+            if resident:
+                j = job_of(cid)
+                if j is not None and j.first_dispatch is None:
+                    j.first_dispatch = time.perf_counter()  # SLO: queue wait
             w.inflight.add(cid)
             runners.setdefault(cid, set()).add(w.wid)
             run_started.setdefault(cid, {})[w.wid] = time.perf_counter()
@@ -1156,7 +1389,19 @@ class ClusterExecutor:
             ready = [c for c, s in state.items() if s == READY]
             if not ready:
                 return
-            ready.sort(key=lambda c: (-rank[c], c))
+            if resident and len(jobs) > 1:
+                # multi-tenant fairness tier: deficit-weighted round-robin
+                # across tenants BEFORE the locality/stealing loop below,
+                # so one tenant's wide high-rank graph cannot starve
+                # another's short interactive job out of dispatch slots
+                ready = fair_interleave(
+                    ready,
+                    lambda c: (job_of(c).tenant
+                               if job_of(c) is not None else ""),
+                    key=lambda c: (-rank[c], c),
+                    weights=self._tenant_weights or None)
+            else:
+                ready.sort(key=lambda c: (-rank[c], c))
             for w in list(workers.values()):
                 if not dispatchable(w):
                     continue
@@ -1181,7 +1426,11 @@ class ClusterExecutor:
                         return      # recovery invalidated the snapshot
 
         def maybe_gc(tid: int) -> None:
-            if not self.outputs_only or not store.collectable(tid):
+            # a resident run GCs like outputs_only: every job's required
+            # values sit in graph.outputs (collection-protected), so only
+            # true intermediates of outputs_only jobs ever drain to zero
+            if not (self.outputs_only or resident) \
+                    or not store.collectable(tid):
                 return
             for wid in list(store.locations(tid)):
                 if wid in workers and workers[wid].alive:
@@ -1221,6 +1470,15 @@ class ClusterExecutor:
             last_progress = time.perf_counter()
             w.inflight.discard(cid)
             runner_gone(cid, w.wid)
+            j = job_of(cid)
+            if j is not None and j.terminal:
+                # the job was already collected/failed and its id range
+                # retired: whatever this late run materialized is residue
+                # to sweep on the worker, never tracking to resurrect
+                sweep = list(sizes) + list(replicated)
+                if sweep and w.alive:
+                    post(w, ("drop", sweep))
+                return
             if state.get(cid) == DONE:
                 # late duplicate: a speculation loser that kept executing
                 # after the winner, or a replay raced by recovery.  Purity
@@ -1351,7 +1609,8 @@ class ClusterExecutor:
                 runlog.append("live", sorted(
                     v for c in cplan for v in plan.members[c]))
 
-            will_run = cplan | {c for c, s in state.items() if s != DONE}
+            will_run = cplan | {c for c, s in state.items()
+                                if s not in (DONE, CANCELLED)}
             vals = {v for c in cplan for v in plan.members[c]}
             store.invalidate(vals)
             for v in vals:      # a recomputed value gets a fresh handle
@@ -1411,7 +1670,7 @@ class ClusterExecutor:
             death_t = time.perf_counter()
             for cid in list(w.inflight):
                 st = runner_gone(cid, w.wid)
-                if state.get(cid) == DONE:
+                if state.get(cid) in (DONE, CANCELLED):
                     if st is not None:
                         stats["speculative_wasted_s"] += death_t - st
                     continue
@@ -1421,7 +1680,8 @@ class ClusterExecutor:
             w.inflight.clear()
             for cid in list(w.assigned):
                 waiting.pop(cid, None)
-                state[cid] = READY
+                if state.get(cid) != CANCELLED:
+                    state[cid] = READY
             w.assigned.clear()
 
             # values whose LAST copy lived in its store are lost -> lineage
@@ -1439,7 +1699,7 @@ class ClusterExecutor:
                 if ow is not None:
                     post(workers[ow], ("fetch", d))
                     fetching[d] = ow
-            if self.outputs_only:
+            if self.outputs_only or resident:
                 needed = {t for t in lost
                           if t in graph.outputs
                           or store.consumers_left.get(t, 0) > 0}
@@ -1451,6 +1711,11 @@ class ClusterExecutor:
             nonlocal last_progress
             last_progress = time.perf_counter()
             fetching.pop(tid, None)
+            j = job_of(tid)
+            if j is not None and j.terminal:
+                if found:       # retired value: free the stale segments
+                    serde.release(handle)
+                return
             owner_done = state.get(plan.cluster_of[tid]) == DONE
             if not found:
                 # owner dropped/lost it between request and reply; try a
@@ -1504,6 +1769,9 @@ class ClusterExecutor:
             stats["deplosts"] += 1
             w.inflight.discard(cid)
             runner_gone(cid, w.wid)
+            j = job_of(cid)
+            if j is not None and j.terminal:
+                return          # retired job: nothing to requeue/recover
             if state.get(cid) == DONE:
                 # a speculation loser lost the race to the winner AND its
                 # input handles to the winner-triggered GC sweep: nothing
@@ -1570,6 +1838,9 @@ class ClusterExecutor:
             last_progress = time.perf_counter()
             w.inflight.discard(cid)
             runner_gone(cid, w.wid)
+            j = job_of(cid)
+            if j is not None and j.terminal:
+                return      # cancelled-job ack: bookkeeping already gone
             # inputs an aborted run stored are real replicas (or, already
             # GC-swept, residue to sweep on this worker too) — same
             # reconciliation as a late duplicate done
@@ -1668,7 +1939,7 @@ class ClusterExecutor:
                 tid = msg[2]
                 fetching.pop(tid, None)
                 node = graph.nodes.get(tid)
-                error.append(TaskFailed(
+                task_error(tid, TaskFailed(
                     tid, node.name if node else f"#{tid}",
                     RuntimeError(f"{msg[3]}: {msg[4]}")))
             elif verb == "error":
@@ -1676,10 +1947,17 @@ class ClusterExecutor:
                 w.inflight.discard(cid)
                 was_runner = w.wid in runners.get(cid, ())
                 runner_gone(cid, w.wid)
+                j = job_of(cid)
                 if msg[3] == "MissingInput":
-                    # caller-error contract: never wrapped in TaskFailed
-                    error.append(MissingInput(msg[4]))
-                elif state.get(cid) == DONE and was_runner:
+                    # caller-error contract: never wrapped in TaskFailed.
+                    # A job's message carries its namespaced placeholder
+                    # ("j3/x"): report it in the submitter's vocabulary
+                    if j is not None:
+                        fail_job(j, MissingInput(
+                            msg[4].replace(f"j{j.job_id}/", "")))
+                    else:
+                        error.append(MissingInput(msg[4]))
+                elif state.get(cid) in (DONE, CANCELLED) and was_runner:
                     # a speculation loser failing AFTER the winner (e.g.
                     # its inputs were GC-swept under the race) must not
                     # abort a run whose result already exists.  Only
@@ -1688,7 +1966,7 @@ class ClusterExecutor:
                     pass
                 else:
                     node = cg.nodes.get(cid)
-                    error.append(TaskFailed(
+                    task_error(cid, TaskFailed(
                         cid, node.name if node else f"#{cid}",
                         RuntimeError(f"{msg[3]}: {msg[4]}")))
             elif verb in ("hb", "bye"):
@@ -1729,13 +2007,14 @@ class ClusterExecutor:
                         break
                     handle_msg(w, msg)
 
-        def collect_finals() -> bool:
-            """All super-tasks done: materialize ``required`` values into
-            the driver cache — decoding published handles directly (no
-            control traffic), fetching handles for the rest.  Returns True
-            when everything required is cached."""
+        def collect_values(req: Set[int]) -> bool:
+            """Materialize ``req`` values into the driver cache — decoding
+            published handles directly (no control traffic), fetching
+            handles for the rest.  Returns True when everything in ``req``
+            is cached.  Used for a single-graph run's finals AND for each
+            resident-mode job's independent gather."""
             nonlocal last_progress
-            missing = [t for t in required if t not in store.cache]
+            missing = [t for t in req if t not in store.cache]
             if not missing:
                 return True
             # one bulk fetch per owner: the per-value fetch/value ping-pong
@@ -1769,7 +2048,186 @@ class ClusterExecutor:
                 fetching[t] = ow
             for ow, tids in by_owner.items():
                 post(workers[ow], ("fetch_many", tids))
-            return not [t for t in required if t not in store.cache]
+            return not [t for t in req if t not in store.cache]
+
+        def collect_finals() -> bool:
+            return collect_values(required)
+
+        # ------------------------------------------------ resident-mode jobs
+        def admit_job(job: _Job) -> None:
+            """Splice an offset job into the live union run: graph nodes,
+            plan maps, fusion view, refcount universe, scheduler state —
+            then fan the delta out to every adopted worker (the outbox is
+            FIFO, so the delta lands before any run that needs it; later
+            joiners receive the merged graph in their welcome/fork)."""
+            nonlocal n_total
+            jp = job.plan
+            jview = jp.worker_view(job.required)
+            try:
+                delta = pickle.dumps(
+                    {"nodes": jp.graph.nodes, "inputs": job.inputs,
+                     "members": jview.members, "keep": jview.keep},
+                    protocol=5)
+            except Exception as e:      # noqa: BLE001 — job-fatal only
+                job.terminal = True
+                job.future._set_error(ValueError(
+                    "job graph is not picklable, so it cannot be shipped "
+                    "to the pool's workers (use module-level task "
+                    f"functions): {e!r}"))
+                return
+            graph.nodes.update(jp.graph.nodes)
+            # required values are collection-protected from the GC the
+            # same way a single-graph run protects its outputs
+            graph.outputs.extend(sorted(job.required))
+            inputs.update(job.inputs)
+            cg.nodes.update(jp.cgraph.nodes)
+            plan.members.update(jp.members)
+            plan.cluster_of.update(jp.cluster_of)
+            plan.outputs.update(jp.outputs)
+            plan.ext_deps.update(jp.ext_deps)
+            plan.consumers.update(jp.consumers)
+            plan._outset.update(
+                {c: set(vs) for c, vs in jp.outputs.items()})
+            fusion_view.members.update(jview.members)
+            fusion_view.keep.update(jview.keep)
+            store.admit(jp.graph.nodes)
+            rank.update(jp.cgraph.critical_path_rank())
+            csucc.update(jp.cgraph.successors())
+            for cid, node in jp.cgraph.nodes.items():
+                state[cid] = READY if not node.all_deps else PENDING
+                planned_dur[cid] = max(node.cost, 1e-6)
+            n_total += len(jp.cgraph.nodes)
+            stats["n_clusters"] += len(jp.cgraph.nodes)
+            stats["tasks_fused"] += jp.n_fused
+            stats["jobs_admitted"] += 1
+            jobs[job.job_id] = job
+            job_spans.append((job.base, job.end, job))
+            span_starts.append(job.base)
+            graph_blob[0] = None    # graph-less dialers need the union
+            for w in workers.values():
+                if w.alive:
+                    post(w, ("graph", delta))
+            if runlog is not None:
+                runlog.append("job", job.job_id, {
+                    "tenant": job.tenant, "base": job.base,
+                    "end": job.end, "n_clusters": len(job.cids)})
+            make_plan(initial=False)
+
+        def retire_job(job: _Job) -> None:
+            """Forget a finished/failed job everywhere, so a long-lived
+            resident run's state does not grow with every job ever
+            admitted.  Tombstones stay in ``state``/``plan.cluster_of``
+            and the span index (small ints), so late worker messages
+            about retired ids stay identifiable and inert."""
+            jobs.pop(job.job_id, None)
+            span = range(job.base, job.end)
+            store.retire(span)
+            for t in span:
+                graph.nodes.pop(t, None)
+                cg.nodes.pop(t, None)
+                plan.members.pop(t, None)
+                plan.outputs.pop(t, None)
+                plan.ext_deps.pop(t, None)
+                plan.consumers.pop(t, None)
+                plan._outset.pop(t, None)
+                fusion_view.members.pop(t, None)
+                fusion_view.keep.pop(t, None)
+                rank.pop(t, None)
+                csucc.pop(t, None)
+                planned_dur.pop(t, None)
+                finish_times.pop(t, None)
+                plan_worker.pop(t, None)
+                done.discard(t)
+                fetching.pop(t, None)
+                relay_handles.pop(t, None)
+                spec_twins.pop(t, None)
+                entry = waiting.pop(t, None)
+                if entry is not None:
+                    ow = workers.get(entry[0])
+                    if ow is not None:
+                        ow.assigned.discard(t)
+            graph.outputs = [o for o in graph.outputs
+                             if not (job.base <= o < job.end)]
+            for name in job.inputs:
+                inputs.pop(name, None)
+            graph_blob[0] = None
+            delta = pickle.dumps(
+                {"retire": tuple(span),
+                 "retire_inputs": tuple(job.inputs)}, protocol=5)
+            for w in workers.values():
+                if w.alive:
+                    post(w, ("graph", delta))
+
+        def finish_job(job: _Job) -> None:
+            """Every cluster of ``job`` is DONE and its required values
+            are cached: resolve the future (keys in the SUBMITTER's id
+            space), journal, and retire the id range."""
+            job.terminal = True
+            now = time.perf_counter()
+            if job.coll_map is None:
+                results = {t: store.cache[t + job.base]
+                           for t in job.user_required}
+            else:
+                results = {t: store.cache[job.coll_map[t]]
+                           for t in job.user_required}
+            latency = now - job.submitted
+            first = (job.first_dispatch - job.submitted
+                     if job.first_dispatch is not None else latency)
+            stats["jobs_completed"] += 1
+            if runlog is not None:
+                runlog.append("jobdone", job.job_id)
+            job.future._set_result(
+                results, wall_time=latency,
+                stats={"tenant": job.tenant, "job_id": job.job_id,
+                       "n_clusters": len(job.cids),
+                       "submit_to_first_dispatch_s": first,
+                       "submit_to_gather_s": latency})
+            retire_job(job)
+
+        def fail_job(job: _Job, exc: BaseException) -> None:
+            """Tenant isolation: one job's task failure (or cancellation)
+            fails ONLY that job's future.  Its unfinished clusters become
+            CANCELLED (terminal — dispatch skips them, recovery never
+            resurrects them), in-flight runs get idempotent cancel marks,
+            and the id range is retired.  Every other tenant's work is
+            untouched; ``error`` stays reserved for infrastructure-fatal
+            conditions (pool lost, progress timeout)."""
+            if job.terminal:
+                return
+            job.terminal = True
+            stats["jobs_failed"] += 1
+            for cid in job.cids:
+                s = state.get(cid)
+                if s == DONE:
+                    continue
+                state[cid] = CANCELLED
+                if s == INFLIGHT:
+                    for owid in sorted(runners.get(cid, ())):
+                        ow = workers.get(owid)
+                        if ow is not None and ow.alive:
+                            post(ow, ("cancel", cid))
+                elif s == WAITING:
+                    entry = waiting.pop(cid, None)
+                    if entry is not None:
+                        ow = workers.get(entry[0])
+                        if ow is not None:
+                            ow.assigned.discard(cid)
+            if runlog is not None:
+                runlog.append("jobdone", job.job_id)
+            job.future._set_error(exc)
+            retire_job(job)
+
+        def service_jobs() -> None:
+            """Resident-mode completion scan: collect and resolve every
+            job whose clusters are all DONE.  Each job gathers
+            independently — one tenant's transfer stall never blocks
+            another tenant's result."""
+            for job in list(jobs.values()):
+                if job.terminal or error:
+                    continue
+                if all(state.get(c) == DONE for c in job.cids):
+                    if collect_values(job.required):
+                        finish_job(job)
 
         def check_commands() -> None:
             with self._cmd_lock:
@@ -1780,6 +2238,20 @@ class ClusterExecutor:
                 elif cmd[0] == "kill" and cmd[1] in workers \
                         and workers[cmd[1]].alive:
                     kill(workers[cmd[1]])
+                elif cmd[0] == "job":
+                    if resident:
+                        admit_job(cmd[1])
+                    else:
+                        cmd[1].future._set_error(RuntimeError(
+                            "job submission requires a resident "
+                            "executor (start_resident())"))
+                elif cmd[0] == "canceljob" and resident:
+                    cj = jobs.get(cmd[1])
+                    if cj is not None:
+                        fail_job(cj, cmd[2])
+                elif cmd[0] == "logrec":
+                    if runlog is not None:
+                        runlog.append(*cmd[1])
             # a repro-worker dialing a live TCP run is an elastic join —
             # including dials parked in the stash while adopt_dialer_for
             # was pid-matching a local spawn (they would otherwise hang
@@ -2063,7 +2535,18 @@ class ClusterExecutor:
                 make_plan(initial=True)
             while not error:
                 check_commands()
-                if len(done) >= n_total:
+                if resident:
+                    # the resident loop never "finishes": it services job
+                    # completions and keeps dispatching until shut down
+                    if self._shutdown.is_set():
+                        break
+                    service_jobs()
+                    t_d = time.perf_counter()
+                    dispatch()
+                    maybe_speculate()
+                    stats["dispatch_overhead_s"] += \
+                        time.perf_counter() - t_d
+                elif len(done) >= n_total:
                     if collect_finals():
                         break
                 else:
@@ -2104,6 +2587,10 @@ class ClusterExecutor:
                 for w in workers.values():
                     if w.alive:
                         w.chan.maybe_heartbeat()
+                if resident and not jobs:
+                    # an idle resident service is healthy, not hung: the
+                    # progress watchdog only arms while jobs are admitted
+                    last_progress = time.perf_counter()
                 if time.perf_counter() - last_progress > self.progress_timeout:
                     by_state: Dict[int, List[int]] = {}
                     for c, s in state.items():
@@ -2118,6 +2605,21 @@ class ClusterExecutor:
                         f"inflight {[sorted(w.inflight) for w in workers.values()]})"))
         finally:
             self._active = False
+            if resident:
+                # jobs the loop never resolved (shutdown mid-run, infra
+                # error, pool bring-up failure) must not hang clients —
+                # including submissions still parked in the command queue
+                rexc = (error[0] if error
+                        else RuntimeError("resident executor shut down"))
+                for job in list(jobs.values()):
+                    if not job.terminal:
+                        job.terminal = True
+                        job.future._set_error(rexc)
+                with self._cmd_lock:
+                    cmds, self._commands = self._commands, []
+                for cmd in cmds:
+                    if cmd[0] == "job":
+                        cmd[1].future._set_error(rexc)
             if crashed:
                 # emulated SIGKILL: leave everything exactly as a dead
                 # driver would — workers alive (rejoin loops armed), shm
@@ -2170,6 +2672,8 @@ class ClusterExecutor:
 
         if error:
             raise error[0]
+        if resident:
+            return {}       # results flow through each job's future
         if coll_map is None:
             return {t: store.cache[t] for t in required}
         # map lowered values back to the user's tid space (stage nodes are

@@ -68,6 +68,29 @@ class DriverObjectStore:
         self.consumers_left: Dict[int, int] = {
             tid: len(plan.consumers.get(tid, ())) for tid in graph.nodes}
 
+    # ------------------------------------------------------------ admission
+    def admit(self, tids) -> None:
+        """A resident-mode job was admitted: extend the refcount universe
+        to its member tids.  ``self.plan``/``self.graph`` are the live
+        (already merged) union objects, so the consumer counts come from
+        the same source the initial constructor snapshot did.  Existing
+        entries are never touched — earlier jobs' in-flight refcounts must
+        not be reset by a newcomer."""
+        for tid in tids:
+            if tid not in self.consumers_left:
+                self.consumers_left[tid] = \
+                    len(self.plan.consumers.get(tid, ()))
+
+    def retire(self, tids) -> None:
+        """A resident-mode job was collected (or failed): drop its values
+        everywhere and forget its refcounts, so a long-lived gateway run's
+        store does not grow with every job ever submitted."""
+        self.invalidate(set(tids))
+        for tid in tids:
+            self.consumers_left.pop(tid, None)
+            self.sizes.pop(tid, None)
+            self.dropped.discard(tid)
+
     # ------------------------------------------------------------ ownership
     def add_worker(self, wid: int, host: Any = "local") -> None:
         self.known.setdefault(wid, set())

@@ -93,6 +93,7 @@ messages carry only ids and handles, independent of payload size.
 from __future__ import annotations
 
 import os
+import pickle
 import signal
 from typing import Any, Dict, List, Optional, Sequence
 
@@ -165,6 +166,11 @@ def worker_main(wid: int, chan, graph: TaskGraph,
     serde.set_fetch_fault(fault_plan.fetch_hook(wid)
                           if fault_plan is not None else None)
     serde.set_default_retry(fetch_retry)
+
+    # resident-mode "graph" deltas mutate the inputs table in place, so a
+    # None (no inputs) run still needs one real dict shared by the reader
+    # closure and the compute loop
+    inputs = dict(inputs) if inputs else {}
 
     store: Dict[int, Any] = {}
     published: Dict[int, serde.Handle] = {}     # memoized publish per tid
@@ -375,6 +381,31 @@ def worker_main(wid: int, chan, graph: TaskGraph,
             for t in msg[1]:
                 store.pop(t, None)
                 unpublish(t, now=True)
+        elif verb == "graph":
+            # resident-mode job delta: the driver admitted (or retired) a
+            # tenant job mid-run.  Admitted ids are disjoint from every id
+            # already known (each job owns a private range) and retired
+            # ids belong to terminal jobs whose runs were cancelled first,
+            # so the compute loop can keep executing while these dicts
+            # change — every mutation is a GIL-atomic dict op on keys the
+            # loop is not touching.  The payload is pre-pickled once on
+            # the driver and fanned out as bytes to every worker.
+            delta = pickle.loads(msg[1])
+            graph.nodes.update(delta.get("nodes", {}))
+            inputs.update(delta.get("inputs", {}))
+            if fusion is not None:
+                fusion.members.update(delta.get("members", {}))
+                fusion.keep.update(delta.get("keep", {}))
+            for t in delta.get("retire", ()):
+                graph.nodes.pop(t, None)
+                store.pop(t, None)
+                unpublish(t, now=True)
+                cancelled.discard(t)
+                if fusion is not None:
+                    fusion.members.pop(t, None)
+                    fusion.keep.pop(t, None)
+            for name in delta.get("retire_inputs", ()):
+                inputs.pop(name, None)
         elif verb == "cancel":
             # best-effort, between super-tasks: mark the cid; the compute
             # loop skips a queued run of it (a run already executing

@@ -220,13 +220,18 @@ class ThreadedExecutor:
         return results
 
 
-def make_executor(backend: str, n_workers: int, **kw) -> Executor:
+def make_executor(backend: str, n_workers: int, config=None,
+                  **kw) -> Executor:
     """Factory over runtime backends: ``thread`` | ``process``.
 
-    Cluster-only options (``transport``, ``channel``, ``connect``, ...)
-    passed to the thread backend are named errors here, not ``TypeError``
-    shrapnel from ``ThreadedExecutor.__init__``: the thread backend runs
-    in one address space and has no data or control plane to select.
+    ``config`` is a :class:`repro.ClusterConfig` — the one object carrying
+    every process-backend knob; the loose keyword arguments are the
+    deprecated legacy spelling (still honored for one release, see
+    ``repro/config.py``).  Cluster-only options (``transport``,
+    ``channel``, ``connect``, ... — or a ``config`` at all) passed to the
+    thread backend are named errors here, not ``TypeError`` shrapnel from
+    ``ThreadedExecutor.__init__``: the thread backend runs in one address
+    space and has no data or control plane to select.
     """
     if backend == "thread":
         cluster_only = sorted(
@@ -237,6 +242,8 @@ def make_executor(backend: str, n_workers: int, **kw) -> Executor:
                         "checkpoint_interval", "resume", "rejoin_timeout",
                         "rejoin_window", "fail_driver")
             if k in kw)
+        if config is not None:
+            cluster_only = ["config"] + cluster_only
         if cluster_only:
             raise ValueError(
                 f"option(s) {cluster_only} apply only to the process "
@@ -245,15 +252,24 @@ def make_executor(backend: str, n_workers: int, **kw) -> Executor:
         return ThreadedExecutor(n_workers, **kw)
     if backend == "process":
         from repro.cluster import ClusterExecutor   # deferred: no cycle
-        return ClusterExecutor(n_workers, **kw)
+        return ClusterExecutor(n_workers, config=config, **kw)
     raise ValueError(f"unknown backend {backend!r} "
                      "(expected 'thread' or 'process')")
 
 
 def run_graph(graph: TaskGraph, n_workers: int = 1,
               inputs: Optional[Dict[str, Any]] = None,
-              backend: str = "thread", with_report: bool = False, **kw):
+              backend: str = "thread", with_report: bool = False,
+              config=None, connect: Optional[str] = None,
+              token: Optional[str] = None, **kw):
     """Run ``graph`` on the selected backend.
+
+    ``connect="host:port"`` (with the default backend) submits the graph
+    to a resident multi-tenant gateway at that address instead of running
+    locally — the one-line change from local execution to a shared pool
+    (``backend="process"`` keeps the historical meaning: the address the
+    driver *binds* for dialing workers).  ``config`` is a
+    :class:`repro.ClusterConfig` for the process backend.
 
     ``with_report=True`` returns ``(results, report)`` where ``report``
     carries the backend, worker count, wall time, and the backend's stats
@@ -267,6 +283,19 @@ def run_graph(graph: TaskGraph, n_workers: int = 1,
     observable directly: pass ``fuse="auto"`` and watch ``control_msgs``
     and ``dispatch_overhead_s`` collapse while results stay bit-identical).
     """
+    if connect is not None and backend != "process":
+        # gateway session: trace locally, execute on the shared pool
+        from repro.gateway.client import connect as _gw_connect
+        with _gw_connect(connect, token=token) as client:
+            fut = client.submit(graph, inputs, config=config)
+            results = fut.result()
+        if with_report:
+            return results, {"backend": "gateway", "n_workers": n_workers,
+                             "wall_time": fut.wall_time,
+                             "stats": dict(fut.stats or {})}
+        return results
+    if token is not None:
+        kw["token"] = token
     if n_workers == 1 and backend == "thread":
         t0 = _time.perf_counter()
         results = execute_sequential(graph, inputs)
@@ -275,7 +304,9 @@ def run_graph(graph: TaskGraph, n_workers: int = 1,
                              "wall_time": _time.perf_counter() - t0,
                              "stats": {}}
         return results
-    ex = make_executor(backend, n_workers, **kw)
+    if connect is not None:
+        kw["connect"] = connect
+    ex = make_executor(backend, n_workers, config=config, **kw)
     results = ex.run(graph, inputs)
     if with_report:
         report = {"backend": backend, "n_workers": n_workers,

@@ -200,6 +200,52 @@ def identity_plan(graph: TaskGraph) -> FusedPlan:
     )
 
 
+def offset_plan(plan: FusedPlan, base: int, off_graph: TaskGraph) -> FusedPlan:
+    """Rebase a job-local :class:`FusedPlan` by ``+base`` onto ``off_graph``
+    (the job's graph already shifted by :func:`repro.core.tracing.offset_graph`).
+
+    Jobs submitted to a resident executor are fused in their own pristine
+    0-based space — the fusion rules are deterministic over *that* graph —
+    and then transplanted into the executor's union namespace, where both
+    cluster ids and member tids live in the job's ``[base, base + n)``
+    range.  An identity job plan stays identity (``cgraph is off_graph``),
+    so unfused jobs keep the single driver code path.
+    """
+    if plan.identity:
+        cgraph = off_graph
+    else:
+        cgraph = TaskGraph()
+        for cid in sorted(plan.cgraph.nodes):
+            n = plan.cgraph.nodes[cid]
+            meta = dict(n.meta)
+            if "members" in meta:
+                meta["members"] = tuple(m + base for m in meta["members"])
+            cgraph.nodes[cid + base] = dataclasses.replace(
+                n,
+                tid=cid + base,
+                deps=tuple(d + base for d in n.deps),
+                token_deps=tuple(d + base for d in n.token_deps),
+                meta=meta,
+            )
+        cgraph.outputs = [o + base for o in plan.cgraph.outputs]
+        cgraph._next_id = base + (max(plan.cgraph.nodes) + 1
+                                  if plan.cgraph.nodes else 0)
+    return FusedPlan(
+        graph=off_graph,
+        cgraph=cgraph,
+        members={c + base: tuple(m + base for m in ms)
+                 for c, ms in plan.members.items()},
+        cluster_of={m + base: c + base for m, c in plan.cluster_of.items()},
+        outputs={c + base: tuple(v + base for v in vs)
+                 for c, vs in plan.outputs.items()},
+        ext_deps={c + base: tuple(v + base for v in vs)
+                  for c, vs in plan.ext_deps.items()},
+        consumers={v + base: tuple(c + base for c in cs)
+                   for v, cs in plan.consumers.items()},
+        spec=plan.spec,
+    )
+
+
 class _UnionFind:
     def __init__(self, ids: Iterable[int]) -> None:
         self.parent = {i: i for i in ids}

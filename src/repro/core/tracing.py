@@ -13,6 +13,7 @@ on the previous effectful call through a token edge.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import threading
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
@@ -316,6 +317,43 @@ def _remap_arg_refs(obj: Any, old2new: Dict[int, int]) -> Any:
     if isinstance(obj, dict):
         return {k: _remap_arg_refs(v, old2new) for k, v in obj.items()}
     return obj
+
+
+def offset_graph(graph: TaskGraph, base: int,
+                 input_ns: Optional[str] = None) -> TaskGraph:
+    """Rebase every task id of ``graph`` by ``+base`` into a fresh graph.
+
+    The gateway's resident executor runs many tenants' graphs inside ONE
+    growing union graph; each admitted job gets a private, non-overlapping
+    id range ``[base, base + len(graph))`` so that the object store, the
+    lineage index and the run log never confuse two tenants' values.
+    ``input_ns`` (e.g. ``"j3/"``) prefixes every placeholder name the same
+    way, namespacing the ``inputs`` dict per job.
+
+    The offset preserves topo order (a uniform shift keeps ``dep < tid``),
+    so the result validates iff the input did.  Nodes are shared, not
+    copied, except for ``meta`` when the input name is rewritten.
+    """
+    old2new = {t: t + base for t in graph.nodes}
+    out = TaskGraph()
+    for tid in sorted(graph.nodes):
+        n = graph.nodes[tid]
+        meta = n.meta
+        if input_ns and "input" in meta:
+            meta = dict(meta)
+            meta["input"] = input_ns + meta["input"]
+        out.nodes[tid + base] = dataclasses.replace(
+            n,
+            tid=tid + base,
+            args=_remap_arg_refs(n.args, old2new),
+            kwargs=_remap_arg_refs(n.kwargs, old2new),
+            deps=tuple(d + base for d in n.deps),
+            token_deps=tuple(d + base for d in n.token_deps),
+            meta=meta,
+        )
+    out.outputs = [o + base for o in graph.outputs]
+    out._next_id = base + (max(graph.nodes) + 1 if graph.nodes else 0)
+    return out
 
 
 # --------------------------------------------------------------------------

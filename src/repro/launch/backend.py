@@ -7,6 +7,15 @@ work-stealing :class:`~repro.core.executor.ThreadedExecutor`;
 store, lineage fault tolerance).  See ``repro/cluster/__init__.py`` for the
 full trade-off discussion.
 
+The cluster knobs themselves (``--transport``, ``--channel``, ``--fuse``,
+``--collectives``, ``--speculate-after``) are **generated from
+:class:`repro.ClusterConfig` field metadata** — one source of truth for
+flag names, help text and choices, shared by every launcher
+(``train.py`` / ``serve.py`` / ``driver.py`` / ``repro-gateway``) instead
+of the per-launcher copies this module used to carry.  Only
+``--backend`` / ``--graph-workers`` stay local: they select the runtime,
+they are not runtime configuration.
+
 JAX payloads cannot run in a *forked* worker (the child inherits a dead XLA
 runtime and deadlocks), so the launchers use ``start_method="spawn"``:
 workers start as fresh interpreters and the graph is pickled across.  That
@@ -21,23 +30,37 @@ from __future__ import annotations
 import argparse
 from typing import Any, Dict, Optional
 
+from repro.config import ClusterConfig
 from repro.core import TaskGraph, make_executor
 from repro.core.executor import Executor
 
+#: ClusterConfig fields exposed as launcher backend flags (the subset a
+#: single-run launcher exercises; repro-gateway exposes the full set).
+BACKEND_FLAG_FIELDS = ("transport", "channel", "speculate_after",
+                       "fuse", "collectives")
 
-#: data-plane transports each runtime backend actually supports.  The
-#: thread backend shares one address space — there is no transport to
-#: pick, so anything but the default is a user error worth naming early
-#: (it used to be silently ignored; an unknown transport died as a deep
-#: KeyError inside the executor instead of at the flag).
+#: launcher-facing defaults that differ from the library defaults: the
+#: demo drivers trace fine-grained graphs, so fusion pays for itself
+_LAUNCHER_DEFAULTS = {"fuse": "auto"}
+
+_CFG_CHOICES: Dict[str, tuple] = {
+    f.name: tuple(f.metadata["choices"] or ())
+    for f in ClusterConfig.flag_fields()}
+
+#: data-plane transports each runtime backend actually supports, derived
+#: from the config metadata.  The thread backend shares one address
+#: space — there is no transport to pick, so anything but the default is
+#: a user error worth naming early (it used to be silently ignored; an
+#: unknown transport died as a deep KeyError inside the executor instead
+#: of at the flag).
 BACKEND_TRANSPORTS: Dict[str, tuple] = {
     "thread": ("auto",),
-    "process": ("auto", "shm", "sock", "tcp", "driver"),
+    "process": _CFG_CHOICES["transport"],
 }
 
 BACKEND_CHANNELS: Dict[str, tuple] = {
     "thread": ("auto",),
-    "process": ("auto", "pipe", "spawn", "tcp"),
+    "process": _CFG_CHOICES["channel"],
 }
 
 
@@ -48,36 +71,8 @@ def add_backend_args(ap: argparse.ArgumentParser) -> None:
                          "in-process threads or spawned cluster workers")
     ap.add_argument("--graph-workers", type=int, default=2,
                     help="worker count for the traced-driver dry-run")
-    ap.add_argument("--transport", default="auto",
-                    choices=["auto", "shm", "sock", "tcp", "driver"],
-                    help="process-backend data plane: zero-copy shared "
-                         "memory, direct unix-socket or TCP pulls, or the "
-                         "driver-relayed pipe path (A/B baseline)")
-    ap.add_argument("--channel", default="auto",
-                    choices=["auto", "pipe", "spawn", "tcp"],
-                    help="process-backend control plane: in-host pipes "
-                         "(forked/spawned workers) or the multi-host TCP "
-                         "listener (workers dial in; see repro-worker)")
-    ap.add_argument("--speculate-after", type=float, default=None,
-                    metavar="X",
-                    help="process backend: speculatively re-execute a task "
-                         "running longer than X times its expected duration "
-                         "on an idle worker (first completion wins; off by "
-                         "default — see docs/speculation.md)")
-    ap.add_argument("--fuse", default="auto", metavar="{auto,off,N}",
-                    help="process backend: compile the task graph into "
-                         "super-tasks before dispatch (fuse chains, small "
-                         "fan-ins, sibling groups) so fine-grained graphs "
-                         "stop paying one driver round-trip per node; N "
-                         "caps members per super-task (default auto; see "
-                         "docs/fusion.md)")
-    ap.add_argument("--collectives", default="auto", metavar="{auto,off,N}",
-                    help="process backend: lower broadcast/scatter/gather/"
-                         "all_reduce nodes into staged tree hops over the "
-                         "peer data plane instead of N×M point-to-point "
-                         "edges; off executes each collective's dense "
-                         "fallback on one worker, N overrides the tree "
-                         "arity (default auto; see docs/collectives.md)")
+    ClusterConfig.add_flags(ap, names=BACKEND_FLAG_FIELDS,
+                            defaults=_LAUNCHER_DEFAULTS)
 
 
 def validate_backend_args(args) -> None:
@@ -85,7 +80,9 @@ def validate_backend_args(args) -> None:
     ``--channel`` name something the chosen ``--backend`` cannot do."""
     backend = getattr(args, "backend", "thread")
     transport = getattr(args, "transport", "auto")
-    channel = getattr(args, "channel", "auto")
+    # the config-generated --channel parses "auto" to None (the config's
+    # "infer from pool shape" spelling); both mean the default here
+    channel = getattr(args, "channel", "auto") or "auto"
     supported = BACKEND_TRANSPORTS.get(backend, ("auto",))
     if transport not in supported:
         raise SystemExit(
@@ -134,19 +131,15 @@ def execute_traced(graph: TaskGraph, args,
     """Run a traced driver DAG on the selected backend and report stats
     (including the data-plane counters for the process backend)."""
     validate_backend_args(args)
-    kw: Dict[str, Any] = {}
     if args.backend == "process":
-        kw = {"start_method": "spawn", "progress_timeout": 300.0,
-              "transport": getattr(args, "transport", "auto"),
-              "fuse": getattr(args, "fuse", "auto"),
-              "collectives": getattr(args, "collectives", "auto")}
-        channel = getattr(args, "channel", "auto")
-        if channel != "auto":
-            kw["channel"] = channel
-        speculate = getattr(args, "speculate_after", None)
-        if speculate is not None:
-            kw["speculate_after"] = speculate
-    ex: Executor = make_executor(args.backend, args.graph_workers, **kw)
+        cfg = ClusterConfig.from_flags(
+            args, names=BACKEND_FLAG_FIELDS,
+            n_workers=args.graph_workers, start_method="spawn",
+            progress_timeout=300.0)
+        ex: Executor = make_executor("process", args.graph_workers,
+                                     config=cfg)
+    else:
+        ex = make_executor("thread", args.graph_workers)
     results = ex.run(graph, inputs)
     transport = getattr(ex, "transport_used", None)
     via = f" via {transport} transport" if transport else ""

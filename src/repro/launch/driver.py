@@ -85,30 +85,24 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="int argument(s) for the graph builder")
     ap.add_argument("--workers", type=int, default=2,
                     help="local worker processes")
-    ap.add_argument("--channel", default="tcp",
-                    choices=("tcp", "pipe", "spawn"),
-                    help="control plane (tcp is the resumable one: its "
-                    "workers outlive the driver and rejoin)")
-    ap.add_argument("--connect", default=None, metavar="HOST:PORT",
-                    help="listening address (default: ephemeral; a resume "
-                    "reuses the interrupted run's address automatically)")
-    ap.add_argument("--token", default=None, help="shared dial secret")
-    ap.add_argument("--checkpoint-dir", required=True,
-                    help="run-log directory (one <run_id>.log per run)")
-    ap.add_argument("--checkpoint-interval", type=float, default=0.25,
-                    help="seconds between run-log fsyncs")
-    ap.add_argument("--resume", default=None, metavar="RUN_ID|latest",
-                    help="resume an interrupted run instead of starting "
-                    "fresh")
-    ap.add_argument("--fuse", default="off", help="fusion spec (off/auto/N)")
-    ap.add_argument("--outputs-only", action="store_true",
-                    help="memory-bounded mode: GC intermediates")
+    # shared cluster knobs come from ClusterConfig field metadata — the
+    # same group train.py/serve.py/repro-gateway expose (no more
+    # per-launcher flag copies); tcp is the resumable channel default
+    # here because the whole point of this entrypoint is driver recovery
+    from repro.config import ClusterConfig
+    ClusterConfig.add_flags(
+        ap, names=("channel", "connect", "token", "checkpoint_dir",
+                   "checkpoint_interval", "resume", "fuse",
+                   "outputs_only"),
+        defaults={"channel": "tcp"})
     ap.add_argument("--fail-driver", type=int, default=None, metavar="N",
                     help="testing: emulate a driver SIGKILL after N "
                     "cluster completions")
     ap.add_argument("--out", default=None, metavar="PATH",
                     help="pickle the {tid: value} results here")
     args = ap.parse_args(argv)
+    if not args.checkpoint_dir:
+        ap.error("the following arguments are required: --checkpoint-dir")
 
     resume = args.resume
     if resume == "latest":
@@ -121,13 +115,12 @@ def main(argv: Optional[List[str]] = None) -> int:
     graph = build_graph(args.graph, args.arg)
 
     from repro.cluster import ClusterExecutor, DriverKilled
-    ex = ClusterExecutor(
-        args.workers, channel=args.channel, connect=args.connect,
-        token=args.token, fuse=args.fuse, outputs_only=args.outputs_only,
-        checkpoint_dir=args.checkpoint_dir,
-        checkpoint_interval=args.checkpoint_interval,
-        resume=resume, fail_driver=args.fail_driver,
-        start_method="fork")
+    cfg = ClusterConfig.from_flags(
+        args, names=("channel", "connect", "token", "checkpoint_dir",
+                     "checkpoint_interval", "fuse", "outputs_only"),
+        n_workers=args.workers, resume=resume,
+        fail_driver=args.fail_driver, start_method="fork")
+    ex = ClusterExecutor(config=cfg)
     # first line out, flushed: a supervisor needs the run id to relaunch
     # with --resume even if this process dies an instant later
     print(f"repro-driver: {'resuming' if resume else 'run'} "

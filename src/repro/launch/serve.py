@@ -116,6 +116,17 @@ def main(argv=None) -> Dict[str, Any]:
     ap.add_argument("--show-graph", action="store_true",
                     help="trace one request (prefill + decode chain) into "
                          "a task DAG, print it, and execute on --backend")
+    ap.add_argument("--gateway", default=None, metavar="HOST:PORT",
+                    help="with --show-graph: submit the traced request "
+                         "DAG to a resident repro-gateway as one tenant "
+                         "of its shared pool, instead of executing on "
+                         "--backend (the gateway must run with "
+                         "--start-method spawn for JAX payloads)")
+    ap.add_argument("--gateway-token", default=None,
+                    help="gateway dial secret")
+    ap.add_argument("--tenant", default="serve",
+                    help="gateway tenant identity (quota/fair-share/"
+                         "accounting bucket)")
     add_backend_args(ap)
     args = ap.parse_args(argv)
     # flag sanity before any model building: --transport/--channel must
@@ -148,19 +159,44 @@ def main(argv=None) -> Dict[str, Any]:
             synth_requests(1, cfg.vocab_size, max_new=3,
                            seed=args.seed)[0].prompt.tolist())
 
+        prefill_t, decode_t, respond_t = (demo_prefill, demo_decode,
+                                          demo_respond)
+        if args.gateway:
+            # run via ``python -m``, this module IS __main__, and its
+            # functions would pickle as ``__main__.*`` — unresolvable in
+            # the gateway process (whose __main__ is the gateway CLI).
+            # Trace against the canonically imported module instead; when
+            # serve is already imported normally this is the same object.
+            import importlib
+            canon = importlib.import_module("repro.launch.serve")
+            prefill_t, decode_t, respond_t = (
+                canon.demo_prefill, canon.demo_decode, canon.demo_respond)
+
         def req_driver():
-            tok, cache = demo_prefill(args.arch, args.reduced, args.max_len,
-                                      args.seed, demo_prompt)
+            tok, cache = prefill_t(args.arch, args.reduced, args.max_len,
+                                   args.seed, demo_prompt)
             toks = [tok]
             for _ in range(2):
-                tok, cache = demo_decode(args.arch, args.reduced,
-                                         args.max_len, args.seed, tok, cache)
+                tok, cache = decode_t(args.arch, args.reduced,
+                                      args.max_len, args.seed, tok, cache)
                 toks.append(tok)
-            return demo_respond(*toks)
+            return respond_t(*toks)
 
         g, _ = trace(req_driver)
         print(g.summary())
-        res = execute_traced(g, args)
+        if args.gateway:
+            # tenant mode: the request DAG runs on a SHARED resident pool
+            # next to other tenants' jobs, bit-identical to local
+            from repro.gateway import connect as gateway_connect
+            with gateway_connect(args.gateway, token=args.gateway_token,
+                                 tenant=args.tenant) as gc:
+                fut = gc.submit(g, label="serve-request")
+                res = fut.result()
+            print(f"[gateway {args.gateway}] executed {len(g.nodes)} "
+                  f"tasks as tenant {args.tenant} in "
+                  f"{fut.wall_time:.3f}s (stats {fut.stats})", flush=True)
+        else:
+            res = execute_traced(g, args)
         print(f"traced request tokens: {res[g.outputs[0]]}", flush=True)
 
     reqs = synth_requests(args.requests, cfg.vocab_size,

@@ -1,0 +1,157 @@
+"""ClusterConfig consolidation: the frozen config object, the legacy
+keyword shim (DeprecationWarning once per name), and the shared argparse
+flag group every launcher now generates from the config fields."""
+import argparse
+import dataclasses
+import warnings
+
+import pytest
+
+import repro
+from repro.config import (ClusterConfig, TENANT_FIELDS, _warned_kwargs,
+                          resolve_config)
+from repro.cluster import ClusterExecutor
+
+
+@pytest.fixture(autouse=True)
+def _fresh_warn_state():
+    """The shim warns once per name per process; make each test see a
+    fresh process for deterministic warning counts."""
+    saved = set(_warned_kwargs)
+    _warned_kwargs.clear()
+    yield
+    _warned_kwargs.clear()
+    _warned_kwargs.update(saved)
+
+
+# ------------------------------------------------------------- the shim
+
+def test_legacy_kwarg_warns_once_per_name():
+    with pytest.warns(DeprecationWarning, match="'fuse'.*deprecated"):
+        resolve_config(None, {"fuse": "auto"})
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")      # second use: no warning
+        resolve_config(None, {"fuse": "off"})
+    with pytest.warns(DeprecationWarning, match="'outputs_only'"):
+        resolve_config(None, {"outputs_only": True})
+
+
+def test_legacy_kwargs_equal_config_form():
+    with pytest.warns(DeprecationWarning):
+        ex_legacy = ClusterExecutor(4, fuse="auto", outputs_only=True,
+                                    progress_timeout=120.0)
+    ex_config = ClusterExecutor(config=ClusterConfig(
+        n_workers=4, fuse="auto", outputs_only=True,
+        progress_timeout=120.0))
+    assert ex_legacy.config == ex_config.config
+
+
+def test_legacy_kwargs_override_config_fields():
+    cfg = ClusterConfig(n_workers=2, fuse="off")
+    with pytest.warns(DeprecationWarning):
+        merged = resolve_config(cfg, {"fuse": "auto"})
+    assert merged.fuse == "auto" and merged.n_workers == 2
+    assert cfg.fuse == "off"                # input config untouched
+
+
+def test_unknown_kwarg_is_typeerror_like_a_misspelled_keyword():
+    with pytest.raises(TypeError, match="fuze"):
+        resolve_config(None, {"fuze": "auto"})
+    with pytest.raises(TypeError, match="ClusterExecutor"):
+        ClusterExecutor(2, not_a_field=1)
+
+
+def test_positional_n_workers_overrides_config():
+    ex = ClusterExecutor(3, config=ClusterConfig(n_workers=8))
+    assert ex.config.n_workers == 3
+
+
+# ---------------------------------------------------------- the config
+
+def test_config_is_frozen_and_replace_copies():
+    cfg = ClusterConfig(n_workers=2)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        cfg.n_workers = 4
+    assert cfg.replace(n_workers=4).n_workers == 4
+    assert cfg.n_workers == 2
+
+
+def test_config_validates_choices():
+    with pytest.raises(ValueError, match="transport"):
+        ClusterConfig(transport="carrier-pigeon")
+    with pytest.raises(ValueError, match="fuse"):
+        ClusterConfig(fuse="sometimes")
+
+
+def test_executor_rejects_resume_without_checkpoint_dir():
+    with pytest.raises(ValueError, match="checkpoint_dir"):
+        ClusterExecutor(config=ClusterConfig(n_workers=1, resume="abc"))
+
+
+def test_public_reexport():
+    assert repro.ClusterConfig is ClusterConfig
+
+
+# ------------------------------------------------------- the flag group
+
+def test_flags_round_trip():
+    cfg = ClusterConfig(n_workers=5, transport="tcp", channel="tcp",
+                        fuse="auto", token="s3cret", speculate_after=1.5,
+                        checkpoint_dir="/tmp/ck", outputs_only=True)
+    ap = argparse.ArgumentParser()
+    ClusterConfig.add_flags(ap)
+    args = ap.parse_args(cfg.to_flags())
+    assert ClusterConfig.from_flags(args) == cfg
+
+
+def test_flags_defaults_match_config_defaults():
+    ap = argparse.ArgumentParser()
+    ClusterConfig.add_flags(ap)
+    assert ClusterConfig.from_flags(ap.parse_args([])) == ClusterConfig()
+
+
+def test_add_flags_defaults_override():
+    """Launchers keep their historical defaults (e.g. fuse=auto) without
+    forking the flag definitions."""
+    ap = argparse.ArgumentParser()
+    ClusterConfig.add_flags(ap, names=("fuse", "channel"),
+                            defaults={"fuse": "auto"})
+    args = ap.parse_args([])
+    assert args.fuse == "auto"
+    assert ClusterConfig.from_flags(args).fuse == "auto"
+
+
+def test_channel_auto_parses_to_none():
+    ap = argparse.ArgumentParser()
+    ClusterConfig.add_flags(ap, names=("channel",))
+    assert ap.parse_args(["--channel", "auto"]).channel is None
+    assert ap.parse_args(["--channel", "tcp"]).channel == "tcp"
+
+
+def test_from_flags_names_ignores_colliding_launcher_flags():
+    """A launcher's own flags may share a destination with a config
+    field (train.py --resume, --seed); reading back with the same
+    ``names`` subset must not leak them into the cluster config."""
+    ap = argparse.ArgumentParser()
+    ClusterConfig.add_flags(ap, names=("fuse",))
+    ap.add_argument("--resume", action="store_true")   # launcher's own
+    ap.add_argument("--seed", type=int, default=7)
+    args = ap.parse_args(["--resume"])
+    cfg = ClusterConfig.from_flags(args, names=("fuse",))
+    assert cfg.resume is None and cfg.seed == ClusterConfig().seed
+
+
+def test_flag_subset_selection():
+    ap = argparse.ArgumentParser()
+    ClusterConfig.add_flags(ap, names=("fuse",))
+    args = ap.parse_args([])
+    assert not hasattr(args, "transport")
+
+
+def test_tenant_fields_are_a_strict_subset_of_the_submit_surface():
+    """Per-job tenant knobs must never silently grow to pool-level ones:
+    everything else on ClusterConfig belongs to the gateway operator."""
+    assert TENANT_FIELDS == frozenset({"outputs_only", "label"})
+    field_names = {f.name for f in dataclasses.fields(ClusterConfig)}
+    assert "outputs_only" in field_names
+    assert "transport" not in TENANT_FIELDS

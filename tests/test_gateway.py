@@ -1,0 +1,233 @@
+"""Multi-tenant gateway differentials: concurrent tenants on one shared
+resident pool, each bit-for-bit equal to the sequential oracle; typed
+quota rejection; fault and disconnect isolation between tenants; session
+restore from the run log.
+
+Graph node fns must survive pickling into the gateway process, so the
+DAGs come from ``test_multihost.picklable_dag`` (partial over
+module-level fns)."""
+import pickle
+import threading
+import time
+from functools import partial
+
+import pytest
+
+import repro
+from repro.config import ClusterConfig
+from repro.core.graph import TaskGraph, TaskKind
+from repro.core.executor import execute_sequential, run_graph
+from repro.core.tracing import RemappedRef as _Ref
+from repro.gateway import (GatewayService, GatewayError, QuotaExceeded,
+                           SessionClosed, TenantQuota, connect)
+
+from test_multihost import _mh_combine, picklable_dag, results_equal
+
+TOKEN = "gw-test-token"
+
+
+@pytest.fixture(scope="module")
+def gateway():
+    """One shared 2-worker gateway for the whole module; each test uses
+    its own tenant names so accounting stays independent."""
+    cfg = ClusterConfig(n_workers=2, token=TOKEN, fuse="auto",
+                        progress_timeout=60.0)
+    gw = GatewayService(cfg, quotas={
+        "tiny": TenantQuota(max_inflight_clusters=1),
+        "thin": TenantQuota(max_store_bytes=10),
+    }).start()
+    yield gw
+    gw.stop()
+
+
+# ------------------------------------------------- concurrent tenants
+
+def test_two_tenants_concurrent_bit_for_bit(gateway):
+    """Two tenants hammer the shared pool from separate sessions; every
+    result must equal the sequential oracle for that tenant's graph."""
+    ga = picklable_dag(1, 40, 0.3)
+    gb = picklable_dag(2, 35, 0.35)
+    seq_a, seq_b = execute_sequential(ga), execute_sequential(gb)
+    out, errs = {}, []
+
+    def tenant(name, g, priority):
+        try:
+            with connect(gateway.address, token=TOKEN, tenant=name,
+                         priority=priority) as c:
+                futs = [c.submit(g, label=f"{name}{i}") for i in range(3)]
+                out[name] = [f.result(60) for f in futs]
+                out[name + "_stats"] = futs[0].stats
+        except BaseException as e:       # surface into the test thread
+            errs.append(e)
+
+    threads = [threading.Thread(target=tenant, args=("alpha", ga, 1.0)),
+               threading.Thread(target=tenant, args=("beta", gb, 2.0))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(90)
+    assert not errs, errs
+    assert all(results_equal(r, seq_a) for r in out["alpha"])
+    assert all(results_equal(r, seq_b) for r in out["beta"])
+    st = out["beta_stats"]
+    assert st["tenant"] == "beta"
+    assert st["submit_to_gather_s"] >= st["submit_to_first_dispatch_s"] >= 0
+
+    s = gateway.stats()
+    assert s["alpha"]["completed"] >= 3 and s["beta"]["completed"] >= 3
+    slo = s["beta"]["slo"]["submit_to_gather_s"]
+    assert slo["p50"] is not None and slo["p99"] >= slo["p50"]
+    assert "pool" in s and s["pool"]["n_workers"] == 2
+
+
+def test_run_graph_connect_oneliner(gateway):
+    g = picklable_dag(3, 25, 0.3)
+    res, rep = run_graph(g, connect=gateway.address, token=TOKEN,
+                         with_report=True)
+    assert results_equal(res, execute_sequential(g))
+    assert rep["backend"] == "gateway"
+    assert rep["stats"]["submit_to_gather_s"] > 0
+
+
+# ----------------------------------------------------- admission gate
+
+def test_cluster_quota_is_a_typed_client_error(gateway):
+    """Over-quota submits come back as QuotaExceeded with the admission
+    attributes intact — not a stringly RuntimeError."""
+    with connect(gateway.address, token=TOKEN, tenant="tiny") as c:
+        fut = c.submit(picklable_dag(4, 10, 0.0))
+        err = fut.exception(30)
+        assert isinstance(err, QuotaExceeded), err
+        assert err.tenant == "tiny"
+        assert err.resource == "inflight_clusters"
+        assert err.limit == 1 and err.requested > 1
+        # the typed error survives another pickle hop (supervisors relay)
+        again = pickle.loads(pickle.dumps(err))
+        assert isinstance(again, QuotaExceeded) and again.limit == 1
+    assert gateway.stats()["tiny"]["rejected"] >= 1
+    assert gateway.stats()["tiny"]["inflight_clusters"] == 0
+
+
+def test_store_bytes_quota_uses_declared_bytes(gateway):
+    g = TaskGraph()
+    g.add_node("big", partial(_mh_combine, 9), (), {}, TaskKind.PURE,
+               deps=(), out_bytes=1 << 20)
+    g.mark_output(0)
+    with connect(gateway.address, token=TOKEN, tenant="thin") as c:
+        err = c.submit(g).exception(30)
+        assert isinstance(err, QuotaExceeded), err
+        assert err.resource == "store_bytes" and err.limit == 10
+
+
+def test_pool_level_knob_rejected_before_unpickle(gateway):
+    """A submit smuggling a non-TENANT_FIELDS option is refused server
+    side (forged on the wire: the client API never sends one)."""
+    from repro.cluster.channel import _send_frame
+    from repro.cluster.futures import ClusterFuture
+
+    with connect(gateway.address, token=TOKEN, tenant="alpha") as c:
+        fut = ClusterFuture("forged")
+        with c._lock:
+            c._pending[9999] = fut
+        blob = pickle.dumps((picklable_dag(5, 4, 0.0), {}), protocol=5)
+        _send_frame(c._sock,
+                    pickle.dumps(("submit", 9999, blob,
+                                  {"transport": "tcp"}), protocol=5),
+                    lock=c._send_lock)
+        err = fut.exception(30)
+        assert isinstance(err, GatewayError), err
+        assert "not tenant-settable" in str(err)
+
+
+# ------------------------------------------------------- isolation
+
+def test_disconnect_cancels_only_that_tenants_jobs(gateway):
+    """A hard socket drop (no bye) fails the dropper's futures with
+    SessionClosed and must not perturb the surviving tenant."""
+    g_fast = picklable_dag(6, 30, 0.3)
+    seq = execute_sequential(g_fast)
+    c1 = connect(gateway.address, token=TOKEN, tenant="dropper")
+    c2 = connect(gateway.address, token=TOKEN, tenant="stayer")
+    try:
+        f1 = c1.submit(picklable_dag(7, 60, 0.2, slow=True))
+        f2 = c2.submit(g_fast)
+        c1._sock.close()                       # hard drop, no bye
+        assert results_equal(f2.result(60), seq), "survivor perturbed"
+        assert isinstance(f1.exception(10), SessionClosed)
+    finally:
+        c2.close()
+        c1.close()
+    deadline = time.monotonic() + 10
+    while time.monotonic() < deadline:         # server cancel is async
+        if gateway.stats()["dropper"]["inflight_jobs"] == 0:
+            break
+        time.sleep(0.05)
+    assert gateway.stats()["dropper"]["inflight_jobs"] == 0
+
+
+def test_sigkilled_worker_task_does_not_perturb_other_tenant():
+    """The acceptance differential: one tenant's task dies with the
+    worker (SIGKILL mid-run); both tenants still gather bit-for-bit."""
+    cfg = ClusterConfig(n_workers=2, token=TOKEN, progress_timeout=60.0)
+    ga = picklable_dag(8, 30, 0.3, slow=True)   # victim: long enough to hit
+    gb = picklable_dag(9, 30, 0.3)
+    seq_a, seq_b = execute_sequential(ga), execute_sequential(gb)
+    with GatewayService(cfg) as gw:
+        with connect(gw.address, token=TOKEN, tenant="victim") as ca, \
+                connect(gw.address, token=TOKEN, tenant="bystander") as cb:
+            fa = ca.submit(ga)
+            fbs = [cb.submit(gb) for _ in range(2)]
+            deadline = time.monotonic() + 20
+            while time.monotonic() < deadline:  # wait until work is live
+                st = gw.stats().get("victim", {})
+                if st.get("inflight_clusters", 0) > 0:
+                    break
+                time.sleep(0.02)
+            gw.executor.kill_worker(1)          # SIGKILL mid-run
+            assert results_equal(fa.result(120), seq_a)
+            assert all(results_equal(f.result(120), seq_b) for f in fbs)
+        s = gw.stats()
+        assert s["victim"]["failed"] == 0       # recovered, not failed
+        assert s["bystander"]["failed"] == 0
+
+
+# --------------------------------------------------------- restore
+
+def test_resume_restores_sessions_on_a_fresh_run(tmp_path):
+    """Open sessions journal to the run log; a gateway restarted with
+    resume= re-creates their quotas/weights on a FRESH pool run id."""
+    from repro.checkpoint.runlog import latest_run, load_run
+
+    cfg = ClusterConfig(n_workers=2, token=TOKEN,
+                        checkpoint_dir=str(tmp_path),
+                        checkpoint_interval=0.05)
+    g = picklable_dag(10, 20, 0.3)
+    seq = execute_sequential(g)
+
+    gw1 = GatewayService(cfg, quotas={
+        "alpha": TenantQuota(max_inflight_clusters=64)}).start()
+    c_open = connect(gw1.address, token=TOKEN, tenant="alpha",
+                     priority=3.0)
+    try:
+        assert results_equal(c_open.submit(g).result(60), seq)
+        with connect(gw1.address, token=TOKEN, tenant="gone") as c2:
+            assert results_equal(c2.submit(g).result(60), seq)
+        time.sleep(0.3)              # let the sessionend record flush
+    finally:
+        gw1.stop()                   # crash-equivalent: no client bye
+        c_open.close()
+
+    run1 = latest_run(str(tmp_path))
+    state = load_run(str(tmp_path / f"{run1}.log"))
+    assert "alpha" in state.sessions            # still open at shutdown
+    assert "gone" not in state.sessions         # closed cleanly
+    assert state.sessions["alpha"]["quota"]["max_inflight_clusters"] == 64
+    assert state.sessions["alpha"]["priority"] == 3.0
+    assert not state.jobs, f"jobs should all be retired: {state.jobs}"
+
+    with GatewayService(cfg.replace(resume=run1)) as gw2:
+        s = gw2.stats()
+        assert s["alpha"]["quota"]["max_inflight_clusters"] == 64
+        assert gw2.executor.run_id != run1      # fresh incarnation
+        with connect(gw2.address, token=TOKEN, tenant="alpha") as c:
+            assert results_equal(c.submit(g).result(60), seq)
