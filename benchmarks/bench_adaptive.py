@@ -1,0 +1,355 @@
+"""Adaptive replanning benchmark: mis-costed lopsided workload,
+``adaptive auto`` vs static planning, per control channel.
+
+The static planner is only as good as the declared ``cost=`` hints.  This
+benchmark builds the adversarial case — a two-epoch wide graph where a
+few tasks per layer are ~100x more expensive than declared (all costs
+claim 1.0, so fusion packs heavy and cheap tasks into the same
+clusters) — and measures wall clock with the adaptive loop off (the
+mis-fused plan runs as committed) vs ``adaptive auto`` (the cost model
+calibrates on epoch-1 completions, the skew governor fires, and the
+not-yet-dispatched epoch-2 frontier is re-fused under measured gates),
+on both the ``pipe`` and ``tcp`` control channels.
+
+Every cell is cross-checked **bit-for-bit** against
+``execute_sequential`` — re-fusion changes granularity mid-run, never
+values.  A well-costed control (identical graph, honest ``cost=`` hints)
+pins the no-regression side: when the static plan is already right the
+governor must stay quiet and adaptive wall clock must track static.  A
+driver-SIGKILL cell kills the driver *after* re-fusion has fired and
+resumes from the run log: the journaled ``refuse`` records must replay
+(``refusions_replayed``) and the result must still match the oracle.
+Finally the recorded :class:`~repro.core.adaptive.RunTrace` from a live
+adaptive run is fed back through ``simulator.search_policy`` — the
+offline leg of the loop — and the simulator must agree with the runtime
+about whether re-fusion fires on this workload.
+
+Writes ``BENCH_adaptive.json`` at the repo root: wall clock, speedup,
+``refusions`` / ``cost_unit_s`` / ``adaptive_skew`` /
+``adaptive_speculate_after`` / ``replan_triggers`` per cell, so the win
+is visible in adaptive-loop terms, not just wall clock.
+
+``--smoke`` is the CI gate: a smaller graph, both channels, asserting
+the adaptive/static differential vs the oracle, >=1 re-fusion in every
+adaptive cell (0 in every static cell), the resume-replay differential,
+sim/runtime trigger agreement, and a must-not-regress bound on adaptive
+wall clock.
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.bench_adaptive
+        [--width 48] [--n-heavy 8] [--workers 4] [--reps 5] [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import time
+from typing import Any, Dict, List, Optional
+
+from repro.config import ClusterConfig
+from repro.core import TaskGraph, TaskKind, execute_sequential
+from repro.core.tracing import RemappedRef as _Ref
+from repro.cluster import ClusterExecutor, DriverKilled
+
+from .common import median, print_rows
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_adaptive.json")
+
+
+def heavy_step(x, s):
+    time.sleep(s)
+    return x * 3 + 1
+
+
+def cheap_step(x, s):
+    time.sleep(s)
+    return x + 1
+
+
+def comb(*xs):
+    return sum(int(x) for x in xs) % 1_000_003
+
+
+def build_workload(*, width: int = 48, n_heavy: int = 8,
+                   heavy_s: float = 0.1, cheap_s: float = 0.001,
+                   miscosted: bool = True) -> TaskGraph:
+    """Two epochs of a ``width``-wide layer, each pinched through a
+    two-gate reduction (``ga``/``gb`` fan-ins -> ``gc`` combiner).
+
+    The first ``n_heavy`` tasks of each layer sleep ``heavy_s``; the rest
+    sleep ``cheap_s``.  With ``miscosted`` every task *declares*
+    ``cost=1.0``, so sibling grouping packs heavy and cheap tasks
+    together and the static plan is lopsided — epoch 1 is the adaptive
+    runtime's calibration data, epoch 2 is the frontier it can still
+    re-fuse.  The dual gates give every layer task two consumers, which
+    keeps fusion's single-consumer contraction from absorbing the layers
+    into the gates (the lopsidedness under test would vanish).  With
+    ``miscosted=False`` heavy tasks declare their true cost ratio
+    (``heavy_s / cheap_s``) — the honest hints — and the static plan is
+    already balanced.
+    """
+    hc = 1.0 if miscosted else heavy_s / cheap_s
+    g = TaskGraph()
+
+    def layer(dep: Optional[int]) -> List[int]:
+        tids = []
+        for i in range(width):
+            heavy = i < n_heavy
+            t = len(g.nodes)
+            fn = heavy_step if heavy else cheap_step
+            s = heavy_s if heavy else cheap_s
+            args = (_Ref(dep), s) if dep is not None else (i, s)
+            g.add_node(f"w{t}", fn, args, {}, TaskKind.PURE,
+                       deps=[dep] if dep is not None else [],
+                       cost=hc if heavy else 1.0)
+            tids.append(t)
+        return tids
+
+    def gatepair(tids: List[int]) -> int:
+        a = g.add_node("ga", comb, tuple(_Ref(t) for t in tids), {},
+                       TaskKind.PURE, deps=tids, cost=1.0)
+        b = g.add_node("gb", comb, tuple(_Ref(t) for t in tids), {},
+                       TaskKind.PURE, deps=tids, cost=1.0)
+        return g.add_node("gc", comb, (_Ref(a), _Ref(b)), {},
+                          TaskKind.PURE, deps=[a, b], cost=1.0)
+
+    gate = gatepair(layer(None))
+    g.mark_output(gatepair(layer(gate)))
+    return g
+
+
+def bit_equal(got: Dict[int, Any], oracle: Dict[int, Any]) -> bool:
+    """Bit-for-bit dict equality (values here are python ints)."""
+    return got == oracle
+
+
+_STAT_KEYS = ("refusions", "replan_triggers", "n_clusters", "tasks_fused",
+              "dispatched", "n_speculative")
+
+
+def _cfg(channel: str, adaptive: str, args, **extra) -> ClusterConfig:
+    return ClusterConfig(n_workers=args.workers, channel=channel,
+                         fuse="auto", adaptive=adaptive,
+                         progress_timeout=180.0, **extra)
+
+
+def run_cell(channel: str, adaptive: str, args, graph_kw: Dict[str, Any],
+             oracle: Dict[int, Any]) -> Dict[str, Any]:
+    walls: List[float] = []
+    stats: Dict[str, Any] = {}
+    trace = None
+    for _ in range(args.reps):
+        g = build_workload(**graph_kw)
+        ex = ClusterExecutor(config=_cfg(channel, adaptive, args))
+        t0 = time.perf_counter()
+        got = ex.run(g)
+        walls.append(time.perf_counter() - t0)
+        stats = dict(ex.stats)
+        trace = ex.last_trace
+        ex.close()
+        assert bit_equal(got, oracle), \
+            f"{channel}/adaptive={adaptive}: diverged from the oracle"
+    # median-of-N: scheduling jitter on a small container dwarfs the
+    # effect under test (samples recorded for the skeptical reader)
+    row = {"channel": channel, "adaptive": adaptive,
+           "miscosted": graph_kw.get("miscosted", True),
+           "wall_s": median(walls), "wall_best_s": min(walls),
+           "wall_samples_s": [round(w, 4) for w in sorted(walls)]}
+    for k in _STAT_KEYS:
+        row[k] = stats.get(k, 0)
+    for k in ("cost_unit_s", "adaptive_skew", "adaptive_speculate_after",
+              "dispatch_cost_s"):
+        row[k] = round(float(stats.get(k, 0.0)), 5)
+    row["_trace"] = trace            # stripped before the json dump
+    return row
+
+
+def resume_cell(args, graph_kw: Dict[str, Any],
+                oracle: Dict[int, Any]) -> Dict[str, Any]:
+    """SIGKILL the driver *after* re-fusion fired, resume from the run
+    log: the journaled ``refuse`` records replay so the done-claims of
+    post-refusion cluster ids resolve against the plan that produced
+    them, and the final result stays bit-for-bit."""
+    with tempfile.TemporaryDirectory(prefix="bench_adaptive_") as ckpt:
+        g = build_workload(**graph_kw)
+        # tight flush cadence: the smoke graph completes in well under
+        # the default 0.25s fsync interval, and an unflushed ``refuse``
+        # record is exactly what this cell must prove gets replayed
+        ex = ClusterExecutor(config=_cfg(
+            "pipe", "auto", args, checkpoint_dir=ckpt,
+            checkpoint_interval=0.02, fail_driver=args.fail_driver))
+        try:
+            ex.run(g)
+            raise AssertionError("driver kill did not trigger")
+        except DriverKilled as e:
+            run_id = e.run_id
+        finally:
+            ex.close()
+        g2 = build_workload(**graph_kw)
+        ex2 = ClusterExecutor(config=_cfg(
+            "pipe", "auto", args, checkpoint_dir=ckpt,
+            checkpoint_interval=0.02, resume=run_id))
+        got = ex2.run(g2)
+        stats = dict(ex2.stats)
+        ex2.close()
+    assert bit_equal(got, oracle), \
+        "resumed adaptive run diverged from the oracle"
+    assert stats.get("refusions_replayed", 0) >= 1, \
+        f"no journaled re-fusion replayed on resume: {stats}"
+    return {"fail_driver": args.fail_driver,
+            "refusions_replayed": stats["refusions_replayed"],
+            "resumed_clusters": stats.get("resumed_clusters", 0),
+            "refusions_after_resume": stats.get("refusions", 0),
+            "n_clusters": stats.get("n_clusters", 0)}
+
+
+def sim_cross_check(trace, args, graph_kw: Dict[str, Any]) -> Dict[str, Any]:
+    """Feed the live run's RunTrace back through the simulator: the
+    trigger model must agree that this workload fires re-fusion, and
+    ``search_policy`` prices fusion candidates against *measured*
+    durations — the offline leg of the adaptive loop."""
+    from repro.core.simulator import search_policy, simulate
+
+    g = build_workload(**graph_kw)
+    res = simulate(g, args.workers, fuse="auto", adaptive="auto",
+                   trace=trace, dispatch_overhead=trace.dispatch_s)
+    best, results = search_policy(
+        "keep_parallelism", g, args.workers, [2, 4, 8, 16],
+        trace=trace, dispatch_overhead=trace.dispatch_s)
+    return {"sim_refusions": res.refusions,
+            "sim_refusion_times": [round(t, 4) for t in res.refusion_times],
+            "best_keep_parallelism": best,
+            "keep_parallelism_makespans": {
+                str(c): round(r.makespan, 4) for c, r in results.items()}}
+
+
+def main(argv: Optional[List[str]] = None) -> Dict[str, Any]:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--width", type=int, default=48)
+    ap.add_argument("--n-heavy", type=int, default=8)
+    ap.add_argument("--heavy-s", type=float, default=0.1)
+    ap.add_argument("--cheap-s", type=float, default=0.001)
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--fail-driver", type=int, default=14)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI: differential + must-not-regress gate, "
+                         "smaller graph")
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args(argv if argv is not None else [])
+    if args.smoke:
+        if args.out == OUT_PATH:    # never clobber the headline artifact
+            args.out = OUT_PATH.replace(".json", "_smoke.json")
+        args.width = min(args.width, 24)
+        args.n_heavy = min(args.n_heavy, 6)
+        args.heavy_s = min(args.heavy_s, 0.05)
+        args.reps = 2       # median: a loaded CI box jitters single runs
+
+    mis_kw = {"width": args.width, "n_heavy": args.n_heavy,
+              "heavy_s": args.heavy_s, "cheap_s": args.cheap_s,
+              "miscosted": True}
+    well_kw = dict(mis_kw, miscosted=False)
+    g = build_workload(**mis_kw)
+    n_nodes = len(g.nodes)
+    oracle = execute_sequential(g)
+    # identical fns+values, only the declared costs differ
+    well_oracle = execute_sequential(build_workload(**well_kw))
+    assert bit_equal(oracle, well_oracle)
+
+    rows: List[Dict[str, Any]] = []
+    speedups: Dict[str, float] = {}
+    trace = None
+    for channel in ("pipe", "tcp"):
+        static = run_cell(channel, "off", args, mis_kw, oracle)
+        auto = run_cell(channel, "auto", args, mis_kw, oracle)
+        trace = auto.pop("_trace") or trace
+        static.pop("_trace", None)
+        rows += [static, auto]
+        speedups[channel] = static["wall_s"] / max(auto["wall_s"], 1e-9)
+
+    # well-costed control: honest hints -> the governor must stay quiet
+    well_static = run_cell("pipe", "off", args, well_kw, oracle)
+    well_auto = run_cell("pipe", "auto", args, well_kw, oracle)
+    for r in (well_static, well_auto):
+        r.pop("_trace", None)
+        rows.append(r)
+    well_ratio = well_auto["wall_s"] / max(well_static["wall_s"], 1e-9)
+
+    resume = resume_cell(args, mis_kw, oracle)
+    sim = sim_cross_check(trace, args, mis_kw)
+
+    for ch in ("pipe", "tcp"):
+        for r in rows:
+            if r["miscosted"] and r["channel"] == ch:
+                if r["adaptive"] == "auto":
+                    assert r["refusions"] >= 1, \
+                        f"{ch}: adaptive run never re-fused: {r}"
+                else:
+                    assert r["refusions"] == 0, r
+    assert well_auto["refusions"] == 0, \
+        f"governor fired on the well-costed control: {well_auto}"
+    assert sim["sim_refusions"] >= 1, \
+        f"simulator disagrees that re-fusion fires: {sim}"
+
+    if args.smoke:
+        # must-not-regress: adaptive wall (median of reps) may never
+        # exceed static by more than CI scheduling noise
+        for ch in ("pipe", "tcp"):
+            off_w = next(r["wall_s"] for r in rows if r["miscosted"]
+                         and r["channel"] == ch and r["adaptive"] == "off")
+            auto_w = next(r["wall_s"] for r in rows if r["miscosted"]
+                          and r["channel"] == ch and r["adaptive"] == "auto")
+            assert auto_w <= off_w * 1.5, \
+                (f"{ch}: adaptive wall {auto_w:.3f}s regressed vs "
+                 f"static {off_w:.3f}s")
+        assert well_ratio <= 1.5, \
+            f"well-costed adaptive regressed {well_ratio:.2f}x"
+        print(f"smoke: {n_nodes}-node lopsided graph x{args.workers} "
+              "workers — adaptive runs bit-identical (healthy + driver "
+              "SIGKILL/resume), re-fused "
+              + ", ".join(f"{r['channel']} x{r['refusions']}"
+                          for r in rows
+                          if r["miscosted"] and r["adaptive"] == "auto")
+              + f"; resume replayed {resume['refusions_replayed']}; "
+              f"sim agrees ({sim['sim_refusions']} trigger(s))",
+              flush=True)
+    else:
+        # headline artifact gates (the committed BENCH_adaptive.json)
+        for ch in ("pipe", "tcp"):
+            assert speedups[ch] >= 1.2, \
+                (f"{ch}: adaptive speedup {speedups[ch]:.2f}x "
+                 f"below the 1.2x bar: {rows}")
+        assert well_ratio <= 1.05, \
+            (f"well-costed adaptive overhead {well_ratio:.2f}x "
+             f"exceeds 1.05x: {rows}")
+
+    payload = {
+        "config": {"width": args.width, "n_heavy": args.n_heavy,
+                   "heavy_s": args.heavy_s, "cheap_s": args.cheap_s,
+                   "n_nodes": n_nodes, "workers": args.workers,
+                   "reps": args.reps, "smoke": args.smoke},
+        "cells": rows,
+        "resume": resume,
+        "sim_cross_check": sim,
+        "speedup": speedups,
+        "wellcosted_ratio": well_ratio,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print_rows(f"lopsided {n_nodes}-node two-epoch graph "
+               f"({args.workers} workers) per channel x adaptive", rows)
+    print("\nadaptive speedup (mis-costed): "
+          + ", ".join(f"{ch} {s:.2f}x" for ch, s in speedups.items())
+          + f"; well-costed overhead {well_ratio:.2f}x"
+          + f"; resume replayed {resume['refusions_replayed']} re-fusion(s)"
+          + f" -> {args.out}", flush=True)
+    return payload
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -8,23 +8,40 @@ Tools:
     results/dryrun/<cell>_<tag>.json records the variant; print the three
     roofline terms and the delta vs the untagged baseline.
 
+  * ``search``: the *distributed-runtime* leg of the loop — sweep one
+    scheduler/fusion knob through :func:`repro.core.simulator.search_policy`,
+    optionally replaying a recorded :class:`~repro.core.adaptive.RunTrace`
+    from a live run so candidates are priced against measured durations
+    (docs/adaptive.md).  Pure python: no jax, no XLA env mutation.
+
 Usage:
   PYTHONPATH=src python -m benchmarks.hillclimb diagnose \\
       --arch qwen3-14b --shape train_4k [--depth 4]
   PYTHONPATH=src python -m benchmarks.hillclimb run \\
       --arch qwen3-14b --shape train_4k --tag remat_none \\
       --override remat=none
+  PYTHONPATH=src python -m benchmarks.hillclimb search \\
+      --knob keep_parallelism --grid 2,4,8,16 --workload lopsided \\
+      [--trace results/trace.json]
 """
+import argparse
+import json
 import os
-os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
-                           + os.environ.get("XLA_FLAGS", ""))
+import re
+from typing import Dict, Optional
 
-import argparse      # noqa: E402
-import json          # noqa: E402
-import re            # noqa: E402
-from typing import Dict, Optional   # noqa: E402
 
-from repro.compat import cost_analysis_dict   # noqa: E402
+def _set_xla_flags() -> None:
+    """Fake a 512-device host for the compile subcommands.
+
+    Must run before jax initialises, which is why the compile paths
+    import jax-touching modules lazily.  Deliberately NOT executed at
+    module import: ``search`` (and anyone who merely imports this
+    module, e.g. the test suite) must not have its process-wide
+    ``XLA_FLAGS`` rewritten as a side effect.
+    """
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                               + os.environ.get("XLA_FLAGS", ""))
 
 
 def parse_override(s: str):
@@ -47,6 +64,7 @@ _META_RE = re.compile(r'op_name="([^"]*)"')
 
 
 def diagnose(args) -> None:
+    from repro.compat import cost_analysis_dict
     from repro.launch.mesh import make_production_mesh
     from repro.launch import dryrun, steps as steps_mod
     from repro.configs import get_config
@@ -113,6 +131,7 @@ def flashsim(args) -> None:
     extrapolates to full depth (same scheme as dryrun.probe_correction).
     Reports the adjusted memory term.
     """
+    from repro.compat import cost_analysis_dict
     from repro.launch.mesh import make_production_mesh
     from repro.launch import dryrun, steps as steps_mod
     from repro.configs import get_config
@@ -200,6 +219,70 @@ def report(arch: str, shape: str, tag: str, out_dir: str,
     print(f"  dominant           {row['dominant']}")
 
 
+def _search_workload(spec: str):
+    """``lopsided`` (the bench_adaptive two-epoch graph) or
+    ``random:SEED,N,P_EDGE`` (the property-test random DAG shape)."""
+    if spec == "lopsided":
+        from benchmarks.bench_adaptive import build_workload
+        return build_workload(heavy_s=0.0, cheap_s=0.0)
+    if spec.startswith("random:"):
+        import random as _random
+        from repro.core import TaskGraph, TaskKind
+        seed, n, p = spec[len("random:"):].split(",")
+        rng = _random.Random(int(seed))
+        g = TaskGraph()
+        for i in range(int(n)):
+            deps = [j for j in range(i) if rng.random() < float(p)][-4:]
+            g.add_node(f"t{i}", None, (), {}, TaskKind.PURE, deps=deps,
+                       cost=rng.uniform(0.1, 4.0),
+                       out_bytes=rng.randint(0, 1 << 20))
+            if rng.random() < 0.1:
+                g.mark_output(i)
+        if not g.outputs:
+            g.mark_output(int(n) - 1)
+        return g
+    raise SystemExit(f"unknown --workload {spec!r} "
+                     "(want 'lopsided' or 'random:SEED,N,P')")
+
+
+def search(args) -> None:
+    from benchmarks.common import print_rows
+    from repro.core.adaptive import RunTrace
+    from repro.core.simulator import WorkerEvent, search_policy
+
+    graph = _search_workload(args.workload)
+    grid = []
+    for c in args.grid.split(","):
+        c = c.strip()
+        grid.append(int(c) if args.knob in ("keep_parallelism",
+                                            "collective_arity")
+                    else float(c))
+    events = []
+    for spec in args.partition or []:
+        t, w, dur = spec.split(":")
+        events.append(WorkerEvent(time=float(t), kind="partition",
+                                  worker=int(w), factor=float(dur)))
+    trace = RunTrace.load(args.trace) if args.trace else None
+    kw: Dict = {"dispatch_overhead": args.dispatch_overhead}
+    if args.fuse:
+        kw["fuse"] = args.fuse
+    best, results = search_policy(
+        args.knob, graph, args.workers, grid,
+        events=events or None, trace=trace, **kw)
+    rows = [{"candidate": c,
+             "makespan_s": round(r.makespan, 4),
+             "util": round(r.utilization, 3),
+             "recomputed": r.n_recomputed,
+             "speculative": r.n_speculative,
+             "refusions": r.refusions,
+             "best": "*" if c == best else ""}
+            for c, r in sorted(results.items())]
+    print_rows(f"search {args.knob} over {args.workload}"
+               + (f" + trace {args.trace}" if args.trace else ""), rows)
+    print(f"best {args.knob} = {best}  "
+          f"(makespan {results[best].makespan:.4f}s)")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     sub = ap.add_subparsers(dest="cmd", required=True)
@@ -222,11 +305,32 @@ def main() -> None:
     f.add_argument("--shape", required=True)
     f.add_argument("--mode", default="fsdp_tp")
     f.add_argument("--override", action="append")
+    s = sub.add_parser("search")
+    s.add_argument("--knob", required=True,
+                   choices=("suspect_grace", "collective_arity",
+                            "speculate_after", "keep_parallelism",
+                            "fanin_cost", "group_cost"))
+    s.add_argument("--grid", required=True,
+                   help="comma-separated candidate values")
+    s.add_argument("--workload", default="lopsided",
+                   help="'lopsided' or 'random:SEED,N,P'")
+    s.add_argument("--workers", type=int, default=4)
+    s.add_argument("--trace", default=None,
+                   help="RunTrace json from a live run (replay measured "
+                        "durations instead of declared costs)")
+    s.add_argument("--partition", action="append",
+                   help="T:WORKER:DUR partition event (repeatable)")
+    s.add_argument("--fuse", default=None)
+    s.add_argument("--dispatch-overhead", type=float, default=0.0)
     args = ap.parse_args()
+    if args.cmd in ("diagnose", "run", "flashsim"):
+        _set_xla_flags()
     if args.cmd == "diagnose":
         diagnose(args)
     elif args.cmd == "flashsim":
         flashsim(args)
+    elif args.cmd == "search":
+        search(args)
     else:
         run(args)
 

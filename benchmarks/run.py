@@ -30,6 +30,11 @@ Suites:
                vs the N×M point-to-point fan-in baseline, per control
                channel × consumer count, bit-for-bit oracle + SIGKILL
                cross-checks; writes BENCH_collectives.json
+  adaptive   — closed loop: mis-costed lopsided workload with adaptive
+               re-fusion on vs off, per control channel, well-costed
+               no-regression control, driver-SIGKILL resume replaying
+               journaled re-fusions, trace-driven simulator cross-check;
+               writes BENCH_adaptive.json
 """
 from __future__ import annotations
 
@@ -39,7 +44,8 @@ import time
 
 from . import (matmul_scaling, scheduler_bench, fault_bench, roofline,
                bench_transfer, bench_multihost, bench_speculation,
-               bench_fusion, bench_faults, bench_collectives)
+               bench_fusion, bench_faults, bench_collectives,
+               bench_adaptive)
 
 SUITES = {
     "matmul": matmul_scaling.main,
@@ -52,6 +58,7 @@ SUITES = {
     "fusion": bench_fusion.main,
     "faults": bench_faults.main,
     "collectives": bench_collectives.main,
+    "adaptive": bench_adaptive.main,
 }
 
 

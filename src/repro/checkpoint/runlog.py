@@ -39,6 +39,11 @@ Record kinds (a tuple per record, first element the kind tag):
            producing ``{tid: nbytes}``.  The hot-path record.
 ``redo``   ``(cids,)`` — recovery demoted these clusters; their ``done``
            claims are retracted.
+``refuse`` ``(retired, clusters)`` — adaptive re-fusion replaced the
+           not-yet-dispatched ``retired`` cluster ids with ``clusters``
+           (``(cid, member_tids)`` pairs).  Replayed in order on resume
+           so journaled ``done`` claims of post-refusion cids resolve
+           against the same plan that produced them (docs/adaptive.md).
 ``gc``     ``(tids,)`` — values dropped by the consumed-refcount GC.
 ``live``   ``(tids,)`` — recovery retracted GC marks; the values are
            being recomputed and are no longer "gone everywhere".
@@ -176,6 +181,10 @@ class RunState:
         self.values: Dict[int, bytes] = {}         # tid -> pickled value
         self.sessions: Dict[str, Dict[str, Any]] = {}   # tenant -> quotas
         self.jobs: Dict[int, Dict[str, Any]] = {}  # in-flight admitted jobs
+        # adaptive re-fusion decisions, in journal order: each entry is
+        # (retired_cids, ((cid, member_tids), ...)) — replayed through
+        # fusion.splice_plan before the resume frontier is seeded
+        self.refusions: List[Tuple[Tuple[int, ...], Tuple]] = []
         self.truncated = False                     # torn tail was cut
         self.n_records = 0
 
@@ -200,6 +209,8 @@ class RunState:
         elif kind == "redo":
             for cid in record[1]:
                 self.done.pop(cid, None)
+        elif kind == "refuse":
+            self.refusions.append((tuple(record[1]), tuple(record[2])))
         elif kind == "gc":
             self.dropped.update(record[1])
         elif kind == "live":

@@ -136,8 +136,12 @@ from repro.config import ClusterConfig, resolve_config
 from repro.core.collectives import (CollectivesSpec, lower_collectives,
                                     parse_collectives_spec)
 from repro.core.executor import MissingInput, TaskFailed
-from repro.core.fusion import (FusedPlan, FuseSpec, fuse as fuse_graph,
-                               offset_plan, parse_fuse_spec)
+from repro.core.adaptive import (CostModel, RefuseGovernor, RunTrace,
+                                 fn_key, refusion_due)
+from repro.core.fusion import (DEFAULT_FANIN_COST, DEFAULT_GROUP_COST,
+                               DEFAULT_KEEP_PARALLELISM, FusedPlan, FuseSpec,
+                               fuse as fuse_graph, offset_plan,
+                               parse_fuse_spec, refuse_frontier, splice_plan)
 from repro.core.graph import TaskGraph, TaskKind
 from repro.core.lineage import outage_recovery, recovery_plan_clusters
 from repro.core.scheduler import fair_interleave, list_schedule, replan
@@ -389,6 +393,12 @@ class ClusterExecutor:
                              "×expected-duration multiple (or None to "
                              "disable speculation)")
         self.speculate_after = speculate_after
+        # adaptive replanning policy (docs/adaptive.md): "off" pins every
+        # planning decision to plan time; "auto" closes the measurement
+        # loop (calibrated scheduling, mid-run re-fusion, derived knobs)
+        self.adaptive = cfg.adaptive
+        self.keep_parallelism = cfg.keep_parallelism
+        self.refuse_skew = cfg.refuse_skew
         self.fuse = parse_fuse_spec(fuse)   # raises on junk, at the flag
         # collective lowering spec ("auto" | "off" | arity int): identity
         # for collective-free graphs, so the default costs nothing
@@ -696,12 +706,26 @@ class ClusterExecutor:
         # jobs are fused in their own id space at submit time and spliced
         # in at admission — the union must never be the identity plan, or
         # the first fused job would collide the cid and tid namespaces.
+        # keep_parallelism for the INITIAL fuse: explicit config wins;
+        # adaptive mode derives it from the pool size (never below the
+        # static default, so small pools reproduce historical plans); a
+        # resumed run replays the interrupted run's pinned value so the
+        # plan fingerprint below can match even if the pool changed.
+        if self._resume_state is not None:
+            kp = self._resume_state.meta.get(
+                "keep_par", DEFAULT_KEEP_PARALLELISM)
+        elif self.keep_parallelism is not None:
+            kp = self.keep_parallelism
+        elif self.adaptive != "off":
+            kp = max(DEFAULT_KEEP_PARALLELISM, 2 * self.n_workers)
+        else:
+            kp = DEFAULT_KEEP_PARALLELISM
         if resident:
             plan = FusedPlan(graph=graph, cgraph=TaskGraph(), members={},
                              cluster_of={}, outputs={}, ext_deps={},
                              consumers={}, spec=self.fuse)
         else:
-            plan = fuse_graph(graph, self.fuse)
+            plan = fuse_graph(graph, self.fuse, keep_parallelism=kp)
         cg = plan.cgraph
         required = (user_required if coll_map is None
                     else {coll_map[t] for t in user_required})
@@ -731,6 +755,15 @@ class ClusterExecutor:
             # round-trip counters
             "suspected": 0, "healed": 0, "relay_fallbacks": 0,
             "quarantined": 0, "readmitted": 0, "deplosts": 0,
+            # adaptive-replanning observability (docs/adaptive.md): the
+            # calibrated cost unit (seconds per abstract cost unit), the
+            # measured per-dispatch overhead, how many mid-run re-fusions
+            # fired (and how many a resume replayed from the journal),
+            # calibrated replans triggered, the governor's last observed
+            # skew, and the variance-derived speculation threshold
+            "cost_unit_s": 0.0, "dispatch_cost_s": 0.0,
+            "refusions": 0, "refusions_replayed": 0, "replan_triggers": 0,
+            "adaptive_skew": 0.0, "adaptive_speculate_after": 0.0,
         }
         if resident:
             stats.update({"jobs_admitted": 0, "jobs_completed": 0,
@@ -762,6 +795,19 @@ class ClusterExecutor:
                     f"resume {run_id}: fusion plan does not match the "
                     "interrupted run (cluster identity differs)")
             old_prefixes = [p for p in rs.seg_prefixes if p != seg_prefix]
+            # replay journaled adaptive re-fusions IN ORDER before any
+            # resume bookkeeping: the interrupted run's `done` claims for
+            # post-refusion cids only make sense against the post-splice
+            # plan, and the object store built below must count consumers
+            # against that plan too.  plan_fp above pinned the PRE-splice
+            # plan, so fingerprints were compared apples-to-apples.
+            for retired, clusters in rs.refusions:
+                splice_plan(plan, retired, [tuple(c) for c in clusters])
+            if rs.refusions:
+                fusion_view = plan.worker_view(required)
+                stats["n_clusters"] = len(cg.nodes)
+                stats["tasks_fused"] = plan.n_fused
+                stats["refusions_replayed"] = len(rs.refusions)
         runlog: Optional[RunLog] = None
         if self.checkpoint_dir is not None:
             os.makedirs(self.checkpoint_dir, exist_ok=True)
@@ -777,6 +823,7 @@ class ClusterExecutor:
                     "address": self.address, "channel": self.channel,
                     "transport": transport, "seg_prefix": seg_prefix,
                     "n_clusters": len(cg.nodes), "resident": resident,
+                    "keep_par": kp, "adaptive": self.adaptive,
                 })
             else:
                 runlog.append("resume", {"seg_prefix": seg_prefix})
@@ -1067,12 +1114,19 @@ class ClusterExecutor:
         run_started: Dict[int, Dict[int, float]] = {}  # cid -> wid -> t_start
         spec_twins: Dict[int, Set[int]] = {}      # cid -> speculative wids
         # expected durations: static plan hint (cost units), calibrated to
-        # seconds by an EWMA of actual/planned — same 0.9/0.1 blend the
-        # launchers' straggler detector uses
+        # seconds by the cost model's EWMA of actual/planned — the same
+        # 0.9/0.1 blend the launchers' straggler detector uses.  The model
+        # is always fed (its unit_s subsumes the old bare ewma_ratio);
+        # whether its output DRIVES decisions is gated on self.adaptive.
         planned_dur: Dict[int, float] = {
             c: max(n.cost, 1e-6) for c, n in cg.nodes.items()}
-        ewma_ratio: Optional[float] = None  # seconds per cost unit; None
-        # until the first completion — no speculation before calibration
+        cost_model = CostModel()
+        governor = RefuseGovernor(skew_threshold=self.refuse_skew)
+        # replayed re-fusions count against the per-run cap: a resumed
+        # driver continues the interrupted run's budget, not a fresh one
+        governor.fired = stats["refusions_replayed"]
+        trace = RunTrace(n_workers=self.n_workers)
+        self.last_trace = trace
         error: List[BaseException] = []
         join_after = self.join_after     # consumed per run, not per executor
         last_progress = time.perf_counter()
@@ -1126,12 +1180,21 @@ class ClusterExecutor:
             wids = alive_ids()
             if not wids:
                 return
+            # calibrated scheduling (docs/adaptive.md): once the cost
+            # model has a measured seconds-per-unit rate, scale abstract
+            # costs into seconds so the scheduler's size/bandwidth comm
+            # term competes on the same axis.  planned_dur stays in UNITS
+            # (divided back below) — the speculation overdue test
+            # multiplies by unit_s itself.
+            scale = (cost_model.unit_s
+                     if self.adaptive != "off" and cost_model.unit_s
+                     else 1.0)
             try:
                 if initial:
                     sched = list_schedule(
                         cg, len(wids), policy=self.policy,
                         worker_speed=speeds_for(wids), seed=self.seed,
-                        worker_host=hosts_for(wids))
+                        worker_host=hosts_for(wids), cost_scale=scale)
                 else:
                     # replanning mid-run knows value sizes and current
                     # placements: make the comm-cost term real so the new
@@ -1150,17 +1213,19 @@ class ClusterExecutor:
                         worker_speed=speeds_for(wids), seed=self.seed,
                         data_sizes=cluster_sizes(),
                         bandwidth=self.bandwidth, placed=placed,
-                        worker_host=hosts_for(wids))
+                        worker_host=hosts_for(wids), cost_scale=scale)
             except Exception:            # plan is advisory; never fatal
                 plan_worker.clear()
                 return
             plan_worker.clear()
             for cid, p in sched.placements.items():
                 plan_worker[cid] = wids[p.worker]
-            # static cost-model hint for the speculation overdue test
-            # (node.cost is the pre-plan fallback)
+            # cost-model hint for the speculation overdue test, kept in
+            # cost units (node.cost is the pre-plan fallback)
             for cid, dur in sched.expected_durations().items():
-                planned_dur[cid] = max(dur, 1e-6)
+                planned_dur[cid] = max(dur / scale, 1e-6)
+            if not initial:
+                stats["replan_triggers"] += 1
 
         # ---------------------------------------------------------- helpers
         def post(w: _Worker, msg: tuple) -> None:
@@ -1466,7 +1531,7 @@ class ClusterExecutor:
         def on_done(w: _Worker, cid: int, wall: float,
                     sizes: Dict[int, int],
                     replicated: Sequence[int]) -> None:
-            nonlocal last_progress, ewma_ratio
+            nonlocal last_progress
             last_progress = time.perf_counter()
             w.inflight.discard(cid)
             runner_gone(cid, w.wid)
@@ -1534,10 +1599,16 @@ class ClusterExecutor:
                         fetching[m] = w.wid
             w.n_done += 1
             # runtime calibration of the static cost model (the launchers'
-            # 0.9/0.1 straggler EWMA): seconds of wall per planned cost unit
-            ratio = wall / planned_dur.get(cid, 1.0)
-            ewma_ratio = (ratio if ewma_ratio is None
-                          else 0.9 * ewma_ratio + 0.1 * ratio)
+            # 0.9/0.1 straggler EWMA): seconds of wall per planned cost
+            # unit, plus per-fn rates and the replayable run trace
+            members = plan.members.get(cid, (cid,))
+            cost_model.observe(
+                planned_dur.get(cid, 1.0), wall,
+                fn_units=[(fn_key(graph.nodes[m]), graph.nodes[m].cost)
+                          for m in members if m in graph.nodes])
+            trace.record(members, graph.nodes, wall)
+            stats["cost_unit_s"] = cost_model.unit_s or 0.0
+            maybe_refuse()
             # winner election: this completion wins; every other runner of
             # cid gets an idempotent cancel (honored between tasks — one
             # mid-task keeps going and late-dones into the branch above)
@@ -1863,6 +1934,109 @@ class ClusterExecutor:
             if state.get(cid) == INFLIGHT and not still_running(cid):
                 state[cid] = READY
 
+        def effective_speculate_after() -> Optional[float]:
+            """Static ``speculate_after`` always wins; under adaptive
+            mode an unset threshold is derived from the observed duration
+            variance (docs/adaptive.md) — tight when durations are
+            predictable, loose when natural spread is high."""
+            if self.speculate_after is not None:
+                return self.speculate_after
+            if self.adaptive == "off":
+                return None
+            d = cost_model.derived_speculate_after()
+            if d is not None:
+                stats["adaptive_speculate_after"] = d
+            return d
+
+        def maybe_refuse() -> None:
+            """Mid-run re-fusion (docs/adaptive.md): when measured
+            durations are skewed enough that the static plan's grouping
+            is evidently mis-costed, regroup the not-yet-dispatched
+            frontier under profile-corrected costs.  Completed and
+            in-flight clusters are pinned (they are simply not in the
+            frontier); the decision is journaled so a resumed driver
+            replays it bit-identically.  Disabled for resident (gateway)
+            runs — job id spans pin cluster ids — and after any
+            recovery: a post-outage run values plan stability over
+            regrouping."""
+            nonlocal n_total, rank, csucc
+            if (self.adaptive == "off" or resident or plan.identity
+                    or error or self.recovery_events
+                    or stats["recomputed"]):
+                return
+            cost_model.observe_dispatch(
+                stats["dispatch_overhead_s"], stats["dispatched"])
+            stats["dispatch_cost_s"] = cost_model.dispatch_s
+            frontier = [c for c, s in state.items()
+                        if s in (PENDING, READY)]
+            if not refusion_due(cost_model, governor, len(frontier)):
+                return
+            stats["adaptive_skew"] = governor.last_skew
+            gates = cost_model.fuse_gates(DEFAULT_FANIN_COST,
+                                          DEFAULT_GROUP_COST)
+            kp_live = self.keep_parallelism or max(
+                DEFAULT_KEEP_PARALLELISM, 2 * len(alive_ids()))
+            res = refuse_frontier(
+                plan, frontier, spec=self.fuse,
+                cost_of=cost_model.corrected_units,
+                fanin_cost=gates[0], group_cost=gates[1],
+                keep_parallelism=kp_live)
+            if res is None:
+                governor.note_no_change(cost_model)
+                return
+            retired, new_clusters = res
+            delta = splice_plan(plan, retired, new_clusters)
+            # store refcounts follow the consumer-set delta (frontier
+            # consumers never ran, so no completed decrement is disturbed
+            # and no count can reach zero here)
+            for v, d in delta.items():
+                store.consumers_left[v] = \
+                    store.consumers_left.get(v, 0) + d
+            for c in retired:
+                state.pop(c, None)
+                planned_dur.pop(c, None)
+                plan_worker.pop(c, None)
+                fusion_view.members.pop(c, None)
+                fusion_view.keep.pop(c, None)
+            # new_clusters is topo-ordered, so a new cluster's new-cluster
+            # deps are already in ``state`` when it is seeded
+            view_delta: Dict[str, Dict] = {"members": {}, "keep": {}}
+            for cid, ms in new_clusters:
+                node = cg.nodes[cid]
+                state[cid] = (READY if all(state[d] == DONE
+                                           for d in node.all_deps)
+                              else PENDING)
+                planned_dur[cid] = max(node.cost, 1e-6)
+                # keep rule mirrors FusedPlan.worker_view
+                keep = tuple(m for m in ms
+                             if m in required or m in plan._outset[cid])
+                fusion_view.members[cid] = tuple(ms)
+                fusion_view.keep[cid] = keep
+                view_delta["members"][cid] = tuple(ms)
+                view_delta["keep"][cid] = keep
+            n_total += len(new_clusters) - len(retired)
+            rank = cg.critical_path_rank()
+            csucc = cg.successors()
+            # live workers learn the new memberships before any dispatch
+            # of a new cid can reach them (same FIFO outbox); retired ids
+            # are never dispatched again, so their stale entries on the
+            # worker are inert.  Late joiners get the mutated fusion_view
+            # in their welcome config.
+            blob = pickle.dumps(view_delta,
+                                protocol=pickle.HIGHEST_PROTOCOL)
+            for lw in workers.values():
+                if lw.alive:
+                    post(lw, ("graph", blob))
+            if runlog is not None:
+                runlog.append("refuse", tuple(retired),
+                              tuple((cid, tuple(ms))
+                                    for cid, ms in new_clusters))
+            governor.note_fired(cost_model)
+            stats["refusions"] += 1
+            stats["n_clusters"] = len(cg.nodes)
+            stats["tasks_fused"] = plan.n_fused
+            make_plan(initial=False)
+
         def maybe_speculate() -> None:
             """Speculative re-execution of stragglers: duplicate the
             most-overdue running super-task onto an idle worker.  Runs
@@ -1875,7 +2049,8 @@ class ClusterExecutor:
             input bytes are cheapest (``move_cost`` doubles bytes whose
             nearest copy is on another host, so an idle same-host worker
             beats a cross-host one)."""
-            if self.speculate_after is None or ewma_ratio is None:
+            spec_after = effective_speculate_after()
+            if spec_after is None or cost_model.unit_s is None:
                 return
             if any(s == READY for s in state.values()):
                 return
@@ -1892,10 +2067,10 @@ class ClusterExecutor:
                 st = run_started.get(cid, {}).get(rw)
                 if st is None:
                     continue
-                expected = planned_dur.get(cid, 1.0) * ewma_ratio
+                expected = planned_dur.get(cid, 1.0) * cost_model.unit_s
                 overdue_view[cid] = (now - st, max(expected, 1e-9))
             while idle and overdue_view:
-                cid = pick_speculation(overdue_view, self.speculate_after)
+                cid = pick_speculation(overdue_view, spec_after)
                 if cid is None:
                     return
                 elapsed, _ = overdue_view.pop(cid)
@@ -2181,7 +2356,14 @@ class ClusterExecutor:
                 stats={"tenant": job.tenant, "job_id": job.job_id,
                        "n_clusters": len(job.cids),
                        "submit_to_first_dispatch_s": first,
-                       "submit_to_gather_s": latency})
+                       "submit_to_gather_s": latency,
+                       # adaptive observability: the run-wide calibrated
+                       # rates this job executed under (re-fusion itself
+                       # is disabled for resident runs)
+                       "cost_unit_s": cost_model.unit_s or 0.0,
+                       "dispatch_cost_s": cost_model.dispatch_s,
+                       "adaptive_speculate_after":
+                           stats["adaptive_speculate_after"]})
             retire_job(job)
 
         def fail_job(job: _Job, exc: BaseException) -> None:
@@ -2669,6 +2851,15 @@ class ClusterExecutor:
                     serde.sweep_segments(p)
                 serde.sweep_peer_sockets(peer_dir)
             self.wall_time = time.perf_counter() - t0
+            # finalize the replayable trace (benchmarks/hillclimb feed it
+            # into the simulator's offline policy search)
+            trace.n_workers = len(workers) or self.n_workers
+            cost_model.observe_dispatch(
+                stats["dispatch_overhead_s"], stats["dispatched"])
+            trace.unit_s = cost_model.unit_s or 0.0
+            trace.dispatch_s = cost_model.dispatch_s
+            stats["cost_unit_s"] = trace.unit_s
+            stats["dispatch_cost_s"] = cost_model.dispatch_s
 
         if error:
             raise error[0]

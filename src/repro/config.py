@@ -63,6 +63,10 @@ def _opt_float(s: str) -> Optional[float]:
     return None if s in ("", "none") else float(s)
 
 
+def _opt_int(s: str) -> Optional[int]:
+    return None if s in ("", "none", "auto") else int(s)
+
+
 @dataclass(frozen=True)
 class ClusterConfig:
     """Every runtime knob of the cluster backend, as one frozen value.
@@ -139,6 +143,23 @@ class ClusterConfig:
         "edges; off executes each collective's dense fallback on one "
         "worker, N overrides the tree arity (see docs/collectives.md)",
         metavar="{auto,off,N}", backend="process"))
+    adaptive: str = field(default="off", metadata=_flag(
+        "profile-guided adaptive replanning: auto feeds measured task "
+        "durations back into the planner mid-run (calibrated scheduling "
+        "costs, re-fusion of lopsided not-yet-dispatched clusters, "
+        "derived keep-parallelism and speculate-after); off pins every "
+        "planning decision to plan time (see docs/adaptive.md)",
+        choices=("off", "auto"), backend="process"))
+    keep_parallelism: Optional[int] = field(default=None, metadata=_flag(
+        "sibling-packing parallelism floor for fusion and re-fusion; "
+        "default derives it from the live worker count under "
+        "--adaptive auto and uses the static fusion default otherwise",
+        parse=_opt_int, metavar="N", backend="process"))
+    refuse_skew: float = field(default=4.0, metadata=_flag(
+        "duration-skew hysteresis threshold (max/median of observed "
+        "seconds-per-cost-unit) above which the adaptive runtime "
+        "re-fuses the not-yet-dispatched frontier", metavar="X",
+        backend="process"))
     # ---- checkpointing / resume -------------------------------------
     checkpoint_dir: Optional[str] = field(default=None, metadata=_flag(
         "directory for the driver's append-only run log (enables "
@@ -204,6 +225,15 @@ class ClusterConfig:
         if self.fail_driver is not None and self.fail_driver < 1:
             raise ValueError("fail_driver must be a positive completion "
                              "count (or None to disable crash emulation)")
+        if self.adaptive not in ("off", "auto"):
+            raise ValueError(f"unknown adaptive mode {self.adaptive!r} "
+                             "(expected 'off' or 'auto')")
+        if self.keep_parallelism is not None and self.keep_parallelism < 1:
+            raise ValueError("keep_parallelism must be >= 1 sibling "
+                             "groups (or None to derive it)")
+        if self.refuse_skew <= 1.0:
+            raise ValueError("refuse_skew must be > 1 (a max/median "
+                             "duration-skew ratio)")
         if self.resume is not None and self.checkpoint_dir is None:
             raise ValueError("resume requires checkpoint_dir")
         if self.checkpoint_interval < 0:

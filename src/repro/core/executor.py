@@ -281,7 +281,11 @@ def run_graph(graph: TaskGraph, n_workers: int = 1,
     fields ``n_clusters`` / ``tasks_fused`` / ``control_msgs`` /
     ``control_frames`` / ``dispatch_overhead_s`` (the fusion win,
     observable directly: pass ``fuse="auto"`` and watch ``control_msgs``
-    and ``dispatch_overhead_s`` collapse while results stay bit-identical).
+    and ``dispatch_overhead_s`` collapse while results stay bit-identical),
+    and the adaptive-loop fields ``cost_unit_s`` / ``dispatch_cost_s`` /
+    ``refusions`` / ``refusions_replayed`` / ``replan_triggers`` /
+    ``adaptive_skew`` / ``adaptive_speculate_after`` (populated under
+    ``adaptive="auto"`` — docs/adaptive.md).
     """
     if connect is not None and backend != "process":
         # gateway session: trace locally, execute on the shared pool

@@ -66,7 +66,7 @@ import dataclasses
 import heapq
 from typing import Any, Dict, Iterable, List, Optional, Set, Tuple, Union
 
-from .graph import GraphError, TaskGraph, TaskKind
+from .graph import GraphError, TaskGraph, TaskKind, TaskNode
 
 #: kinds that may share a cluster with other members.  COLLECTIVE is
 #: deliberately absent: a lowered collective stage is a cluster boundary
@@ -476,3 +476,160 @@ def _build_plan(graph: TaskGraph, uf: _UnionFind, spec: Any) -> FusedPlan:
         consumers={v: tuple(cs) for v, cs in consumers.items()},
         spec=spec,
     )
+
+
+# ---------------------------------------------------------------------------
+# Mid-run re-fusion (profile-guided adaptive replanning — docs/adaptive.md)
+# ---------------------------------------------------------------------------
+
+def refuse_frontier(
+    plan: FusedPlan,
+    frontier: Iterable[int],
+    *,
+    spec: FuseSpec = "auto",
+    cost_of=None,
+    fanin_cost: float = DEFAULT_FANIN_COST,
+    group_cost: float = DEFAULT_GROUP_COST,
+    keep_parallelism: int = DEFAULT_KEEP_PARALLELISM,
+    next_cid: Optional[int] = None,
+) -> Optional[Tuple[Tuple[int, ...], List[Tuple[int, Tuple[int, ...]]]]]:
+    """Recompute the clustering of ``frontier`` (not-yet-dispatched
+    cluster ids of ``plan``) under corrected member costs.
+
+    Builds the frontier *member* subgraph — deps outside the frontier are
+    already satisfied (a PENDING/READY cluster's external producers are
+    all completed or in flight) and drop out — rescales each member's
+    cost through ``cost_of(node)`` (the CostModel's profile correction),
+    and runs the ordinary :func:`fuse` pass over it with the calibrated
+    gates.  Completed/in-flight clusters are never touched: they are
+    simply not in ``frontier``.
+
+    Returns ``(retired, new_clusters)`` where ``retired`` is the sorted
+    tuple of replaced frontier cids and ``new_clusters`` the replacement
+    ``(cid, member_tids)`` list in cluster-topo order, with fresh ids
+    starting at ``next_cid`` — or ``None`` when re-fusion reproduces the
+    existing partition (nothing to do).  The result is exactly what the
+    run log journals: :func:`splice_plan` applies it both live and on
+    ``--resume`` replay.
+    """
+    graph = plan.graph
+    frontier = sorted(frontier)
+    old_parts = {frozenset(plan.members[c]) for c in frontier}
+    member_ids = sorted(m for c in frontier for m in plan.members[c])
+    mset = set(member_ids)
+    sub = TaskGraph()
+    for m in member_ids:
+        n = graph.nodes[m]
+        sub.nodes[m] = dataclasses.replace(
+            n,
+            deps=tuple(d for d in n.deps if d in mset),
+            token_deps=tuple(d for d in n.token_deps if d in mset),
+            cost=float(cost_of(n)) if cost_of is not None else n.cost,
+            meta=dict(n.meta),
+        )
+    sub._next_id = member_ids[-1] + 1 if member_ids else 0
+    sub.outputs = [m for m in member_ids if m in set(graph.outputs)]
+    subplan = fuse(sub, spec, fanin_cost=fanin_cost, group_cost=group_cost,
+                   keep_parallelism=keep_parallelism)
+    new_parts = {frozenset(ms) for ms in subplan.members.values()}
+    if new_parts == old_parts:
+        return None
+    if next_cid is None:
+        next_cid = max(plan.cgraph.nodes, default=-1) + 1
+    # sub-plan cids are topo-numbered (identity sub-plans use member tids,
+    # also topo), so enumerating them sorted keeps new ids topo-ordered —
+    # a new cluster's id is always greater than its new-cluster deps'
+    new_clusters = [(next_cid + i, tuple(subplan.members[c]))
+                    for i, c in enumerate(sorted(subplan.members))]
+    return tuple(frontier), new_clusters
+
+
+def splice_plan(plan: FusedPlan, retired: Iterable[int],
+                new_clusters: List[Tuple[int, Tuple[int, ...]]],
+                ) -> Dict[int, int]:
+    """Apply one re-fusion decision to ``plan`` **in place**.
+
+    Deterministic plan surgery over the output of
+    :func:`refuse_frontier` (or a journaled copy of it): drop the retired
+    cluster ids, install the new memberships, and rebuild every derived
+    map — ``cluster_of``, per-cluster ``outputs``/``ext_deps``, the
+    ``consumers`` index, and the cluster-level graph nodes — using
+    exactly the :func:`_build_plan` rules, so a resumed driver replaying
+    the journal reconstructs a bit-identical plan.
+
+    Returns ``{value_tid: consumer_count_delta}`` for every externally
+    visible value whose consuming-cluster set changed; the executor folds
+    these into the object store's ``consumers_left`` refcounts (a merge
+    of two consumers of the same value means one fewer pending read).
+    """
+    graph = plan.graph
+    cgraph = plan.cgraph
+    retired = set(retired)
+    old_cons_len: Dict[int, int] = {}
+    for c in retired:
+        for v in plan.ext_deps.get(c, ()):
+            old_cons_len.setdefault(v, len(plan.consumers.get(v, ())))
+        plan.members.pop(c, None)
+        plan.outputs.pop(c, None)
+        plan.ext_deps.pop(c, None)
+        plan._outset.pop(c, None)
+        cgraph.nodes.pop(c, None)
+    for cid, ms in new_clusters:
+        plan.members[cid] = tuple(ms)
+        for m in ms:
+            plan.cluster_of[m] = cid
+    succ = graph.successors()
+    out_set = set(graph.outputs)
+    for cid, ms in new_clusters:
+        nodes = [graph.nodes[m] for m in ms]
+        deps: Set[int] = set()
+        token_deps: Set[int] = set()
+        evals: Set[int] = set()
+        for n in nodes:
+            for d in n.deps:
+                if plan.cluster_of[d] != cid:
+                    deps.add(plan.cluster_of[d])
+                    evals.add(d)
+            for d in n.token_deps:
+                if plan.cluster_of[d] != cid:
+                    token_deps.add(plan.cluster_of[d])
+                    evals.add(d)
+        token_deps -= deps
+        outs = tuple(m for m in ms
+                     if m in out_set
+                     or any(plan.cluster_of[s] != cid for s in succ[m]))
+        plan.outputs[cid] = outs
+        plan._outset[cid] = set(outs)
+        plan.ext_deps[cid] = tuple(sorted(evals))
+        for v in evals:
+            old_cons_len.setdefault(v, len(plan.consumers.get(v, ())))
+        name = (nodes[0].name if len(nodes) == 1
+                else f"{nodes[0].name}+{len(nodes) - 1}")
+        kind = nodes[0].kind if len(nodes) == 1 else TaskKind.PURE
+        cgraph.nodes[cid] = TaskNode(
+            tid=cid, name=name, fn=None, args=(), kwargs={}, kind=kind,
+            deps=tuple(sorted(deps)),
+            token_deps=tuple(sorted(token_deps)),
+            cost=sum(n.cost for n in nodes),
+            out_bytes=sum(graph.nodes[m].out_bytes for m in outs),
+            meta={"members": tuple(ms)},
+        )
+        cgraph._next_id = max(cgraph._next_id, cid + 1)
+    # consumer index: surviving old consumers + the new clusters, by cid
+    delta: Dict[int, int] = {}
+    for v, old_len in old_cons_len.items():
+        cons = [c for c in plan.consumers.get(v, ()) if c not in retired]
+        cons += [cid for cid, _ in new_clusters if v in plan.ext_deps[cid]]
+        cons = sorted(set(cons))
+        plan.consumers[v] = tuple(cons)
+        if len(cons) != old_len:
+            delta[v] = len(cons) - old_len
+    # cluster-graph output marks follow the membership
+    seen = {c for c in cgraph.outputs if c not in retired}
+    cgraph.outputs = [c for c in cgraph.outputs if c not in retired]
+    for o in graph.outputs:
+        c = plan.cluster_of[o]
+        if c not in seen:
+            seen.add(c)
+            cgraph.outputs.append(c)
+    return delta

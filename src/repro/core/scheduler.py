@@ -112,8 +112,19 @@ def list_schedule(
     placed: Optional[Dict[int, int]] = None,
     worker_host: Optional[Sequence[Any]] = None,
     near_factor: float = 0.25,
+    cost_scale: float = 1.0,
 ) -> Schedule:
     """Greedy list scheduling.
+
+    ``cost_scale`` converts abstract ``node.cost`` units into the seconds
+    the comm-cost terms are priced in (``size / bandwidth``).  The
+    default ``1.0`` keeps the historical convention that one cost unit is
+    one second; the adaptive runtime passes its measured
+    ``CostModel.unit_s`` (seconds per unit) so compute and transfer
+    finally land on one axis and the EFT trade-off between "run near the
+    data" and "run on the free worker" uses real magnitudes.  Placements
+    and :meth:`Schedule.expected_durations` come back in the scaled
+    (seconds) axis.
 
     ``done`` maps already-completed task ids to their completion times —
     used for elastic re-planning mid-flight (those tasks are not rescheduled
@@ -204,7 +215,7 @@ def list_schedule(
                         pw = placed.get(d, w)
                     if pw != w:
                         est = max(est, finish[d] + edge_cost(d, tid, pw, w))
-            dur = node.cost / speeds[w]
+            dur = node.cost * cost_scale / speeds[w]
             eft = est + dur
             if best is None or eft < best[0]:
                 best = (eft, est, w)

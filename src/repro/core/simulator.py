@@ -21,6 +21,8 @@ import random as _random
 from collections import deque
 from typing import Dict, List, Optional, Set, Tuple
 
+from .adaptive import (CostModel, RefuseGovernor, RunTrace, fn_key,
+                       refusion_due)
 from .collectives import (CollectivesSpec, lower_collectives,
                           parse_collectives_spec)
 from .fusion import FusedPlan, FuseSpec, fuse as fuse_graph
@@ -78,6 +80,10 @@ class SimResult:
     busy_time: Dict[int, float] = dataclasses.field(default_factory=dict)
     task_worker: Dict[int, int] = dataclasses.field(default_factory=dict)
     timeline: List[Tuple[float, str]] = dataclasses.field(default_factory=list)
+    # adaptive trigger model (``adaptive="auto"``): how many times, and
+    # when, the re-fusion governor would have fired on this run
+    refusions: int = 0
+    refusion_times: List[float] = dataclasses.field(default_factory=list)
 
     @property
     def utilization(self) -> float:
@@ -107,6 +113,10 @@ class ClusterSim:
         driver_dead_workers: Optional[List[int]] = None,
         driver_resume_latency: float = 1.0,
         suspect_grace: float = 5.0,
+        adaptive: str = "off",
+        refuse_skew: float = 4.0,
+        trace: Optional[RunTrace] = None,
+        fuse_kw: Optional[Dict[str, float]] = None,
     ) -> None:
         graph.validate()
         # collective lowering first, exactly as ClusterExecutor does: the
@@ -124,10 +134,32 @@ class ClusterSim:
         # round-trip (BENCH_multihost: ~0.78 ms/task on TCP) each task
         # start pays — so policy studies of fusion granularity transfer:
         # fewer clusters ⇒ fewer overheads, identical total work.
-        self.plan: FusedPlan = fuse_graph(graph, fuse)
+        # ``fuse_kw`` forwards fusion knobs (keep_parallelism, fanin_cost,
+        # group_cost) so the offline policy search can price candidate
+        # REGROUPINGS of the same graph — the simulator half of the
+        # adaptive re-fusion loop (docs/adaptive.md)
+        self.plan: FusedPlan = fuse_graph(graph, fuse, **(fuse_kw or {}))
+        # member-level graph, kept around so a recorded RunTrace (keyed by
+        # member tid) can price any candidate clustering of the same tasks
+        self.member_graph = graph
         graph = self.plan.cgraph
         self.dispatch_overhead = dispatch_overhead
         self.graph = graph
+        self.trace = trace
+        # adaptive="auto" models the RE-FUSION TRIGGER: the sim feeds the
+        # same CostModel/RefuseGovernor the live driver uses and counts
+        # where the governor fires (SimResult.refusions /
+        # .refusion_times).  It does not re-splice the plan mid-sim —
+        # candidate regroupings are priced by re-running with ``fuse_kw``
+        # / ``trace``, which is exactly what search_policy does.
+        if adaptive not in ("off", "auto"):
+            raise ValueError(f"adaptive must be 'off' or 'auto': {adaptive}")
+        self.adaptive = adaptive
+        self._model: Optional[CostModel] = None
+        self._governor: Optional[RefuseGovernor] = None
+        if adaptive == "auto":
+            self._model = CostModel(dispatch_s=dispatch_overhead)
+            self._governor = RefuseGovernor(skew_threshold=refuse_skew)
         self.n_workers = n_workers
         self.speed = {w: (worker_speed[w] if worker_speed else 1.0)
                       for w in range(n_workers)}
@@ -224,7 +256,16 @@ class ClusterSim:
         def start_task(w: int, tid: int, now: float, speculative: bool = False):
             nonlocal epoch
             node = g.nodes[tid]
-            dur = node.cost / self.speed[w] + self.dispatch_overhead
+            if self.trace is not None:
+                # trace replay: recorded per-member seconds (declared cost
+                # × recorded unit rate for never-observed members), so the
+                # same trace prices ANY candidate clustering of the tasks
+                work = self.trace.cluster_seconds(
+                    self.plan.members.get(tid, (tid,)),
+                    self.member_graph.nodes)
+            else:
+                work = node.cost
+            dur = work / self.speed[w] + self.dispatch_overhead
             # input fetch cost: bytes from deps whose results live elsewhere
             if self.comm_per_byte > 0.0:
                 for d in node.deps:
@@ -375,6 +416,24 @@ class ClusterSim:
                             results_at.setdefault(d, set()).add(DURABLE)
                     enqueue_ready_from(tid, w)
                     res.makespan = max(res.makespan, now)
+                    if self._model is not None:
+                        # same observation + trigger predicate the live
+                        # driver applies in on_done/maybe_refuse
+                        mg = self.member_graph
+                        ms = self.plan.members.get(tid, (tid,))
+                        self._model.observe(
+                            max(node.cost, 1e-9), now - cur[1],
+                            fn_units=[(fn_key(mg.nodes[m]),
+                                       mg.nodes[m].cost)
+                                      for m in ms if m in mg.nodes])
+                        n_frontier = sum(1 for t in pending
+                                         if not inflight.get(t))
+                        if refusion_due(self._model, self._governor,
+                                        n_frontier):
+                            self._governor.note_fired(self._model)
+                            res.refusions += 1
+                            res.refusion_times.append(now)
+                            res.timeline.append((now, "refusion trigger"))
                 try_acquire(w, now)
                 # a finish may unblock work for idle peers
                 for v in list(alive):
@@ -484,6 +543,94 @@ def simulate(graph: TaskGraph, n_workers: int, **kw) -> SimResult:
     return ClusterSim(graph, n_workers, **kw).run()
 
 
+#: knobs search_policy knows how to sweep, and the sim parameter each maps
+#: to.  Fusion-shape knobs go through ``fuse_kw`` so each candidate prices
+#: a different REGROUPING of the same graph.
+SEARCHABLE_POLICIES = ("suspect_grace", "collective_arity",
+                       "speculate_after", "keep_parallelism",
+                       "fanin_cost", "group_cost")
+
+
+def search_policy(
+    name: str,
+    graph: TaskGraph,
+    n_workers: int,
+    candidates: List,
+    *,
+    events: Optional[List[WorkerEvent]] = None,
+    trace: Optional[RunTrace] = None,
+    **kw,
+):
+    """One front door for every offline policy search.
+
+    Sweeps ``candidates`` for the named knob over the same scenario and
+    returns ``(best, results)``.  ``trace`` (a recorded
+    :class:`repro.core.adaptive.RunTrace`, e.g. a live run's
+    ``ClusterExecutor.last_trace``) replays *measured* per-member
+    durations instead of declared costs — that is what closes the loop
+    from runtime measurement back to offline search: candidates are
+    priced against what the cluster actually did, and the winner feeds
+    straight back into ``ClusterConfig``.
+
+    Knobs and tie-breaks (all minimize makespan first):
+
+    ``suspect_grace``      fewer recomputes, then the smaller grace
+                           (requires partition ``events``)
+    ``collective_arity``   the larger arity (shallower tree)
+    ``speculate_after``    fewer speculative twins, then the smaller
+                           threshold
+    ``keep_parallelism`` / ``fanin_cost`` / ``group_cost``
+                           the smaller candidate; swept through
+                           ``fuse_kw`` (``fuse`` defaults to ``"auto"``
+                           for these so the knob has something to shape)
+    """
+    if name not in SEARCHABLE_POLICIES:
+        raise ValueError(f"unknown policy knob {name!r}; searchable: "
+                         f"{SEARCHABLE_POLICIES}")
+    if not candidates:
+        noun = {"suspect_grace": "grace",
+                "collective_arity": "arity"}.get(name, name)
+        raise ValueError(f"need at least one candidate {noun}")
+    if name == "suspect_grace" and events is None:
+        raise ValueError("suspect_grace search needs partition events")
+    if trace is not None:
+        kw["trace"] = trace
+    if name in ("keep_parallelism", "fanin_cost", "group_cost"):
+        kw.setdefault("fuse", "auto")
+    results: Dict = {}
+    for cand in candidates:
+        ckw = dict(kw)
+        if events is not None:
+            ckw["events"] = list(events)
+        if name == "suspect_grace":
+            ckw["suspect_grace"] = cand
+        elif name == "collective_arity":
+            if parse_collectives_spec(cand) == "off":
+                raise ValueError(f"candidate arity {cand} is not a tree")
+            ckw["collectives"] = cand
+        elif name == "speculate_after":
+            ckw["speculate_after"] = cand
+        else:
+            fkw = dict(ckw.pop("fuse_kw", None) or {})
+            fkw[name] = int(cand) if name == "keep_parallelism" else cand
+            ckw["fuse_kw"] = fkw
+        results[cand] = simulate(graph, n_workers, **ckw)
+    if name == "suspect_grace":
+        def key(c):
+            return (results[c].makespan, results[c].n_recomputed, c)
+    elif name == "collective_arity":
+        def key(c):
+            return (results[c].makespan, -c)
+    elif name == "speculate_after":
+        def key(c):
+            return (results[c].makespan, results[c].n_speculative, c)
+    else:
+        def key(c):
+            return (results[c].makespan, c)
+    best = min(results, key=key)
+    return best, results
+
+
 def search_suspect_grace(
     graph: TaskGraph,
     n_workers: int,
@@ -503,17 +650,11 @@ def search_suspect_grace(
     that really is dead.  ``best`` minimizes makespan, ties broken toward
     fewer recomputes, then the *smaller* grace (detect true deaths
     sooner).  Feed the winner straight to
-    ``ClusterExecutor(suspect_grace=...)``.
+    ``ClusterExecutor(suspect_grace=...)``.  Thin wrapper over
+    :func:`search_policy` (same candidates, scenario, and tie-breaks).
     """
-    if not candidates:
-        raise ValueError("need at least one candidate grace")
-    results: Dict[float, SimResult] = {}
-    for grace in candidates:
-        results[grace] = simulate(graph, n_workers, events=list(events),
-                                  suspect_grace=grace, **kw)
-    best = min(results, key=lambda s: (results[s].makespan,
-                                       results[s].n_recomputed, s))
-    return best, results
+    return search_policy("suspect_grace", graph, n_workers, candidates,
+                         events=events, **kw)
 
 
 def search_collective_arity(
@@ -536,13 +677,7 @@ def search_collective_arity(
     constant (the ``hillclimb``/``search_suspect_grace`` pattern;
     ROADMAP item 4).  ``best`` minimizes makespan, ties toward the
     larger arity (shallower tree ⇒ fewer dispatches at equal makespan).
+    Thin wrapper over :func:`search_policy`.
     """
-    if not candidates:
-        raise ValueError("need at least one candidate arity")
-    results: Dict[int, SimResult] = {}
-    for arity in candidates:
-        if parse_collectives_spec(arity) == "off":
-            raise ValueError(f"candidate arity {arity} is not a tree")
-        results[arity] = simulate(graph, n_workers, collectives=arity, **kw)
-    best = min(results, key=lambda a: (results[a].makespan, -a))
-    return best, results
+    return search_policy("collective_arity", graph, n_workers, candidates,
+                         **kw)

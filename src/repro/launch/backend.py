@@ -37,7 +37,8 @@ from repro.core.executor import Executor
 #: ClusterConfig fields exposed as launcher backend flags (the subset a
 #: single-run launcher exercises; repro-gateway exposes the full set).
 BACKEND_FLAG_FIELDS = ("transport", "channel", "speculate_after",
-                       "fuse", "collectives")
+                       "fuse", "collectives", "adaptive",
+                       "keep_parallelism", "refuse_skew")
 
 #: launcher-facing defaults that differ from the library defaults: the
 #: demo drivers trace fine-grained graphs, so fusion pays for itself

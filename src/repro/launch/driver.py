@@ -92,8 +92,8 @@ def main(argv: Optional[List[str]] = None) -> int:
     from repro.config import ClusterConfig
     ClusterConfig.add_flags(
         ap, names=("channel", "connect", "token", "checkpoint_dir",
-                   "checkpoint_interval", "resume", "fuse",
-                   "outputs_only"),
+                   "checkpoint_interval", "resume", "fuse", "adaptive",
+                   "keep_parallelism", "refuse_skew", "outputs_only"),
         defaults={"channel": "tcp"})
     ap.add_argument("--fail-driver", type=int, default=None, metavar="N",
                     help="testing: emulate a driver SIGKILL after N "
@@ -117,7 +117,8 @@ def main(argv: Optional[List[str]] = None) -> int:
     from repro.cluster import ClusterExecutor, DriverKilled
     cfg = ClusterConfig.from_flags(
         args, names=("channel", "connect", "token", "checkpoint_dir",
-                     "checkpoint_interval", "fuse", "outputs_only"),
+                     "checkpoint_interval", "fuse", "adaptive",
+                     "keep_parallelism", "refuse_skew", "outputs_only"),
         n_workers=args.workers, resume=resume,
         fail_driver=args.fail_driver, start_method="fork")
     ex = ClusterExecutor(config=cfg)

@@ -1,0 +1,374 @@
+"""Profile-guided adaptive replanning (docs/adaptive.md).
+
+Three contracts under test:
+
+1. **Scale-invariance** — every adaptive decision consumes ratios of
+   measured seconds, so uniformly rescaling time (a faster machine)
+   changes no decision: corrected costs, calibrated fusion gates, skew,
+   the re-fusion trigger, and the derived speculation threshold.
+2. **Determinism** — a fixed recorded trace replayed through the
+   simulator yields bit-identical replanning decisions; re-fusion plan
+   surgery preserves the member partition and the cluster-DAG shape.
+3. **Agreement** — the simulator's trigger model and the live executor
+   run the same ``CostModel``/``RefuseGovernor`` predicate, so they
+   agree about whether re-fusion fires on a workload, and the live
+   adaptive run stays bit-for-bit equal to ``execute_sequential``
+   (healthy and across a driver SIGKILL + resume replaying the
+   journaled re-fusions).
+"""
+import random
+import time
+import types
+
+import pytest
+from _propcheck import given, settings, st
+
+from repro.config import ClusterConfig
+from repro.cluster import ClusterExecutor, DriverKilled
+from repro.core import TaskGraph, TaskKind, execute_sequential, simulate
+from repro.core.adaptive import (MAX_REFUSIONS, MIN_FRONTIER, MIN_OBS,
+                                 CostModel, RefuseGovernor, RunTrace,
+                                 fn_key, refusion_due)
+from repro.core.fusion import fuse, refuse_frontier, splice_plan
+from repro.core.simulator import (WorkerEvent, search_policy,
+                                  search_collective_arity,
+                                  search_suspect_grace)
+from repro.core.tracing import RemappedRef as _Ref
+
+
+# ------------------------------------------------------------ workloads
+
+def heavy_fn(x, s):
+    time.sleep(s)
+    return x * 3 + 1
+
+
+def cheap_fn(x, s):
+    time.sleep(s)
+    return x + 1
+
+
+def comb(*xs):
+    return sum(int(x) for x in xs) % 1_000_003
+
+
+def lopsided(width=24, n_heavy=6, heavy_s=0.05, cheap_s=0.001,
+             miscosted=True) -> TaskGraph:
+    """Two wide epochs pinched through dual-gate reductions; the first
+    ``n_heavy`` tasks per epoch sleep ~50x longer than the rest while
+    (when ``miscosted``) declaring the same ``cost=1.0`` — epoch 1 is
+    calibration data, epoch 2 the re-fusable frontier.  The dual gates
+    give every layer task two consumers so single-consumer contraction
+    cannot absorb the layers (same shape as benchmarks/bench_adaptive)."""
+    hc = 1.0 if miscosted else heavy_s / cheap_s
+    g = TaskGraph()
+
+    def layer(dep):
+        tids = []
+        for i in range(width):
+            heavy = i < n_heavy
+            t = len(g.nodes)
+            fn = heavy_fn if heavy else cheap_fn
+            s = heavy_s if heavy else cheap_s
+            g.add_node(f"w{t}", fn,
+                       (_Ref(dep), s) if dep is not None else (i, s), {},
+                       TaskKind.PURE,
+                       deps=[dep] if dep is not None else [],
+                       cost=hc if heavy else 1.0)
+            tids.append(t)
+        return tids
+
+    def gatepair(tids):
+        a = g.add_node("ga", comb, tuple(_Ref(t) for t in tids), {},
+                       TaskKind.PURE, deps=tids, cost=1.0)
+        b = g.add_node("gb", comb, tuple(_Ref(t) for t in tids), {},
+                       TaskKind.PURE, deps=tids, cost=1.0)
+        return g.add_node("gc", comb, (_Ref(a), _Ref(b)), {},
+                          TaskKind.PURE, deps=[a, b], cost=1.0)
+
+    g.mark_output(gatepair(layer(gatepair(layer(None)))))
+    return g
+
+
+def sim_dag(seed: int, n: int = 40, p: float = 0.2) -> TaskGraph:
+    """Fn-less random DAG for pure simulator sweeps."""
+    rng = random.Random(seed)
+    g = TaskGraph()
+    for i in range(n):
+        deps = [j for j in range(i) if rng.random() < p][-4:]
+        g.add_node(f"t{i}", None, (), {}, TaskKind.PURE, deps=deps,
+                   cost=rng.uniform(0.1, 4.0))
+    g.mark_output(n - 1)
+    return g
+
+
+def _adaptive_cfg(**kw) -> ClusterConfig:
+    return ClusterConfig(n_workers=kw.pop("n_workers", 4), channel="pipe",
+                         fuse="auto", adaptive="auto",
+                         progress_timeout=120.0, **kw)
+
+
+# ------------------------------------------- property: scale invariance
+
+def _tmpl_a(x):
+    return x
+
+
+def _tmpl_b(x):
+    return x
+
+
+@given(st.tuples(st.integers(0, 10_000), st.sampled_from(
+    [1e-3, 0.1, 3.0, 250.0, 1e4])))
+@settings(max_examples=30, deadline=None)
+def test_cost_model_decisions_are_scale_invariant(params):
+    """Feeding the same run with all wall clocks multiplied by k changes
+    no decision: corrected units, calibrated gates (in units), skew, cv,
+    the derived speculation threshold, and every re-fusion verdict."""
+    seed, k = params
+    rng = random.Random(seed)
+    a, b = CostModel(), CostModel()
+    gov_a, gov_b = RefuseGovernor(), RefuseGovernor()
+    node_a = types.SimpleNamespace(cost=2.0, fn=_tmpl_a)
+    node_b = types.SimpleNamespace(cost=0.7, fn=_tmpl_b)
+    for i in range(1, 25):
+        units = rng.uniform(0.5, 4.0)
+        wall = rng.uniform(0.002, 0.05) * (40.0 if rng.random() < 0.25
+                                           else 1.0)
+        key = rng.choice([fn_key(node_a), fn_key(node_b), None])
+        a.observe(units, wall, fn_units=((key, units),))
+        b.observe(units, wall * k, fn_units=((key, units),))
+        a.observe_dispatch(0.0004 * i, i)
+        b.observe_dispatch(0.0004 * i * k, i)
+
+        assert a.skew() == pytest.approx(b.skew())
+        assert a.cv() == pytest.approx(b.cv())
+        for node in (node_a, node_b):
+            assert a.corrected_units(node) == pytest.approx(
+                b.corrected_units(node))
+        assert a.fuse_gates(30.0, 6.0) == pytest.approx(
+            b.fuse_gates(30.0, 6.0))
+        da = a.derived_speculate_after()
+        db = b.derived_speculate_after()
+        assert (da is None) == (db is None)
+        if da is not None:
+            assert da == pytest.approx(db)
+
+        n_frontier = rng.randint(0, 12)
+        fire_a = refusion_due(a, gov_a, n_frontier)
+        assert fire_a == refusion_due(b, gov_b, n_frontier)
+        if fire_a:
+            gov_a.note_fired(a)
+            gov_b.note_fired(b)
+    assert gov_a.fired == gov_b.fired <= MAX_REFUSIONS
+
+
+def test_governor_hysteresis_and_caps():
+    """No decision before MIN_OBS fresh observations, no fire below
+    MIN_FRONTIER, window reset after a fire, hard cap at MAX_REFUSIONS."""
+    m, gov = CostModel(), RefuseGovernor()
+    for _ in range(MIN_OBS - 1):
+        m.observe(1.0, 0.001)
+    m.observe(1.0, 1.0)                       # one huge outlier
+    assert not refusion_due(m, gov, MIN_FRONTIER - 1)   # frontier too small
+    assert refusion_due(m, gov, MIN_FRONTIER)
+    gov.note_fired(m)
+    # the outlier is *history* now: the fresh window must re-earn a fire
+    assert not refusion_due(m, gov, 10)
+    fires = 1
+    while fires < MAX_REFUSIONS + 2:
+        for _ in range(MIN_OBS - 1):
+            m.observe(1.0, 0.001)
+        m.observe(1.0, 1.0)
+        if refusion_due(m, gov, 10):
+            gov.note_fired(m)
+            fires += 1
+        else:
+            break
+    assert gov.fired == fires == MAX_REFUSIONS
+
+
+# --------------------------------- property: plan surgery is structure-safe
+
+@given(st.tuples(st.integers(0, 5_000), st.integers(2, 6)))
+@settings(max_examples=20, deadline=None)
+def test_refuse_frontier_splice_preserves_partition(params):
+    """Re-fusing the full frontier under a different parallelism floor
+    must keep the member partition exact (every task in exactly one
+    cluster), keep the cluster DAG acyclic/valid, and report consumer
+    deltas that reconcile the old and new consumer indexes."""
+    seed, kp = params
+    g = sim_dag(seed, n=50, p=0.25)
+    plan = fuse(g, "auto", keep_parallelism=8)
+    old_consumers = {v: len(cs) for v, cs in plan.consumers.items()}
+    frontier = sorted(plan.cgraph.nodes)        # nothing dispatched yet
+    out = refuse_frontier(plan, frontier, keep_parallelism=kp,
+                          cost_of=lambda n: n.cost * 3.0)
+    if out is None:                              # partition unchanged
+        return
+    retired, new_clusters = out
+    delta = splice_plan(plan, retired, new_clusters)
+    # exact partition of the task set
+    seen = [m for ms in plan.members.values() for m in ms]
+    assert sorted(seen) == sorted(g.nodes)
+    assert set(plan.members) == set(plan.cgraph.nodes)
+    for cid, ms in plan.members.items():
+        for m in ms:
+            assert plan.cluster_of[m] == cid
+    plan.cgraph.validate()
+    assert plan.cgraph.topo_order()              # acyclic, deps present
+    # consumer-index delta reconciles old -> new
+    new_consumers = {v: len(cs) for v, cs in plan.consumers.items()}
+    for v in set(old_consumers) | set(new_consumers) | set(delta):
+        assert (old_consumers.get(v, 0) + delta.get(v, 0)
+                == new_consumers.get(v, 0)), v
+
+
+# ------------------------------------ determinism: trace-driven simulator
+
+def _fixed_trace(g: TaskGraph, skewed: bool) -> RunTrace:
+    """Honest trace: member seconds proportional to declared cost (ratio
+    constant -> no skew).  Skewed trace: every 7th task runs ~100x its
+    proportional share."""
+    tasks = {t: g.nodes[t].cost * (0.4 if skewed and t % 7 == 0
+                                   else 0.004)
+             for t in g.nodes}
+    return RunTrace(tasks=tasks, n_workers=4, unit_s=0.01,
+                    dispatch_s=0.0004)
+
+
+def test_fixed_trace_gives_deterministic_replan_decisions():
+    g1, g2 = sim_dag(11, n=60), sim_dag(11, n=60)
+    tr = _fixed_trace(g1, skewed=True)
+    kw = dict(fuse="auto", adaptive="auto", trace=tr,
+              dispatch_overhead=tr.dispatch_s)
+    r1 = simulate(g1, 4, **kw)
+    r2 = simulate(g2, 4, **kw)
+    assert r1.makespan == r2.makespan
+    assert r1.refusions == r2.refusions >= 1
+    assert r1.refusion_times == r2.refusion_times
+    # honest costs, uniform durations: the governor must stay quiet
+    quiet = simulate(sim_dag(11, n=60), 4, fuse="auto", adaptive="auto",
+                     trace=_fixed_trace(g1, skewed=False),
+                     dispatch_overhead=0.0004)
+    assert quiet.refusions == 0
+
+
+def test_run_trace_roundtrip(tmp_path):
+    g = sim_dag(3, n=12)
+    tr = _fixed_trace(g, skewed=True)
+    path = str(tmp_path / "trace.json")
+    tr.save(path)
+    back = RunTrace.load(path)
+    assert back == tr
+    members = sorted(g.nodes)[:5]
+    assert back.cluster_seconds(members, g.nodes) == pytest.approx(
+        tr.cluster_seconds(members, g.nodes))
+
+
+# --------------------------------------- live executor <-> sim agreement
+
+def test_adaptive_refuses_midrun_and_matches_oracle_and_sim_agrees():
+    """The tentpole differential: on the mis-costed lopsided workload the
+    live adaptive run must re-fuse mid-run, stay bit-for-bit equal to the
+    sequential oracle, and the simulator fed the recorded trace must
+    agree that re-fusion fires."""
+    g = lopsided()
+    seq = execute_sequential(lopsided())
+    ex = ClusterExecutor(config=_adaptive_cfg())
+    got = ex.run(g)
+    ex.close()
+    assert got == seq
+    assert ex.stats["refusions"] >= 1
+    assert ex.stats["replan_triggers"] >= 1
+    assert ex.stats["cost_unit_s"] > 0
+    assert ex.stats["adaptive_skew"] > 4.0
+    trace = ex.last_trace
+    assert trace is not None and trace.unit_s > 0
+    res = simulate(lopsided(), 4, fuse="auto", adaptive="auto",
+                   trace=trace, dispatch_overhead=trace.dispatch_s)
+    assert res.refusions >= 1
+
+
+def test_adaptive_stays_quiet_when_costs_are_honest():
+    """Well-costed control: honest hints -> balanced static plan -> the
+    governor must not fire, and results still match the oracle."""
+    g = lopsided(miscosted=False)
+    seq = execute_sequential(lopsided(miscosted=False))
+    ex = ClusterExecutor(config=_adaptive_cfg())
+    got = ex.run(g)
+    ex.close()
+    assert got == seq
+    assert ex.stats["refusions"] == 0
+
+
+def test_resume_replays_journaled_refusions(tmp_path):
+    """Kill the driver after re-fusion fired; the resumed incarnation
+    must replay the journaled splices (refusions_replayed) before
+    adopting done-claims, and finish bit-for-bit."""
+    g = lopsided()
+    seq = execute_sequential(lopsided())
+    ex = ClusterExecutor(config=_adaptive_cfg(
+        checkpoint_dir=str(tmp_path), checkpoint_interval=0.0,
+        fail_driver=14))
+    with pytest.raises(DriverKilled):
+        ex.run(g)
+    ex.close()
+    assert ex.stats["refusions"] >= 1
+    ex2 = ClusterExecutor(config=_adaptive_cfg(
+        checkpoint_dir=str(tmp_path), checkpoint_interval=0.0,
+        resume=ex.run_id))
+    got = ex2.run(lopsided())
+    ex2.close()
+    assert got == seq
+    assert ex2.stats["refusions_replayed"] >= 1
+
+
+def test_static_knobs_override_derivation():
+    """Explicit --keep-parallelism/--speculate-after always win over the
+    adaptive derivation: the derived threshold is never engaged and the
+    pinned floor shapes the plan exactly as static fusion would."""
+    g = lopsided(n_heavy=0, width=16)            # uniform: no refusion
+    static_clusters = len(fuse(lopsided(n_heavy=0, width=16), "auto",
+                               keep_parallelism=6).cgraph.nodes)
+    ex = ClusterExecutor(config=_adaptive_cfg(
+        keep_parallelism=6, speculate_after=5.0))
+    got = ex.run(g)
+    ex.close()
+    assert got == execute_sequential(lopsided(n_heavy=0, width=16))
+    assert ex.stats["n_clusters"] == static_clusters
+    assert ex.stats["adaptive_speculate_after"] == 0.0   # never derived
+
+
+# ------------------------------------------------- offline search front door
+
+def test_search_policy_wrappers_are_equivalent():
+    g = sim_dag(21, n=50)
+    ev = [WorkerEvent(time=2.0, kind="partition", worker=0, factor=4.0)]
+    b1, r1 = search_suspect_grace(g, 3, [0.5, 2.0, 8.0], events=ev)
+    b2, r2 = search_policy("suspect_grace", g, 3, [0.5, 2.0, 8.0],
+                           events=ev)
+    assert b1 == b2
+    assert {c: r.makespan for c, r in r1.items()} == \
+        {c: r.makespan for c, r in r2.items()}
+    b3, _ = search_collective_arity(g, 3, [2, 4])
+    b4, _ = search_policy("collective_arity", g, 3, [2, 4])
+    assert b3 == b4
+
+
+def test_search_policy_knobs_and_errors():
+    g = sim_dag(5, n=40)
+    tr = _fixed_trace(g, skewed=True)
+    for knob, grid in (("speculate_after", [1.5, 4.0]),
+                       ("keep_parallelism", [2, 8]),
+                       ("fanin_cost", [1.0, 30.0]),
+                       ("group_cost", [1.0, 6.0])):
+        best, results = search_policy(knob, g, 4, grid, trace=tr)
+        assert best in grid and set(results) == set(grid)
+        assert all(r.makespan > 0 for r in results.values())
+    with pytest.raises(ValueError, match="unknown policy knob"):
+        search_policy("nope", g, 4, [1])
+    with pytest.raises(ValueError, match="need at least one candidate"):
+        search_policy("speculate_after", g, 4, [])
+    with pytest.raises(ValueError, match="partition events"):
+        search_policy("suspect_grace", g, 4, [1.0])
